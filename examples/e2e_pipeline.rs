@@ -1,0 +1,97 @@
+//! End-to-end three-layer driver (the repo's integration proof): the BWKM
+//! coordinator (L3/Rust) runs its weighted-Lloyd inner loop on the
+//! AOT-compiled HLO artifacts (L2 JAX + L1 Pallas) through PJRT, on a real
+//! small workload — the simulated 3RN dataset — and the final E^D is also
+//! evaluated on-device via the chunked `assign_err` program. Results are
+//! cross-checked against the all-native path and recorded in
+//! EXPERIMENTS.md.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example e2e_pipeline
+//! ```
+
+use bwkm::bwkm::{run, run_with, BwkmCfg};
+use bwkm::data::simulate;
+use bwkm::metrics::DistanceCounter;
+use bwkm::runtime::{PjrtStepper, Runtime};
+use bwkm::util::{fmt_count, Rng};
+
+fn main() {
+    let k = 9;
+    let ds = simulate("3RN", 0.02, 5).expect("simulator");
+    println!("e2e: simulated 3RN, n={}, d={}, K={k}", ds.n, ds.d);
+
+    let runtime = Runtime::open_default().expect(
+        "artifacts missing — run `make artifacts` first (python AOT-lowers \
+         the L2/L1 programs to artifacts/*.hlo.txt)",
+    );
+    println!(
+        "loaded manifest with {} variants from {}",
+        runtime.manifest().variants.len(),
+        Runtime::default_dir().display()
+    );
+
+    // --- L3 loop over the PJRT stepper (L2 weighted_lloyd_step + L1
+    // pallas distance_top2, compiled once, executed per iteration).
+    let mut cfg = BwkmCfg::for_dataset(ds.n, ds.d, k);
+    cfg.eval_full_error = true;
+    cfg.max_outer = 12;
+    let c_pjrt = DistanceCounter::new();
+    let t0 = std::time::Instant::now();
+    let mut stepper = PjrtStepper::new(runtime);
+    let out = run_with(&mut stepper, &ds, k, &cfg, &mut Rng::new(3), &c_pjrt);
+    let wall_pjrt = t0.elapsed();
+    println!("\nPJRT-backed BWKM:");
+    for t in &out.trace {
+        println!(
+            "  iter={:<3} |B|={:<5} boundary={:<5} distances={:>12} E^P={:.5e} E^D={:.5e}",
+            t.outer_iter,
+            t.blocks,
+            t.boundary,
+            fmt_count(t.distances),
+            t.weighted_error,
+            t.full_error.unwrap()
+        );
+    }
+    println!(
+        "  device steps: {}, native fallbacks: {}, stop: {:?}, wall: {wall_pjrt:.2?}",
+        stepper.device_steps, stepper.fallback_steps, out.stop
+    );
+    assert!(stepper.device_steps > 0, "PJRT path must actually execute");
+
+    // --- Final error evaluated ON DEVICE through the chunked assign_err
+    // program (the L1 kernel again), cross-checked against host eval.
+    let mut runtime = stepper.into_runtime();
+    let (_, sse_device) = runtime
+        .assign_err(&ds.data, ds.d, &out.centroids)
+        .expect("device assign_err");
+    let eval = DistanceCounter::new();
+    let sse_host = bwkm::metrics::kmeans_error(&ds.data, ds.d, &out.centroids, &eval);
+    let rel = (sse_device - sse_host).abs() / sse_host;
+    println!("\nfinal E^D: device={sse_device:.6e} host={sse_host:.6e} (rel diff {rel:.2e})");
+    assert!(rel < 1e-3, "device/host divergence too large: {rel}");
+
+    // --- Same run all-native, for the wallclock + numerics comparison.
+    let c_native = DistanceCounter::new();
+    let t1 = std::time::Instant::now();
+    let out_native = run(&ds, k, &cfg, &mut Rng::new(3), &c_native);
+    let wall_native = t1.elapsed();
+    let e_pjrt = out.trace.last().unwrap().full_error.unwrap();
+    let e_native = out_native.trace.last().unwrap().full_error.unwrap();
+    println!(
+        "\n{:<10} {:>12} {:>14} {:>12}",
+        "backend", "wall", "distances", "E^D"
+    );
+    println!(
+        "{:<10} {:>12.2?} {:>14} {:>12.5e}",
+        "pjrt", wall_pjrt, fmt_count(c_pjrt.get()), e_pjrt
+    );
+    println!(
+        "{:<10} {:>12.2?} {:>14} {:>12.5e}",
+        "native", wall_native, fmt_count(c_native.get()), e_native
+    );
+    println!(
+        "\ne2e OK: same seeds, |E^D(pjrt) - E^D(native)|/E^D = {:.2e} (f32 artifacts vs f64 host)",
+        (e_pjrt - e_native).abs() / e_native
+    );
+}

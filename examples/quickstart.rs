@@ -1,0 +1,54 @@
+//! Quickstart: cluster a simulated Table-1 dataset with BWKM and compare
+//! the distance bill against K-means++ + Lloyd.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use bwkm::bwkm::BwkmCfg;
+use bwkm::data::simulate;
+use bwkm::kmeans::init::kmeanspp;
+use bwkm::kmeans::{lloyd, LloydCfg};
+use bwkm::metrics::{kmeans_error, DistanceCounter};
+use bwkm::util::{fmt_count, Rng};
+
+fn main() {
+    let k = 9;
+    let ds = simulate("WUY", 0.001, 42).expect("simulator");
+    println!("dataset: simulated WUY, n={}, d={}, K={k}", ds.n, ds.d);
+
+    // --- BWKM.
+    let c_bwkm = DistanceCounter::new();
+    let mut cfg = BwkmCfg::for_dataset(ds.n, ds.d, k);
+    cfg.eval_full_error = true;
+    let out = bwkm::bwkm::run(&ds, k, &cfg, &mut Rng::new(7), &c_bwkm);
+    let e_bwkm = out.trace.last().unwrap().full_error.unwrap();
+    println!("\nBWKM trace (outer iterations):");
+    for t in &out.trace {
+        println!(
+            "  iter={:<3} |B|={:<5} boundary={:<5} distances={:>12} E^D={:.5e}",
+            t.outer_iter,
+            t.blocks,
+            t.boundary,
+            fmt_count(t.distances),
+            t.full_error.unwrap()
+        );
+    }
+    println!("stopped: {:?}", out.stop);
+
+    // --- KM++ + Lloyd reference.
+    let c_ref = DistanceCounter::new();
+    let init = kmeanspp(&ds.data, ds.d, k, &mut Rng::new(7), &c_ref);
+    let l = lloyd(&ds.data, ds.d, &init, &LloydCfg::default(), &c_ref);
+    let eval = DistanceCounter::new();
+    let e_ref = kmeans_error(&ds.data, ds.d, &l.centroids, &eval);
+
+    println!("\n{:<12} {:>14} {:>14}", "method", "distances", "E^D");
+    println!("{:<12} {:>14} {:>14.5e}", "BWKM", fmt_count(c_bwkm.get()), e_bwkm);
+    println!("{:<12} {:>14} {:>14.5e}", "KM++ +Lloyd", fmt_count(c_ref.get()), e_ref);
+    println!(
+        "\nBWKM used {:.1}x fewer distance computations; relative error {:+.2}%",
+        c_ref.get() as f64 / c_bwkm.get() as f64,
+        100.0 * (e_bwkm - e_ref) / e_ref
+    );
+}

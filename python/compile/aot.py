@@ -1,0 +1,103 @@
+"""AOT lowering: JAX programs -> HLO *text* artifacts + manifest.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids that the xla crate's bundled
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the HLO text parser
+reassigns ids, so text round-trips cleanly (see /opt/xla-example/README.md
+and gen_hlo.py there).
+
+Each L2 program is lowered once per padded-shape variant; the Rust runtime
+(rust/src/runtime/) reads artifacts/manifest.tsv, picks the smallest
+variant that fits a request, pads, executes via PJRT, and unpads.
+
+Usage:  python -m compile.aot --out-dir ../artifacts [--full]
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# (mcap, kcap, dcap) variants. Rows must be TILE_M multiples (the kernel
+# pads internally anyway, but keeping caps aligned avoids dead rows).
+# The default grid covers the repo's tests/examples/benches; --full adds the
+# larger tiers used for paper-scale runs.
+VARIANTS = [
+    (2048, 4, 4),
+    (2048, 32, 4),
+    (2048, 4, 20),
+    (2048, 32, 20),
+    (16384, 4, 4),
+    (16384, 32, 4),
+    (16384, 4, 20),
+    (16384, 32, 20),
+]
+
+FULL_VARIANTS = VARIANTS + [
+    (65536, 32, 20),
+    (65536, 32, 32),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(program: str, mcap: int, kcap: int, dcap: int) -> str:
+    fn = model.PROGRAMS[program]
+    lowered = jax.jit(fn).lower(*model.example_args(mcap, kcap, dcap))
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--out",
+        default=None,
+        help="Makefile compatibility: path of the manifest; its directory "
+        "becomes --out-dir.",
+    )
+    ap.add_argument(
+        "--full", action="store_true", help="also emit the paper-scale tiers"
+    )
+    args = ap.parse_args()
+
+    out_dir = args.out_dir
+    if args.out is not None:
+        # Makefile compatibility: --out names the manifest path.
+        out_dir = os.path.dirname(args.out) or "."
+    os.makedirs(out_dir, exist_ok=True)
+
+    variants = FULL_VARIANTS if args.full else VARIANTS
+    rows = []
+    for program in model.PROGRAMS:
+        for mcap, kcap, dcap in variants:
+            name = f"{program}_m{mcap}_k{kcap}_d{dcap}.hlo.txt"
+            path = os.path.join(out_dir, name)
+            text = lower_variant(program, mcap, kcap, dcap)
+            with open(path, "w") as f:
+                f.write(text)
+            rows.append((program, mcap, kcap, dcap, name))
+            print(f"wrote {path} ({len(text)} chars)")
+
+    manifest = os.path.join(out_dir, "manifest.tsv")
+    with open(manifest, "w") as f:
+        f.write("# program\tmcap\tkcap\tdcap\tfile\n")
+        for r in rows:
+            f.write("\t".join(str(x) for x in r) + "\n")
+    print(f"wrote {manifest} ({len(rows)} variants)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""Pallas kernels (L1) and their pure-jnp oracles."""
+
+from .distance_top2 import distance_top2, TILE_M, BIG  # noqa: F401
+from . import ref  # noqa: F401

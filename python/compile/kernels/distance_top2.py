@@ -1,0 +1,121 @@
+"""L1 Pallas kernel: tiled pairwise squared distances + top-2 reduction.
+
+This is the hot spot of every K-means-family algorithm in the paper: the
+assignment step. BWKM additionally needs the distance to the *second*
+nearest centroid for every representative, because the misassignment
+function (paper Eq. 3) is
+
+    eps_{C,D}(B) = max(0, 2 * l_B - (||P - c2|| - ||P - c1||)),
+
+so the kernel returns (d1, d2, argmin) where d1/d2 are the two smallest
+*squared* Euclidean distances (callers take sqrt where the paper's delta
+needs the metric distance).
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation):
+  * the distance matrix is computed as ||x||^2 - 2 x.c^T + ||c||^2 so the
+    dominant term is a (TM x d) @ (d x K) matmul -> MXU systolic array;
+  * the grid tiles the representative axis in TM=128 rows; each tile's
+    operands + the (TM x Kcap) distance tile live in VMEM (~30 KiB for
+    TM=128, Kcap=32, d=20 -- far under the 16 MiB budget, leaving room for
+    double buffering of the HBM->VMEM stream);
+  * centroid padding is handled with a mask column adding +BIG, so one
+    compiled executable serves every K <= Kcap;
+  * the top-2 reduction is a two-pass masked min on the VPU (no sort).
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel is lowered to plain HLO ops. Correctness is
+pinned against kernels/ref.py by pytest + hypothesis.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile size along the representatives axis. 128 matches the MXU/VPU lane
+# structure on TPU; in interpret mode it only affects trace time.
+TILE_M = 128
+
+# Additive penalty for masked-out centroid columns. Large enough to never be
+# selected over a real distance, small enough to stay finite in f32. Kept a
+# plain Python float: pallas kernels must not capture traced constants.
+BIG = 1e30
+
+
+def _kernel(x_ref, c_ref, cmask_ref, d1_ref, d2_ref, idx_ref):
+    """One grid step: TM representatives against all Kcap centroids."""
+    x = x_ref[...]  # (TM, d)
+    c = c_ref[...]  # (Kc, d)
+    cmask = cmask_ref[...]  # (Kc,)
+
+    # ||x - c||^2 = ||x||^2 - 2 x.c + ||c||^2 ; the cross term is the MXU
+    # matmul. Accumulate in f32.
+    xx = jnp.sum(x * x, axis=1, keepdims=True)  # (TM, 1)
+    cc = jnp.sum(c * c, axis=1)[None, :]  # (1, Kc)
+    xc = jnp.dot(x, c.T, preferred_element_type=jnp.float32)  # (TM, Kc)
+    dist = xx - 2.0 * xc + cc
+    # Numerical floor: the decomposition can go slightly negative.
+    dist = jnp.maximum(dist, 0.0)
+    # Masked centroids can never win the (first or second) min.
+    dist = dist + (1.0 - cmask)[None, :] * BIG
+
+    kc = dist.shape[1]
+    d1 = jnp.min(dist, axis=1)
+    idx = jnp.argmin(dist, axis=1).astype(jnp.int32)
+    # Second pass: knock out the winning column, min again.
+    winner = jax.nn.one_hot(idx, kc, dtype=dist.dtype)
+    d2 = jnp.min(dist + winner * BIG, axis=1)
+
+    d1_ref[...] = d1
+    d2_ref[...] = d2
+    idx_ref[...] = idx
+
+
+@functools.partial(jax.jit, static_argnames=("tile_m",))
+def distance_top2(x, c, cmask, *, tile_m: int = TILE_M):
+    """(d1_sq, d2_sq, argmin) for every row of ``x`` against centroids ``c``.
+
+    Args:
+      x: (m, d) f32 representatives. ``m`` need not be a tile multiple; rows
+        are zero-padded internally and the padding is sliced away.
+      c: (kc, d) f32 centroid slots (padded slots arbitrary).
+      cmask: (kc,) f32, 1.0 for live centroids, 0.0 for padding.
+      tile_m: representative-axis tile.
+
+    Returns:
+      d1: (m,) squared distance to the nearest live centroid.
+      d2: (m,) squared distance to the second nearest live centroid
+          (~1e30 when only one live centroid exists).
+      idx: (m,) int32 index of the nearest live centroid.
+    """
+    m, d = x.shape
+    kc = c.shape[0]
+    m_pad = ((m + tile_m - 1) // tile_m) * tile_m
+    if m_pad != m:
+        x = jnp.pad(x, ((0, m_pad - m), (0, 0)))
+
+    grid = (m_pad // tile_m,)
+    d1, d2, idx = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_m, d), lambda i: (i, 0)),
+            pl.BlockSpec((kc, d), lambda i: (0, 0)),
+            pl.BlockSpec((kc,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile_m,), lambda i: (i,)),
+            pl.BlockSpec((tile_m,), lambda i: (i,)),
+            pl.BlockSpec((tile_m,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m_pad,), jnp.float32),
+            jax.ShapeDtypeStruct((m_pad,), jnp.float32),
+            jax.ShapeDtypeStruct((m_pad,), jnp.int32),
+        ],
+        interpret=True,
+    )(x, c, cmask)
+    return d1[:m], d2[:m], idx[:m]

@@ -1,0 +1,52 @@
+"""Pure-jnp correctness oracles for the Pallas kernels and the L2 model.
+
+Everything here is written the *obvious* way (full broadcasted distance
+tensor, sort-based top-2) so it can serve as the ground truth the tiled
+kernel is validated against. Never used in artifacts.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+BIG = jnp.float32(1e30)
+
+
+def distance_top2_ref(x, c, cmask):
+    """Reference (d1_sq, d2_sq, argmin): direct differences + sort."""
+    # (m, kc) squared distances via explicit differences (numerically the
+    # "honest" formula, unlike the kernel's matmul decomposition).
+    diff = x[:, None, :] - c[None, :, :]
+    dist = jnp.sum(diff * diff, axis=-1)
+    dist = dist + (1.0 - cmask)[None, :] * BIG
+    order = jnp.sort(dist, axis=1)
+    d1 = order[:, 0]
+    d2 = order[:, 1] if dist.shape[1] > 1 else jnp.full_like(d1, BIG)
+    idx = jnp.argmin(dist, axis=1).astype(jnp.int32)
+    return d1, d2, idx
+
+
+def weighted_lloyd_step_ref(reps, weights, centroids, cmask):
+    """Reference one weighted-Lloyd iteration (paper Alg. 1 steps 2/4).
+
+    Returns (new_centroids, idx, d1_sq, d2_sq, wss) with the same
+    conventions as model.weighted_lloyd_step: empty or masked clusters keep
+    their previous centroid; wss = sum_i w_i * d1_sq_i (the weighted error
+    E^P(C) of paper §1.2.2.1).
+    """
+    d1, d2, idx = distance_top2_ref(reps, centroids, cmask)
+    kc = centroids.shape[0]
+    onehot = (idx[:, None] == jnp.arange(kc)[None, :]).astype(reps.dtype)
+    wh = onehot * weights[:, None]  # (m, kc)
+    counts = jnp.sum(wh, axis=0)  # (kc,)
+    sums = wh.T @ reps  # (kc, d)
+    live = (counts > 0) & (cmask > 0)
+    new_c = jnp.where(live[:, None], sums / jnp.maximum(counts, 1e-30)[:, None], centroids)
+    wss = jnp.sum(weights * d1)
+    return new_c, idx, d1, d2, wss
+
+
+def assign_err_ref(points, weights, centroids, cmask):
+    """Reference chunked assignment + weighted SSE (for E^D evaluation)."""
+    d1, _, idx = distance_top2_ref(points, centroids, cmask)
+    return idx, jnp.sum(weights * d1)

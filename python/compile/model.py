@@ -1,0 +1,89 @@
+"""L2: the paper's compute graph in JAX, calling the L1 Pallas kernel.
+
+BWKM is a clustering-systems paper, so the "model" is the weighted Lloyd
+iteration over a dataset partition's representatives (paper Alg. 1 steps
+2/4) plus a chunked full-dataset assignment/error program used for the
+final E^D(C) evaluation (paper Eq. 1).
+
+Both programs are written against *padded static shapes* so they can be
+AOT-lowered once per (mcap, kcap, dcap) variant by aot.py and executed from
+the Rust runtime via PJRT. Padding conventions (verified by tests):
+
+  * representative rows >= m carry weight 0      -> no effect on updates,
+  * coordinate dims   >= d are zero everywhere   -> no effect on distances,
+  * centroid slots    >= K have cmask 0          -> +BIG distance column,
+    never selected, and keep their previous value in the update.
+
+The distance + top-2 hot spot is the Pallas kernel (L1); the centroid
+update is a one-hot matmul so the whole step is MXU-friendly and fuses into
+a single HLO module with no gather/scatter.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import distance_top2
+
+
+def weighted_lloyd_step(reps, weights, centroids, cmask):
+    """One weighted-Lloyd iteration over partition representatives.
+
+    Args:
+      reps:      (mcap, dcap) f32 — representatives (centers of mass of the
+                 blocks of the dataset partition P).
+      weights:   (mcap,) f32 — |P| cardinalities; 0 marks padding rows.
+      centroids: (kcap, dcap) f32 — current centroid slots.
+      cmask:     (kcap,) f32 — 1 for live centroids, 0 for padding.
+
+    Returns a 5-tuple:
+      new_centroids: (kcap, dcap) — weighted centers of mass; empty or
+                     masked clusters keep their previous centroid.
+      idx:           (mcap,) int32 — nearest-centroid assignment.
+      d1_sq, d2_sq:  (mcap,) f32 — squared distances to the two nearest
+                     live centroids (the Rust side takes sqrt to evaluate
+                     the paper's misassignment function, Eq. 3).
+      wss:           () f32 — weighted error E^P(C) = sum_i w_i * d1_sq_i.
+    """
+    d1, d2, idx = distance_top2(reps, centroids, cmask)
+    kc = centroids.shape[0]
+    onehot = jax.nn.one_hot(idx, kc, dtype=reps.dtype)  # (m, kc)
+    wh = onehot * weights[:, None]
+    counts = jnp.sum(wh, axis=0)  # (kc,)
+    sums = jnp.dot(wh.T, reps, preferred_element_type=jnp.float32)  # (kc, d)
+    live = (counts > 0) & (cmask > 0)
+    new_c = jnp.where(
+        live[:, None], sums / jnp.maximum(counts, 1e-30)[:, None], centroids
+    )
+    wss = jnp.sum(weights * d1)
+    return new_c, idx, d1, d2, wss
+
+
+def assign_err(points, weights, centroids, cmask):
+    """Chunked assignment + weighted SSE, for full-dataset E^D evaluation.
+
+    Same padding conventions as :func:`weighted_lloyd_step`; ``weights`` is
+    1.0 for live points and 0.0 for padding rows of the final chunk.
+
+    Returns (idx, sse) with idx (mcap,) int32 and sse a () f32 scalar.
+    """
+    d1, _, idx = distance_top2(points, centroids, cmask)
+    return idx, jnp.sum(weights * d1)
+
+
+def example_args(mcap: int, kcap: int, dcap: int):
+    """ShapeDtypeStructs used to lower either program for a variant."""
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((mcap, dcap), f32),
+        jax.ShapeDtypeStruct((mcap,), f32),
+        jax.ShapeDtypeStruct((kcap, dcap), f32),
+        jax.ShapeDtypeStruct((kcap,), f32),
+    )
+
+
+PROGRAMS = {
+    "wlloyd_step": weighted_lloyd_step,
+    "assign_err": assign_err,
+}

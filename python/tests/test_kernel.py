@@ -1,0 +1,121 @@
+"""L1 correctness: the Pallas distance+top-2 kernel vs the pure-jnp oracle.
+
+This is the CORE correctness signal for the compiled hot path: hypothesis
+sweeps shapes, masks and magnitudes; every case asserts the kernel's top-2
+distances match ref.py, and the argmin matches wherever the decision is not
+numerically ambiguous at f32.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import distance_top2
+from compile.kernels.ref import distance_top2_ref
+
+hypothesis.settings.register_profile(
+    "kernel", deadline=None, max_examples=40, derandomize=True
+)
+hypothesis.settings.load_profile("kernel")
+
+
+def _check_case(m, k, d, live, scale, seed):
+    rng = np.random.default_rng(seed)
+    x = (rng.standard_normal((m, d)) * scale).astype(np.float32)
+    c = (rng.standard_normal((k, d)) * scale).astype(np.float32)
+    cmask = np.zeros(k, np.float32)
+    cmask[:live] = 1.0
+
+    d1, d2, idx = distance_top2(jnp.asarray(x), jnp.asarray(c), jnp.asarray(cmask))
+    r1, r2, ridx = distance_top2_ref(jnp.asarray(x), jnp.asarray(c), jnp.asarray(cmask))
+    d1, d2, idx = np.asarray(d1), np.asarray(d2), np.asarray(idx)
+    r1, r2, ridx = np.asarray(r1), np.asarray(r2), np.asarray(ridx)
+
+    # f32 matmul decomposition vs direct differences: tolerance scales with
+    # the squared magnitudes involved.
+    tol = 1e-4 * max(1.0, scale * scale) * max(1.0, d)
+    np.testing.assert_allclose(d1, r1, rtol=1e-4, atol=tol)
+    if live > 1:
+        np.testing.assert_allclose(d2, r2, rtol=1e-4, atol=tol)
+    # argmin must agree wherever the top-2 gap is unambiguous at f32.
+    clear = (r2 - r1) > 10 * tol
+    assert (idx[clear] == ridx[clear]).all()
+    # The winner is always a live centroid.
+    assert (idx < live).all()
+
+
+@hypothesis.given(
+    m=st.integers(1, 300),
+    k=st.integers(2, 32),
+    d=st.integers(1, 20),
+    live_frac=st.floats(0.1, 1.0),
+    scale=st.sampled_from([0.1, 1.0, 30.0]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_matches_ref(m, k, d, live_frac, scale, seed):
+    live = max(2, int(round(k * live_frac)))
+    live = min(live, k)
+    _check_case(m, k, d, live, scale, seed)
+
+
+def test_single_live_centroid_d2_is_big():
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((17, 3)), jnp.float32)
+    c = jnp.zeros((4, 3), jnp.float32)
+    cmask = jnp.asarray([1.0, 0.0, 0.0, 0.0], jnp.float32)
+    d1, d2, idx = distance_top2(x, c, cmask)
+    assert (np.asarray(idx) == 0).all()
+    assert (np.asarray(d2) > 1e29).all()
+
+
+def test_exact_tiny_case():
+    # Hand-checkable: two centroids on the x axis.
+    x = jnp.asarray([[0.0, 0.0], [10.0, 0.0], [4.0, 3.0]], jnp.float32)
+    c = jnp.asarray([[0.0, 0.0], [10.0, 0.0]], jnp.float32)
+    cmask = jnp.ones(2, jnp.float32)
+    d1, d2, idx = distance_top2(x, c, cmask)
+    np.testing.assert_allclose(np.asarray(d1), [0.0, 0.0, 25.0], atol=1e-4)
+    np.testing.assert_allclose(np.asarray(d2), [100.0, 100.0, 45.0], atol=1e-3)
+    np.testing.assert_array_equal(np.asarray(idx), [0, 1, 0])
+
+
+def test_row_padding_invariance():
+    # Appending rows must not change the results of the original rows
+    # (wrapper pads to a tile multiple internally).
+    rng = np.random.default_rng(7)
+    x = rng.standard_normal((130, 5)).astype(np.float32)
+    c = rng.standard_normal((8, 5)).astype(np.float32)
+    cmask = np.ones(8, np.float32)
+    d1a, d2a, idxa = distance_top2(jnp.asarray(x), jnp.asarray(c), jnp.asarray(cmask))
+    big = np.vstack([x, rng.standard_normal((126, 5)).astype(np.float32)])
+    d1b, d2b, idxb = distance_top2(jnp.asarray(big), jnp.asarray(c), jnp.asarray(cmask))
+    np.testing.assert_allclose(np.asarray(d1a), np.asarray(d1b)[:130], rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(idxa), np.asarray(idxb)[:130])
+
+
+def test_dim_padding_invariance():
+    # Zero-padding coordinates changes nothing.
+    rng = np.random.default_rng(8)
+    x = rng.standard_normal((50, 3)).astype(np.float32)
+    c = rng.standard_normal((4, 3)).astype(np.float32)
+    cmask = np.ones(4, np.float32)
+    d1a, _, idxa = distance_top2(jnp.asarray(x), jnp.asarray(c), jnp.asarray(cmask))
+    xp = np.pad(x, ((0, 0), (0, 5)))
+    cp = np.pad(c, ((0, 0), (0, 5)))
+    d1b, _, idxb = distance_top2(jnp.asarray(xp), jnp.asarray(cp), jnp.asarray(cmask))
+    np.testing.assert_allclose(np.asarray(d1a), np.asarray(d1b), rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(idxa), np.asarray(idxb))
+
+
+@pytest.mark.parametrize("tile_m", [8, 64, 128, 256])
+def test_tile_size_invariance(tile_m):
+    rng = np.random.default_rng(9)
+    x = jnp.asarray(rng.standard_normal((200, 6)), jnp.float32)
+    c = jnp.asarray(rng.standard_normal((5, 6)), jnp.float32)
+    cmask = jnp.ones(5, jnp.float32)
+    d1, d2, idx = distance_top2(x, c, cmask, tile_m=tile_m)
+    r1, r2, ridx = distance_top2(x, c, cmask)  # default tile
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(r1), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(d2), np.asarray(r2), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(ridx))

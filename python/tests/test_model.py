@@ -1,0 +1,136 @@
+"""L2 correctness: weighted-Lloyd step / assign_err vs numpy oracles,
+including the padding conventions the Rust runtime relies on."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+from compile.kernels.ref import weighted_lloyd_step_ref
+
+hypothesis.settings.register_profile(
+    "model", deadline=None, max_examples=25, derandomize=True
+)
+hypothesis.settings.load_profile("model")
+
+
+def _numpy_weighted_lloyd(reps, weights, centroids):
+    """Independent numpy oracle (no jax), live centroids only."""
+    dist = ((reps[:, None, :] - centroids[None, :, :]) ** 2).sum(-1)
+    idx = dist.argmin(1)
+    new_c = centroids.copy()
+    for k in range(centroids.shape[0]):
+        sel = (idx == k) & (weights > 0)
+        w = weights[sel]
+        if w.sum() > 0:
+            new_c[k] = (reps[sel] * w[:, None]).sum(0) / w.sum()
+    wss = (weights * dist[np.arange(len(reps)), idx]).sum()
+    return new_c, idx, wss
+
+
+@hypothesis.given(
+    m=st.integers(2, 200),
+    k=st.integers(2, 16),
+    d=st.integers(1, 12),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_step_matches_numpy(m, k, d, seed):
+    rng = np.random.default_rng(seed)
+    reps = rng.standard_normal((m, d)).astype(np.float32)
+    weights = rng.integers(1, 50, m).astype(np.float32)
+    cent = rng.standard_normal((k, d)).astype(np.float32)
+    cmask = np.ones(k, np.float32)
+
+    new_c, idx, d1, d2, wss = model.weighted_lloyd_step(
+        jnp.asarray(reps), jnp.asarray(weights), jnp.asarray(cent), jnp.asarray(cmask)
+    )
+    rn_c, ridx, rwss = _numpy_weighted_lloyd(
+        reps.astype(np.float64), weights.astype(np.float64), cent.astype(np.float64)
+    )
+    # Ambiguous assignments (f32 ties) are tolerated; compare errors instead.
+    np.testing.assert_allclose(float(wss), rwss, rtol=2e-3)
+    gap_ok = np.asarray(d2) - np.asarray(d1) > 1e-3
+    assert (np.asarray(idx)[gap_ok] == ridx[gap_ok]).all()
+    np.testing.assert_allclose(np.asarray(new_c), rn_c, rtol=2e-3, atol=2e-3)
+
+
+def test_step_matches_ref_exactly():
+    rng = np.random.default_rng(3)
+    reps = jnp.asarray(rng.standard_normal((100, 5)), jnp.float32)
+    weights = jnp.asarray(rng.integers(1, 10, 100), jnp.float32)
+    cent = jnp.asarray(rng.standard_normal((8, 5)), jnp.float32)
+    cmask = jnp.ones(8, jnp.float32)
+    out = model.weighted_lloyd_step(reps, weights, cent, cmask)
+    ref = weighted_lloyd_step_ref(reps, weights, cent, cmask)
+    for a, b in zip(out, ref):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-4)
+
+
+def test_padding_rows_are_inert():
+    """Weight-0 rows must not move centroids or contribute to wss."""
+    rng = np.random.default_rng(4)
+    reps = rng.standard_normal((60, 4)).astype(np.float32)
+    weights = rng.integers(1, 9, 60).astype(np.float32)
+    cent = rng.standard_normal((6, 4)).astype(np.float32)
+    cmask = np.ones(6, np.float32)
+
+    out_small = model.weighted_lloyd_step(
+        jnp.asarray(reps), jnp.asarray(weights), jnp.asarray(cent), jnp.asarray(cmask)
+    )
+    reps_p = np.vstack([reps, rng.standard_normal((68, 4)).astype(np.float32) * 100])
+    weights_p = np.concatenate([weights, np.zeros(68, np.float32)])
+    out_pad = model.weighted_lloyd_step(
+        jnp.asarray(reps_p), jnp.asarray(weights_p), jnp.asarray(cent), jnp.asarray(cmask)
+    )
+    np.testing.assert_allclose(
+        np.asarray(out_small[0]), np.asarray(out_pad[0]), rtol=1e-5, atol=1e-6
+    )
+    np.testing.assert_allclose(float(out_small[4]), float(out_pad[4]), rtol=1e-5)
+
+
+def test_masked_centroids_keep_value_and_never_win():
+    rng = np.random.default_rng(5)
+    reps = rng.standard_normal((40, 3)).astype(np.float32)
+    weights = np.ones(40, np.float32)
+    cent = np.zeros((8, 3), np.float32)
+    cent[:3] = rng.standard_normal((3, 3))
+    cent[3:] = 777.0  # sentinel in masked slots
+    cmask = np.array([1, 1, 1, 0, 0, 0, 0, 0], np.float32)
+    new_c, idx, d1, d2, wss = model.weighted_lloyd_step(
+        jnp.asarray(reps), jnp.asarray(weights), jnp.asarray(cent), jnp.asarray(cmask)
+    )
+    assert (np.asarray(idx) < 3).all()
+    np.testing.assert_array_equal(np.asarray(new_c)[3:], cent[3:])
+
+
+def test_empty_cluster_keeps_previous_centroid():
+    reps = jnp.asarray([[0.0, 0.0], [1.0, 0.0]], jnp.float32)
+    weights = jnp.asarray([1.0, 1.0], jnp.float32)
+    cent = jnp.asarray([[0.5, 0.0], [50.0, 50.0]], jnp.float32)
+    cmask = jnp.ones(2, jnp.float32)
+    new_c, idx, *_ = model.weighted_lloyd_step(reps, weights, cent, cmask)
+    np.testing.assert_allclose(np.asarray(new_c)[0], [0.5, 0.0], atol=1e-6)
+    np.testing.assert_allclose(np.asarray(new_c)[1], [50.0, 50.0], atol=1e-6)
+
+
+def test_assign_err_matches_step_error():
+    rng = np.random.default_rng(6)
+    pts = jnp.asarray(rng.standard_normal((90, 4)), jnp.float32)
+    w = jnp.ones(90, jnp.float32)
+    cent = jnp.asarray(rng.standard_normal((5, 4)), jnp.float32)
+    cmask = jnp.ones(5, jnp.float32)
+    idx, sse = model.assign_err(pts, w, cent, cmask)
+    _, idx2, d1, _, wss = model.weighted_lloyd_step(pts, w, cent, cmask)
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(idx2))
+    np.testing.assert_allclose(float(sse), float(wss), rtol=1e-6)
+
+
+def test_fixed_point_of_step():
+    """A converged configuration must not move (weighted Lloyd fixed point)."""
+    reps = jnp.asarray([[-1.0, 0.0], [1.0, 0.0], [9.0, 0.0], [11.0, 0.0]], jnp.float32)
+    weights = jnp.asarray([2.0, 2.0, 3.0, 3.0], jnp.float32)
+    cent = jnp.asarray([[0.0, 0.0], [10.0, 0.0]], jnp.float32)
+    cmask = jnp.ones(2, jnp.float32)
+    new_c, *_ = model.weighted_lloyd_step(reps, weights, cent, cmask)
+    np.testing.assert_allclose(np.asarray(new_c), np.asarray(cent), atol=1e-6)

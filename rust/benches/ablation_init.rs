@@ -1,0 +1,78 @@
+//! Exp A2 — ablation of the §2.2 initial partition (Alg. 2–4) vs a
+//! dataset-independent uniform start of the same size, on the CIF
+//! simulator (the paper's hardest regime: small n, high d), K = 9.
+//!
+//! Expected shape: the boundary-seeking initial partition yields a lower
+//! error at the same partition size / distance budget because its blocks
+//! concentrate where cluster affiliation is ambiguous (§2.2's motivation).
+
+use bwkm::bwkm::{initial_partition, starting_partition, InitCfg};
+use bwkm::bench::{env_f64, env_u64, write_csv};
+use bwkm::data::simulate;
+use bwkm::kmeans::init::weighted_kmeanspp;
+use bwkm::kmeans::{weighted_lloyd, WLloydCfg};
+use bwkm::metrics::{kmeans_error, DistanceCounter};
+use bwkm::util::{fmt_count, Rng};
+
+const K: usize = 9;
+
+fn main() {
+    let scale = 0.3 * env_f64("BWKM_SCALE", 1.0);
+    let reps = env_u64("BWKM_REPS", 3);
+    let ds = simulate("CIF", scale, 13).unwrap();
+    let m = (10.0 * ((K * ds.d) as f64).sqrt()).ceil() as usize;
+    let s = (ds.n as f64).sqrt().ceil() as usize;
+    println!("=== Ablation A2: initial partition (CIF sim, n={}, m={m}) ===", ds.n);
+    println!("{:<22} {:>14} {:>12} {:>8}", "initialization", "distances", "E^D", "|P|");
+
+    let mut rows = vec![vec![
+        "init".into(),
+        "rep".into(),
+        "distances".into(),
+        "error".into(),
+        "occupied".into(),
+    ]];
+    for rep in 0..reps {
+        // --- Alg. 2 (misassignment-guided).
+        let c = DistanceCounter::new();
+        let cfg = InitCfg { m_prime: (m / 4).max(K + 1), m, s, r: 5 };
+        let mut rng = Rng::new(200 + rep);
+        let p = initial_partition(&ds, K, &cfg, &mut rng, &c);
+        let (e, occ) = finish(&ds, &p, &mut rng, &c);
+        emit_row(&mut rows, "Alg.2 (boundary)", rep, c.get(), e, occ);
+
+        // --- Size-only (Alg. 3 run all the way to m: dataset-aware density
+        // splitting but no misassignment information).
+        let c = DistanceCounter::new();
+        let mut rng = Rng::new(200 + rep);
+        let mut p = starting_partition(&ds, m, s, &mut rng);
+        p.assign_members(&ds);
+        let (e, occ) = finish(&ds, &p, &mut rng, &c);
+        emit_row(&mut rows, "Alg.3-only (density)", rep, c.get(), e, occ);
+    }
+    write_csv("ablation_init", &rows);
+}
+
+fn finish(
+    ds: &bwkm::data::Dataset,
+    p: &bwkm::partition::Partition,
+    rng: &mut Rng,
+    counter: &DistanceCounter,
+) -> (f64, usize) {
+    let (reps, weights, _) = p.reps_weights();
+    let cents = weighted_kmeanspp(&reps, &weights, ds.d, K, rng, counter);
+    let out = weighted_lloyd(&reps, &weights, ds.d, &cents, &WLloydCfg::default(), counter);
+    let eval = DistanceCounter::new();
+    (kmeans_error(&ds.data, ds.d, &out.centroids, &eval), p.occupied())
+}
+
+fn emit_row(rows: &mut Vec<Vec<String>>, name: &str, rep: u64, d: u64, e: f64, occ: usize) {
+    println!("{:<22} {:>14} {:>12.5e} {:>8}", name, fmt_count(d), e, occ);
+    rows.push(vec![
+        name.into(),
+        rep.to_string(),
+        d.to_string(),
+        format!("{e:.8e}"),
+        occ.to_string(),
+    ]);
+}

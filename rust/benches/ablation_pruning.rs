@@ -1,0 +1,80 @@
+//! Exp A3 — Hamerly distance pruning inside weighted Lloyd (the paper's
+//! §4 future-work integration, refs [13]/[15]): plain vs pruned weighted
+//! Lloyd over the representatives of a BWKM-like partition of the GS
+//! simulator, K = 27. Reports distances actually computed and the
+//! reduction factor ([15] reports >80% on favourable data).
+
+use bwkm::bench::{env_f64, write_csv};
+use bwkm::bwkm::{initial_partition, InitCfg};
+use bwkm::data::simulate;
+use bwkm::kmeans::elkan::elkan_weighted_lloyd;
+use bwkm::kmeans::init::weighted_kmeanspp;
+use bwkm::kmeans::pruning::pruned_weighted_lloyd;
+use bwkm::kmeans::{weighted_lloyd, WLloydCfg};
+use bwkm::metrics::DistanceCounter;
+use bwkm::util::{fmt_count, Rng};
+
+const K: usize = 27;
+
+fn main() {
+    let scale = 0.005 * env_f64("BWKM_SCALE", 1.0);
+    let ds = simulate("GS", scale, 17).unwrap();
+    let mut rng = Rng::new(5);
+    let c0 = DistanceCounter::new();
+    // A realistic representative set: BWKM's initial partition at 4x the
+    // default size (more reps = more pruning opportunity).
+    let m = 4 * (10.0 * ((K * ds.d) as f64).sqrt()).ceil() as usize;
+    let cfg = InitCfg { m_prime: (m / 4).max(K + 1), m, s: (ds.n as f64).sqrt() as usize, r: 5 };
+    let p = initial_partition(&ds, K, &cfg, &mut rng, &c0);
+    let (reps, weights, _) = p.reps_weights();
+    let init = weighted_kmeanspp(&reps, &weights, ds.d, K, &mut rng, &c0);
+    println!(
+        "=== Ablation A3: pruning (GS sim, n={}, |P|={}, K={K}) ===",
+        ds.n,
+        weights.len()
+    );
+
+    let plain = DistanceCounter::new();
+    let out_plain = weighted_lloyd(
+        &reps,
+        &weights,
+        ds.d,
+        &init,
+        &WLloydCfg { max_iters: 100, tol: 0.0, ..Default::default() },
+        &plain,
+    );
+    let hamerly = DistanceCounter::new();
+    let out_hamerly = pruned_weighted_lloyd(&reps, &weights, ds.d, &init, 100, &hamerly);
+    let elkan = DistanceCounter::new();
+    let out_elkan = elkan_weighted_lloyd(&reps, &weights, ds.d, &init, 100, &elkan);
+
+    let drift = |a: &[f64], b: &[f64]| -> f64 {
+        a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max)
+    };
+    let d_h = drift(&out_plain.centroids, &out_hamerly.centroids);
+    let d_e = drift(&out_plain.centroids, &out_elkan.centroids);
+    let saved = |c: &DistanceCounter| 100.0 * (1.0 - c.get() as f64 / plain.get() as f64);
+    println!("{:<10} {:>14} {:>8} {:>8}", "variant", "distances", "iters", "saved");
+    println!("{:<10} {:>14} {:>8} {:>8}", "plain", fmt_count(plain.get()), out_plain.iters, "-");
+    println!(
+        "{:<10} {:>14} {:>8} {:>7.1}%",
+        "hamerly", fmt_count(hamerly.get()), out_hamerly.iters, saved(&hamerly)
+    );
+    println!(
+        "{:<10} {:>14} {:>8} {:>7.1}%",
+        "elkan", fmt_count(elkan.get()), out_elkan.iters, saved(&elkan)
+    );
+    println!("max centroid drift vs plain: hamerly {d_h:.2e}, elkan {d_e:.2e}");
+    assert!(d_h < 1e-6, "hamerly diverged from plain");
+    assert!(d_e < 1e-6, "elkan diverged from plain");
+
+    write_csv(
+        "ablation_pruning",
+        &[
+            vec!["variant".into(), "distances".into(), "iters".into()],
+            vec!["plain".into(), plain.get().to_string(), out_plain.iters.to_string()],
+            vec!["hamerly".into(), hamerly.get().to_string(), out_hamerly.iters.to_string()],
+            vec!["elkan".into(), elkan.get().to_string(), out_elkan.iters.to_string()],
+        ],
+    );
+}

@@ -1,0 +1,116 @@
+//! Exp A1 — ablation of BWKM's splitting criterion (the answer to the
+//! paper's Problems 2/3): boundary-guided ε-sampled splitting (BWKM)
+//! vs splitting *every* block (grid-RPKM-like) vs splitting uniformly at
+//! random, at matched distance budgets on the 3RN simulator, K = 9.
+//!
+//! Expected shape (paper §1.3): the boundary criterion reaches a given
+//! error with substantially fewer representatives / distances because it
+//! spends splits only where cluster affiliation is ambiguous.
+
+use bwkm::bwkm::{run as bwkm_run, BwkmCfg};
+use bwkm::data::simulate;
+use bwkm::bench::{env_f64, env_u64, write_csv};
+use bwkm::kmeans::init::weighted_kmeanspp;
+use bwkm::kmeans::{weighted_lloyd, WLloydCfg};
+use bwkm::metrics::{kmeans_error, DistanceCounter};
+use bwkm::partition::Partition;
+use bwkm::rpkm::{grid_rpkm, RpkmCfg};
+use bwkm::util::{fmt_count, Cdf, Rng};
+
+const K: usize = 9;
+
+fn main() {
+    let scale = 0.05 * env_f64("BWKM_SCALE", 1.0);
+    let reps = env_u64("BWKM_REPS", 3);
+    let ds = simulate("3RN", scale, 11).unwrap();
+    println!("=== Ablation A1: splitting criterion (3RN sim, n={}, K={K}) ===", ds.n);
+    println!("{:<18} {:>14} {:>12} {:>8}", "strategy", "distances", "E^D", "|P|");
+
+    let mut rows = vec![vec![
+        "strategy".into(),
+        "rep".into(),
+        "distances".into(),
+        "error".into(),
+        "blocks".into(),
+    ]];
+    for rep in 0..reps {
+        // --- BWKM (boundary-guided).
+        let c = DistanceCounter::new();
+        let mut cfg = BwkmCfg::for_dataset(ds.n, ds.d, K);
+        cfg.max_outer = 14;
+        let out = bwkm_run(&ds, K, &cfg, &mut Rng::new(100 + rep), &c);
+        let eval = DistanceCounter::new();
+        let e = kmeans_error(&ds.data, ds.d, &out.centroids, &eval);
+        report(&mut rows, "boundary (BWKM)", rep, c.get(), e, out.partition.occupied());
+
+        // --- Split-all (grid-RPKM).
+        let c = DistanceCounter::new();
+        let rcfg = RpkmCfg { max_levels: 7, ..Default::default() };
+        let out = grid_rpkm(&ds, K, &rcfg, &mut Rng::new(100 + rep), &c);
+        let eval = DistanceCounter::new();
+        let e = kmeans_error(&ds.data, ds.d, &out.centroids, &eval);
+        let m = out.trace.last().unwrap().representatives;
+        report(&mut rows, "split-all (RPKM)", rep, c.get(), e, m);
+
+        // --- Random splitting with the same outer loop shape as BWKM.
+        let c = DistanceCounter::new();
+        let (e, m) = random_split_run(&ds, 14, &mut Rng::new(100 + rep), &c);
+        report(&mut rows, "random-split", rep, c.get(), e, m);
+    }
+    write_csv("ablation_split", &rows);
+}
+
+fn report(rows: &mut Vec<Vec<String>>, name: &str, rep: u64, d: u64, e: f64, m: usize) {
+    println!("{:<18} {:>14} {:>12.5e} {:>8}", name, fmt_count(d), e, m);
+    rows.push(vec![
+        name.into(),
+        rep.to_string(),
+        d.to_string(),
+        format!("{e:.8e}"),
+        m.to_string(),
+    ]);
+}
+
+/// BWKM's outer loop but with uniformly-random block selection (the same
+/// number of splits per round as blocks in the boundary would allow).
+fn random_split_run(
+    ds: &bwkm::data::Dataset,
+    outers: usize,
+    rng: &mut Rng,
+    counter: &DistanceCounter,
+) -> (f64, usize) {
+    let mut partition = Partition::root(ds);
+    // Match BWKM's initial partition size.
+    let cfg = BwkmCfg::for_dataset(ds.n, ds.d, K);
+    while partition.len() < cfg.init.m {
+        let weights: Vec<f64> =
+            partition.blocks.iter().map(|b| b.weight() as f64).collect();
+        let cdf = match Cdf::new(&weights) {
+            Some(c) => c,
+            None => break,
+        };
+        let b = cdf.sample(rng);
+        if partition.blocks[b].weight() > 1 {
+            partition.split(b, ds);
+        }
+    }
+    let (mut reps, mut weights, _) = partition.reps_weights();
+    let mut cents = weighted_kmeanspp(&reps, &weights, ds.d, K, rng, counter);
+    for _ in 0..outers {
+        let out = weighted_lloyd(&reps, &weights, ds.d, &cents, &WLloydCfg::default(), counter);
+        cents = out.centroids;
+        // Random splits: as many as there are blocks (uniform).
+        let rounds = partition.len();
+        for _ in 0..rounds.min(64) {
+            let b = rng.usize(partition.len());
+            if partition.blocks[b].weight() > 1 {
+                partition.split(b, ds);
+            }
+        }
+        let rw = partition.reps_weights();
+        reps = rw.0;
+        weights = rw.1;
+    }
+    let eval = DistanceCounter::new();
+    (kmeans_error(&ds.data, ds.d, &cents, &eval), partition.occupied())
+}

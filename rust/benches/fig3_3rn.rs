@@ -1,0 +1,12 @@
+//! Exp F-series — regenerate the paper's Figure for the 3RN dataset:
+//! distance computations vs relative error (Eq. 6) for every method,
+//! K ∈ {3, 9, 27}. See DESIGN.md §3 and EXPERIMENTS.md for the
+//! paper-vs-measured comparison. Scale via BWKM_SCALE / BWKM_REPS.
+
+use bwkm::bench::figures::{emit, run_figure, FigureCfg};
+
+fn main() {
+    let cfg = FigureCfg::for_dataset("3RN", 0.05);
+    let res = run_figure(&cfg);
+    emit(&res, "fig3_3rn");
+}

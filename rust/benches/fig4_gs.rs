@@ -1,0 +1,12 @@
+//! Exp F-series — regenerate the paper's Figure for the GS dataset:
+//! distance computations vs relative error (Eq. 6) for every method,
+//! K ∈ {3, 9, 27}. See DESIGN.md §3 and EXPERIMENTS.md for the
+//! paper-vs-measured comparison. Scale via BWKM_SCALE / BWKM_REPS.
+
+use bwkm::bench::figures::{emit, run_figure, FigureCfg};
+
+fn main() {
+    let cfg = FigureCfg::for_dataset("GS", 0.005);
+    let res = run_figure(&cfg);
+    emit(&res, "fig4_gs");
+}

@@ -1,0 +1,89 @@
+//! Exp P1 — hot-path throughput of the assignment step (the cost center of
+//! every method): native stepper vs sharded stepper vs PJRT artifacts vs
+//! Hamerly-pruned, swept over (m, K, d). Reports representative-rows/s and
+//! effective distance-computations/s. Feeds EXPERIMENTS.md §Perf.
+
+use bwkm::bench::{bench_secs, env_f64, write_csv};
+use bwkm::coordinator::sharded_weighted_step;
+use bwkm::kmeans::pruning::pruned_weighted_lloyd;
+use bwkm::kmeans::{NativeStepper, Stepper};
+use bwkm::metrics::DistanceCounter;
+use bwkm::runtime::Runtime;
+use bwkm::util::{fmt_count, Rng};
+
+fn main() {
+    let mult = env_f64("BWKM_SCALE", 1.0);
+    let sweeps: Vec<(usize, usize, usize)> = vec![
+        ((2_000 as f64 * mult) as usize, 3, 3),
+        ((2_000 as f64 * mult) as usize, 27, 19),
+        ((16_000 as f64 * mult) as usize, 9, 5),
+        ((16_000 as f64 * mult) as usize, 27, 19),
+    ];
+    let mut runtime = Runtime::open_default().ok();
+    if runtime.is_none() {
+        eprintln!("(no artifacts found; PJRT column skipped — run `make artifacts`)");
+    }
+
+    println!("=== P1: assignment-step throughput (rows/s, one weighted-Lloyd step) ===");
+    println!(
+        "{:<18} {:>10} {:>12} {:>12} {:>12} {:>14}",
+        "m,k,d", "native", "sharded(4)", "pjrt", "pruned-run", "dists/s native"
+    );
+    let mut rows = vec![vec![
+        "m".into(),
+        "k".into(),
+        "d".into(),
+        "native_rows_s".into(),
+        "sharded_rows_s".into(),
+        "pjrt_rows_s".into(),
+        "pruned_rows_s".into(),
+    ]];
+    for (m, k, d) in sweeps {
+        let mut rng = Rng::new(3);
+        let reps: Vec<f64> = (0..m * d).map(|_| rng.normal() * 3.0).collect();
+        let weights: Vec<f64> = (0..m).map(|_| 1.0 + rng.usize(50) as f64).collect();
+        let cents: Vec<f64> = (0..k * d).map(|_| rng.normal() * 3.0).collect();
+        let c = DistanceCounter::new();
+
+        let t_native = bench_secs(3, || {
+            let mut s = NativeStepper::new();
+            std::hint::black_box(s.step(&reps, &weights, d, &cents, &c));
+        });
+        let t_shard = bench_secs(3, || {
+            std::hint::black_box(sharded_weighted_step(&reps, &weights, d, &cents, 4, &c));
+        });
+        let t_pjrt = runtime.as_mut().map(|rt| {
+            bench_secs(3, || {
+                std::hint::black_box(rt.wlloyd_step(&reps, &weights, d, &cents).unwrap());
+            })
+        });
+        // Pruned runs a whole convergence loop; report rows/s per iteration.
+        let mut iters = 1usize;
+        let t_pruned = bench_secs(1, || {
+            let out = pruned_weighted_lloyd(&reps, &weights, d, &cents, 30, &c);
+            iters = out.iters.max(1);
+            std::hint::black_box(out);
+        }) / iters as f64;
+
+        let rps = |t: f64| m as f64 / t;
+        println!(
+            "{:<18} {:>10} {:>12} {:>12} {:>12} {:>14}",
+            format!("{m},{k},{d}"),
+            fmt_count(rps(t_native) as u64),
+            fmt_count(rps(t_shard) as u64),
+            t_pjrt.map(|t| fmt_count(rps(t) as u64)).unwrap_or_else(|| "-".into()),
+            fmt_count(rps(t_pruned) as u64),
+            fmt_count((rps(t_native) * k as f64) as u64),
+        );
+        rows.push(vec![
+            m.to_string(),
+            k.to_string(),
+            d.to_string(),
+            format!("{:.0}", rps(t_native)),
+            format!("{:.0}", rps(t_shard)),
+            t_pjrt.map(|t| format!("{:.0}", rps(t))).unwrap_or_default(),
+            format!("{:.0}", rps(t_pruned)),
+        ]);
+    }
+    write_csv("perf_assignment", &rows);
+}

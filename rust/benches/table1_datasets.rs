@@ -1,0 +1,50 @@
+//! Exp T1 — regenerate the paper's Table 1 (dataset inventory), plus the
+//! simulator characteristics at the bench scale: per-dataset n, d,
+//! bounding-box diagonal and generation throughput.
+
+use bwkm::bench::{bench_secs, env_f64, write_csv};
+use bwkm::data::{simulate, TABLE1};
+use bwkm::geometry::BBox;
+use bwkm::util::fmt_count;
+
+fn main() {
+    let scale = 0.002 * env_f64("BWKM_SCALE", 1.0);
+    println!("=== Table 1: datasets (paper n vs simulated n at scale) ===");
+    println!(
+        "{:<6} {:>12} {:>4} {:>10} {:>12} {:>10}",
+        "name", "paper n", "d", "sim n", "bbox diag", "gen (s)"
+    );
+    let mut rows = vec![vec![
+        "name".into(),
+        "paper_n".into(),
+        "d".into(),
+        "sim_n".into(),
+        "diag".into(),
+        "gen_secs".into(),
+    ]];
+    for spec in TABLE1 {
+        let mut ds = simulate(spec.name, scale, 1).unwrap();
+        let secs = bench_secs(1, || {
+            ds = simulate(spec.name, scale, 1).unwrap();
+        });
+        let diag = BBox::of(&ds.data, ds.d, None).unwrap().diagonal();
+        println!(
+            "{:<6} {:>12} {:>4} {:>10} {:>12.3} {:>10.3}",
+            spec.name,
+            fmt_count(spec.paper_n as u64),
+            spec.d,
+            fmt_count(ds.n as u64),
+            diag,
+            secs
+        );
+        rows.push(vec![
+            spec.name.into(),
+            spec.paper_n.to_string(),
+            spec.d.to_string(),
+            ds.n.to_string(),
+            format!("{diag:.4}"),
+            format!("{secs:.4}"),
+        ]);
+    }
+    write_csv("table1_datasets", &rows);
+}

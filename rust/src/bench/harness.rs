@@ -1,0 +1,68 @@
+//! Small timing/IO helpers for the hand-rolled benches.
+
+use std::io::Write;
+use std::path::PathBuf;
+use std::time::Instant;
+
+/// Median wall-clock seconds of `iters` runs of `f` (after one warmup).
+pub fn bench_secs<F: FnMut()>(iters: usize, mut f: F) -> f64 {
+    f(); // warmup
+    let mut times: Vec<f64> = (0..iters.max(1))
+        .map(|_| {
+            let t = Instant::now();
+            f();
+            t.elapsed().as_secs_f64()
+        })
+        .collect();
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    times[times.len() / 2]
+}
+
+/// `bench_out/` under the repo root (created on demand).
+pub fn out_dir() -> PathBuf {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../bench_out");
+    std::fs::create_dir_all(&dir).expect("create bench_out");
+    dir
+}
+
+/// Write CSV rows (first row = header) to `bench_out/<name>.csv`.
+pub fn write_csv(name: &str, rows: &[Vec<String>]) {
+    let path = out_dir().join(format!("{name}.csv"));
+    let mut f = std::fs::File::create(&path).expect("create csv");
+    for row in rows {
+        writeln!(f, "{}", row.join(",")).expect("write csv");
+    }
+    eprintln!("wrote {}", path.display());
+}
+
+/// Env-var override with default (the BWKM_SCALE / BWKM_REPS knobs).
+pub fn env_f64(name: &str, default: f64) -> f64 {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+pub fn env_u64(name: &str, default: u64) -> u64 {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_secs_measures_something() {
+        let s = bench_secs(3, || {
+            let mut acc = 0u64;
+            for i in 0..10_000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            std::hint::black_box(acc);
+        });
+        assert!(s >= 0.0 && s < 1.0);
+    }
+
+    #[test]
+    fn env_parsing() {
+        assert_eq!(env_f64("BWKM_NO_SUCH_VAR", 0.5), 0.5);
+        assert_eq!(env_u64("BWKM_NO_SUCH_VAR", 7), 7);
+    }
+}

@@ -1,0 +1,10 @@
+//! Benchmark harness (offline substitute for criterion; DESIGN.md §4):
+//! timing helpers, the figure-regeneration experiment runner (paper §3,
+//! Figures 2–6) and CSV/ASCII emitters. The `benches/*.rs` binaries are
+//! thin wrappers over this module.
+
+pub mod figures;
+pub mod harness;
+
+pub use figures::{run_figure, FigureCfg, FigureResult};
+pub use harness::{bench_secs, env_f64, env_u64, out_dir, write_csv};

@@ -1,0 +1,368 @@
+//! The BWKM main loop — paper Algorithm 5 (§2.3) with the four stopping
+//! criteria of §2.4.2.
+//!
+//! Per outer iteration: run weighted Lloyd over the current partition's
+//! representatives (warm-started), compute ε for every block from the
+//! top-2 distances the Lloyd step already produced, sample |F| blocks with
+//! probability ∝ ε (only boundary blocks have mass), split them at the
+//! middle of the longest side of their tight bounding boxes, and repeat.
+
+use crate::data::Dataset;
+use crate::kmeans::init::weighted_kmeanspp;
+use crate::kmeans::{weighted_lloyd_with, NativeStepper, Stepper, WLloydCfg};
+use crate::metrics::{kmeans_error, Budget, DistanceCounter};
+use crate::partition::Partition;
+use crate::util::{Cdf, Rng};
+
+use super::init_partition::{initial_partition, InitCfg};
+use super::misassignment::{boundary, epsilons, theorem2_bound};
+
+/// Why a BWKM run stopped.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StopReason {
+    /// F_{C,D}(B) = ∅: every block is well assigned; by Theorem 3 the
+    /// centroids are a fixed point of Lloyd's algorithm on the full
+    /// dataset.
+    EmptyBoundary,
+    /// The distance-computation budget was exhausted.
+    Budget,
+    /// Outer-iteration cap.
+    MaxIters,
+    /// ‖C−C'‖∞ ≤ ε_w (Thm A.4 displacement criterion).
+    CentroidShift,
+    /// Theorem 2 accuracy bound fell below the configured threshold.
+    AccuracyBound,
+}
+
+/// Full BWKM configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct BwkmCfg {
+    pub init: InitCfg,
+    /// Inner weighted-Lloyd loop settings.
+    pub wl: WLloydCfg,
+    /// Maximum outer (partition-refinement) iterations.
+    pub max_outer: usize,
+    /// Hard distance budget for the whole run.
+    pub budget: Budget,
+    /// Optional ‖C−C'‖∞ threshold (Thm A.4's ε_w).
+    pub shift_tol: Option<f64>,
+    /// Optional Theorem 2 bound threshold.
+    pub bound_tol: Option<f64>,
+    /// Evaluate E^D(C) after every outer iteration into the trace. The
+    /// evaluation uses a *separate* counter, so it never pollutes the
+    /// method's own accounting (bench instrumentation only).
+    pub eval_full_error: bool,
+}
+
+impl BwkmCfg {
+    /// The paper's §2.4.1 parameterization: m = 10·√(K·d), s = √n, r = 5;
+    /// m' = max(K+1, m/4).
+    pub fn for_dataset(n: usize, d: usize, k: usize) -> BwkmCfg {
+        let m = (10.0 * ((k * d) as f64).sqrt()).ceil() as usize;
+        let m = m.max(k + 2);
+        let m_prime = (m / 4).max(k + 1).min(m);
+        BwkmCfg {
+            init: InitCfg { m_prime, m, s: (n as f64).sqrt().ceil() as usize, r: 5 },
+            wl: WLloydCfg::default(),
+            max_outer: 40,
+            budget: Budget::unlimited(),
+            shift_tol: None,
+            bound_tol: None,
+            eval_full_error: false,
+        }
+    }
+}
+
+/// One row of the per-outer-iteration trace (the data behind the BWKM
+/// trajectory curves in Figures 2–6).
+#[derive(Clone, Debug)]
+pub struct TracePoint {
+    pub outer_iter: usize,
+    /// Cumulative distance computations at the end of this iteration.
+    pub distances: u64,
+    /// Blocks / non-empty blocks / boundary size.
+    pub blocks: usize,
+    pub occupied: usize,
+    pub boundary: usize,
+    /// Weighted error E^P(C).
+    pub weighted_error: f64,
+    /// Theorem 2 bound on |E^D − E^P|.
+    pub bound: f64,
+    /// E^D(C) when `eval_full_error` is set (uncounted evaluation).
+    pub full_error: Option<f64>,
+    /// Weighted-Lloyd iterations spent this outer step.
+    pub lloyd_iters: usize,
+}
+
+/// Outcome of a BWKM run.
+#[derive(Clone, Debug)]
+pub struct BwkmOutcome {
+    pub centroids: Vec<f64>,
+    pub k: usize,
+    pub d: usize,
+    pub stop: StopReason,
+    pub trace: Vec<TracePoint>,
+    /// Final partition (for inspection / reuse as a coreset).
+    pub partition: Partition,
+}
+
+/// Run BWKM with the native weighted-Lloyd stepper.
+pub fn run(
+    data: &Dataset,
+    k: usize,
+    cfg: &BwkmCfg,
+    rng: &mut Rng,
+    counter: &DistanceCounter,
+) -> BwkmOutcome {
+    run_with(&mut NativeStepper::new(), data, k, cfg, rng, counter)
+}
+
+/// Run BWKM over an arbitrary weighted-Lloyd [`Stepper`] backend (the PJRT
+/// runtime plugs in here — `runtime::PjrtStepper`).
+pub fn run_with(
+    stepper: &mut dyn Stepper,
+    data: &Dataset,
+    k: usize,
+    cfg: &BwkmCfg,
+    rng: &mut Rng,
+    counter: &DistanceCounter,
+) -> BwkmOutcome {
+    assert!(k >= 1, "k must be ≥ 1");
+    assert!(data.n >= k, "n must be ≥ k");
+
+    // ---- Step 1: initial partition + weighted K-means++ seeding.
+    let mut partition = initial_partition(data, k, &cfg.init, rng, counter);
+    let (mut reps, mut weights, mut ids) = partition.reps_weights();
+    let mut centroids = weighted_kmeanspp(&reps, &weights, data.d, k, rng, counter);
+
+    let mut trace = Vec::new();
+    let mut stop = StopReason::MaxIters;
+
+    for outer in 0..cfg.max_outer {
+        // ---- Step 2 / Step 4: weighted Lloyd (warm start).
+        let mut wl_cfg = cfg.wl;
+        wl_cfg.budget = cfg.budget;
+        let out = weighted_lloyd_with(
+            stepper, &reps, &weights, data.d, &centroids, &wl_cfg, counter,
+        );
+        let shift = crate::kmeans::weighted_lloyd::max_shift(
+            &centroids,
+            &out.centroids,
+            data.d,
+            k,
+        );
+        centroids = out.centroids.clone();
+
+        // ---- Step 3 preamble: ε per block from the stored top-2 distances
+        // ("we store ... the two closest centroids to the representative").
+        let eps = epsilons(&partition, &ids, &out.d1, &out.d2);
+        let f = boundary(&eps);
+        let bound = theorem2_bound(&partition, &ids, &weights, &out.d1, &eps);
+
+        let full_error = cfg.eval_full_error.then(|| {
+            let eval = DistanceCounter::new(); // uncounted instrumentation
+            kmeans_error(&data.data, data.d, &centroids, &eval)
+        });
+        trace.push(TracePoint {
+            outer_iter: outer,
+            distances: counter.get(),
+            blocks: partition.len(),
+            occupied: partition.occupied(),
+            boundary: f.len(),
+            weighted_error: out.werr,
+            bound,
+            full_error,
+            lloyd_iters: out.iters,
+        });
+
+        // ---- Stopping criteria (§2.4.2).
+        if f.is_empty() {
+            stop = StopReason::EmptyBoundary;
+            break;
+        }
+        if cfg.budget.exceeded(counter) {
+            stop = StopReason::Budget;
+            break;
+        }
+        if let Some(tol) = cfg.shift_tol {
+            if shift <= tol && outer > 0 {
+                stop = StopReason::CentroidShift;
+                break;
+            }
+        }
+        if let Some(tol) = cfg.bound_tol {
+            if bound <= tol {
+                stop = StopReason::AccuracyBound;
+                break;
+            }
+        }
+        if outer + 1 == cfg.max_outer {
+            break; // stop = MaxIters
+        }
+
+        // ---- Step 3: sample |F| blocks with replacement ∝ ε and split.
+        let cdf = match Cdf::new(&eps) {
+            Some(c) => c,
+            None => {
+                stop = StopReason::EmptyBoundary;
+                break;
+            }
+        };
+        let mut hit = vec![false; ids.len()];
+        for _ in 0..f.len() {
+            hit[cdf.sample(rng)] = true;
+        }
+        for row in 0..ids.len() {
+            if hit[row] && partition.blocks[ids[row]].weight() > 1 {
+                partition.split(ids[row], data);
+            }
+        }
+        let rw = partition.reps_weights();
+        reps = rw.0;
+        weights = rw.1;
+        ids = rw.2;
+    }
+
+    BwkmOutcome { centroids, k, d: data.d, stop, trace, partition }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kmeans::lloyd::{lloyd, LloydCfg};
+    use crate::util::prop;
+
+    fn blob_ds(g: &mut prop::Gen, n: usize, d: usize, k: usize) -> Dataset {
+        Dataset::new(g.blobs(n, d, k, 0.5), d)
+    }
+
+    #[test]
+    fn runs_and_traces_on_blobs() {
+        let mut g = prop::Gen { rng: Rng::new(31), case: 0 };
+        let ds = blob_ds(&mut g, 1200, 2, 3);
+        let mut cfg = BwkmCfg::for_dataset(ds.n, ds.d, 3);
+        cfg.eval_full_error = true;
+        cfg.max_outer = 12;
+        let c = DistanceCounter::new();
+        let out = run(&ds, 3, &cfg, &mut Rng::new(1), &c);
+        assert_eq!(out.centroids.len(), 3 * 2);
+        assert!(!out.trace.is_empty());
+        // Distances are cumulative and increasing.
+        for w in out.trace.windows(2) {
+            assert!(w[1].distances >= w[0].distances);
+        }
+        // The final full error is competitive with Lloyd from the same
+        // seeding effort (coarse sanity: within 2x).
+        let c2 = DistanceCounter::new();
+        let init = crate::kmeans::init::kmeanspp(&ds.data, ds.d, 3, &mut Rng::new(1), &c2);
+        let l = lloyd(&ds.data, ds.d, &init, &LloydCfg::default(), &c2);
+        let e_bwkm = out.trace.last().unwrap().full_error.unwrap();
+        assert!(
+            e_bwkm < l.error * 2.0 + 1e-9,
+            "bwkm {e_bwkm} vs lloyd {}",
+            l.error
+        );
+        // And it used far fewer distances than full Lloyd.
+        assert!(c.get() < c2.get(), "bwkm {} vs lloyd {}", c.get(), c2.get());
+    }
+
+    #[test]
+    fn empty_boundary_is_lloyd_fixed_point() {
+        // Theorem 3 end-to-end: when BWKM stops with an empty boundary,
+        // one full Lloyd iteration must not move the centroids.
+        let mut g = prop::Gen { rng: Rng::new(32), case: 0 };
+        let ds = blob_ds(&mut g, 400, 2, 2);
+        let mut cfg = BwkmCfg::for_dataset(ds.n, ds.d, 2);
+        cfg.max_outer = 200; // let it run to the empty-boundary criterion
+        let c = DistanceCounter::new();
+        let out = run(&ds, 2, &cfg, &mut Rng::new(2), &c);
+        if out.stop == StopReason::EmptyBoundary {
+            let c2 = DistanceCounter::new();
+            let one = lloyd(
+                &ds.data,
+                ds.d,
+                &out.centroids,
+                &LloydCfg { max_iters: 1, eps: 0.0, ..Default::default() },
+                &c2,
+            );
+            let shift = crate::kmeans::weighted_lloyd::max_shift(
+                &out.centroids,
+                &one.centroids,
+                ds.d,
+                2,
+            );
+            assert!(shift < 1e-9, "Theorem 3 violated: shift {shift}");
+        }
+    }
+
+    #[test]
+    fn budget_stops_early() {
+        let mut g = prop::Gen { rng: Rng::new(33), case: 0 };
+        let ds = blob_ds(&mut g, 3000, 3, 4);
+        let mut cfg = BwkmCfg::for_dataset(ds.n, ds.d, 4);
+        cfg.budget = Budget::of(40_000);
+        cfg.max_outer = 1000;
+        let c = DistanceCounter::new();
+        let out = run(&ds, 4, &cfg, &mut Rng::new(3), &c);
+        assert!(matches!(out.stop, StopReason::Budget | StopReason::EmptyBoundary));
+        // Overshoot is bounded by one inner Lloyd pass worth of work.
+        assert!(c.get() < 40_000 + (out.trace.last().unwrap().occupied as u64 * 4 * 30));
+    }
+
+    #[test]
+    fn prop_bwkm_improves_over_its_own_seeding() {
+        prop::check("bwkm-improves", 6, |g| {
+            let n = g.int(300, 1500);
+            let d = g.int(2, 4);
+            let k = g.int(2, 5);
+            let ds = blob_ds(g, n, d, k);
+            let mut cfg = BwkmCfg::for_dataset(ds.n, ds.d, k);
+            cfg.eval_full_error = true;
+            cfg.max_outer = 10;
+            let c = DistanceCounter::new();
+            let out = run(&ds, k, &cfg, &mut g.rng.fork(1), &c);
+            let first = out.trace.first().unwrap().full_error.unwrap();
+            let last = out.trace.last().unwrap().full_error.unwrap();
+            assert!(
+                last <= first * (1.0 + 1e-6),
+                "error went up across outer iterations: {first} -> {last}"
+            );
+        });
+    }
+
+    #[test]
+    fn shift_tolerance_triggers() {
+        let mut g = prop::Gen { rng: Rng::new(35), case: 0 };
+        let ds = blob_ds(&mut g, 600, 2, 3);
+        let mut cfg = BwkmCfg::for_dataset(ds.n, ds.d, 3);
+        cfg.shift_tol = Some(1e9); // absurdly lax: trips at outer_iter 1
+        cfg.max_outer = 50;
+        let c = DistanceCounter::new();
+        let out = run(&ds, 3, &cfg, &mut Rng::new(4), &c);
+        assert!(matches!(
+            out.stop,
+            StopReason::CentroidShift | StopReason::EmptyBoundary
+        ));
+        assert!(out.trace.len() <= 2);
+    }
+
+    #[test]
+    fn k1_degenerate() {
+        let mut g = prop::Gen { rng: Rng::new(36), case: 0 };
+        let ds = blob_ds(&mut g, 100, 2, 1);
+        let cfg = BwkmCfg::for_dataset(ds.n, ds.d, 1);
+        let c = DistanceCounter::new();
+        let out = run(&ds, 1, &cfg, &mut Rng::new(5), &c);
+        // k=1: the (single) centroid must be the dataset mean; boundary is
+        // empty immediately.
+        assert_eq!(out.stop, StopReason::EmptyBoundary);
+        let mean = crate::geometry::mean_of(
+            &ds.data,
+            ds.d,
+            &(0..ds.n as u32).collect::<Vec<_>>(),
+        );
+        for j in 0..ds.d {
+            assert!((out.centroids[j] - mean[j]).abs() < 1e-9);
+        }
+    }
+}

@@ -1,0 +1,263 @@
+//! Construction of BWKM's initial partition — paper §2.2, Algorithms 2–4.
+//!
+//! * **Alg. 3** grows a starting spatial partition of size m' by
+//!   repeatedly sampling s points and splitting blocks drawn with
+//!   probability ∝ l_B · |B(S)| (big *and* dense blocks first).
+//! * **Alg. 4** estimates, for the current partition, the probability that
+//!   each block is *not* well assigned: r subsamples, a weighted
+//!   K-means++ run over each sample-induced representative set, and the
+//!   misassignment function ε of every block against those centroids
+//!   (Eq. 5).
+//! * **Alg. 2** alternates Alg. 4 with probability-guided splits until the
+//!   partition has m blocks, then materializes the induced dataset
+//!   partition P = B(D) (one full pass — the only O(n) work).
+
+use crate::data::Dataset;
+use crate::kmeans::init::weighted_kmeanspp;
+use crate::metrics::{nearest2, DistanceCounter};
+use crate::partition::{Partition, SampleStats};
+use crate::util::{Cdf, Rng};
+
+use super::misassignment::epsilon;
+
+/// Parameters of the initial-partition construction (paper §2.4.1
+/// recommends m = 10·√(K·d), s = √n, r = 5, and m' ≥ K).
+#[derive(Clone, Copy, Debug)]
+pub struct InitCfg {
+    /// Size of the starting spatial partition (Alg. 3), ≥ K.
+    pub m_prime: usize,
+    /// Target size of the initial partition (Alg. 2), > m'.
+    pub m: usize,
+    /// Subsample size s.
+    pub s: usize,
+    /// Number of K-means++ repetitions r.
+    pub r: usize,
+}
+
+/// Alg. 3: starting spatial partition of size m'.
+///
+/// No distance computations — only sampling, locating and splitting.
+pub fn starting_partition(
+    data: &Dataset,
+    m_prime: usize,
+    s: usize,
+    rng: &mut Rng,
+) -> Partition {
+    let mut partition = Partition::root(data);
+    // Build the tree spatially: we keep full membership out of the loop by
+    // splitting with sample statistics only; members are materialized by
+    // the caller (Alg. 2 Step 5). To keep the implementation simple and
+    // exact we *do* thread the real dataset through the splits (splitting
+    // touches only the split block's members — cheaper than a full
+    // rebuild, and the sample counts stay estimates as in the paper).
+    while partition.len() < m_prime {
+        let sample = sample_indices(rng, data.n, s);
+        let stats = SampleStats::collect(&partition, data, &sample);
+        // Pr(B) ∝ l_B · |B(S)|.
+        let probs: Vec<f64> = (0..partition.len())
+            .map(|b| {
+                if stats.counts[b] == 0 {
+                    0.0
+                } else {
+                    stats.diagonal(&partition, b) * stats.counts[b] as f64
+                }
+            })
+            .collect();
+        let want = partition.len().min(m_prime - partition.len());
+        let selected = sample_with_replacement(&probs, want, rng);
+        if selected.is_empty() {
+            break; // degenerate: all mass zero (e.g. all points identical)
+        }
+        for b in selected {
+            partition.split(b, data);
+        }
+    }
+    partition
+}
+
+/// Alg. 4: cutting probabilities Pr(B) (Eq. 5) for the current partition.
+///
+/// Returns the (unnormalized) accumulated misassignment mass per block;
+/// `Cdf`-normalization happens at the sampling site. Distance accounting:
+/// each repetition pays the weighted K-means++ cost over its sampled
+/// representatives plus one top-2 scan per sampled block.
+pub fn cutting_masses(
+    partition: &Partition,
+    data: &Dataset,
+    k: usize,
+    s: usize,
+    r: usize,
+    rng: &mut Rng,
+    counter: &DistanceCounter,
+) -> Vec<f64> {
+    let d = data.d;
+    let mut mass = vec![0.0; partition.len()];
+    for _ in 0..r {
+        let sample = sample_indices(rng, data.n, s);
+        let stats = SampleStats::collect(partition, data, &sample);
+        let (reps, weights, ids) = stats.reps_weights();
+        if ids.is_empty() {
+            continue;
+        }
+        let kk = k.min(ids.len());
+        let cents = weighted_kmeanspp(&reps, &weights, d, kk, rng, counter);
+        if kk < 2 {
+            continue; // ε is 0 against a single centroid
+        }
+        for (row, &b) in ids.iter().enumerate() {
+            let (_, d1, d2) = nearest2(&reps[row * d..(row + 1) * d], &cents, d, counter);
+            mass[b] += epsilon(stats.diagonal(partition, b), d1, d2);
+        }
+    }
+    mass
+}
+
+/// Alg. 2: the full initial-partition construction. Returns the partition
+/// with the induced dataset partition materialized (Step 5).
+pub fn initial_partition(
+    data: &Dataset,
+    k: usize,
+    cfg: &InitCfg,
+    rng: &mut Rng,
+    counter: &DistanceCounter,
+) -> Partition {
+    assert!(cfg.m_prime >= k.max(1), "m' must be ≥ K");
+    assert!(cfg.m >= cfg.m_prime, "m must be ≥ m'");
+    let mut partition = starting_partition(data, cfg.m_prime, cfg.s, rng);
+
+    while partition.len() < cfg.m {
+        let mass = cutting_masses(&partition, data, k, cfg.s, cfg.r, rng, counter);
+        let want = partition.len().min(cfg.m - partition.len());
+        let selected = sample_with_replacement(&mass, want, rng);
+        if selected.is_empty() {
+            // Every sampled block is well assigned w.r.t. every seeding —
+            // the partition is already good enough (paper: Pr(B)=0 means
+            // well assigned for all Sⁱ, Cⁱ).
+            break;
+        }
+        for b in selected {
+            partition.split(b, data);
+        }
+    }
+
+    // Step 5: P = B(D). Splits above maintained exact membership, but a
+    // final rebuild also refreshes every tight bbox (the §2.3 refinement).
+    partition.assign_members(data);
+    partition
+}
+
+/// `want` draws with replacement ∝ `probs`, deduplicated (a block selected
+/// twice is split once — its halves are candidates next round, exactly as
+/// in the paper's "sample with replacement ... to determine a subset").
+fn sample_with_replacement(probs: &[f64], want: usize, rng: &mut Rng) -> Vec<usize> {
+    let cdf = match Cdf::new(probs) {
+        Some(c) => c,
+        None => return Vec::new(),
+    };
+    let mut hit = vec![false; probs.len()];
+    for _ in 0..want {
+        hit[cdf.sample(rng)] = true;
+    }
+    (0..probs.len()).filter(|&i| hit[i]).collect()
+}
+
+/// Uniform sample of `s` indices without replacement (capped at n).
+fn sample_indices(rng: &mut Rng, n: usize, s: usize) -> Vec<usize> {
+    rng.sample_indices(n, s.min(n))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn toy(g: &mut prop::Gen, n: usize, d: usize) -> Dataset {
+        Dataset::new(g.blobs(n, d, 3, 0.6), d)
+    }
+
+    #[test]
+    fn starting_partition_reaches_m_prime() {
+        let mut g = prop::Gen { rng: Rng::new(21), case: 0 };
+        let ds = toy(&mut g, 500, 3);
+        let mut rng = Rng::new(1);
+        let p = starting_partition(&ds, 40, 22, &mut rng);
+        assert!(p.len() >= 40, "got {}", p.len());
+        // Invariant: all points still covered.
+        let total: usize = p.blocks.iter().map(|b| b.weight()).sum();
+        assert_eq!(total, 500);
+    }
+
+    #[test]
+    fn initial_partition_respects_m_and_covers() {
+        let mut g = prop::Gen { rng: Rng::new(22), case: 0 };
+        let ds = toy(&mut g, 800, 2);
+        let mut rng = Rng::new(2);
+        let c = DistanceCounter::new();
+        let cfg = InitCfg { m_prime: 10, m: 60, s: 28, r: 3 };
+        let p = initial_partition(&ds, 5, &cfg, &mut rng, &c);
+        assert!(p.len() <= 60 + 60, "size {}", p.len()); // dedupe keeps it near m
+        let total: usize = p.blocks.iter().map(|b| b.weight()).sum();
+        assert_eq!(total, 800);
+        assert!(c.get() > 0, "Alg.4 must have computed distances");
+    }
+
+    #[test]
+    fn cutting_masses_zero_for_well_separated_singletons() {
+        // Two singleton blocks far apart, k=2: every seeding puts a
+        // centroid "near" each rep (reps are the only candidates), so the
+        // diagonal-0 blocks are always well assigned → zero mass.
+        let ds = Dataset::new(vec![0.0, 0.0, 100.0, 0.0], 2);
+        let mut p = Partition::root(&ds);
+        p.split_at(0, 0, 50.0, Some(&ds));
+        let c = DistanceCounter::new();
+        let mass = cutting_masses(&p, &ds, 2, 2, 4, &mut Rng::new(3), &c);
+        assert!(mass.iter().all(|&m| m == 0.0), "{mass:?}");
+    }
+
+    #[test]
+    fn prop_initial_partition_invariants() {
+        prop::check("init-partition", 10, |g| {
+            let n = g.int(50, 600);
+            let d = g.int(1, 5);
+            let k = g.int(2, 6);
+            let ds = toy(g, n, d);
+            let mut rng = g.rng.fork(11);
+            let c = DistanceCounter::new();
+            let m_prime = (k + 2).max(8);
+            let cfg = InitCfg {
+                m_prime,
+                m: m_prime + g.int(0, 40),
+                s: (n as f64).sqrt() as usize + 1,
+                r: 3,
+            };
+            let p = initial_partition(&ds, k, &cfg, &mut rng, &c);
+            // Cover and disjointness.
+            let mut seen = vec![false; n];
+            for b in &p.blocks {
+                for &i in &b.members {
+                    assert!(!seen[i as usize]);
+                    seen[i as usize] = true;
+                }
+            }
+            assert!(seen.iter().all(|&s| s));
+            // Representatives are inside their tight boxes.
+            for b in &p.blocks {
+                if let (Some(rep), Some(t)) = (b.rep(), b.tight.as_ref()) {
+                    assert!(t.contains(&rep));
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn degenerate_all_identical_points() {
+        let ds = Dataset::new(vec![1.0; 50], 1);
+        let mut rng = Rng::new(5);
+        let c = DistanceCounter::new();
+        let cfg = InitCfg { m_prime: 4, m: 8, s: 7, r: 2 };
+        let p = initial_partition(&ds, 2, &cfg, &mut rng, &c);
+        // Cannot split a zero-diameter box usefully; still valid.
+        let total: usize = p.blocks.iter().map(|b| b.weight()).sum();
+        assert_eq!(total, 50);
+    }
+}

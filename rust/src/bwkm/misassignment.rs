@@ -1,0 +1,224 @@
+//! The misassignment function ε (paper Def. 3), the boundary of a spatial
+//! partition (Def. 4) and the Theorem 2 accuracy bound.
+//!
+//! ε_{C,D}(B) = max(0, 2·l_B − δ_P(C)),  δ_P(C) = ‖P̄−c₂‖ − ‖P̄−c₁‖,
+//!
+//! where l_B is the block diagonal and c₁, c₂ the two nearest centroids to
+//! the representative P̄. Theorem 1: ε = 0 ⇒ every instance in the block is
+//! assigned to the same centroid as the representative (the block is *well
+//! assigned*). Everything here consumes the squared top-2 distances that
+//! the weighted-Lloyd step already produced — the "cheap criterion" of
+//! §2.1: no distances are recomputed.
+
+/// Misassignment value from a block diagonal and squared top-2 distances.
+/// `d2_sq = ∞` (single centroid) yields 0 — one centroid means every point
+/// trivially shares the block's assignment.
+#[inline]
+pub fn epsilon(diag: f64, d1_sq: f64, d2_sq: f64) -> f64 {
+    if !d2_sq.is_finite() {
+        return 0.0;
+    }
+    let delta = d2_sq.sqrt() - d1_sq.sqrt();
+    (2.0 * diag - delta).max(0.0)
+}
+
+/// Per-block ε for the non-empty blocks of a partition, given the top-2
+/// squared distances of their representatives (aligned with `ids`).
+pub fn epsilons(
+    partition: &crate::partition::Partition,
+    ids: &[usize],
+    d1: &[f64],
+    d2: &[f64],
+) -> Vec<f64> {
+    ids.iter()
+        .enumerate()
+        .map(|(row, &b)| epsilon(partition.blocks[b].diagonal(), d1[row], d2[row]))
+        .collect()
+}
+
+/// Boundary F_{C,D}(B): indices (into `ids`/`eps`) of blocks with ε > 0.
+pub fn boundary(eps: &[f64]) -> Vec<usize> {
+    eps.iter()
+        .enumerate()
+        .filter_map(|(i, &e)| (e > 0.0).then_some(i))
+        .collect()
+}
+
+/// Theorem 2 bound on |E^D(C) − E^P(C)|:
+/// Σ_B 2·|P|·ε_B·(2·l_B + ‖P̄−c_P̄‖) + (|P|−1)/2 · l_B².
+///
+/// All inputs come from the last weighted-Lloyd iteration — O(|P|), no
+/// distance computations (it is also the §2.4.2 "accuracy" stopping
+/// criterion).
+pub fn theorem2_bound(
+    partition: &crate::partition::Partition,
+    ids: &[usize],
+    weights: &[f64],
+    d1: &[f64],
+    eps: &[f64],
+) -> f64 {
+    let mut bound = 0.0;
+    for (row, &b) in ids.iter().enumerate() {
+        let l = partition.blocks[b].diagonal();
+        let w = weights[row];
+        bound += 2.0 * w * eps[row] * (2.0 * l + d1[row].sqrt());
+        bound += (w - 1.0) * 0.5 * l * l;
+    }
+    bound
+}
+
+/// Displacement threshold ε_w guaranteeing the Eq. 2 criterion (Thm A.4),
+/// in its **corrected** form ε_w = sqrt(l² + ε/n) − l: the paper prints
+/// sqrt(l² + ε²/n²) − l, but its own proof chain (n·ε_w² + 2·n·l·ε_w = ε)
+/// requires ε/n under the root — see `tests/theorems.rs` and the erratum
+/// note in EXPERIMENTS.md. Use with [`super::BwkmCfg::shift_tol`].
+pub fn eps_w_for(eps: f64, bbox_diagonal: f64, n: usize) -> f64 {
+    let l = bbox_diagonal;
+    (l * l + eps / n as f64).sqrt() - l
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Dataset;
+    use crate::kmeans::{NativeStepper, Stepper};
+    use crate::metrics::{kmeans_error, weighted_error, DistanceCounter};
+    use crate::partition::Partition;
+    use crate::util::prop;
+
+    #[test]
+    fn epsilon_basics() {
+        // diag 1, distances 4 and 49 (squared): delta = 7-2 = 5 > 2 → 0.
+        assert_eq!(epsilon(1.0, 4.0, 49.0), 0.0);
+        // diag 3: 2*3 - 5 = 1.
+        assert!((epsilon(3.0, 4.0, 49.0) - 1.0).abs() < 1e-12);
+        // Single centroid.
+        assert_eq!(epsilon(10.0, 4.0, f64::INFINITY), 0.0);
+        // Zero diagonal (singleton block) is always well assigned.
+        assert_eq!(epsilon(0.0, 1.0, 1.0), 0.0);
+    }
+
+    #[test]
+    fn boundary_filters_positive() {
+        assert_eq!(boundary(&[0.0, 0.5, 0.0, 2.0]), vec![1, 3]);
+        assert!(boundary(&[0.0, 0.0]).is_empty());
+    }
+
+    /// Theorem 1 (the paper's sufficiency proof), validated empirically:
+    /// whenever ε_{C,D}(B) = 0, every instance in B is assigned to the
+    /// representative's centroid.
+    #[test]
+    fn prop_theorem1_zero_eps_implies_well_assigned() {
+        prop::check("thm1", 40, |g| {
+            let n = g.int(10, 250);
+            let d = g.int(1, 4);
+            let k = g.int(2, 6);
+            let ds = Dataset::new(g.blobs(n, d, k, 1.5), d);
+            let mut p = Partition::root(&ds);
+            let mut rng = g.rng.fork(2);
+            for _ in 0..g.int(3, 40) {
+                let b = rng.usize(p.len());
+                if p.blocks[b].weight() > 0 {
+                    p.split(b, &ds);
+                }
+            }
+            let (reps, w, ids) = p.reps_weights();
+            let cents = g.cloud(k, d, 5.0);
+            let c = DistanceCounter::new();
+            let step = NativeStepper::new().step(&reps, &w, d, &cents, &c);
+            let eps = epsilons(&p, &ids, &step.d1, &step.d2);
+            for (row, &b) in ids.iter().enumerate() {
+                if eps[row] == 0.0 {
+                    let rep_assign = step.assign[row];
+                    for &i in &p.blocks[b].members {
+                        let (ci, _) =
+                            crate::metrics::nearest(ds.row(i as usize), &cents, d, &c);
+                        assert_eq!(
+                            ci as u32, rep_assign,
+                            "Theorem 1 violated: block {b} has eps=0 but point {i} \
+                             assigned to {ci} != rep's {rep_assign}"
+                        );
+                    }
+                }
+            }
+        });
+    }
+
+    /// Theorem 2: |E^D(C) − E^P(C)| is bounded by the computable bound.
+    #[test]
+    fn prop_theorem2_bound_holds() {
+        prop::check("thm2", 40, |g| {
+            let n = g.int(10, 200);
+            let d = g.int(1, 4);
+            let k = g.int(2, 5);
+            let ds = Dataset::new(g.blobs(n, d, k, 1.0), d);
+            let mut p = Partition::root(&ds);
+            let mut rng = g.rng.fork(3);
+            for _ in 0..g.int(0, 25) {
+                let b = rng.usize(p.len());
+                p.split(b, &ds);
+            }
+            let (reps, w, ids) = p.reps_weights();
+            let cents = g.cloud(k, d, 4.0);
+            let c = DistanceCounter::new();
+            let step = NativeStepper::new().step(&reps, &w, d, &cents, &c);
+            let eps = epsilons(&p, &ids, &step.d1, &step.d2);
+            let bound = theorem2_bound(&p, &ids, &w, &step.d1, &eps);
+
+            let e_full = kmeans_error(&ds.data, d, &cents, &c);
+            let e_wtd = weighted_error(&reps, &w, d, &cents, &c);
+            assert!(
+                (e_full - e_wtd).abs() <= bound * (1.0 + 1e-9) + 1e-9,
+                "Theorem 2 violated: |{e_full} - {e_wtd}| > {bound}"
+            );
+        });
+    }
+
+    /// Corollary of Lemma A.1: when every block is well assigned the
+    /// weighted error *difference* between two centroid sets equals the
+    /// full-dataset error difference.
+    #[test]
+    fn prop_lemma_a1_error_differences_match_when_well_assigned() {
+        prop::check("lemma-a1", 25, |g| {
+            let n = g.int(10, 150);
+            let d = g.int(1, 3);
+            let k = 2;
+            let ds = Dataset::new(g.blobs(n, d, k, 0.5), d);
+            let mut p = Partition::root(&ds);
+            let mut rng = g.rng.fork(7);
+            // Split a lot so blocks become singletons / tiny → well assigned.
+            for _ in 0..140 {
+                let b = rng.usize(p.len());
+                if p.blocks[b].weight() > 1 {
+                    p.split(b, &ds);
+                }
+            }
+            let (reps, w, ids) = p.reps_weights();
+            let c1 = g.cloud(k, d, 4.0);
+            let c2 = g.cloud(k, d, 4.0);
+            let c = DistanceCounter::new();
+
+            // Only check when *both* centroid sets leave all blocks well
+            // assigned (the lemma's hypothesis).
+            let mut stepper = NativeStepper::new();
+            let s1 = stepper.step(&reps, &w, d, &c1, &c);
+            let s2 = stepper.step(&reps, &w, d, &c2, &c);
+            let e1 = epsilons(&p, &ids, &s1.d1, &s1.d2);
+            let e2 = epsilons(&p, &ids, &s2.d1, &s2.d2);
+            if e1.iter().any(|&e| e > 0.0) || e2.iter().any(|&e| e > 0.0) {
+                return; // hypothesis not met for this case
+            }
+            let ef1 = kmeans_error(&ds.data, d, &c1, &c);
+            let ef2 = kmeans_error(&ds.data, d, &c2, &c);
+            let ew1 = weighted_error(&reps, &w, d, &c1, &c);
+            let ew2 = weighted_error(&reps, &w, d, &c2, &c);
+            let scale = ef1.abs().max(ef2.abs()).max(1.0);
+            assert!(
+                ((ef1 - ef2) - (ew1 - ew2)).abs() < 1e-7 * scale,
+                "Lemma A.1 violated: full diff {} vs weighted diff {}",
+                ef1 - ef2,
+                ew1 - ew2
+            );
+        });
+    }
+}

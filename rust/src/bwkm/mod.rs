@@ -1,0 +1,17 @@
+//! The paper's contribution: the **Boundary Weighted K-means** algorithm
+//! (BWKM) — §2 of the paper.
+//!
+//! * [`misassignment`] — the ε criterion (Def. 3 / Thm 1), boundaries
+//!   (Def. 4) and the Theorem 2 accuracy bound;
+//! * [`init_partition`] — Algorithms 2–4 (the boundary-seeking initial
+//!   partition);
+//! * [`algorithm`] — Algorithm 5 (the main loop) with the §2.4.2 stopping
+//!   criteria.
+
+pub mod algorithm;
+pub mod init_partition;
+pub mod misassignment;
+
+pub use algorithm::{run, run_with, BwkmCfg, BwkmOutcome, StopReason, TracePoint};
+pub use init_partition::{cutting_masses, initial_partition, starting_partition, InitCfg};
+pub use misassignment::{boundary, eps_w_for, epsilon, epsilons, theorem2_bound};

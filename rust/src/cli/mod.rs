@@ -1,0 +1,271 @@
+//! The `bwkm` launcher CLI (hand-rolled arg parsing; DESIGN.md §4).
+//!
+//! ```text
+//! bwkm info
+//! bwkm run [--config FILE] [key=value ...]
+//! bwkm figure <CIF|3RN|GS|SUSY|WUY> [key=value ...]
+//! bwkm quickstart
+//! ```
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::bench::figures::{emit, run_figure, FigureCfg};
+use crate::config::{Method, RunConfig};
+use crate::data::{simulate, Dataset, TABLE1};
+use crate::kmeans::init::{forgy, kmc2, kmeanspp, Kmc2Cfg};
+use crate::kmeans::{lloyd, minibatch_kmeans, LloydCfg, MiniBatchCfg};
+use crate::metrics::{kmeans_error, DistanceCounter};
+use crate::rpkm::{grid_rpkm, RpkmCfg};
+use crate::util::{fmt_count, Rng};
+
+const USAGE: &str = "\
+bwkm — Boundary Weighted K-means (Capó, Pérez, Lozano 2018) reproduction
+
+USAGE:
+  bwkm info                         dataset table, artifact manifest
+  bwkm quickstart                   tiny end-to-end demo
+  bwkm run [--config F] [k=v ...]   one clustering run (see config::RunConfig)
+  bwkm figure <NAME> [k=v ...]      regenerate a paper figure (CIF 3RN GS SUSY WUY)
+
+RUN KEYS: dataset scale seed k method budget threads use_pjrt eval_full_error
+          m m_prime s r max_outer    (method: bwkm fkm kmpp kmpp_init kmc2 mbN rpkm)
+";
+
+/// Entry point used by `src/main.rs`.
+pub fn main(args: &[String]) -> Result<()> {
+    match args.first().map(String::as_str) {
+        Some("info") => info(),
+        Some("quickstart") => quickstart(),
+        Some("run") => run(&args[1..]),
+        Some("figure") => figure(&args[1..]),
+        Some("help") | Some("--help") | Some("-h") | None => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        Some(other) => bail!("unknown command `{other}`\n{USAGE}"),
+    }
+}
+
+fn info() -> Result<()> {
+    println!("Table 1 datasets (simulated; see DESIGN.md §4):");
+    println!("{:<6} {:>12} {:>4}", "name", "paper n", "d");
+    for s in TABLE1 {
+        println!("{:<6} {:>12} {:>4}", s.name, fmt_count(s.paper_n as u64), s.d);
+    }
+    let dir = crate::runtime::Runtime::default_dir();
+    match crate::runtime::Manifest::load(&dir.join("manifest.tsv")) {
+        Ok(m) => {
+            println!("\nAOT artifacts at {} ({} variants):", dir.display(), m.variants.len());
+            for v in &m.variants {
+                println!(
+                    "  {:<12} mcap={:<6} kcap={:<3} dcap={:<3} {}",
+                    v.program, v.mcap, v.kcap, v.dcap, v.file
+                );
+            }
+        }
+        Err(e) => println!("\nno artifacts found at {} ({e}); run `make artifacts`", dir.display()),
+    }
+    Ok(())
+}
+
+fn quickstart() -> Result<()> {
+    let ds = simulate("WUY", 0.0005, 42).context("simulate")?;
+    let counter = DistanceCounter::new();
+    let mut cfg = crate::bwkm::BwkmCfg::for_dataset(ds.n, ds.d, 9);
+    cfg.eval_full_error = true;
+    let out = crate::bwkm::run(&ds, 9, &cfg, &mut Rng::new(7), &counter);
+    let last = out.trace.last().unwrap();
+    println!(
+        "BWKM on simulated WUY (n={}, d={}): E^D={:.4e} after {} distances ({:?})",
+        ds.n,
+        ds.d,
+        last.full_error.unwrap(),
+        fmt_count(counter.get()),
+        out.stop
+    );
+    Ok(())
+}
+
+fn parse_overrides(cfg: &mut RunConfig, args: &[String]) -> Result<()> {
+    let mut i = 0;
+    while i < args.len() {
+        if args[i] == "--config" {
+            let path = args.get(i + 1).context("--config needs a path")?;
+            *cfg = RunConfig::from_file(Path::new(path))?;
+            i += 2;
+            continue;
+        }
+        let (k, v) = args[i]
+            .split_once('=')
+            .with_context(|| format!("expected key=value, got `{}`", args[i]))?;
+        cfg.set(k, v)?;
+        i += 1;
+    }
+    Ok(())
+}
+
+fn load_dataset(cfg: &RunConfig) -> Result<Dataset> {
+    if let Some(path) = cfg.dataset.strip_prefix("path:") {
+        let p = Path::new(path);
+        if path.ends_with(".bin") {
+            crate::data::loader::load_bin(p)
+        } else {
+            crate::data::loader::load_csv(p, None)
+        }
+    } else {
+        simulate(&cfg.dataset, cfg.scale, cfg.seed)
+            .with_context(|| format!("unknown dataset `{}`", cfg.dataset))
+    }
+}
+
+fn run(args: &[String]) -> Result<()> {
+    let mut cfg = RunConfig::default();
+    parse_overrides(&mut cfg, args)?;
+    let ds = load_dataset(&cfg)?;
+    if !ds.is_finite() {
+        bail!("dataset contains non-finite values");
+    }
+    println!(
+        "run: dataset={} n={} d={} k={} method={} threads={}",
+        cfg.dataset,
+        ds.n,
+        ds.d,
+        cfg.k,
+        cfg.method.name(),
+        cfg.threads
+    );
+    let counter = DistanceCounter::new();
+    let eval = DistanceCounter::new();
+    let mut rng = Rng::new(cfg.seed);
+    let t0 = std::time::Instant::now();
+    let (centroids, note) = match &cfg.method {
+        Method::Bwkm => {
+            let bcfg = cfg.bwkm_cfg(ds.n, ds.d)?;
+            let out = if cfg.use_pjrt {
+                let rt = crate::runtime::Runtime::open_default()?;
+                let mut stepper = crate::runtime::PjrtStepper::new(rt);
+                let o = crate::bwkm::run_with(&mut stepper, &ds, cfg.k, &bcfg, &mut rng, &counter);
+                println!(
+                    "pjrt: {} device steps, {} native-fallback steps",
+                    stepper.device_steps, stepper.fallback_steps
+                );
+                o
+            } else if cfg.threads > 1 {
+                let mut stepper = crate::coordinator::ShardedStepper { threads: cfg.threads };
+                crate::bwkm::run_with(&mut stepper, &ds, cfg.k, &bcfg, &mut rng, &counter)
+            } else {
+                crate::bwkm::run(&ds, cfg.k, &bcfg, &mut rng, &counter)
+            };
+            for t in &out.trace {
+                println!(
+                    "  outer={:<3} dists={:>14} |B|={:<6} boundary={:<6} E^P={:.5e}{}",
+                    t.outer_iter,
+                    fmt_count(t.distances),
+                    t.blocks,
+                    t.boundary,
+                    t.weighted_error,
+                    t.full_error.map(|e| format!(" E^D={e:.5e}")).unwrap_or_default()
+                );
+            }
+            let stop = out.stop;
+            (out.centroids, format!("stop={stop:?}"))
+        }
+        Method::Fkm => {
+            let init = forgy(&ds.data, ds.d, cfg.k, &mut rng);
+            let l = lloyd(&ds.data, ds.d, &init, &LloydCfg::default(), &counter);
+            (l.centroids, format!("iters={}", l.iters))
+        }
+        Method::Kmpp => {
+            let init = kmeanspp(&ds.data, ds.d, cfg.k, &mut rng, &counter);
+            let l = lloyd(&ds.data, ds.d, &init, &LloydCfg::default(), &counter);
+            (l.centroids, format!("iters={}", l.iters))
+        }
+        Method::KmppInit => {
+            let init = kmeanspp(&ds.data, ds.d, cfg.k, &mut rng, &counter);
+            (init, "init only".into())
+        }
+        Method::Kmc2 => {
+            let init = kmc2(&ds.data, ds.d, cfg.k, &Kmc2Cfg::default(), &mut rng, &counter);
+            let l = lloyd(&ds.data, ds.d, &init, &LloydCfg::default(), &counter);
+            (l.centroids, format!("iters={}", l.iters))
+        }
+        Method::MiniBatch(b) => {
+            let mcfg = MiniBatchCfg { batch: *b, budget: cfg.budget(), ..Default::default() };
+            let r = minibatch_kmeans(&ds.data, ds.d, cfg.k, &mcfg, &mut rng, &counter);
+            (r.centroids, format!("iters={}", r.iters))
+        }
+        Method::Rpkm => {
+            let rcfg = RpkmCfg { budget: cfg.budget(), ..Default::default() };
+            let out = grid_rpkm(&ds, cfg.k, &rcfg, &mut rng, &counter);
+            (out.centroids, format!("levels={}", out.trace.len()))
+        }
+    };
+    let err = if cfg.threads > 1 {
+        crate::coordinator::sharded_assign_err(&ds, &centroids, cfg.threads, &eval).1
+    } else {
+        kmeans_error(&ds.data, ds.d, &centroids, &eval)
+    };
+    println!(
+        "result: E^D={err:.6e} distances={} wall={:.2?} ({note})",
+        fmt_count(counter.get()),
+        t0.elapsed()
+    );
+    Ok(())
+}
+
+fn figure(args: &[String]) -> Result<()> {
+    let name = args.first().context("figure needs a dataset name")?.to_uppercase();
+    let base = match name.as_str() {
+        "CIF" => 0.3,
+        "3RN" => 0.05,
+        "GS" => 0.005,
+        "SUSY" => 0.004,
+        "WUY" => 0.0005,
+        _ => bail!("unknown figure dataset `{name}`"),
+    };
+    let mut cfg = FigureCfg::for_dataset(&name, base);
+    for arg in &args[1..] {
+        let (k, v) = arg.split_once('=').context("expected key=value")?;
+        match k {
+            "scale" => cfg.scale = v.parse()?,
+            "reps" => cfg.reps = v.parse()?,
+            "ks" => cfg.ks = v.split(';').map(|x| x.parse()).collect::<Result<_, _>>()?,
+            "seed" => cfg.seed = v.parse()?,
+            _ => bail!("unknown figure key `{k}`"),
+        }
+    }
+    let res = run_figure(&cfg);
+    emit(&res, &format!("fig_{}", name.to_lowercase()));
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn usage_paths() {
+        assert!(main(&[]).is_ok());
+        assert!(main(&["help".into()]).is_ok());
+        assert!(main(&["definitely-not-a-command".into()]).is_err());
+    }
+
+    #[test]
+    fn quickstart_runs() {
+        quickstart().unwrap();
+    }
+
+    #[test]
+    fn run_with_overrides() {
+        run(&[
+            "dataset=3RN".into(),
+            "scale=0.003".into(),
+            "k=3".into(),
+            "method=mb100".into(),
+            "seed=1".into(),
+        ])
+        .unwrap();
+    }
+}

@@ -1,0 +1,227 @@
+//! Run configuration: `key = value` files (a TOML subset) plus CLI
+//! overrides — the launcher's configuration surface. Hand-rolled because
+//! the crates.io mirror is unavailable offline (DESIGN.md §4).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::bwkm::BwkmCfg;
+use crate::metrics::Budget;
+
+/// Which clustering method a run executes.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Method {
+    Bwkm,
+    /// Lloyd + Forgy.
+    Fkm,
+    /// Lloyd + K-means++.
+    Kmpp,
+    /// K-means++ initialization only.
+    KmppInit,
+    /// Lloyd + AFK-MC².
+    Kmc2,
+    /// Mini-batch with batch size b.
+    MiniBatch(usize),
+    /// Grid-based RPKM.
+    Rpkm,
+}
+
+impl Method {
+    pub fn parse(s: &str) -> Result<Method> {
+        let t = s.trim().to_ascii_lowercase();
+        Ok(match t.as_str() {
+            "bwkm" => Method::Bwkm,
+            "fkm" | "forgy" => Method::Fkm,
+            "kmpp" | "km++" | "kmeans++" => Method::Kmpp,
+            "kmpp_init" | "km++_init" => Method::KmppInit,
+            "kmc2" | "afkmc2" => Method::Kmc2,
+            "rpkm" => Method::Rpkm,
+            _ => {
+                if let Some(b) = t.strip_prefix("mb") {
+                    Method::MiniBatch(b.parse().context("mini-batch size")?)
+                } else {
+                    bail!("unknown method `{s}`")
+                }
+            }
+        })
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            Method::Bwkm => "BWKM".into(),
+            Method::Fkm => "FKM".into(),
+            Method::Kmpp => "KM++".into(),
+            Method::KmppInit => "KM++_init".into(),
+            Method::Kmc2 => "KMC2".into(),
+            Method::MiniBatch(b) => format!("MB{b}"),
+            Method::Rpkm => "RPKM".into(),
+        }
+    }
+}
+
+/// A single clustering run's configuration.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    /// Table-1 dataset name (simulated) or a `path:` prefixed file.
+    pub dataset: String,
+    /// Simulator scale ∈ (0, 1].
+    pub scale: f64,
+    pub seed: u64,
+    pub k: usize,
+    pub method: Method,
+    /// Distance budget (0 = unlimited).
+    pub budget: u64,
+    /// Worker threads for sharded phases.
+    pub threads: usize,
+    /// Run the weighted-Lloyd inner loop on the PJRT artifacts.
+    pub use_pjrt: bool,
+    /// Trace E^D per outer iteration (instrumentation).
+    pub eval_full_error: bool,
+    /// Raw key/values for method-specific extras (m, m_prime, s, r, ...).
+    pub extra: BTreeMap<String, String>,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            dataset: "WUY".into(),
+            scale: 0.001,
+            seed: 42,
+            k: 9,
+            method: Method::Bwkm,
+            budget: 0,
+            threads: 1,
+            use_pjrt: false,
+            eval_full_error: true,
+            extra: BTreeMap::new(),
+        }
+    }
+}
+
+impl RunConfig {
+    /// Parse a config file (lines of `key = value`, `#` comments).
+    pub fn from_file(path: &Path) -> Result<RunConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let mut cfg = RunConfig::default();
+        for (no, line) in text.lines().enumerate() {
+            let t = line.trim();
+            if t.is_empty() || t.starts_with('#') {
+                continue;
+            }
+            let (k, v) = t
+                .split_once('=')
+                .ok_or_else(|| anyhow!("{}:{}: expected key = value", path.display(), no + 1))?;
+            cfg.set(k.trim(), v.trim())?;
+        }
+        Ok(cfg)
+    }
+
+    /// Apply one `key=value` override (also used for CLI args).
+    pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        let value = value.trim_matches('"');
+        match key {
+            "dataset" => self.dataset = value.to_string(),
+            "scale" => self.scale = value.parse().context("scale")?,
+            "seed" => self.seed = value.parse().context("seed")?,
+            "k" => self.k = value.parse().context("k")?,
+            "method" => self.method = Method::parse(value)?,
+            "budget" => self.budget = value.parse().context("budget")?,
+            "threads" => self.threads = value.parse().context("threads")?,
+            "use_pjrt" => self.use_pjrt = parse_bool(value)?,
+            "eval_full_error" => self.eval_full_error = parse_bool(value)?,
+            _ => {
+                self.extra.insert(key.to_string(), value.to_string());
+            }
+        }
+        Ok(())
+    }
+
+    /// Budget object (0 = unlimited).
+    pub fn budget(&self) -> Budget {
+        if self.budget == 0 {
+            Budget::unlimited()
+        } else {
+            Budget::of(self.budget)
+        }
+    }
+
+    /// BWKM configuration for a dataset of n rows, honoring `extra`
+    /// overrides m, m_prime, s, r, max_outer.
+    pub fn bwkm_cfg(&self, n: usize, d: usize) -> Result<BwkmCfg> {
+        let mut cfg = BwkmCfg::for_dataset(n, d, self.k);
+        if let Some(v) = self.extra.get("m") {
+            cfg.init.m = v.parse().context("m")?;
+        }
+        if let Some(v) = self.extra.get("m_prime") {
+            cfg.init.m_prime = v.parse().context("m_prime")?;
+        }
+        if let Some(v) = self.extra.get("s") {
+            cfg.init.s = v.parse().context("s")?;
+        }
+        if let Some(v) = self.extra.get("r") {
+            cfg.init.r = v.parse().context("r")?;
+        }
+        if let Some(v) = self.extra.get("max_outer") {
+            cfg.max_outer = v.parse().context("max_outer")?;
+        }
+        cfg.budget = self.budget();
+        cfg.eval_full_error = self.eval_full_error;
+        Ok(cfg)
+    }
+}
+
+fn parse_bool(v: &str) -> Result<bool> {
+    match v.to_ascii_lowercase().as_str() {
+        "true" | "1" | "yes" | "on" => Ok(true),
+        "false" | "0" | "no" | "off" => Ok(false),
+        _ => bail!("expected a boolean, got `{v}`"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_methods() {
+        assert_eq!(Method::parse("bwkm").unwrap(), Method::Bwkm);
+        assert_eq!(Method::parse("KM++").unwrap(), Method::Kmpp);
+        assert_eq!(Method::parse("mb500").unwrap(), Method::MiniBatch(500));
+        assert_eq!(Method::parse("km++_init").unwrap(), Method::KmppInit);
+        assert!(Method::parse("quantum").is_err());
+    }
+
+    #[test]
+    fn file_roundtrip_and_overrides() {
+        let p = std::env::temp_dir().join(format!("bwkm_cfg_{}.conf", std::process::id()));
+        std::fs::write(
+            &p,
+            "# experiment\ndataset = 3RN\nk = 27\nmethod = mb100\nscale = 0.01\nm = 80\n",
+        )
+        .unwrap();
+        let mut cfg = RunConfig::from_file(&p).unwrap();
+        assert_eq!(cfg.dataset, "3RN");
+        assert_eq!(cfg.k, 27);
+        assert_eq!(cfg.method, Method::MiniBatch(100));
+        assert_eq!(cfg.extra.get("m").unwrap(), "80");
+        cfg.set("k", "3").unwrap();
+        assert_eq!(cfg.k, 3);
+        assert!(cfg.set("scale", "abc").is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn bwkm_cfg_honors_extras() {
+        let mut cfg = RunConfig::default();
+        cfg.set("m", "123").unwrap();
+        cfg.set("r", "2").unwrap();
+        cfg.set("budget", "5000").unwrap();
+        let b = cfg.bwkm_cfg(10_000, 5).unwrap();
+        assert_eq!(b.init.m, 123);
+        assert_eq!(b.init.r, 2);
+        assert_eq!(b.budget.max_distances, 5000);
+    }
+}

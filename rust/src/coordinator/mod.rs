@@ -1,0 +1,16 @@
+//! Leader/worker coordination — the "embarrassingly parallel" runtime the
+//! paper's §4 calls for ("we could implement this approach in a more
+//! appropriate platform ... as is the case of Apache Spark").
+//!
+//! The leader owns partition + centroid state; workers own contiguous row
+//! shards. Two fan-out primitives cover every data-parallel phase of the
+//! pipeline (assignment/error evaluation and the weighted-Lloyd step), and
+//! [`streaming`] handles sources that never fit in memory. Reductions are
+//! performed in shard order, so results are bit-identical to the serial
+//! path — asserted by the equivalence tests.
+
+pub mod parallel;
+pub mod streaming;
+
+pub use parallel::{sharded_assign_err, sharded_weighted_step, ShardedStepper};
+pub use streaming::{stream_assign_err, stream_bwkm, stream_partition_stats, StreamBwkmCfg, StreamBwkmOutcome, StreamStats};

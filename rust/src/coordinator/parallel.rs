@@ -1,0 +1,265 @@
+//! Sharded data-parallel primitives over `std::thread::scope` workers.
+//!
+//! Each worker processes a contiguous shard; the leader reduces partials in
+//! shard order (deterministic, serial-identical results). Distance
+//! accounting goes through the shared atomic [`DistanceCounter`].
+
+use crate::data::Dataset;
+use crate::geometry::sq_dist;
+use crate::kmeans::{StepOut, Stepper};
+use crate::metrics::DistanceCounter;
+
+/// Full-dataset assignment + SSE fanned out over `threads` workers.
+/// Counts n·k distances. Returns (assignments, sse).
+pub fn sharded_assign_err(
+    data: &Dataset,
+    centroids: &[f64],
+    threads: usize,
+    counter: &DistanceCounter,
+) -> (Vec<u32>, f64) {
+    let d = data.d;
+    let k = centroids.len() / d;
+    let ranges = data.shard_ranges(threads);
+    let mut partials: Vec<(Vec<u32>, f64)> = Vec::with_capacity(ranges.len());
+
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = ranges
+            .iter()
+            .map(|r| {
+                let r = r.clone();
+                scope.spawn(move || {
+                    let mut assign = Vec::with_capacity(r.len());
+                    let mut sse = 0.0f64;
+                    for i in r.clone() {
+                        let p = data.row(i);
+                        let (mut bi, mut bd) = (0usize, f64::INFINITY);
+                        for c in 0..k {
+                            let dd = sq_dist(p, &centroids[c * d..(c + 1) * d]);
+                            if dd < bd {
+                                bd = dd;
+                                bi = c;
+                            }
+                        }
+                        assign.push(bi as u32);
+                        sse += bd;
+                    }
+                    counter.add((r.len() * k) as u64);
+                    (assign, sse)
+                })
+            })
+            .collect();
+        for h in handles {
+            partials.push(h.join().expect("worker panicked"));
+        }
+    });
+
+    // Ordered reduction.
+    let mut assign = Vec::with_capacity(data.n);
+    let mut sse = 0.0;
+    for (a, s) in partials {
+        assign.extend(a);
+        sse += s;
+    }
+    (assign, sse)
+}
+
+/// One weighted-Lloyd step with the assignment phase fanned out over
+/// shards of the representatives; the leader merges per-shard cluster
+/// aggregates in shard order and applies the update rule (empty clusters
+/// keep their centroid — identical semantics to `NativeStepper`).
+pub fn sharded_weighted_step(
+    reps: &[f64],
+    weights: &[f64],
+    d: usize,
+    centroids: &[f64],
+    threads: usize,
+    counter: &DistanceCounter,
+) -> StepOut {
+    let m = weights.len();
+    let k = centroids.len() / d;
+    let threads = threads.max(1).min(m.max(1));
+    let base = m / threads;
+    let extra = m % threads;
+    let mut ranges = Vec::with_capacity(threads);
+    let mut start = 0usize;
+    for t in 0..threads {
+        let len = base + usize::from(t < extra);
+        ranges.push(start..start + len);
+        start += len;
+    }
+
+    struct Partial {
+        assign: Vec<u32>,
+        d1: Vec<f64>,
+        d2: Vec<f64>,
+        sums: Vec<f64>,
+        counts: Vec<f64>,
+        werr: f64,
+    }
+
+    let mut partials: Vec<Partial> = Vec::with_capacity(threads);
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = ranges
+            .iter()
+            .map(|r| {
+                let r = r.clone();
+                scope.spawn(move || {
+                    let mut p = Partial {
+                        assign: Vec::with_capacity(r.len()),
+                        d1: Vec::with_capacity(r.len()),
+                        d2: Vec::with_capacity(r.len()),
+                        sums: vec![0.0; k * d],
+                        counts: vec![0.0; k],
+                        werr: 0.0,
+                    };
+                    for i in r.clone() {
+                        let row = &reps[i * d..(i + 1) * d];
+                        let (mut i1, mut b1, mut b2) = (0usize, f64::INFINITY, f64::INFINITY);
+                        for c in 0..k {
+                            let dd = sq_dist(row, &centroids[c * d..(c + 1) * d]);
+                            if dd < b1 {
+                                b2 = b1;
+                                b1 = dd;
+                                i1 = c;
+                            } else if dd < b2 {
+                                b2 = dd;
+                            }
+                        }
+                        p.assign.push(i1 as u32);
+                        p.d1.push(b1);
+                        p.d2.push(b2);
+                        let w = weights[i];
+                        p.werr += w * b1;
+                        p.counts[i1] += w;
+                        for j in 0..d {
+                            p.sums[i1 * d + j] += w * row[j];
+                        }
+                    }
+                    counter.add((r.len() * k) as u64);
+                    p
+                })
+            })
+            .collect();
+        for h in handles {
+            partials.push(h.join().expect("worker panicked"));
+        }
+    });
+
+    let mut assign = Vec::with_capacity(m);
+    let mut d1 = Vec::with_capacity(m);
+    let mut d2 = Vec::with_capacity(m);
+    let mut sums = vec![0.0; k * d];
+    let mut counts = vec![0.0; k];
+    let mut werr = 0.0;
+    for p in partials {
+        assign.extend(p.assign);
+        d1.extend(p.d1);
+        d2.extend(p.d2);
+        werr += p.werr;
+        for c in 0..k {
+            counts[c] += p.counts[c];
+            for j in 0..d {
+                sums[c * d + j] += p.sums[c * d + j];
+            }
+        }
+    }
+    let mut out = centroids.to_vec();
+    for c in 0..k {
+        if counts[c] > 0.0 {
+            let inv = 1.0 / counts[c];
+            for j in 0..d {
+                out[c * d + j] = sums[c * d + j] * inv;
+            }
+        }
+    }
+    StepOut { centroids: out, assign, d1, d2, werr }
+}
+
+/// [`Stepper`] adapter running every iteration through
+/// [`sharded_weighted_step`] — plug-in parallelism for `bwkm::run_with`.
+pub struct ShardedStepper {
+    pub threads: usize,
+}
+
+impl Stepper for ShardedStepper {
+    fn step(
+        &mut self,
+        reps: &[f64],
+        weights: &[f64],
+        d: usize,
+        centroids: &[f64],
+        counter: &DistanceCounter,
+    ) -> StepOut {
+        sharded_weighted_step(reps, weights, d, centroids, self.threads, counter)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kmeans::NativeStepper;
+    use crate::util::prop;
+
+    #[test]
+    fn prop_sharded_step_equals_serial() {
+        prop::check("sharded-step", 20, |g| {
+            let m = g.int(1, 200);
+            let d = g.int(1, 5);
+            let k = g.int(1, 6);
+            let reps = g.cloud(m, d, 2.0);
+            let weights: Vec<f64> = (0..m).map(|_| g.int(1, 7) as f64).collect();
+            let cents = g.cloud(k, d, 2.0);
+            let threads = g.int(1, 5);
+
+            let c1 = DistanceCounter::new();
+            let serial = NativeStepper::new().step(&reps, &weights, d, &cents, &c1);
+            let c2 = DistanceCounter::new();
+            let sharded =
+                sharded_weighted_step(&reps, &weights, d, &cents, threads, &c2);
+
+            assert_eq!(serial.assign, sharded.assign);
+            assert_eq!(c1.get(), c2.get());
+            for (a, b) in serial.centroids.iter().zip(&sharded.centroids) {
+                assert!((a - b).abs() < 1e-9);
+            }
+            assert!((serial.werr - sharded.werr).abs() < 1e-9 * serial.werr.max(1.0));
+        });
+    }
+
+    #[test]
+    fn prop_sharded_assign_err_equals_serial() {
+        prop::check("sharded-err", 15, |g| {
+            let n = g.int(1, 300);
+            let d = g.int(1, 4);
+            let k = g.int(1, 5);
+            let ds = Dataset::new(g.cloud(n, d, 3.0), d);
+            let cents = g.cloud(k, d, 3.0);
+            let threads = g.int(1, 6);
+
+            let c1 = DistanceCounter::new();
+            let (_, sse) = sharded_assign_err(&ds, &cents, threads, &c1);
+            let c2 = DistanceCounter::new();
+            let serial = crate::metrics::kmeans_error(&ds.data, d, &cents, &c2);
+            assert!((sse - serial).abs() < 1e-9 * serial.max(1.0));
+            assert_eq!(c1.get(), c2.get());
+        });
+    }
+
+    #[test]
+    fn bwkm_runs_on_sharded_stepper() {
+        let mut g = prop::Gen { rng: crate::util::Rng::new(55), case: 0 };
+        let ds = Dataset::new(g.blobs(600, 2, 3, 0.5), 2);
+        let cfg = crate::bwkm::BwkmCfg::for_dataset(ds.n, ds.d, 3);
+        let c = DistanceCounter::new();
+        let mut stepper = ShardedStepper { threads: 3 };
+        let out = crate::bwkm::run_with(
+            &mut stepper,
+            &ds,
+            3,
+            &cfg,
+            &mut crate::util::Rng::new(1),
+            &c,
+        );
+        assert_eq!(out.centroids.len(), 6);
+    }
+}

@@ -1,0 +1,97 @@
+//! Coreset analysis of partition-based representations — paper Appendix
+//! Theorem A.1: the i-th grid-RPKM iteration is a (K, ε)-coreset with ε
+//! decaying exponentially in i.
+//!
+//! Two views of the same result are provided: the *absolute* gap bound
+//! used inside the Theorem A.1 proof (directly testable, no OPT needed)
+//! and the (K, ε)-coreset ε expressed against an OPT estimate (what the
+//! theorem states; reported by `benches/coreset_bound`).
+
+/// Absolute bound of the Thm A.1 proof chain:
+/// |E^D(C) − E^P(C)| ≤ ((n−1)/2^(2i+1) + n/2^(i−1)) · l²,
+/// where l is the diagonal of the dataset's bounding box and i the grid
+/// level (every cell has diagonal l/2^i).
+pub fn grid_abs_bound(level: u32, n: usize, l: f64) -> f64 {
+    let n = n as f64;
+    let a = (n - 1.0) / 2f64.powi(2 * level as i32 + 1);
+    let b = n / 2f64.powi(level as i32 - 1);
+    (a + b) * l * l
+}
+
+/// Theorem A.1's ε:  ε = (1/2^(i−1)) · (1 + (1/2^(i+2))·(n−1)/n) · n·l²/OPT.
+pub fn grid_epsilon(level: u32, n: usize, l: f64, opt: f64) -> f64 {
+    let nf = n as f64;
+    (1.0 / 2f64.powi(level as i32 - 1))
+        * (1.0 + (1.0 / 2f64.powi(level as i32 + 2)) * (nf - 1.0) / nf)
+        * (nf * l * l / opt)
+}
+
+/// Empirical |E^D(C) − E^P(C)| for a weighted representation (uncounted —
+/// analysis instrumentation).
+pub fn empirical_gap(
+    data: &[f64],
+    d: usize,
+    reps: &[f64],
+    weights: &[f64],
+    centroids: &[f64],
+) -> f64 {
+    let c = crate::metrics::DistanceCounter::new();
+    let full = crate::metrics::kmeans_error(data, d, centroids, &c);
+    let wtd = crate::metrics::weighted_error(reps, weights, d, centroids, &c);
+    (full - wtd).abs()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Dataset;
+    use crate::geometry::BBox;
+    use crate::rpkm::grid_partition;
+    use crate::util::prop;
+
+    #[test]
+    fn bound_decays_exponentially() {
+        let b1 = grid_abs_bound(1, 1000, 1.0);
+        let b4 = grid_abs_bound(4, 1000, 1.0);
+        let b8 = grid_abs_bound(8, 1000, 1.0);
+        assert!(b1 > 8.0 * b4 - 1e-9);
+        assert!(b4 > 8.0 * b8);
+    }
+
+    #[test]
+    fn epsilon_formula_matches_paper_shape() {
+        // ε ≈ 2^{-(i-1)} · n l²/OPT for large i.
+        let e = grid_epsilon(10, 10_000, 2.0, 100.0);
+        let approx = (1.0 / 2f64.powi(9)) * (10_000.0 * 4.0 / 100.0);
+        assert!((e / approx - 1.0).abs() < 0.01);
+    }
+
+    /// Theorem A.1 (proof-chain form), validated empirically on random
+    /// data, grids and centroid sets.
+    #[test]
+    fn prop_grid_gap_within_abs_bound() {
+        prop::check("thm-a1", 30, |g| {
+            let n = g.int(20, 400);
+            let d = g.int(1, 4);
+            let k = g.int(1, 5);
+            let ds = Dataset::new(g.blobs(n, d, 3, 1.0), d);
+            let bbox = BBox::of(&ds.data, d, None).unwrap();
+            let l = bbox.diagonal();
+            let level = g.int(1, 5) as u32;
+            let (reps, weights) = grid_partition(&ds, &bbox, level);
+            // The Thm A.1 proof assumes d(x, C) ≤ l, which holds whenever
+            // the centroids lie inside the bounding box — pick dataset rows.
+            let mut cents = Vec::with_capacity(k * d);
+            for _ in 0..k {
+                let i = g.rng.usize(n);
+                cents.extend_from_slice(ds.row(i));
+            }
+            let gap = empirical_gap(&ds.data, d, &reps, &weights, &cents);
+            let bound = grid_abs_bound(level, n, l);
+            assert!(
+                gap <= bound * (1.0 + 1e-9),
+                "Theorem A.1 violated: gap {gap} > bound {bound} (level {level})"
+            );
+        });
+    }
+}

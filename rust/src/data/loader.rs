@@ -1,0 +1,188 @@
+//! File loaders/writers: delimited text (CSV/TSV/whitespace) and raw
+//! little-endian f64 binary, plus a chunked binary reader used by the
+//! streaming coordinator.
+
+use std::fs::File;
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::Dataset;
+
+/// Load a delimited numeric text file. Delimiters: ',', ';', tab or runs of
+/// spaces. Lines starting with '#' (or an optional single header line that
+/// fails to parse) are skipped. `take_cols` optionally restricts to the
+/// first N columns (e.g. the paper's datasets carry id columns).
+pub fn load_csv(path: &Path, take_cols: Option<usize>) -> Result<Dataset> {
+    let f = File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let reader = BufReader::new(f);
+    let mut data = Vec::new();
+    let mut d = 0usize;
+    let mut header_skipped = false;
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') {
+            continue;
+        }
+        let fields: Vec<&str> = t
+            .split(|c: char| c == ',' || c == ';' || c == '\t' || c == ' ')
+            .filter(|s| !s.is_empty())
+            .collect();
+        let parsed: Result<Vec<f64>, _> = fields.iter().map(|s| s.parse::<f64>()).collect();
+        let mut row = match parsed {
+            Ok(r) => r,
+            Err(_) if !header_skipped => {
+                header_skipped = true;
+                continue; // tolerate one header line
+            }
+            Err(e) => bail!("{}:{}: parse error: {e}", path.display(), lineno + 1),
+        };
+        if let Some(c) = take_cols {
+            if row.len() < c {
+                bail!("{}:{}: {} columns, need {c}", path.display(), lineno + 1, row.len());
+            }
+            row.truncate(c);
+        }
+        if d == 0 {
+            d = row.len();
+        } else if row.len() != d {
+            bail!("{}:{}: ragged row ({} vs {d})", path.display(), lineno + 1, row.len());
+        }
+        data.extend_from_slice(&row);
+    }
+    if d == 0 {
+        bail!("{}: no data rows", path.display());
+    }
+    Ok(Dataset::new(data, d))
+}
+
+/// Write a dataset as raw little-endian f64 with an 16-byte header
+/// (`n: u64 le`, `d: u64 le`).
+pub fn save_bin(ds: &Dataset, path: &Path) -> Result<()> {
+    let mut w = BufWriter::new(File::create(path)?);
+    w.write_all(&(ds.n as u64).to_le_bytes())?;
+    w.write_all(&(ds.d as u64).to_le_bytes())?;
+    for &x in &ds.data {
+        w.write_all(&x.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+/// Load a raw binary dataset written by [`save_bin`].
+pub fn load_bin(path: &Path) -> Result<Dataset> {
+    let mut r = BufReader::new(File::open(path)?);
+    let mut hdr = [0u8; 16];
+    r.read_exact(&mut hdr)?;
+    let n = u64::from_le_bytes(hdr[0..8].try_into().unwrap()) as usize;
+    let d = u64::from_le_bytes(hdr[8..16].try_into().unwrap()) as usize;
+    let mut buf = vec![0u8; n * d * 8];
+    r.read_exact(&mut buf)?;
+    let data: Vec<f64> = buf
+        .chunks_exact(8)
+        .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    Ok(Dataset::new(data, d))
+}
+
+/// Chunked reader over a binary dataset file — the streaming-ingestion
+/// source for the coordinator (`coordinator::streaming`). Yields row-major
+/// chunks of at most `chunk_rows` rows without materializing the dataset.
+pub struct BinChunks {
+    reader: BufReader<File>,
+    pub n: usize,
+    pub d: usize,
+    pub chunk_rows: usize,
+    read_rows: usize,
+}
+
+impl BinChunks {
+    pub fn open(path: &Path, chunk_rows: usize) -> Result<BinChunks> {
+        let mut reader = BufReader::new(File::open(path)?);
+        let mut hdr = [0u8; 16];
+        reader.read_exact(&mut hdr)?;
+        let n = u64::from_le_bytes(hdr[0..8].try_into().unwrap()) as usize;
+        let d = u64::from_le_bytes(hdr[8..16].try_into().unwrap()) as usize;
+        Ok(BinChunks { reader, n, d, chunk_rows: chunk_rows.max(1), read_rows: 0 })
+    }
+}
+
+impl Iterator for BinChunks {
+    type Item = Result<Vec<f64>>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        if self.read_rows >= self.n {
+            return None;
+        }
+        let rows = self.chunk_rows.min(self.n - self.read_rows);
+        let mut buf = vec![0u8; rows * self.d * 8];
+        if let Err(e) = self.reader.read_exact(&mut buf) {
+            return Some(Err(e.into()));
+        }
+        self.read_rows += rows;
+        let chunk: Vec<f64> = buf
+            .chunks_exact(8)
+            .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        Some(Ok(chunk))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("bwkm_test_{}_{name}", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn csv_roundtrip_with_header_and_comments() {
+        let p = tmp("a.csv");
+        std::fs::write(&p, "x,y\n# comment\n1.0,2.0\n3.5,-4\n").unwrap();
+        let ds = load_csv(&p, None).unwrap();
+        assert_eq!(ds.n, 2);
+        assert_eq!(ds.d, 2);
+        assert_eq!(ds.row(1), &[3.5, -4.0]);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn csv_take_cols() {
+        let p = tmp("b.csv");
+        std::fs::write(&p, "1 2 3\n4 5 6\n").unwrap();
+        let ds = load_csv(&p, Some(2)).unwrap();
+        assert_eq!(ds.d, 2);
+        assert_eq!(ds.row(1), &[4.0, 5.0]);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn csv_rejects_ragged() {
+        let p = tmp("c.csv");
+        std::fs::write(&p, "1,2\n3\n").unwrap();
+        assert!(load_csv(&p, None).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn bin_roundtrip_and_chunks() {
+        let p = tmp("d.bin");
+        let ds = Dataset::new((0..24).map(|x| x as f64).collect(), 3);
+        save_bin(&ds, &p).unwrap();
+        let back = load_bin(&p).unwrap();
+        assert_eq!(back.data, ds.data);
+        assert_eq!(back.d, 3);
+
+        let chunks: Vec<Vec<f64>> =
+            BinChunks::open(&p, 3).unwrap().map(|c| c.unwrap()).collect();
+        assert_eq!(chunks.len(), 3); // 8 rows in chunks of 3: 3+3+2
+        assert_eq!(chunks[2].len(), 2 * 3);
+        let flat: Vec<f64> = chunks.concat();
+        assert_eq!(flat, ds.data);
+        std::fs::remove_file(&p).ok();
+    }
+}

@@ -1,0 +1,108 @@
+//! Dataset substrate: the flat row-major [`Dataset`] container, file
+//! loaders (CSV / raw f64), generic synthetic generators, and the
+//! simulators that stand in for the paper's Table 1 datasets (see
+//! DESIGN.md §4 — no network access, so the UCI/Yahoo originals are
+//! replaced by generators that reproduce each dataset's (n, d,
+//! boundary-geometry) regime; the CSV loader accepts the originals when
+//! available).
+
+pub mod loader;
+pub mod simulators;
+pub mod synthetic;
+
+pub use simulators::{simulate, DatasetSpec, TABLE1};
+
+/// A dense dataset: `n` rows of dimension `d`, row-major `f64`.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub data: Vec<f64>,
+    pub n: usize,
+    pub d: usize,
+}
+
+impl Dataset {
+    pub fn new(data: Vec<f64>, d: usize) -> Dataset {
+        assert!(d > 0, "dimension must be positive");
+        assert_eq!(data.len() % d, 0, "data length {} not a multiple of d={d}", data.len());
+        let n = data.len() / d;
+        Dataset { data, n, d }
+    }
+
+    /// Row accessor.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.d..(i + 1) * self.d]
+    }
+
+    /// Rows selected by indices, copied into a new flat buffer.
+    pub fn gather(&self, idx: &[usize]) -> Dataset {
+        let mut data = Vec::with_capacity(idx.len() * self.d);
+        for &i in idx {
+            data.extend_from_slice(self.row(i));
+        }
+        Dataset::new(data, self.d)
+    }
+
+    /// Split row indices into `shards` contiguous ranges (coordinator).
+    pub fn shard_ranges(&self, shards: usize) -> Vec<std::ops::Range<usize>> {
+        let shards = shards.max(1).min(self.n.max(1));
+        let base = self.n / shards;
+        let extra = self.n % shards;
+        let mut out = Vec::with_capacity(shards);
+        let mut start = 0;
+        for s in 0..shards {
+            let len = base + usize::from(s < extra);
+            out.push(start..start + len);
+            start += len;
+        }
+        out
+    }
+
+    /// Check for non-finite values (failure-injection guard).
+    pub fn is_finite(&self) -> bool {
+        self.data.iter().all(|x| x.is_finite())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rows_and_gather() {
+        let ds = Dataset::new(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], 2);
+        assert_eq!(ds.n, 3);
+        assert_eq!(ds.row(1), &[3.0, 4.0]);
+        let g = ds.gather(&[2, 0]);
+        assert_eq!(g.data, vec![5.0, 6.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "not a multiple")]
+    fn rejects_ragged() {
+        Dataset::new(vec![1.0, 2.0, 3.0], 2);
+    }
+
+    #[test]
+    fn shard_ranges_cover_exactly() {
+        let ds = Dataset::new(vec![0.0; 10], 1);
+        for shards in 1..=12 {
+            let ranges = ds.shard_ranges(shards);
+            let total: usize = ranges.iter().map(|r| r.len()).sum();
+            assert_eq!(total, 10);
+            let mut prev = 0;
+            for r in &ranges {
+                assert_eq!(r.start, prev);
+                prev = r.end;
+            }
+        }
+    }
+
+    #[test]
+    fn finite_guard() {
+        let mut ds = Dataset::new(vec![0.0, 1.0], 1);
+        assert!(ds.is_finite());
+        ds.data[0] = f64::NAN;
+        assert!(!ds.is_finite());
+    }
+}

@@ -1,0 +1,168 @@
+//! Generic synthetic workload generators: Gaussian mixtures with
+//! controllable overlap and skew, uniform noise, and noisy-polyline
+//! manifolds (road networks). The Table-1 simulators compose these.
+
+use crate::util::Rng;
+
+use super::Dataset;
+
+/// Specification of one mixture component.
+#[derive(Clone, Debug)]
+pub struct Component {
+    pub center: Vec<f64>,
+    /// Per-axis standard deviation.
+    pub std: Vec<f64>,
+    /// Relative weight (need not be normalized).
+    pub weight: f64,
+}
+
+/// Sample `n` points from a Gaussian mixture.
+pub fn gmm(rng: &mut Rng, n: usize, components: &[Component]) -> Dataset {
+    assert!(!components.is_empty());
+    let d = components[0].center.len();
+    let weights: Vec<f64> = components.iter().map(|c| c.weight).collect();
+    let cdf = crate::util::Cdf::new(&weights).expect("positive weights");
+    let mut data = Vec::with_capacity(n * d);
+    for _ in 0..n {
+        let c = &components[cdf.sample(rng)];
+        for j in 0..d {
+            data.push(c.center[j] + c.std[j] * rng.normal());
+        }
+    }
+    Dataset::new(data, d)
+}
+
+/// `k` random isotropic blobs in `[-10, 10]^d` with std `spread` and
+/// mixing weights drawn from a power law with exponent `skew`
+/// (skew = 0 → balanced; larger → heavier imbalance, the WUY regime).
+pub fn random_blobs(rng: &mut Rng, n: usize, d: usize, k: usize, spread: f64, skew: f64) -> Dataset {
+    let comps: Vec<Component> = (0..k)
+        .map(|i| Component {
+            center: (0..d).map(|_| rng.range(-10.0, 10.0)).collect(),
+            std: vec![spread; d],
+            weight: 1.0 / (1.0 + i as f64).powf(skew),
+        })
+        .collect();
+    gmm(rng, n, &comps)
+}
+
+/// Uniform noise in `[lo, hi]^d` — the outlier/background component.
+pub fn uniform(rng: &mut Rng, n: usize, d: usize, lo: f64, hi: f64) -> Dataset {
+    let data = (0..n * d).map(|_| rng.range(lo, hi)).collect();
+    Dataset::new(data, d)
+}
+
+/// Noisy polyline manifold: points scattered around a random-walk polyline
+/// of `segments` segments — mimics road-network data (3RN): low intrinsic
+/// dimension, curvilinear high-density ridges, cluster boundaries occupying
+/// a small fraction of the volume.
+pub fn polyline(rng: &mut Rng, n: usize, d: usize, segments: usize, noise: f64) -> Dataset {
+    assert!(d >= 2);
+    // Random-walk vertices.
+    let mut verts = vec![vec![0.0; d]];
+    for _ in 0..segments {
+        let prev = verts.last().unwrap().clone();
+        let step: Vec<f64> = (0..d).map(|_| rng.normal() * 4.0).collect();
+        verts.push((0..d).map(|j| prev[j] + step[j]).collect());
+    }
+    let mut data = Vec::with_capacity(n * d);
+    for _ in 0..n {
+        let s = rng.usize(segments);
+        let t = rng.f64();
+        for j in 0..d {
+            let v = verts[s][j] * (1.0 - t) + verts[s + 1][j] * t;
+            data.push(v + rng.normal() * noise);
+        }
+    }
+    Dataset::new(data, d)
+}
+
+/// Heavy-tailed mixture: Gaussian blobs plus a `tail_frac` fraction of
+/// points with Student-t-like tails (normal / sqrt(chi2/k) approximated by
+/// ratio of normals) — the GS/SUSY sensor-physics regime where clusters
+/// overlap heavily.
+pub fn heavy_tailed_blobs(
+    rng: &mut Rng,
+    n: usize,
+    d: usize,
+    k: usize,
+    spread: f64,
+    tail_frac: f64,
+) -> Dataset {
+    let base = random_blobs(rng, n, d, k, spread, 0.3);
+    let mut data = base.data;
+    let n_tail = (n as f64 * tail_frac) as usize;
+    for _ in 0..n_tail {
+        let i = rng.usize(n);
+        for j in 0..d {
+            // Fatten the tail: multiply the offset by an inverse-uniform.
+            let fat = 1.0 / (rng.f64().max(0.05));
+            data[i * d + j] += rng.normal() * spread * fat;
+        }
+    }
+    Dataset::new(data, d)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn gmm_shapes_and_determinism() {
+        let comps = vec![
+            Component { center: vec![0.0, 0.0], std: vec![1.0, 1.0], weight: 1.0 },
+            Component { center: vec![50.0, 50.0], std: vec![1.0, 1.0], weight: 1.0 },
+        ];
+        let a = gmm(&mut Rng::new(9), 500, &comps);
+        let b = gmm(&mut Rng::new(9), 500, &comps);
+        assert_eq!(a.data, b.data);
+        assert_eq!(a.n, 500);
+        // Points concentrate near the two centers.
+        let near = a
+            .data
+            .chunks(2)
+            .filter(|p| {
+                let d0 = p[0].hypot(p[1]);
+                let d1 = (p[0] - 50.0).hypot(p[1] - 50.0);
+                d0 < 6.0 || d1 < 6.0
+            })
+            .count();
+        assert!(near > 480, "near={near}");
+    }
+
+    #[test]
+    fn blobs_skew_imbalances_clusters() {
+        let mut rng = Rng::new(10);
+        let ds = random_blobs(&mut rng, 2000, 2, 4, 0.5, 3.0);
+        assert_eq!(ds.n, 2000);
+        assert!(ds.is_finite());
+    }
+
+    #[test]
+    fn polyline_lives_near_segments() {
+        let mut rng = Rng::new(11);
+        let ds = polyline(&mut rng, 300, 3, 8, 0.05);
+        assert_eq!(ds.d, 3);
+        assert!(ds.is_finite());
+    }
+
+    #[test]
+    fn prop_generators_finite_and_sized() {
+        prop::check("gen-finite", 20, |g| {
+            let n = g.int(10, 400);
+            let d = g.int(2, 8);
+            let k = g.int(1, 6);
+            let mut rng = g.rng.fork(1);
+            for ds in [
+                random_blobs(&mut rng, n, d, k, 0.7, 1.0),
+                uniform(&mut rng, n, d, -3.0, 3.0),
+                polyline(&mut rng, n, d.max(2), 5, 0.1),
+                heavy_tailed_blobs(&mut rng, n, d, k, 0.7, 0.1),
+            ] {
+                assert_eq!(ds.n, n);
+                assert!(ds.is_finite());
+            }
+        });
+    }
+}

@@ -1,0 +1,206 @@
+//! Geometric substrate: flat row-major point buffers, axis-aligned bounding
+//! boxes (the paper's hyperrectangular *blocks*, §2 footnote 9), diagonals
+//! and longest-side splits.
+//!
+//! Points live in `&[f64]` row-major buffers (`n * d`); all algorithms index
+//! rows as `&data[i*d..(i+1)*d]`, keeping the hot loops allocation-free.
+
+/// Squared Euclidean distance between two points. This is *the* distance
+/// computation the paper counts; callers must tick their
+/// [`crate::metrics::DistanceCounter`] once per call on accounted paths.
+#[inline]
+pub fn sq_dist(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    // Unrolled-friendly form; LLVM vectorizes this cleanly.
+    let mut acc = 0.0;
+    for i in 0..a.len() {
+        let t = a[i] - b[i];
+        acc += t * t;
+    }
+    acc
+}
+
+/// Euclidean distance.
+#[inline]
+pub fn dist(a: &[f64], b: &[f64]) -> f64 {
+    sq_dist(a, b).sqrt()
+}
+
+/// Axis-aligned bounding box (a *block* of a spatial partition).
+#[derive(Clone, Debug, PartialEq)]
+pub struct BBox {
+    pub lo: Vec<f64>,
+    pub hi: Vec<f64>,
+}
+
+impl BBox {
+    /// Degenerate box at a single point.
+    pub fn at(p: &[f64]) -> BBox {
+        BBox { lo: p.to_vec(), hi: p.to_vec() }
+    }
+
+    /// Smallest bounding box of the rows of `data` selected by `members`
+    /// (all rows when `members` is None). Returns None for empty input.
+    pub fn of(data: &[f64], d: usize, members: Option<&[u32]>) -> Option<BBox> {
+        let mut it: Box<dyn Iterator<Item = usize>> = match members {
+            Some(m) => Box::new(m.iter().map(|&i| i as usize)),
+            None => Box::new(0..data.len() / d),
+        };
+        let first = it.next()?;
+        let mut bb = BBox::at(&data[first * d..(first + 1) * d]);
+        for i in it {
+            bb.expand(&data[i * d..(i + 1) * d]);
+        }
+        Some(bb)
+    }
+
+    pub fn dim(&self) -> usize {
+        self.lo.len()
+    }
+
+    /// Grow to include `p`.
+    pub fn expand(&mut self, p: &[f64]) {
+        for j in 0..self.lo.len() {
+            if p[j] < self.lo[j] {
+                self.lo[j] = p[j];
+            }
+            if p[j] > self.hi[j] {
+                self.hi[j] = p[j];
+            }
+        }
+    }
+
+    /// Length of the diagonal, `l_B` in the paper (Def. 3).
+    pub fn diagonal(&self) -> f64 {
+        sq_dist(&self.lo, &self.hi).sqrt()
+    }
+
+    /// Index and length of the longest side.
+    pub fn longest_side(&self) -> (usize, f64) {
+        let mut best = (0, f64::NEG_INFINITY);
+        for j in 0..self.lo.len() {
+            let len = self.hi[j] - self.lo[j];
+            if len > best.1 {
+                best = (j, len);
+            }
+        }
+        best
+    }
+
+    /// Split plane of the paper's cutting rule: middle of the longest side.
+    /// Returns (axis, threshold).
+    pub fn split_plane(&self) -> (usize, f64) {
+        let (axis, _) = self.longest_side();
+        (axis, 0.5 * (self.lo[axis] + self.hi[axis]))
+    }
+
+    /// Closed containment test.
+    pub fn contains(&self, p: &[f64]) -> bool {
+        (0..self.lo.len()).all(|j| p[j] >= self.lo[j] && p[j] <= self.hi[j])
+    }
+
+    /// Center of the box.
+    pub fn center(&self) -> Vec<f64> {
+        (0..self.lo.len()).map(|j| 0.5 * (self.lo[j] + self.hi[j])).collect()
+    }
+
+    /// Volume (product of side lengths).
+    pub fn volume(&self) -> f64 {
+        (0..self.lo.len()).map(|j| self.hi[j] - self.lo[j]).product()
+    }
+}
+
+/// Mean of selected rows (center of mass of a block's instances).
+pub fn mean_of(data: &[f64], d: usize, members: &[u32]) -> Vec<f64> {
+    let mut m = vec![0.0; d];
+    for &i in members {
+        let row = &data[i as usize * d..(i as usize + 1) * d];
+        for j in 0..d {
+            m[j] += row[j];
+        }
+    }
+    let inv = 1.0 / members.len() as f64;
+    for v in &mut m {
+        *v *= inv;
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn sq_dist_basics() {
+        assert_eq!(sq_dist(&[0.0, 0.0], &[3.0, 4.0]), 25.0);
+        assert_eq!(dist(&[0.0, 0.0], &[3.0, 4.0]), 5.0);
+        assert_eq!(sq_dist(&[1.5], &[1.5]), 0.0);
+    }
+
+    #[test]
+    fn bbox_of_points() {
+        let data = [0.0, 1.0, 2.0, -1.0, 1.0, 3.0];
+        let bb = BBox::of(&data, 2, None).unwrap();
+        assert_eq!(bb.lo, vec![0.0, -1.0]);
+        assert_eq!(bb.hi, vec![2.0, 3.0]);
+        assert!((bb.diagonal() - (4.0f64 + 16.0).sqrt()).abs() < 1e-12);
+        assert_eq!(bb.longest_side(), (1, 4.0));
+        assert_eq!(BBox::of(&data, 2, Some(&[])), None);
+    }
+
+    #[test]
+    fn bbox_members_subset() {
+        let data = [0.0, 0.0, 10.0, 10.0, 5.0, 5.0];
+        let bb = BBox::of(&data, 2, Some(&[0, 2])).unwrap();
+        assert_eq!(bb.hi, vec![5.0, 5.0]);
+    }
+
+    #[test]
+    fn split_plane_halves_longest_side() {
+        let bb = BBox { lo: vec![0.0, 0.0], hi: vec![4.0, 1.0] };
+        assert_eq!(bb.split_plane(), (0, 2.0));
+    }
+
+    #[test]
+    fn mean_of_members() {
+        let data = [0.0, 0.0, 2.0, 4.0, 100.0, 100.0];
+        assert_eq!(mean_of(&data, 2, &[0, 1]), vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn prop_bbox_contains_all_members_and_mean() {
+        prop::check("bbox-contains", 50, |g| {
+            let n = g.int(1, 80);
+            let d = g.int(1, 6);
+            let data = g.cloud(n, d, 5.0);
+            let members: Vec<u32> = (0..n as u32).collect();
+            let bb = BBox::of(&data, d, Some(&members)).unwrap();
+            for i in 0..n {
+                assert!(bb.contains(&data[i * d..(i + 1) * d]));
+            }
+            // Center of mass lies in the (convex) box — Thm 1's key fact.
+            let m = mean_of(&data, d, &members);
+            assert!(bb.contains(&m) || m.iter().enumerate().all(|(j, &v)| {
+                v >= bb.lo[j] - 1e-12 && v <= bb.hi[j] + 1e-12
+            }));
+        });
+    }
+
+    #[test]
+    fn prop_diagonal_bounds_pairwise_distance() {
+        prop::check("diag-bound", 50, |g| {
+            let n = g.int(2, 60);
+            let d = g.int(1, 5);
+            let data = g.cloud(n, d, 3.0);
+            let bb = BBox::of(&data, d, None).unwrap();
+            let l = bb.diagonal();
+            for i in 0..n.min(10) {
+                for j in 0..n {
+                    let dd = dist(&data[i * d..(i + 1) * d], &data[j * d..(j + 1) * d]);
+                    assert!(dd <= l + 1e-9, "pair dist {dd} > diagonal {l}");
+                }
+            }
+        });
+    }
+}

@@ -1,0 +1,100 @@
+//! Forgy initialization [14]: K instances chosen uniformly at random.
+
+use crate::util::Rng;
+
+/// Select `k` distinct rows of `data` uniformly at random as centroids.
+/// Panics if `k` exceeds the number of rows. Computes no distances.
+pub fn forgy(data: &[f64], d: usize, k: usize, rng: &mut Rng) -> Vec<f64> {
+    let n = data.len() / d;
+    assert!(k <= n, "forgy: k={k} > n={n}");
+    let idx = rng.sample_indices(n, k);
+    let mut out = Vec::with_capacity(k * d);
+    for i in idx {
+        out.extend_from_slice(&data[i * d..(i + 1) * d]);
+    }
+    out
+}
+
+/// The §1.2.1 "standard initialization procedure": several Forgy
+/// re-initializations, keeping the set with the smallest error. Each
+/// candidate's evaluation costs n·k distances (counted) — exactly the
+/// drawback the paper cites for this baseline.
+pub fn forgy_restarts(
+    data: &[f64],
+    d: usize,
+    k: usize,
+    restarts: usize,
+    rng: &mut crate::util::Rng,
+    counter: &crate::metrics::DistanceCounter,
+) -> Vec<f64> {
+    assert!(restarts >= 1);
+    let mut best: Option<(f64, Vec<f64>)> = None;
+    for _ in 0..restarts {
+        let cand = forgy(data, d, k, rng);
+        let err = crate::metrics::kmeans_error(data, d, &cand, counter);
+        if best.as_ref().map_or(true, |(e, _)| err < *e) {
+            best = Some((err, cand));
+        }
+    }
+    best.unwrap().1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn restarts_never_worse_than_single_draw_in_expectation() {
+        let mut g = prop::Gen { rng: crate::util::Rng::new(66), case: 0 };
+        let data = g.blobs(600, 2, 4, 0.4);
+        let c = crate::metrics::DistanceCounter::new();
+        let (mut e_multi, mut e_single) = (0.0, 0.0);
+        for seed in 0..10 {
+            let mut rng = crate::util::Rng::new(seed);
+            let multi = forgy_restarts(&data, 2, 4, 8, &mut rng, &c);
+            e_multi += crate::metrics::kmeans_error(&data, 2, &multi, &c);
+            let single = forgy(&data, 2, 4, &mut rng);
+            e_single += crate::metrics::kmeans_error(&data, 2, &single, &c);
+        }
+        assert!(e_multi <= e_single, "{e_multi} > {e_single}");
+    }
+
+    #[test]
+    fn restarts_count_nk_per_candidate() {
+        let data: Vec<f64> = (0..200).map(|x| x as f64).collect();
+        let c = crate::metrics::DistanceCounter::new();
+        let _ = forgy_restarts(&data, 1, 4, 3, &mut crate::util::Rng::new(1), &c);
+        assert_eq!(c.get(), 3 * 200 * 4);
+    }
+
+    #[test]
+    fn picks_distinct_rows() {
+        let data: Vec<f64> = (0..40).map(|x| x as f64).collect(); // 20 rows, d=2
+        let mut rng = Rng::new(5);
+        let c = forgy(&data, 2, 5, &mut rng);
+        assert_eq!(c.len(), 10);
+        // Each centroid is one of the rows.
+        for chunk in c.chunks(2) {
+            let found = data.chunks(2).any(|r| r == chunk);
+            assert!(found);
+        }
+    }
+
+    #[test]
+    fn prop_forgy_centroids_are_dataset_rows() {
+        prop::check("forgy-rows", 20, |g| {
+            let n = g.int(3, 100);
+            let d = g.int(1, 5);
+            let k = g.int(1, n.min(8));
+            let data = g.cloud(n, d, 2.0);
+            let mut rng = g.rng.fork(2);
+            let cents = forgy(&data, d, k, &mut rng);
+            let mut seen = std::collections::HashSet::new();
+            for c in cents.chunks(d) {
+                let i = (0..n).find(|&i| &data[i * d..(i + 1) * d] == c).expect("row");
+                assert!(seen.insert(i), "duplicate row {i}");
+            }
+        });
+    }
+}

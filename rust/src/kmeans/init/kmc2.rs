@@ -1,0 +1,162 @@
+//! AFK-MC² seeding (Bachem et al. [3], "Fast and Provably Good Seedings
+//! for k-Means") — the paper's **KMC2** baseline: a Markov-chain Monte
+//! Carlo approximation of the K-means++ D² distribution with sublinear
+//! per-centroid cost.
+//!
+//! One preprocessing pass builds the assumption-free proposal
+//! q(x) ∝ ½·d(x, c₁)²/Σd² + ½·1/n (n distances); afterwards each of the
+//! k−1 centroids runs a Metropolis–Hastings chain of length `m`, each chain
+//! step computing |C| distances (the distance from the candidate to the
+//! current centroid set).
+
+use crate::geometry::sq_dist;
+use crate::metrics::DistanceCounter;
+use crate::util::{Cdf, Rng};
+
+/// AFK-MC² configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct Kmc2Cfg {
+    /// Chain length (Bachem et al. use m = 100..200).
+    pub chain_length: usize,
+}
+
+impl Default for Kmc2Cfg {
+    fn default() -> Self {
+        Kmc2Cfg { chain_length: 200 }
+    }
+}
+
+/// Run AFK-MC² over `data`; returns flat k×d centroids.
+pub fn kmc2(
+    data: &[f64],
+    d: usize,
+    k: usize,
+    cfg: &Kmc2Cfg,
+    rng: &mut Rng,
+    counter: &DistanceCounter,
+) -> Vec<f64> {
+    let n = data.len() / d;
+    assert!(k >= 1 && n >= 1);
+    let mut centroids = Vec::with_capacity(k * d);
+
+    // c1 uniform.
+    let first = rng.usize(n);
+    centroids.extend_from_slice(&data[first * d..(first + 1) * d]);
+    if k == 1 {
+        return centroids;
+    }
+
+    // Assumption-free proposal from one full pass against c1.
+    let c1 = &data[first * d..(first + 1) * d].to_vec();
+    let mut d2_c1 = vec![0.0; n];
+    let mut total = 0.0;
+    for i in 0..n {
+        let dd = sq_dist(&data[i * d..(i + 1) * d], c1);
+        d2_c1[i] = dd;
+        total += dd;
+    }
+    counter.add(n as u64);
+    let q: Vec<f64> = if total > 0.0 {
+        d2_c1.iter().map(|&dd| 0.5 * dd / total + 0.5 / n as f64).collect()
+    } else {
+        vec![1.0 / n as f64; n] // all points identical
+    };
+    let q_cdf = Cdf::new(&q).expect("proposal mass");
+
+    // dist²(x, C) of the current chain state, recomputed lazily.
+    let dist_to_set = |x: usize, cents: &[f64], counter: &DistanceCounter| -> f64 {
+        let kc = cents.len() / d;
+        let mut best = f64::INFINITY;
+        let row = &data[x * d..(x + 1) * d];
+        for c in 0..kc {
+            best = best.min(sq_dist(row, &cents[c * d..(c + 1) * d]));
+        }
+        counter.add(kc as u64);
+        best
+    };
+
+    for _ in 1..k {
+        // Initialize the chain at a proposal draw.
+        let mut x = q_cdf.sample(rng);
+        let mut dx = dist_to_set(x, &centroids, counter);
+        for _ in 1..cfg.chain_length {
+            let y = q_cdf.sample(rng);
+            let dy = dist_to_set(y, &centroids, counter);
+            // Metropolis–Hastings acceptance for target ∝ d²(·,C):
+            // accept with min(1, (dy·q(x)) / (dx·q(y))).
+            let num = dy * q[x];
+            let den = dx * q[y];
+            if den <= 0.0 || rng.f64() * den < num {
+                x = y;
+                dx = dy;
+            }
+        }
+        centroids.extend_from_slice(&data[x * d..(x + 1) * d]);
+    }
+    centroids
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::kmeans_error;
+
+    #[test]
+    fn distance_count_is_n_plus_chains() {
+        let data: Vec<f64> = (0..500).map(|x| x as f64).collect();
+        let c = DistanceCounter::new();
+        let cfg = Kmc2Cfg { chain_length: 50 };
+        let _ = kmc2(&data, 1, 4, &cfg, &mut Rng::new(1), &c);
+        // n (proposal) + per added centroid j=1..3: chain of 50 states with
+        // |C| = j distances each (initial draw + 49 steps).
+        let expect = 500 + 50 * (1 + 2 + 3);
+        assert_eq!(c.get(), expect as u64);
+    }
+
+    #[test]
+    fn sublinear_vs_kmeanspp_for_large_n() {
+        let n = 20_000usize;
+        let data: Vec<f64> = (0..n).map(|x| (x % 97) as f64).collect();
+        let c_mc = DistanceCounter::new();
+        let _ = kmc2(&data, 1, 10, &Kmc2Cfg::default(), &mut Rng::new(2), &c_mc);
+        let c_pp = DistanceCounter::new();
+        let _ = super::super::kmeanspp::kmeanspp(&data, 1, 10, &mut Rng::new(2), &c_pp);
+        assert!(
+            c_mc.get() < c_pp.get() / 2,
+            "kmc2 {} not ≪ km++ {}",
+            c_mc.get(),
+            c_pp.get()
+        );
+    }
+
+    #[test]
+    fn quality_close_to_kmeanspp_on_blobs() {
+        // Average seeding error within 2x of KM++ on separated blobs.
+        let mut rng = Rng::new(3);
+        let mut data = Vec::new();
+        for &(cx, cy) in &[(0.0, 0.0), (40.0, 0.0), (0.0, 40.0), (40.0, 40.0)] {
+            for _ in 0..200 {
+                data.push(cx + rng.normal());
+                data.push(cy + rng.normal());
+            }
+        }
+        let (mut e_mc, mut e_pp) = (0.0, 0.0);
+        for seed in 0..15 {
+            let c = DistanceCounter::new();
+            let cm = kmc2(&data, 2, 4, &Kmc2Cfg::default(), &mut Rng::new(seed), &c);
+            e_mc += kmeans_error(&data, 2, &cm, &c);
+            let cp =
+                super::super::kmeanspp::kmeanspp(&data, 2, 4, &mut Rng::new(seed), &c);
+            e_pp += kmeans_error(&data, 2, &cp, &c);
+        }
+        assert!(e_mc < e_pp * 2.0, "kmc2 err {e_mc} vs km++ {e_pp}");
+    }
+
+    #[test]
+    fn degenerate_identical_points() {
+        let data = vec![3.3; 10];
+        let c = DistanceCounter::new();
+        let cents = kmc2(&data, 1, 3, &Kmc2Cfg::default(), &mut Rng::new(5), &c);
+        assert_eq!(cents, vec![3.3; 3]);
+    }
+}

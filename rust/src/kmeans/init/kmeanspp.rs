@@ -1,0 +1,174 @@
+//! K-means++ seeding (Arthur & Vassilvitskii [2]): first centroid uniform,
+//! each subsequent centroid sampled with probability proportional to the
+//! squared distance to the already-selected set (D² sampling).
+//!
+//! The weighted variant (probability ∝ w(x)·D²(x)) seeds runs over
+//! partition representatives — BWKM uses it in Alg. 4 and Alg. 5 Step 1.
+//!
+//! Cost: each added centroid refreshes the min-distance array with one new
+//! distance per point → exactly n·(k−1) + 0 distances for the plain run
+//! (the first centroid is free), matching the paper's O(n·K·d) accounting.
+
+use crate::geometry::sq_dist;
+use crate::metrics::DistanceCounter;
+use crate::util::Rng;
+
+/// Plain K-means++ over `data`. Returns flat k×d centroids.
+pub fn kmeanspp(
+    data: &[f64],
+    d: usize,
+    k: usize,
+    rng: &mut Rng,
+    counter: &DistanceCounter,
+) -> Vec<f64> {
+    let n = data.len() / d;
+    weighted_kmeanspp(data, &vec![1.0; n], d, k, rng, counter)
+}
+
+/// Weighted K-means++: D² sampling with probabilities ∝ w(x)·D²(x).
+pub fn weighted_kmeanspp(
+    data: &[f64],
+    weights: &[f64],
+    d: usize,
+    k: usize,
+    rng: &mut Rng,
+    counter: &DistanceCounter,
+) -> Vec<f64> {
+    let n = weights.len();
+    assert!(k >= 1 && n >= 1, "kmeans++: need k>=1, n>=1");
+    let mut centroids = Vec::with_capacity(k * d);
+
+    // First centroid: weight-proportional uniform draw (uniform over the
+    // underlying instances each representative stands for).
+    let first = rng.weighted_index(weights).unwrap_or(0);
+    centroids.extend_from_slice(&data[first * d..(first + 1) * d]);
+
+    // min squared distance to the selected set, maintained incrementally.
+    let mut mind2 = vec![f64::INFINITY; n];
+    let mut probs = vec![0.0; n];
+    for c in 1..k {
+        let newest = &centroids[(c - 1) * d..c * d];
+        for i in 0..n {
+            let dd = sq_dist(&data[i * d..(i + 1) * d], newest);
+            if dd < mind2[i] {
+                mind2[i] = dd;
+            }
+            probs[i] = weights[i] * mind2[i];
+        }
+        counter.add(n as u64);
+        match rng.weighted_index(&probs) {
+            Some(next) => centroids.extend_from_slice(&data[next * d..(next + 1) * d]),
+            None => {
+                // All mass at distance 0 (fewer distinct points than k):
+                // fall back to a weight-proportional draw.
+                let f = rng.weighted_index(weights).unwrap_or(0);
+                centroids.extend_from_slice(&data[f * d..(f + 1) * d]);
+            }
+        }
+    }
+    centroids
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::kmeans_error;
+    use crate::util::prop;
+
+    #[test]
+    fn counts_exactly_n_per_added_centroid() {
+        let data: Vec<f64> = (0..100).map(|x| x as f64).collect(); // n=100, d=1
+        let c = DistanceCounter::new();
+        let _ = kmeanspp(&data, 1, 5, &mut Rng::new(1), &c);
+        assert_eq!(c.get(), 100 * 4);
+    }
+
+    #[test]
+    fn seeds_are_dataset_rows() {
+        let data: Vec<f64> = (0..60).map(|x| (x as f64).sin() * 10.0).collect();
+        let c = DistanceCounter::new();
+        let cents = kmeanspp(&data, 2, 6, &mut Rng::new(2), &c);
+        for cent in cents.chunks(2) {
+            assert!(data.chunks(2).any(|r| r == cent));
+        }
+    }
+
+    #[test]
+    fn spreads_over_separated_clusters() {
+        // Three far-apart blobs: KM++ should seed one centroid in each
+        // almost always (probability of failure is astronomically small).
+        let mut data = Vec::new();
+        let mut rng = Rng::new(3);
+        for &cx in &[0.0, 1000.0, 2000.0] {
+            for _ in 0..50 {
+                data.push(cx + rng.normal());
+            }
+        }
+        let c = DistanceCounter::new();
+        let mut hits = 0;
+        for seed in 0..20 {
+            let cents = kmeanspp(&data, 1, 3, &mut Rng::new(seed), &c);
+            let mut got = [false; 3];
+            for &x in &cents {
+                if x < 500.0 {
+                    got[0] = true;
+                } else if x < 1500.0 {
+                    got[1] = true;
+                } else {
+                    got[2] = true;
+                }
+            }
+            hits += got.iter().all(|&g| g) as usize;
+        }
+        assert!(hits >= 19, "only {hits}/20 runs covered all clusters");
+    }
+
+    #[test]
+    fn weighted_prefers_heavy_points() {
+        // Two points; one carries weight 10^6. It should be selected first
+        // nearly always.
+        let data = [0.0, 1.0];
+        let weights = [1e6, 1.0];
+        let mut firsts = 0;
+        for seed in 0..50 {
+            let c = DistanceCounter::new();
+            let cents =
+                weighted_kmeanspp(&data, &weights, 1, 1, &mut Rng::new(seed), &c);
+            firsts += (cents[0] == 0.0) as usize;
+        }
+        assert!(firsts >= 48);
+    }
+
+    #[test]
+    fn degenerate_fewer_distinct_points_than_k() {
+        let data = [5.0, 5.0, 5.0, 5.0]; // 4 identical rows, d=1
+        let c = DistanceCounter::new();
+        let cents = kmeanspp(&data, 1, 3, &mut Rng::new(4), &c);
+        assert_eq!(cents, vec![5.0, 5.0, 5.0]);
+    }
+
+    #[test]
+    fn prop_kmpp_no_worse_than_random_on_average() {
+        // Sanity of the O(log K) guarantee's *direction*: KM++ beats Forgy
+        // in expectation on clustered data. Compare averages over seeds.
+        prop::check("kmpp-vs-forgy", 5, |g| {
+            let n = 200;
+            let d = 2;
+            let k = 4;
+            let data = g.blobs(n, d, k, 0.3);
+            let (mut e_pp, mut e_fg) = (0.0, 0.0);
+            for seed in 0..12 {
+                let c = DistanceCounter::new();
+                let mut rng = Rng::new(1000 + seed);
+                let cents = kmeanspp(&data, d, k, &mut rng, &c);
+                e_pp += kmeans_error(&data, d, &cents, &c);
+                let cents = super::super::forgy::forgy(&data, d, k, &mut rng);
+                e_fg += kmeans_error(&data, d, &cents, &c);
+            }
+            assert!(
+                e_pp <= e_fg * 1.25,
+                "km++ {e_pp} much worse than forgy {e_fg}"
+            );
+        });
+    }
+}

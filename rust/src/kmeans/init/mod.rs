@@ -1,0 +1,12 @@
+//! Seeding strategies (paper §1.2.1): Forgy, K-means++ (plain and
+//! weighted — the weighted form seeds BWKM's runs over representatives,
+//! Alg. 4 / Alg. 5 Step 1), and AFK-MC² (the MCMC approximation of
+//! K-means++, the paper's "KMC2" baseline).
+
+pub mod forgy;
+pub mod kmc2;
+pub mod kmeanspp;
+
+pub use forgy::forgy;
+pub use kmc2::{kmc2, Kmc2Cfg};
+pub use kmeanspp::{kmeanspp, weighted_kmeanspp};

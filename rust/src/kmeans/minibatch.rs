@@ -1,0 +1,128 @@
+//! Mini-batch K-means (Sculley [31]) — the paper's MB baseline with
+//! batch sizes b ∈ {100, 500, 1000}.
+//!
+//! Per iteration: sample b points uniformly, assign each to its nearest
+//! centroid (b·k distances), then move each selected centroid toward the
+//! batch points with per-center learning rate 1/v[c], where v[c] counts all
+//! samples ever assigned to c.
+
+use crate::metrics::{nearest, Budget, DistanceCounter};
+use crate::util::Rng;
+
+use super::init::forgy;
+use super::KmResult;
+
+/// Mini-batch configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct MiniBatchCfg {
+    pub batch: usize,
+    pub max_iters: usize,
+    /// Stop when the max centroid shift of an iteration falls below this.
+    pub tol: f64,
+    pub budget: Budget,
+}
+
+impl Default for MiniBatchCfg {
+    fn default() -> Self {
+        MiniBatchCfg { batch: 100, max_iters: 1000, tol: 1e-4, budget: Budget::unlimited() }
+    }
+}
+
+/// Run Mini-batch K-means with Forgy initialization (as in the paper §3).
+pub fn minibatch_kmeans(
+    data: &[f64],
+    d: usize,
+    k: usize,
+    cfg: &MiniBatchCfg,
+    rng: &mut Rng,
+    counter: &DistanceCounter,
+) -> KmResult {
+    let n = data.len() / d;
+    let mut centroids = forgy(data, d, k, rng);
+    let mut v = vec![0u64; k]; // per-center sample counts
+    let mut iters = 0;
+
+    let mut batch_assign = vec![0usize; cfg.batch];
+    let mut batch_idx = vec![0usize; cfg.batch];
+
+    for _ in 0..cfg.max_iters {
+        if cfg.budget.exceeded(counter) {
+            break;
+        }
+        iters += 1;
+        // Sample and cache assignments (Sculley caches per-batch).
+        for b in 0..cfg.batch {
+            let i = rng.usize(n);
+            batch_idx[b] = i;
+            let (c, _) = nearest(&data[i * d..(i + 1) * d], &centroids, d, counter);
+            batch_assign[b] = c;
+        }
+        // Gradient step with per-center rates.
+        let mut max_shift2 = 0.0f64;
+        for b in 0..cfg.batch {
+            let c = batch_assign[b];
+            v[c] += 1;
+            let eta = 1.0 / v[c] as f64;
+            let x = &data[batch_idx[b] * d..(batch_idx[b] + 1) * d];
+            let cent = &mut centroids[c * d..(c + 1) * d];
+            let mut shift2 = 0.0;
+            for j in 0..d {
+                let delta = eta * (x[j] - cent[j]);
+                cent[j] += delta;
+                shift2 += delta * delta;
+            }
+            max_shift2 = max_shift2.max(shift2);
+        }
+        if max_shift2.sqrt() < cfg.tol {
+            break;
+        }
+    }
+    KmResult { centroids, k, d, iters }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::kmeans_error;
+    use crate::util::prop;
+
+    #[test]
+    fn counts_bk_per_iteration() {
+        let data: Vec<f64> = (0..1000).map(|x| x as f64).collect();
+        let c = DistanceCounter::new();
+        let cfg = MiniBatchCfg { batch: 50, max_iters: 7, tol: 0.0, ..Default::default() };
+        let out = minibatch_kmeans(&data, 1, 3, &cfg, &mut Rng::new(1), &c);
+        assert_eq!(out.iters, 7);
+        assert_eq!(c.get(), 7 * 50 * 3);
+    }
+
+    #[test]
+    fn improves_over_forgy_on_blobs() {
+        prop::check("mb-improves", 5, |g| {
+            let data = g.blobs(2000, 2, 4, 0.4);
+            let mut rng = g.rng.fork(3);
+            let c = DistanceCounter::new();
+            let init = forgy(&data, 2, 4, &mut rng.clone());
+            let e_init = kmeans_error(&data, 2, &init, &c);
+            let cfg = MiniBatchCfg { batch: 100, max_iters: 300, ..Default::default() };
+            let out = minibatch_kmeans(&data, 2, 4, &cfg, &mut rng, &c);
+            let e_mb = kmeans_error(&data, 2, &out.centroids, &c);
+            assert!(e_mb < e_init * 1.05, "mb {e_mb} vs forgy-init {e_init}");
+        });
+    }
+
+    #[test]
+    fn budget_respected() {
+        let data: Vec<f64> = (0..4000).map(|x| x as f64).collect();
+        let c = DistanceCounter::new();
+        let cfg = MiniBatchCfg {
+            batch: 100,
+            max_iters: 100_000,
+            tol: 0.0,
+            budget: Budget::of(10_000),
+        };
+        let _ = minibatch_kmeans(&data, 1, 5, &cfg, &mut Rng::new(2), &c);
+        // One batch overshoot at most.
+        assert!(c.get() <= 10_000 + 100 * 5);
+    }
+}

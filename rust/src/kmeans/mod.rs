@@ -1,0 +1,31 @@
+//! K-means engines: the weighted Lloyd core (paper Alg. 1 steps 2/4, used
+//! by BWKM and RPKM), plain Lloyd over a dataset, the seeding algorithms
+//! (Forgy, K-means++, AFK-MC²) and Mini-batch K-means — every baseline of
+//! the paper's §3 — all with exact distance accounting.
+
+pub mod elkan;
+pub mod init;
+pub mod lloyd;
+pub mod minibatch;
+pub mod pruning;
+pub mod weighted_lloyd;
+
+pub use elkan::{elkan_weighted_lloyd, ElkanOutcome};
+pub use lloyd::{lloyd, LloydCfg, LloydOutcome};
+pub use minibatch::{minibatch_kmeans, MiniBatchCfg};
+pub use weighted_lloyd::{
+    weighted_lloyd, weighted_lloyd_with, NativeStepper, StepOut, Stepper, WLloydCfg,
+    WLloydOutcome,
+};
+
+/// Output of any end-to-end clustering method, as the bench harness
+/// consumes it.
+#[derive(Clone, Debug)]
+pub struct KmResult {
+    /// Flat k×d centroid matrix.
+    pub centroids: Vec<f64>,
+    pub k: usize,
+    pub d: usize,
+    /// Iterations of the method's own outer loop.
+    pub iters: usize,
+}

@@ -1,0 +1,224 @@
+//! Hamerly-bound distance pruning inside weighted Lloyd ([15], and the
+//! integration the paper's §4 proposes as future work: "BWKM is also
+//! compatible with the distance pruning techniques ... within the weighted
+//! Lloyd framework").
+//!
+//! Exact algorithm (identical fixed point to the plain stepper): per
+//! representative we keep an upper bound `u` on the distance to its
+//! assigned centroid and a lower bound `l` on the distance to the rest;
+//! a representative is scanned against all centroids only when
+//! `u > max(l, s[a])`, where `s[c]` is half the distance from `c` to its
+//! nearest other centroid. Only *actually computed* distances are counted,
+//! which is the whole point of the ablation (`benches/ablation_pruning`).
+
+use crate::geometry::{dist, sq_dist};
+use crate::metrics::DistanceCounter;
+
+/// Outcome of a pruned weighted-Lloyd run.
+#[derive(Clone, Debug)]
+pub struct PrunedOutcome {
+    pub centroids: Vec<f64>,
+    pub assign: Vec<u32>,
+    pub iters: usize,
+    /// Distances a plain (unpruned) run of the same iterations would have
+    /// computed — for the ablation report.
+    pub unpruned_equiv: u64,
+}
+
+/// Run weighted Lloyd with Hamerly pruning until the assignment is stable
+/// (fixed point) or `max_iters`.
+pub fn pruned_weighted_lloyd(
+    reps: &[f64],
+    weights: &[f64],
+    d: usize,
+    init: &[f64],
+    max_iters: usize,
+    counter: &DistanceCounter,
+) -> PrunedOutcome {
+    let m = weights.len();
+    let k = init.len() / d;
+    let mut centroids = init.to_vec();
+
+    let mut assign = vec![u32::MAX; m];
+    let mut upper = vec![f64::INFINITY; m];
+    let mut lower = vec![0.0f64; m];
+
+    // Weighted cluster aggregates, maintained incrementally on reassignment.
+    let mut sums = vec![0.0f64; k * d];
+    let mut counts = vec![0.0f64; k];
+
+    let mut s_half = vec![0.0f64; k];
+    let mut drift = vec![0.0f64; k];
+    let mut iters = 0usize;
+
+    for _ in 0..max_iters {
+        iters += 1;
+
+        // s[c] = ½ min_{c'≠c} ‖c−c'‖ : k(k−1)/2 distances.
+        for c in 0..k {
+            s_half[c] = f64::INFINITY;
+        }
+        for a in 0..k {
+            for b in a + 1..k {
+                let dd = dist(&centroids[a * d..(a + 1) * d], &centroids[b * d..(b + 1) * d]);
+                if dd < s_half[a] {
+                    s_half[a] = dd;
+                }
+                if dd < s_half[b] {
+                    s_half[b] = dd;
+                }
+            }
+        }
+        counter.add((k * (k - 1) / 2) as u64);
+        for c in 0..k {
+            s_half[c] *= 0.5;
+        }
+
+        let mut changed = 0usize;
+        for i in 0..m {
+            let p = &reps[i * d..(i + 1) * d];
+            let a = assign[i];
+            if a != u32::MAX {
+                let z = lower[i].max(s_half[a as usize]);
+                if upper[i] <= z {
+                    continue; // pruned: assignment provably unchanged
+                }
+                // Tighten the upper bound with one distance.
+                upper[i] = dist(p, &centroids[a as usize * d..(a as usize + 1) * d]);
+                counter.add(1);
+                if upper[i] <= z {
+                    continue;
+                }
+            }
+            // Full scan: top-2 over all centroids.
+            let (mut i1, mut b1, mut b2) = (0usize, f64::INFINITY, f64::INFINITY);
+            for c in 0..k {
+                let dd = sq_dist(p, &centroids[c * d..(c + 1) * d]);
+                if dd < b1 {
+                    b2 = b1;
+                    b1 = dd;
+                    i1 = c;
+                } else if dd < b2 {
+                    b2 = dd;
+                }
+            }
+            counter.add(k as u64);
+            upper[i] = b1.sqrt();
+            lower[i] = b2.sqrt();
+            if assign[i] != i1 as u32 {
+                let w = weights[i];
+                if assign[i] != u32::MAX {
+                    let old = assign[i] as usize;
+                    counts[old] -= w;
+                    for j in 0..d {
+                        sums[old * d + j] -= w * p[j];
+                    }
+                }
+                counts[i1] += w;
+                for j in 0..d {
+                    sums[i1 * d + j] += w * p[j];
+                }
+                assign[i] = i1 as u32;
+                changed += 1;
+            }
+        }
+
+        if changed == 0 && iters > 1 {
+            break;
+        }
+
+        // Update step + per-centroid drift (k "distances" for the drifts).
+        let mut max_drift = 0.0f64;
+        for c in 0..k {
+            let old = centroids[c * d..(c + 1) * d].to_vec();
+            if counts[c] > 0.0 {
+                let inv = 1.0 / counts[c];
+                for j in 0..d {
+                    centroids[c * d + j] = sums[c * d + j] * inv;
+                }
+            }
+            drift[c] = dist(&old, &centroids[c * d..(c + 1) * d]);
+            max_drift = max_drift.max(drift[c]);
+        }
+        counter.add(k as u64);
+        if max_drift == 0.0 {
+            break;
+        }
+        for i in 0..m {
+            upper[i] += drift[assign[i] as usize];
+            lower[i] = (lower[i] - max_drift).max(0.0);
+        }
+    }
+
+    PrunedOutcome {
+        centroids,
+        assign,
+        iters,
+        unpruned_equiv: (iters as u64) * (m as u64) * (k as u64),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kmeans::weighted_lloyd::{weighted_lloyd, WLloydCfg};
+    use crate::util::prop;
+
+    #[test]
+    fn prop_matches_plain_weighted_lloyd() {
+        prop::check("pruned-equals-plain", 25, |g| {
+            let m = g.int(5, 150);
+            let d = g.int(1, 5);
+            let k = g.int(2, 6).min(m);
+            let reps = g.blobs(m, d, k, 0.8);
+            let weights: Vec<f64> = (0..m).map(|_| g.int(1, 9) as f64).collect();
+            let init: Vec<f64> = reps[..k * d].to_vec();
+
+            let c1 = DistanceCounter::new();
+            let plain = weighted_lloyd(
+                &reps,
+                &weights,
+                d,
+                &init,
+                &WLloydCfg { max_iters: 200, tol: 0.0, ..Default::default() },
+                &c1,
+            );
+            let c2 = DistanceCounter::new();
+            let pruned = pruned_weighted_lloyd(&reps, &weights, d, &init, 200, &c2);
+
+            // Same fixed point (allowing fp noise of different accumulation
+            // orders).
+            for (a, b) in plain.centroids.iter().zip(&pruned.centroids) {
+                assert!((a - b).abs() < 1e-6, "centroid mismatch {a} vs {b}");
+            }
+        });
+    }
+
+    #[test]
+    fn prunes_on_separated_clusters() {
+        // Well-separated blobs: pruning should save a large fraction of
+        // distances relative to the unpruned equivalent.
+        let mut g = crate::util::prop::Gen { rng: crate::util::Rng::new(77), case: 0 };
+        let reps = g.blobs(3000, 3, 8, 0.2);
+        let weights = vec![1.0; 3000];
+        let init: Vec<f64> = reps[..8 * 3].to_vec();
+        let c = DistanceCounter::new();
+        let out = pruned_weighted_lloyd(&reps, &weights, 3, &init, 100, &c);
+        assert!(
+            c.get() < out.unpruned_equiv / 2,
+            "computed {} vs unpruned {}",
+            c.get(),
+            out.unpruned_equiv
+        );
+    }
+
+    #[test]
+    fn single_cluster_degenerate() {
+        let reps = [0.0, 1.0, 2.0];
+        let weights = [1.0; 3];
+        let init = [5.0];
+        let c = DistanceCounter::new();
+        let out = pruned_weighted_lloyd(&reps, &weights, 1, &init, 50, &c);
+        assert!((out.centroids[0] - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,467 @@
+//! Weighted Lloyd's algorithm — the engine under both BWKM and RPKM
+//! (paper §1.2.2.1): Lloyd's iterations over the representatives of a
+//! dataset partition, weighting each representative by its cardinality.
+//!
+//! The per-iteration *step* is abstracted behind [`Stepper`] so the same
+//! outer loop can run on the native Rust hot path or on the AOT-compiled
+//! HLO executable via PJRT (`runtime::PjrtStepper`); both produce the
+//! 5-tuple (new centroids, assignment, d1², d2², weighted error). The two
+//! nearest distances are retained because BWKM's misassignment function
+//! (Eq. 3) needs δ_P(C) = ‖P̄−c₂‖ − ‖P̄−c₁‖ for every representative —
+//! they fall out of the assignment step for free.
+
+use crate::metrics::{Budget, DistanceCounter};
+
+/// Result of one weighted-Lloyd iteration.
+#[derive(Clone, Debug)]
+pub struct StepOut {
+    /// Flat k×d updated centroids.
+    pub centroids: Vec<f64>,
+    /// Nearest-centroid index per representative.
+    pub assign: Vec<u32>,
+    /// Squared distance to the nearest centroid.
+    pub d1: Vec<f64>,
+    /// Squared distance to the second-nearest centroid (∞ if k = 1).
+    pub d2: Vec<f64>,
+    /// Weighted error E^P(C) of the *incoming* centroids.
+    pub werr: f64,
+}
+
+/// One weighted-Lloyd iteration (assignment + update) over representatives.
+pub trait Stepper {
+    /// `reps`: m×d flat, `weights`: m, `centroids`: k×d flat.
+    /// Implementations must count m·k distances on `counter`.
+    fn step(
+        &mut self,
+        reps: &[f64],
+        weights: &[f64],
+        d: usize,
+        centroids: &[f64],
+        counter: &DistanceCounter,
+    ) -> StepOut;
+}
+
+/// The native (pure Rust) stepper — the optimized hot path.
+#[derive(Default)]
+pub struct NativeStepper {
+    // Scratch buffers reused across iterations (no per-iteration allocation
+    // in the hot loop).
+    sums: Vec<f64>,
+    counts: Vec<f64>,
+}
+
+impl NativeStepper {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl Stepper for NativeStepper {
+    fn step(
+        &mut self,
+        reps: &[f64],
+        weights: &[f64],
+        d: usize,
+        centroids: &[f64],
+        counter: &DistanceCounter,
+    ) -> StepOut {
+        // Dispatch to a monomorphized body for the dimensions the Table-1
+        // workloads actually use: constant trip counts let LLVM fully
+        // unroll + vectorize the distance loop (§Perf iteration 1:
+        // 1.3–2.1x on the d=19/d=5 sweeps).
+        match d {
+            2 => self.step_d::<2>(reps, weights, centroids, counter),
+            3 => self.step_d::<3>(reps, weights, centroids, counter),
+            4 => self.step_d::<4>(reps, weights, centroids, counter),
+            5 => self.step_d::<5>(reps, weights, centroids, counter),
+            17 => self.step_d::<17>(reps, weights, centroids, counter),
+            19 => self.step_d::<19>(reps, weights, centroids, counter),
+            20 => self.step_d::<20>(reps, weights, centroids, counter),
+            _ => self.step_dyn(reps, weights, d, centroids, counter),
+        }
+    }
+}
+
+macro_rules! step_body {
+    ($self:ident, $reps:ident, $weights:ident, $d:ident, $centroids:ident, $counter:ident) => {{
+        let m = $weights.len();
+        let k = $centroids.len() / $d;
+        let mut assign = vec![0u32; m];
+        let mut d1 = vec![0.0; m];
+        let mut d2 = vec![0.0; m];
+        $self.sums.clear();
+        $self.sums.resize(k * $d, 0.0);
+        $self.counts.clear();
+        $self.counts.resize(k, 0.0);
+        let mut werr = 0.0;
+
+        for i in 0..m {
+            let p = &$reps[i * $d..i * $d + $d];
+            // Inlined top-2 scan (see metrics::nearest2); kept local so the
+            // compiler fuses the assignment and accumulation loops.
+            let (mut i1, mut b1, mut b2) = (0usize, f64::INFINITY, f64::INFINITY);
+            for c in 0..k {
+                let q = &$centroids[c * $d..c * $d + $d];
+                // 4-way split accumulators: FP adds can't be reassociated
+                // by the compiler, so a single `acc` serializes the whole
+                // distance on the FPU add latency (§Perf iteration 2).
+                let (mut a0, mut a1, mut a2, mut a3) = (0.0f64, 0.0, 0.0, 0.0);
+                let mut j = 0;
+                while j + 4 <= $d {
+                    let t0 = p[j] - q[j];
+                    let t1 = p[j + 1] - q[j + 1];
+                    let t2 = p[j + 2] - q[j + 2];
+                    let t3 = p[j + 3] - q[j + 3];
+                    a0 += t0 * t0;
+                    a1 += t1 * t1;
+                    a2 += t2 * t2;
+                    a3 += t3 * t3;
+                    j += 4;
+                }
+                while j < $d {
+                    let t = p[j] - q[j];
+                    a0 += t * t;
+                    j += 1;
+                }
+                let acc = (a0 + a1) + (a2 + a3);
+                if acc < b1 {
+                    b2 = b1;
+                    b1 = acc;
+                    i1 = c;
+                } else if acc < b2 {
+                    b2 = acc;
+                }
+            }
+            assign[i] = i1 as u32;
+            d1[i] = b1;
+            d2[i] = b2;
+            let w = $weights[i];
+            werr += w * b1;
+            let s = &mut $self.sums[i1 * $d..i1 * $d + $d];
+            for j in 0..$d {
+                s[j] += w * p[j];
+            }
+            $self.counts[i1] += w;
+        }
+        $counter.add((m * k) as u64);
+
+        // Update step: centers of mass; empty clusters keep their centroid.
+        let mut out = $centroids.to_vec();
+        for c in 0..k {
+            if $self.counts[c] > 0.0 {
+                let inv = 1.0 / $self.counts[c];
+                for j in 0..$d {
+                    out[c * $d + j] = $self.sums[c * $d + j] * inv;
+                }
+            }
+        }
+        StepOut { centroids: out, assign, d1, d2, werr }
+    }};
+}
+
+impl NativeStepper {
+    /// Monomorphized step: `D` is a compile-time constant, and each point
+    /// is hoisted into a fixed-size array so it lives in registers across
+    /// the whole centroid scan (§Perf iteration 3).
+    fn step_d<const D: usize>(
+        &mut self,
+        reps: &[f64],
+        weights: &[f64],
+        centroids: &[f64],
+        counter: &DistanceCounter,
+    ) -> StepOut {
+        let m = weights.len();
+        let k = centroids.len() / D;
+        let mut assign = vec![0u32; m];
+        let mut d1 = vec![0.0; m];
+        let mut d2 = vec![0.0; m];
+        self.sums.clear();
+        self.sums.resize(k * D, 0.0);
+        self.counts.clear();
+        self.counts.resize(k, 0.0);
+        let mut werr = 0.0;
+
+        for i in 0..m {
+            let p: &[f64; D] = reps[i * D..i * D + D].try_into().unwrap();
+            let (mut i1, mut b1, mut b2) = (0usize, f64::INFINITY, f64::INFINITY);
+            for c in 0..k {
+                let q: &[f64; D] = centroids[c * D..c * D + D].try_into().unwrap();
+                let (mut a0, mut a1, mut a2, mut a3) = (0.0f64, 0.0, 0.0, 0.0);
+                let mut j = 0;
+                while j + 4 <= D {
+                    let t0 = p[j] - q[j];
+                    let t1 = p[j + 1] - q[j + 1];
+                    let t2 = p[j + 2] - q[j + 2];
+                    let t3 = p[j + 3] - q[j + 3];
+                    a0 += t0 * t0;
+                    a1 += t1 * t1;
+                    a2 += t2 * t2;
+                    a3 += t3 * t3;
+                    j += 4;
+                }
+                while j < D {
+                    let t = p[j] - q[j];
+                    a0 += t * t;
+                    j += 1;
+                }
+                let acc = (a0 + a1) + (a2 + a3);
+                if acc < b1 {
+                    b2 = b1;
+                    b1 = acc;
+                    i1 = c;
+                } else if acc < b2 {
+                    b2 = acc;
+                }
+            }
+            assign[i] = i1 as u32;
+            d1[i] = b1;
+            d2[i] = b2;
+            let w = weights[i];
+            werr += w * b1;
+            let s = &mut self.sums[i1 * D..i1 * D + D];
+            for j in 0..D {
+                s[j] += w * p[j];
+            }
+            self.counts[i1] += w;
+        }
+        counter.add((m * k) as u64);
+
+        let mut out = centroids.to_vec();
+        for c in 0..k {
+            if self.counts[c] > 0.0 {
+                let inv = 1.0 / self.counts[c];
+                for j in 0..D {
+                    out[c * D + j] = self.sums[c * D + j] * inv;
+                }
+            }
+        }
+        StepOut { centroids: out, assign, d1, d2, werr }
+    }
+
+    /// Fallback for uncommon dimensions.
+    fn step_dyn(
+        &mut self,
+        reps: &[f64],
+        weights: &[f64],
+        d: usize,
+        centroids: &[f64],
+        counter: &DistanceCounter,
+    ) -> StepOut {
+        step_body!(self, reps, weights, d, centroids, counter)
+    }
+}
+
+/// Configuration of the weighted-Lloyd outer loop.
+#[derive(Clone, Copy, Debug)]
+pub struct WLloydCfg {
+    pub max_iters: usize,
+    /// Stop when |E^P(C) − E^P(C')| ≤ tol (the Eq. 2 criterion applied to
+    /// the weighted error).
+    pub tol: f64,
+    /// Optional hard cap on total distance computations.
+    pub budget: Budget,
+}
+
+impl Default for WLloydCfg {
+    fn default() -> Self {
+        WLloydCfg { max_iters: 100, tol: 1e-9, budget: Budget::unlimited() }
+    }
+}
+
+/// Outcome of a weighted-Lloyd run.
+#[derive(Clone, Debug)]
+pub struct WLloydOutcome {
+    pub centroids: Vec<f64>,
+    pub assign: Vec<u32>,
+    /// Squared top-2 distances of the *final* assignment (consumed by
+    /// BWKM's misassignment computation — paper §2.3 "we store ... the two
+    /// closest centroids to the representative").
+    pub d1: Vec<f64>,
+    pub d2: Vec<f64>,
+    /// Weighted error of the final centroids.
+    pub werr: f64,
+    pub iters: usize,
+    /// Max centroid displacement of the last iteration (‖C−C'‖∞, §2.4.2).
+    pub last_shift: f64,
+}
+
+/// Run weighted Lloyd with the native stepper.
+pub fn weighted_lloyd(
+    reps: &[f64],
+    weights: &[f64],
+    d: usize,
+    init: &[f64],
+    cfg: &WLloydCfg,
+    counter: &DistanceCounter,
+) -> WLloydOutcome {
+    weighted_lloyd_with(&mut NativeStepper::new(), reps, weights, d, init, cfg, counter)
+}
+
+/// Run weighted Lloyd over an arbitrary [`Stepper`] backend.
+pub fn weighted_lloyd_with(
+    stepper: &mut dyn Stepper,
+    reps: &[f64],
+    weights: &[f64],
+    d: usize,
+    init: &[f64],
+    cfg: &WLloydCfg,
+    counter: &DistanceCounter,
+) -> WLloydOutcome {
+    let k = init.len() / d;
+    let mut centroids = init.to_vec();
+    let mut prev_err = f64::INFINITY;
+    let mut last = None;
+    let mut iters = 0;
+    let mut last_shift = f64::INFINITY;
+
+    while iters < cfg.max_iters && !cfg.budget.exceeded(counter) {
+        let step = stepper.step(reps, weights, d, &centroids, counter);
+        iters += 1;
+        last_shift = max_shift(&centroids, &step.centroids, d, k);
+        let done = (prev_err - step.werr).abs() <= cfg.tol;
+        prev_err = step.werr;
+        centroids = step.centroids.clone();
+        last = Some(step);
+        if done {
+            break;
+        }
+    }
+
+    let last = last.unwrap_or_else(|| {
+        // Zero iterations (exhausted budget): still produce a consistent
+        // assignment so callers can proceed.
+        stepper.step(reps, weights, d, &centroids, counter)
+    });
+    WLloydOutcome {
+        centroids,
+        assign: last.assign,
+        d1: last.d1,
+        d2: last.d2,
+        werr: last.werr,
+        iters,
+        last_shift,
+    }
+}
+
+/// ‖C−C'‖∞ = max_k ‖c_k − c'_k‖ (Thm A.4's displacement norm).
+pub fn max_shift(a: &[f64], b: &[f64], d: usize, k: usize) -> f64 {
+    let mut worst = 0.0f64;
+    for c in 0..k {
+        let s = crate::geometry::sq_dist(&a[c * d..(c + 1) * d], &b[c * d..(c + 1) * d]);
+        worst = worst.max(s);
+    }
+    worst.sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn counter() -> DistanceCounter {
+        DistanceCounter::new()
+    }
+
+    #[test]
+    fn converges_on_two_weighted_groups() {
+        // Representatives at -1,1 (weight 2 each) and 9,11 (weight 3 each).
+        let reps = [-1.0, 1.0, 9.0, 11.0];
+        let weights = [2.0, 2.0, 3.0, 3.0];
+        let init = [-0.5, 8.0];
+        let out = weighted_lloyd(&reps, &weights, 1, &init, &WLloydCfg::default(), &counter());
+        let mut c = out.centroids.clone();
+        c.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert!((c[0] - 0.0).abs() < 1e-9, "{c:?}");
+        assert!((c[1] - 10.0).abs() < 1e-9, "{c:?}");
+    }
+
+    #[test]
+    fn counts_mk_per_iteration() {
+        let reps = [0.0, 1.0, 10.0, 11.0];
+        let weights = [1.0; 4];
+        let init = [0.0, 10.0];
+        let c = counter();
+        let out = weighted_lloyd(&reps, &weights, 1, &init, &WLloydCfg::default(), &c);
+        assert_eq!(c.get(), (out.iters * 4 * 2) as u64);
+    }
+
+    #[test]
+    fn empty_cluster_keeps_centroid() {
+        let reps = [0.0, 1.0];
+        let weights = [1.0, 1.0];
+        let init = [0.5, 99.0];
+        let out = weighted_lloyd(&reps, &weights, 1, &init, &WLloydCfg::default(), &counter());
+        assert!((out.centroids[1] - 99.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn budget_stops_loop() {
+        let reps: Vec<f64> = (0..100).map(|i| i as f64).collect();
+        let weights = vec![1.0; 100];
+        let init = [0.0, 50.0, 99.0];
+        let c = counter();
+        let cfg = WLloydCfg { budget: Budget::of(600), ..Default::default() };
+        let out = weighted_lloyd(&reps, &weights, 1, &init, &cfg, &c);
+        assert!(out.iters <= 2, "iters={}", out.iters);
+    }
+
+    #[test]
+    fn prop_weighted_error_monotone_decreases() {
+        // The classic Lloyd guarantee on the weighted error (the chain of
+        // inequalities referenced by Thm A.2).
+        prop::check("wlloyd-monotone", 30, |g| {
+            let m = g.int(5, 120);
+            let d = g.int(1, 5);
+            let k = g.int(1, 6).min(m);
+            let reps = g.blobs(m, d, 3, 1.0);
+            let weights: Vec<f64> = (0..m).map(|_| g.int(1, 20) as f64).collect();
+            let init: Vec<f64> = reps[..k * d].to_vec();
+            let c = counter();
+            let mut stepper = NativeStepper::new();
+            let mut cent = init;
+            let mut prev = f64::INFINITY;
+            for _ in 0..12 {
+                let s = stepper.step(&reps, &weights, d, &cent, &c);
+                assert!(
+                    s.werr <= prev * (1.0 + 1e-12) + 1e-9,
+                    "weighted error increased: {prev} -> {}",
+                    s.werr
+                );
+                prev = s.werr;
+                cent = s.centroids;
+            }
+        });
+    }
+
+    #[test]
+    fn prop_step_matches_reference_nearest2() {
+        prop::check("step-vs-nearest2", 30, |g| {
+            let m = g.int(1, 80);
+            let d = g.int(1, 6);
+            let k = g.int(1, 8);
+            let reps = g.cloud(m, d, 3.0);
+            let weights: Vec<f64> = (0..m).map(|_| g.int(1, 5) as f64).collect();
+            let cent = g.cloud(k, d, 3.0);
+            let c1 = counter();
+            let out = NativeStepper::new().step(&reps, &weights, d, &cent, &c1);
+            let c2 = counter();
+            for i in 0..m {
+                let (ii, dd1, dd2) =
+                    crate::metrics::nearest2(&reps[i * d..(i + 1) * d], &cent, d, &c2);
+                assert_eq!(out.assign[i], ii as u32);
+                assert!((out.d1[i] - dd1).abs() < 1e-12);
+                if dd2.is_finite() {
+                    assert!((out.d2[i] - dd2).abs() < 1e-12);
+                }
+            }
+            assert_eq!(c1.get(), c2.get());
+        });
+    }
+
+    #[test]
+    fn max_shift_is_linf_of_row_norms() {
+        let a = [0.0, 0.0, 1.0, 1.0];
+        let b = [3.0, 4.0, 1.0, 1.0];
+        assert!((max_shift(&a, &b, 2, 2) - 5.0).abs() < 1e-12);
+    }
+}

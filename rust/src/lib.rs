@@ -1,0 +1,49 @@
+//! # BWKM — Boundary Weighted K-means for massive data
+//!
+//! Production-shaped reproduction of Capó, Pérez & Lozano (2018),
+//! *"An efficient K-means clustering algorithm for massive data"*, as a
+//! three-layer Rust + JAX + Pallas system (see `DESIGN.md`):
+//!
+//! * **L3 (this crate)** — the BWKM coordinator: spatial partitions,
+//!   boundary detection, the Alg. 2–5 pipeline, every baseline of the
+//!   paper's evaluation, exact distance accounting, a sharded
+//!   leader/worker runtime and the bench harness regenerating Figures 2–6.
+//! * **L2/L1 (python/, build-time only)** — the weighted-Lloyd step and a
+//!   Pallas distance+top-2 kernel, AOT-lowered to HLO text artifacts that
+//!   [`runtime`] loads and executes through PJRT (`xla` crate).
+//!
+//! Quick start:
+//!
+//! ```no_run
+//! use bwkm::prelude::*;
+//!
+//! let ds = bwkm::data::simulate("WUY", 0.001, 42).unwrap();
+//! let counter = DistanceCounter::new();
+//! let cfg = BwkmCfg::for_dataset(ds.n, ds.d, 9);
+//! let out = bwkm::bwkm::run(&ds, 9, &cfg, &mut Rng::new(7), &counter);
+//! println!("E^D = {} after {} distances", out.trace.last().unwrap().full_error.unwrap_or(f64::NAN), counter.get());
+//! ```
+
+pub mod bench;
+pub mod bwkm;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod coreset;
+pub mod data;
+pub mod geometry;
+pub mod kmeans;
+pub mod metrics;
+pub mod partition;
+pub mod rpkm;
+pub mod runtime;
+pub mod util;
+
+/// Convenience re-exports for examples and downstream users.
+pub mod prelude {
+    pub use crate::bwkm::{BwkmCfg, StopReason};
+    pub use crate::data::Dataset;
+    pub use crate::kmeans::{LloydCfg, MiniBatchCfg, WLloydCfg};
+    pub use crate::metrics::{Budget, DistanceCounter};
+    pub use crate::util::Rng;
+}

@@ -1,0 +1,9 @@
+//! `bwkm` — the leader binary: CLI entry point over [`bwkm::cli`].
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = bwkm::cli::main(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

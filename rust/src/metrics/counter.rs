@@ -1,0 +1,103 @@
+//! Exact distance-computation accounting — the x-axis of every figure in
+//! the paper's evaluation (§3).
+//!
+//! The counter is an `AtomicU64` so the sharded coordinator's workers can
+//! tick it concurrently; single-threaded hot loops batch their increments
+//! (`add(nk)` once per assignment pass) so the accounting costs nothing.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Monotone counter of Euclidean-distance computations.
+#[derive(Debug, Default)]
+pub struct DistanceCounter {
+    count: AtomicU64,
+}
+
+impl DistanceCounter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record `n` distance computations.
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.count.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Total distances recorded so far.
+    #[inline]
+    pub fn get(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Reset to zero (between repetitions).
+    pub fn reset(&self) {
+        self.count.store(0, Ordering::Relaxed);
+    }
+}
+
+/// A distance budget: the "practical computational criterion" stopping rule
+/// of §2.4.2 ("set a maximum number of distances and stop when exceeded")
+/// and the per-method cap used by the benchmark harness ("we limit the
+/// maximum number of distance computations to the minimum required by the
+/// benchmark algorithms").
+#[derive(Debug, Clone, Copy)]
+pub struct Budget {
+    pub max_distances: u64,
+}
+
+impl Budget {
+    pub fn unlimited() -> Budget {
+        Budget { max_distances: u64::MAX }
+    }
+
+    pub fn of(max_distances: u64) -> Budget {
+        Budget { max_distances }
+    }
+
+    #[inline]
+    pub fn exceeded(&self, counter: &DistanceCounter) -> bool {
+        counter.get() >= self.max_distances
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_and_resets() {
+        let c = DistanceCounter::new();
+        c.add(5);
+        c.add(7);
+        assert_eq!(c.get(), 12);
+        c.reset();
+        assert_eq!(c.get(), 0);
+    }
+
+    #[test]
+    fn budget_trips() {
+        let c = DistanceCounter::new();
+        let b = Budget::of(10);
+        assert!(!b.exceeded(&c));
+        c.add(10);
+        assert!(b.exceeded(&c));
+        assert!(!Budget::unlimited().exceeded(&c));
+    }
+
+    #[test]
+    fn concurrent_ticks() {
+        let c = std::sync::Arc::new(DistanceCounter::new());
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let c = c.clone();
+                s.spawn(move || {
+                    for _ in 0..1000 {
+                        c.add(1);
+                    }
+                });
+            }
+        });
+        assert_eq!(c.get(), 4000);
+    }
+}

@@ -1,0 +1,141 @@
+//! K-means error functions: E^D (paper Eq. 1), the weighted error E^P
+//! (§1.2.2.1), and the relative-error score used by the evaluation (Eq. 6).
+
+use super::counter::DistanceCounter;
+use crate::geometry::sq_dist;
+
+/// Nearest centroid of `p` among `centroids` (k rows of length d).
+/// Returns (index, squared distance). Counts k distances.
+#[inline]
+pub fn nearest(p: &[f64], centroids: &[f64], d: usize, counter: &DistanceCounter) -> (usize, f64) {
+    let k = centroids.len() / d;
+    let mut best = (0usize, f64::INFINITY);
+    for c in 0..k {
+        let dd = sq_dist(p, &centroids[c * d..(c + 1) * d]);
+        if dd < best.1 {
+            best = (c, dd);
+        }
+    }
+    counter.add(k as u64);
+    best
+}
+
+/// Two nearest centroids: returns (index of nearest, d1_sq, d2_sq).
+/// `d2_sq` is `INFINITY` when only one centroid exists. Counts k distances.
+#[inline]
+pub fn nearest2(
+    p: &[f64],
+    centroids: &[f64],
+    d: usize,
+    counter: &DistanceCounter,
+) -> (usize, f64, f64) {
+    let k = centroids.len() / d;
+    let (mut i1, mut d1, mut d2) = (0usize, f64::INFINITY, f64::INFINITY);
+    for c in 0..k {
+        let dd = sq_dist(p, &centroids[c * d..(c + 1) * d]);
+        if dd < d1 {
+            d2 = d1;
+            d1 = dd;
+            i1 = c;
+        } else if dd < d2 {
+            d2 = dd;
+        }
+    }
+    counter.add(k as u64);
+    (i1, d1, d2)
+}
+
+/// Full-dataset K-means error E^D(C) (Eq. 1). Counts n·k distances.
+pub fn kmeans_error(data: &[f64], d: usize, centroids: &[f64], counter: &DistanceCounter) -> f64 {
+    let n = data.len() / d;
+    let mut err = 0.0;
+    for i in 0..n {
+        let (_, d1) = nearest(&data[i * d..(i + 1) * d], centroids, d, counter);
+        err += d1;
+    }
+    err
+}
+
+/// Weighted error E^P(C) over representatives (§1.2.2.1). Counts m·k.
+pub fn weighted_error(
+    reps: &[f64],
+    weights: &[f64],
+    d: usize,
+    centroids: &[f64],
+    counter: &DistanceCounter,
+) -> f64 {
+    let m = weights.len();
+    let mut err = 0.0;
+    for i in 0..m {
+        let (_, d1) = nearest(&reps[i * d..(i + 1) * d], centroids, d, counter);
+        err += weights[i] * d1;
+    }
+    err
+}
+
+/// Relative error of Eq. 6: (E_M - E_best) / E_best.
+pub fn relative_error(e: f64, best: f64) -> f64 {
+    (e - best) / best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn nearest_and_counts() {
+        let c = DistanceCounter::new();
+        let centroids = [0.0, 0.0, 10.0, 0.0, 0.0, 10.0]; // k=3, d=2
+        let (i, dd) = nearest(&[9.0, 1.0], &centroids, 2, &c);
+        assert_eq!(i, 1);
+        assert_eq!(dd, 2.0);
+        assert_eq!(c.get(), 3);
+    }
+
+    #[test]
+    fn nearest2_orders() {
+        let c = DistanceCounter::new();
+        let centroids = [0.0, 0.0, 3.0, 0.0, 100.0, 0.0];
+        let (i, d1, d2) = nearest2(&[1.0, 0.0], &centroids, 2, &c);
+        assert_eq!(i, 0);
+        assert_eq!(d1, 1.0);
+        assert_eq!(d2, 4.0);
+    }
+
+    #[test]
+    fn nearest2_single_centroid() {
+        let c = DistanceCounter::new();
+        let (i, d1, d2) = nearest2(&[1.0], &[0.0], 1, &c);
+        assert_eq!(i, 0);
+        assert_eq!(d1, 1.0);
+        assert!(d2.is_infinite());
+    }
+
+    #[test]
+    fn error_counts_exactly_nk() {
+        let c = DistanceCounter::new();
+        let data: Vec<f64> = (0..20).map(|x| x as f64).collect(); // n=10, d=2
+        let centroids = [0.0, 0.0, 5.0, 5.0];
+        let _ = kmeans_error(&data, 2, &centroids, &c);
+        assert_eq!(c.get(), 10 * 2);
+    }
+
+    #[test]
+    fn prop_weighted_error_of_unit_weights_matches_full() {
+        prop::check("weq", 30, |g| {
+            let n = g.int(1, 60);
+            let d = g.int(1, 4);
+            let k = g.int(1, 5);
+            let data = g.cloud(n, d, 2.0);
+            let cent = g.cloud(k, d, 2.0);
+            let c1 = DistanceCounter::new();
+            let c2 = DistanceCounter::new();
+            let e1 = kmeans_error(&data, d, &cent, &c1);
+            let w = vec![1.0; n];
+            let e2 = weighted_error(&data, &w, d, &cent, &c2);
+            assert!((e1 - e2).abs() <= 1e-9 * e1.abs().max(1.0));
+            assert_eq!(c1.get(), c2.get());
+        });
+    }
+}

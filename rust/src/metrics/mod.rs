@@ -1,0 +1,8 @@
+//! Measurement substrate: exact distance-computation accounting (the
+//! paper's cost metric) and the error functions of Eq. 1 / Eq. 6.
+
+pub mod counter;
+pub mod error;
+
+pub use counter::{Budget, DistanceCounter};
+pub use error::{kmeans_error, nearest, nearest2, relative_error, weighted_error};

@@ -1,0 +1,453 @@
+//! Spatial partitions and their induced dataset partitions (paper Def. 1).
+//!
+//! A [`Partition`] is a binary split tree over the dataset's smallest
+//! bounding box: internal nodes carry an axis-aligned cutting plane, leaves
+//! carry [`Block`] payloads. Splitting a block "in the middle point of its
+//! longest side" (the paper's cutting rule) replaces its leaf with an
+//! internal node and two child leaves; locating a point is a tree descent,
+//! so building the induced dataset partition P = B(D) costs
+//! O(n·depth) — the incremental design that addresses the paper's
+//! Problem 2 (grid-RPKM pays O(n·d) per full partition rebuild).
+//!
+//! Blocks keep their member indices, coordinate sums and the **tight**
+//! bounding box of their members — §2.3: "when updating the data partition
+//! ... we also recompute the diagonal of the smallest bounding box of each
+//! subset", which makes the misassignment criterion (Eq. 3) strictly more
+//! accurate.
+
+use crate::data::Dataset;
+use crate::geometry::BBox;
+
+mod sample;
+pub use sample::SampleStats;
+
+/// Tree node: either a cutting plane or a leaf holding a block id.
+#[derive(Clone, Debug)]
+enum Node {
+    Internal { axis: usize, thr: f64, left: u32, right: u32 },
+    Leaf { block: u32 },
+}
+
+/// One block (hyperrectangular cell) of the spatial partition together
+/// with its induced dataset subset.
+#[derive(Clone, Debug)]
+pub struct Block {
+    /// Spatial cell of the leaf (always defined).
+    pub cell: BBox,
+    /// Tight bounding box of the member points (None when empty).
+    pub tight: Option<BBox>,
+    /// Indices of the dataset rows lying in this block.
+    pub members: Vec<u32>,
+    /// Coordinate sums of the members (for O(1) representatives).
+    pub sum: Vec<f64>,
+    /// Leaf node index in the tree.
+    node: u32,
+}
+
+impl Block {
+    /// |P| — the weight of the representative.
+    pub fn weight(&self) -> usize {
+        self.members.len()
+    }
+
+    /// Center of mass (representative) — None when the block is empty.
+    pub fn rep(&self) -> Option<Vec<f64>> {
+        if self.members.is_empty() {
+            return None;
+        }
+        let inv = 1.0 / self.members.len() as f64;
+        Some(self.sum.iter().map(|s| s * inv).collect())
+    }
+
+    /// The diagonal `l_B` used by the misassignment function: the tight
+    /// member bbox when known, else the spatial cell.
+    pub fn diagonal(&self) -> f64 {
+        match &self.tight {
+            Some(bb) => bb.diagonal(),
+            None => self.cell.diagonal(),
+        }
+    }
+
+    /// Effective bbox for the cutting rule (tight when available).
+    pub fn effective_bbox(&self) -> &BBox {
+        self.tight.as_ref().unwrap_or(&self.cell)
+    }
+}
+
+/// Binary-split spatial partition with induced dataset partition.
+#[derive(Clone, Debug)]
+pub struct Partition {
+    pub d: usize,
+    nodes: Vec<Node>,
+    pub blocks: Vec<Block>,
+}
+
+impl Partition {
+    /// Single-block partition over the dataset's smallest bounding box,
+    /// with all points as members (paper: "Starting with the smallest
+    /// bounding box of the dataset").
+    pub fn root(data: &Dataset) -> Partition {
+        let bbox = BBox::of(&data.data, data.d, None).expect("non-empty dataset");
+        let members: Vec<u32> = (0..data.n as u32).collect();
+        let mut sum = vec![0.0; data.d];
+        for i in 0..data.n {
+            let row = data.row(i);
+            for j in 0..data.d {
+                sum[j] += row[j];
+            }
+        }
+        let block = Block {
+            cell: bbox.clone(),
+            tight: Some(bbox),
+            members,
+            sum,
+            node: 0,
+        };
+        Partition { d: data.d, nodes: vec![Node::Leaf { block: 0 }], blocks: vec![block] }
+    }
+
+    /// Same tree but with no member bookkeeping (used by the streaming
+    /// coordinator, which re-scans the source instead of holding indices).
+    pub fn root_spatial(bbox: BBox, d: usize) -> Partition {
+        let block = Block { cell: bbox, tight: None, members: Vec::new(), sum: vec![0.0; d], node: 0 };
+        Partition { d, nodes: vec![Node::Leaf { block: 0 }], blocks: vec![block] }
+    }
+
+    /// Number of blocks (|B|; includes empty ones).
+    pub fn len(&self) -> usize {
+        self.blocks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.blocks.is_empty()
+    }
+
+    /// Number of non-empty blocks (|P| of the induced dataset partition).
+    pub fn occupied(&self) -> usize {
+        self.blocks.iter().filter(|b| !b.members.is_empty()).count()
+    }
+
+    /// Locate the block id containing point `p` (tree descent).
+    pub fn locate(&self, p: &[f64]) -> usize {
+        let mut node = 0usize;
+        loop {
+            match &self.nodes[node] {
+                Node::Leaf { block } => return *block as usize,
+                Node::Internal { axis, thr, left, right } => {
+                    node = if p[*axis] <= *thr { *left as usize } else { *right as usize };
+                }
+            }
+        }
+    }
+
+    /// Split block `b` with the paper's rule: middle of the longest side of
+    /// its effective bounding box. Member points are redistributed (only
+    /// this block's members are touched) and the children's tight boxes and
+    /// sums recomputed. Returns (left_id, right_id) where `left_id == b`
+    /// (the split block is replaced in place; the right child is appended).
+    pub fn split(&mut self, b: usize, data: &Dataset) -> (usize, usize) {
+        let (axis, thr) = self.blocks[b].effective_bbox().split_plane();
+        self.split_at(b, axis, thr, Some(data))
+    }
+
+    /// Split block `b` at an explicit plane. `data` is required to
+    /// redistribute members (pass None for spatial-only partitions).
+    pub fn split_at(
+        &mut self,
+        b: usize,
+        axis: usize,
+        thr: f64,
+        data: Option<&Dataset>,
+    ) -> (usize, usize) {
+        let d = self.d;
+        let old_node = self.blocks[b].node;
+        let members = std::mem::take(&mut self.blocks[b].members);
+
+        // Child spatial cells.
+        let mut lcell = self.blocks[b].cell.clone();
+        let mut rcell = self.blocks[b].cell.clone();
+        lcell.hi[axis] = thr;
+        rcell.lo[axis] = thr;
+
+        // Redistribute members.
+        let (mut lmem, mut rmem) = (Vec::new(), Vec::new());
+        if let Some(ds) = data {
+            lmem.reserve(members.len() / 2);
+            rmem.reserve(members.len() / 2);
+            for &i in &members {
+                if ds.row(i as usize)[axis] <= thr {
+                    lmem.push(i);
+                } else {
+                    rmem.push(i);
+                }
+            }
+        }
+        let stats = |mem: &[u32]| -> (Option<BBox>, Vec<f64>) {
+            match data {
+                Some(ds) if !mem.is_empty() => {
+                    let bb = BBox::of(&ds.data, d, Some(mem));
+                    let mut sum = vec![0.0; d];
+                    for &i in mem {
+                        let row = ds.row(i as usize);
+                        for j in 0..d {
+                            sum[j] += row[j];
+                        }
+                    }
+                    (bb, sum)
+                }
+                _ => (None, vec![0.0; d]),
+            }
+        };
+        let (ltight, lsum) = stats(&lmem);
+        let (rtight, rsum) = stats(&rmem);
+
+        // Left child replaces the split block in place; right is appended.
+        let lnode = self.nodes.len() as u32;
+        let rnode = lnode + 1;
+        self.nodes.push(Node::Leaf { block: b as u32 });
+        let rblock = self.blocks.len() as u32;
+        self.nodes.push(Node::Leaf { block: rblock });
+        self.nodes[old_node as usize] = Node::Internal { axis, thr, left: lnode, right: rnode };
+
+        self.blocks[b] = Block { cell: lcell, tight: ltight, members: lmem, sum: lsum, node: lnode };
+        self.blocks.push(Block { cell: rcell, tight: rtight, members: rmem, sum: rsum, node: rnode });
+        (b, rblock as usize)
+    }
+
+    /// (Re)compute the full induced dataset partition P = B(D): locate all
+    /// rows, fill members/sums/tight boxes. O(n·depth + n·d). This is
+    /// Step 5 of Alg. 2.
+    pub fn assign_members(&mut self, data: &Dataset) {
+        for blk in &mut self.blocks {
+            blk.members.clear();
+            blk.sum.iter_mut().for_each(|s| *s = 0.0);
+            blk.tight = None;
+        }
+        for i in 0..data.n {
+            let row = data.row(i);
+            let b = self.locate(row);
+            let blk = &mut self.blocks[b];
+            blk.members.push(i as u32);
+            for j in 0..data.d {
+                blk.sum[j] += row[j];
+            }
+            match &mut blk.tight {
+                Some(bb) => bb.expand(row),
+                None => blk.tight = Some(BBox::at(row)),
+            }
+        }
+    }
+
+    /// Flat (reps, weights, block_ids) of the non-empty blocks — the
+    /// weighted point set the weighted Lloyd engine consumes.
+    pub fn reps_weights(&self) -> (Vec<f64>, Vec<f64>, Vec<usize>) {
+        let occ = self.occupied();
+        let mut reps = Vec::with_capacity(occ * self.d);
+        let mut weights = Vec::with_capacity(occ);
+        let mut ids = Vec::with_capacity(occ);
+        for (i, b) in self.blocks.iter().enumerate() {
+            if let Some(r) = b.rep() {
+                reps.extend_from_slice(&r);
+                weights.push(b.weight() as f64);
+                ids.push(i);
+            }
+        }
+        (reps, weights, ids)
+    }
+
+    /// Tree depth (diagnostics).
+    pub fn depth(&self) -> usize {
+        fn go(nodes: &[Node], i: usize) -> usize {
+            match &nodes[i] {
+                Node::Leaf { .. } => 1,
+                Node::Internal { left, right, .. } => {
+                    1 + go(nodes, *left as usize).max(go(nodes, *right as usize))
+                }
+            }
+        }
+        go(&self.nodes, 0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::Rng;
+
+    fn dataset(data: Vec<f64>, d: usize) -> Dataset {
+        Dataset::new(data, d)
+    }
+
+    #[test]
+    fn root_holds_everything() {
+        let ds = dataset(vec![0.0, 0.0, 1.0, 1.0, 2.0, 0.5], 2);
+        let p = Partition::root(&ds);
+        assert_eq!(p.len(), 1);
+        assert_eq!(p.blocks[0].weight(), 3);
+        assert_eq!(p.blocks[0].rep().unwrap(), vec![1.0, 0.5]);
+    }
+
+    #[test]
+    fn split_redistributes_members_and_sums() {
+        let ds = dataset(vec![0.0, 0.0, 10.0, 0.0, 1.0, 0.0, 9.0, 0.0], 2);
+        let mut p = Partition::root(&ds);
+        let (l, r) = p.split(0, &ds); // longest side is x, thr = 5
+        assert_eq!(l, 0);
+        assert_eq!(r, 1);
+        let mut left: Vec<u32> = p.blocks[l].members.clone();
+        left.sort();
+        assert_eq!(left, vec![0, 2]);
+        assert_eq!(p.blocks[l].rep().unwrap(), vec![0.5, 0.0]);
+        assert_eq!(p.blocks[r].rep().unwrap(), vec![9.5, 0.0]);
+        // Tight boxes shrank to the member extents.
+        assert_eq!(p.blocks[l].tight.as_ref().unwrap().hi[0], 1.0);
+        assert_eq!(p.blocks[r].tight.as_ref().unwrap().lo[0], 9.0);
+    }
+
+    #[test]
+    fn locate_agrees_with_membership() {
+        let mut rng = Rng::new(12);
+        let data: Vec<f64> = (0..600).map(|_| rng.normal() * 4.0).collect();
+        let ds = dataset(data, 3);
+        let mut p = Partition::root(&ds);
+        for _ in 0..25 {
+            let b = rng.usize(p.len());
+            if p.blocks[b].weight() > 1 {
+                p.split(b, &ds);
+            }
+        }
+        for i in 0..ds.n {
+            let b = p.locate(ds.row(i));
+            assert!(p.blocks[b].members.contains(&(i as u32)));
+        }
+    }
+
+    #[test]
+    fn assign_members_matches_incremental() {
+        let mut rng = Rng::new(13);
+        let data: Vec<f64> = (0..400).map(|_| rng.normal()).collect();
+        let ds = dataset(data, 2);
+        let mut p = Partition::root(&ds);
+        for _ in 0..15 {
+            let b = rng.usize(p.len());
+            if p.blocks[b].weight() > 1 {
+                p.split(b, &ds);
+            }
+        }
+        let incr: Vec<Vec<u32>> = p
+            .blocks
+            .iter()
+            .map(|b| {
+                let mut m = b.members.clone();
+                m.sort();
+                m
+            })
+            .collect();
+        let mut p2 = p.clone();
+        p2.assign_members(&ds);
+        for (a, b) in incr.iter().zip(&p2.blocks) {
+            let mut m = b.members.clone();
+            m.sort();
+            assert_eq!(a, &m);
+        }
+    }
+
+    #[test]
+    fn prop_partition_invariants() {
+        // Disjoint cover, representative = center of mass, tight ⊆ cell,
+        // weights sum to n — after arbitrary split sequences.
+        prop::check("partition-invariants", 25, |g| {
+            let n = g.int(5, 300);
+            let d = g.int(1, 5);
+            let data = g.blobs(n, d, 3, 1.0);
+            let ds = dataset(data, d);
+            let mut p = Partition::root(&ds);
+            let mut rng = g.rng.fork(9);
+            let splits = g.int(0, 30);
+            for _ in 0..splits {
+                let b = rng.usize(p.len());
+                if p.blocks[b].weight() > 0 {
+                    p.split(b, &ds);
+                }
+            }
+            // Cover + disjoint.
+            let mut seen = vec![false; ds.n];
+            let mut total = 0usize;
+            for b in &p.blocks {
+                total += b.weight();
+                for &i in &b.members {
+                    assert!(!seen[i as usize], "point {i} in two blocks");
+                    seen[i as usize] = true;
+                }
+                // Tight bbox within cell, members inside tight bbox.
+                if let Some(t) = &b.tight {
+                    for j in 0..d {
+                        assert!(t.lo[j] >= b.cell.lo[j] - 1e-12);
+                        assert!(t.hi[j] <= b.cell.hi[j] + 1e-12);
+                    }
+                    for &i in &b.members {
+                        assert!(t.contains(ds.row(i as usize)));
+                    }
+                }
+                // Representative is the center of mass.
+                if let Some(rep) = b.rep() {
+                    let m = crate::geometry::mean_of(&ds.data, d, &b.members);
+                    for j in 0..d {
+                        assert!((rep[j] - m[j]).abs() < 1e-9);
+                    }
+                }
+            }
+            assert_eq!(total, ds.n);
+            assert!(seen.iter().all(|&s| s));
+        });
+    }
+
+    #[test]
+    fn prop_thinner_partition_property() {
+        // After a split, every new block's member set is a subset of some
+        // old block's member set (Def: P' thinner than P).
+        prop::check("thinner", 20, |g| {
+            let n = g.int(10, 200);
+            let d = g.int(1, 4);
+            let data = g.cloud(n, d, 2.0);
+            let ds = dataset(data, d);
+            let mut p = Partition::root(&ds);
+            let mut rng = g.rng.fork(4);
+            for _ in 0..8 {
+                let b = rng.usize(p.len());
+                p.split(b, &ds);
+            }
+            let old: Vec<std::collections::HashSet<u32>> =
+                p.blocks.iter().map(|b| b.members.iter().copied().collect()).collect();
+            let mut p2 = p.clone();
+            for _ in 0..8 {
+                let b = rng.usize(p2.len());
+                p2.split(b, &ds);
+            }
+            for nb in &p2.blocks {
+                if nb.members.is_empty() {
+                    continue;
+                }
+                let sub: std::collections::HashSet<u32> =
+                    nb.members.iter().copied().collect();
+                assert!(
+                    old.iter().any(|ob| sub.is_subset(ob)),
+                    "new block is not a subset of any old block"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn reps_weights_skips_empty_blocks() {
+        let ds = dataset(vec![0.0, 0.0, 0.1, 0.1], 2);
+        let mut p = Partition::root(&ds);
+        // Split far from the data: right child is empty.
+        p.split_at(0, 0, 5.0, Some(&ds));
+        let (reps, w, ids) = p.reps_weights();
+        assert_eq!(w, vec![2.0]);
+        assert_eq!(ids, vec![0]);
+        assert_eq!(reps.len(), 2);
+    }
+}

@@ -1,0 +1,138 @@
+//! Sample-induced statistics over a spatial partition — the machinery of
+//! the initialization (Alg. 3 needs |B(S)| per block; Alg. 4 needs the
+//! representatives and tight boxes of P = B(Sⁱ) for subsamples Sⁱ).
+
+use crate::data::Dataset;
+use crate::geometry::BBox;
+
+use super::Partition;
+
+/// Per-block statistics of a subsample located through the partition tree.
+#[derive(Clone, Debug)]
+pub struct SampleStats {
+    /// Sample count per block (|B(S)|).
+    pub counts: Vec<usize>,
+    /// Coordinate sums of sample members per block.
+    pub sums: Vec<Vec<f64>>,
+    /// Tight bbox of the sample members per block.
+    pub tight: Vec<Option<BBox>>,
+}
+
+impl SampleStats {
+    /// Locate every sampled row and accumulate per-block stats.
+    pub fn collect(partition: &Partition, data: &Dataset, sample: &[usize]) -> SampleStats {
+        let nb = partition.len();
+        let d = partition.d;
+        let mut stats = SampleStats {
+            counts: vec![0; nb],
+            sums: vec![vec![0.0; d]; nb],
+            tight: vec![None; nb],
+        };
+        for &i in sample {
+            let row = data.row(i);
+            let b = partition.locate(row);
+            stats.counts[b] += 1;
+            for j in 0..d {
+                stats.sums[b][j] += row[j];
+            }
+            match &mut stats.tight[b] {
+                Some(bb) => bb.expand(row),
+                None => stats.tight[b] = Some(BBox::at(row)),
+            }
+        }
+        stats
+    }
+
+    /// Representative (sample center of mass) of block `b`, if sampled.
+    pub fn rep(&self, b: usize) -> Option<Vec<f64>> {
+        if self.counts[b] == 0 {
+            return None;
+        }
+        let inv = 1.0 / self.counts[b] as f64;
+        Some(self.sums[b].iter().map(|s| s * inv).collect())
+    }
+
+    /// Flat (reps, weights, block_ids) over sampled blocks — the weighted
+    /// set Alg. 4 runs K-means++ on.
+    pub fn reps_weights(&self) -> (Vec<f64>, Vec<f64>, Vec<usize>) {
+        let mut reps = Vec::new();
+        let mut weights = Vec::new();
+        let mut ids = Vec::new();
+        for b in 0..self.counts.len() {
+            if let Some(r) = self.rep(b) {
+                reps.extend_from_slice(&r);
+                weights.push(self.counts[b] as f64);
+                ids.push(b);
+            }
+        }
+        (reps, weights, ids)
+    }
+
+    /// Diagonal of the sample-tight bbox of block `b`, falling back to the
+    /// block's own effective diagonal when the sample missed it.
+    pub fn diagonal(&self, partition: &Partition, b: usize) -> f64 {
+        match &self.tight[b] {
+            Some(bb) => bb.diagonal(),
+            None => partition.blocks[b].diagonal(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, Rng};
+
+    #[test]
+    fn counts_cover_sample() {
+        let ds = Dataset::new(
+            vec![0.0, 0.0, 1.0, 0.0, 9.0, 0.0, 10.0, 0.0],
+            2,
+        );
+        let mut p = Partition::root(&ds);
+        p.split_at(0, 0, 5.0, Some(&ds));
+        let stats = SampleStats::collect(&p, &ds, &[0, 2, 3]);
+        assert_eq!(stats.counts, vec![1, 2]);
+        assert_eq!(stats.rep(0).unwrap(), vec![0.0, 0.0]);
+        assert_eq!(stats.rep(1).unwrap(), vec![9.5, 0.0]);
+        let (_, w, ids) = stats.reps_weights();
+        assert_eq!(w, vec![1.0, 2.0]);
+        assert_eq!(ids, vec![0, 1]);
+    }
+
+    #[test]
+    fn prop_sample_stats_match_full_when_sample_is_everything() {
+        prop::check("sample-full", 20, |g| {
+            let n = g.int(5, 150);
+            let d = g.int(1, 4);
+            let ds = Dataset::new(g.blobs(n, d, 2, 1.0), d);
+            let mut p = Partition::root(&ds);
+            let mut rng = g.rng.fork(5);
+            for _ in 0..6 {
+                let b = rng.usize(p.len());
+                p.split(b, &ds);
+            }
+            let all: Vec<usize> = (0..n).collect();
+            let stats = SampleStats::collect(&p, &ds, &all);
+            for (b, blk) in p.blocks.iter().enumerate() {
+                assert_eq!(stats.counts[b], blk.weight());
+                if let Some(r) = blk.rep() {
+                    let sr = stats.rep(b).unwrap();
+                    for j in 0..d {
+                        assert!((r[j] - sr[j]).abs() < 1e-9);
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn diagonal_falls_back_to_block() {
+        let ds = Dataset::new(vec![0.0, 0.0, 4.0, 3.0], 2);
+        let p = Partition::root(&ds);
+        let stats = SampleStats::collect(&p, &ds, &[]);
+        assert!((stats.diagonal(&p, 0) - 5.0).abs() < 1e-12);
+        let mut rng = Rng::new(1);
+        let _ = &mut rng;
+    }
+}

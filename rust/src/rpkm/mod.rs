@@ -1,0 +1,221 @@
+//! Grid-based RPKM (Capó et al. [8]) — the paper's predecessor baseline
+//! (§1.2.2.1) and the subject of the Theorem A.1 coreset bound.
+//!
+//! At iteration i the smallest bounding box is divided into a uniform grid
+//! of 2^(i·d) cells; the weighted Lloyd algorithm runs over the occupied
+//! cells' representatives, warm-started from the previous level. This is
+//! exactly the strategy whose Problems 1–3 (no d-scaling, dataset- and
+//! problem-independence) motivate BWKM.
+
+use std::collections::HashMap;
+
+use crate::data::Dataset;
+use crate::geometry::BBox;
+use crate::kmeans::init::forgy;
+use crate::kmeans::{weighted_lloyd, WLloydCfg};
+use crate::metrics::{kmeans_error, Budget, DistanceCounter};
+use crate::util::Rng;
+
+/// Occupied-cell representatives of the level-`i` uniform grid:
+/// (reps flat, weights). Cells are keyed by their per-axis bin indices;
+/// only occupied cells are materialized (≤ n).
+pub fn grid_partition(data: &Dataset, bbox: &BBox, level: u32) -> (Vec<f64>, Vec<f64>) {
+    let d = data.d;
+    let bins = 1u64 << level; // 2^i bins per axis
+    let mut cells: HashMap<Box<[u32]>, (Vec<f64>, usize)> = HashMap::new();
+    let mut key = vec![0u32; d];
+    for i in 0..data.n {
+        let row = data.row(i);
+        for j in 0..d {
+            let span = bbox.hi[j] - bbox.lo[j];
+            let t = if span > 0.0 { (row[j] - bbox.lo[j]) / span } else { 0.0 };
+            key[j] = ((t * bins as f64) as u64).min(bins - 1) as u32;
+        }
+        let e = cells
+            .entry(key.clone().into_boxed_slice())
+            .or_insert_with(|| (vec![0.0; d], 0));
+        for j in 0..d {
+            e.0[j] += row[j];
+        }
+        e.1 += 1;
+    }
+    let mut reps = Vec::with_capacity(cells.len() * d);
+    let mut weights = Vec::with_capacity(cells.len());
+    // Deterministic order (sorted keys) so runs are reproducible.
+    let mut entries: Vec<_> = cells.into_iter().collect();
+    entries.sort_by(|a, b| a.0.cmp(&b.0));
+    for (_, (sum, count)) in entries {
+        let inv = 1.0 / count as f64;
+        reps.extend(sum.iter().map(|s| s * inv));
+        weights.push(count as f64);
+    }
+    (reps, weights)
+}
+
+/// Grid-RPKM configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct RpkmCfg {
+    /// Maximum grid levels (paper [8] uses i ≤ 10; cells grow as 2^(i·d)).
+    pub max_levels: u32,
+    pub wl: WLloydCfg,
+    pub budget: Budget,
+    /// Trace E^D after every level (uncounted instrumentation).
+    pub eval_full_error: bool,
+}
+
+impl Default for RpkmCfg {
+    fn default() -> Self {
+        RpkmCfg {
+            max_levels: 6,
+            wl: WLloydCfg::default(),
+            budget: Budget::unlimited(),
+            eval_full_error: false,
+        }
+    }
+}
+
+/// One grid level's trace entry.
+#[derive(Clone, Debug)]
+pub struct RpkmTracePoint {
+    pub level: u32,
+    pub distances: u64,
+    pub representatives: usize,
+    pub weighted_error: f64,
+    pub full_error: Option<f64>,
+}
+
+/// Outcome of a grid-RPKM run.
+#[derive(Clone, Debug)]
+pub struct RpkmOutcome {
+    pub centroids: Vec<f64>,
+    pub trace: Vec<RpkmTracePoint>,
+}
+
+/// Run grid-based RPKM (Alg. 1 with the [8] partition strategy).
+pub fn grid_rpkm(
+    data: &Dataset,
+    k: usize,
+    cfg: &RpkmCfg,
+    rng: &mut Rng,
+    counter: &DistanceCounter,
+) -> RpkmOutcome {
+    let bbox = BBox::of(&data.data, data.d, None).expect("non-empty dataset");
+    let mut centroids: Option<Vec<f64>> = None;
+    let mut trace = Vec::new();
+
+    for level in 1..=cfg.max_levels {
+        if cfg.budget.exceeded(counter) {
+            break;
+        }
+        let (reps, weights) = grid_partition(data, &bbox, level);
+        let m = weights.len();
+        let init = match centroids.take() {
+            Some(c) => c,
+            // [8] seeds the first level with Forgy over the representatives.
+            None => forgy(&reps, data.d, k.min(m), rng),
+        };
+        let mut wl_cfg = cfg.wl;
+        wl_cfg.budget = cfg.budget;
+        let out = weighted_lloyd(&reps, &weights, data.d, &init, &wl_cfg, counter);
+        let full_error = cfg.eval_full_error.then(|| {
+            let eval = DistanceCounter::new();
+            kmeans_error(&data.data, data.d, &out.centroids, &eval)
+        });
+        trace.push(RpkmTracePoint {
+            level,
+            distances: counter.get(),
+            representatives: m,
+            weighted_error: out.werr,
+            full_error,
+        });
+        centroids = Some(out.centroids);
+        // No reduction left: the partition is as fine as the dataset.
+        if m == data.n {
+            break;
+        }
+    }
+    RpkmOutcome { centroids: centroids.expect("at least one level"), trace }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn grid_partition_preserves_mass_and_mean() {
+        let mut g = prop::Gen { rng: Rng::new(41), case: 0 };
+        let ds = Dataset::new(g.blobs(300, 3, 2, 1.0), 3);
+        let bbox = BBox::of(&ds.data, 3, None).unwrap();
+        for level in 1..=4 {
+            let (reps, weights) = grid_partition(&ds, &bbox, level);
+            let total: f64 = weights.iter().sum();
+            assert_eq!(total as usize, 300);
+            // Weighted mean of reps == dataset mean.
+            let mut wm = vec![0.0; 3];
+            for (i, w) in weights.iter().enumerate() {
+                for j in 0..3 {
+                    wm[j] += w * reps[i * 3 + j];
+                }
+            }
+            let all: Vec<u32> = (0..300).collect();
+            let mean = crate::geometry::mean_of(&ds.data, 3, &all);
+            for j in 0..3 {
+                assert!((wm[j] / 300.0 - mean[j]).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn levels_refine_monotonically() {
+        let mut g = prop::Gen { rng: Rng::new(42), case: 0 };
+        let ds = Dataset::new(g.blobs(500, 2, 3, 1.2), 2);
+        let bbox = BBox::of(&ds.data, 2, None).unwrap();
+        let mut prev = 0;
+        for level in 1..=5 {
+            let (_, w) = grid_partition(&ds, &bbox, level);
+            assert!(w.len() >= prev, "partition got coarser");
+            prev = w.len();
+        }
+    }
+
+    #[test]
+    fn rpkm_runs_and_improves() {
+        let mut g = prop::Gen { rng: Rng::new(43), case: 0 };
+        let ds = Dataset::new(g.blobs(1000, 2, 3, 0.4), 2);
+        let cfg = RpkmCfg { eval_full_error: true, max_levels: 6, ..Default::default() };
+        let c = DistanceCounter::new();
+        let out = grid_rpkm(&ds, 3, &cfg, &mut Rng::new(2), &c);
+        assert!(out.trace.len() >= 2);
+        let first = out.trace.first().unwrap().full_error.unwrap();
+        let last = out.trace.last().unwrap().full_error.unwrap();
+        assert!(last <= first * 1.01, "{first} -> {last}");
+    }
+
+    #[test]
+    fn prop_rpkm_matches_lloyd_at_full_resolution() {
+        // With enough levels on a small dataset, the partition becomes
+        // (near-)singleton and RPKM's solution is a Lloyd fixed point.
+        prop::check("rpkm-fixed-point", 5, |g| {
+            let ds = Dataset::new(g.blobs(120, 2, 2, 0.3), 2);
+            let cfg = RpkmCfg { max_levels: 12, ..Default::default() };
+            let c = DistanceCounter::new();
+            let out = grid_rpkm(&ds, 2, &cfg, &mut g.rng.fork(3), &c);
+            let c2 = DistanceCounter::new();
+            let one = crate::kmeans::lloyd::lloyd(
+                &ds.data,
+                ds.d,
+                &out.centroids,
+                &crate::kmeans::LloydCfg { max_iters: 1, eps: 0.0, ..Default::default() },
+                &c2,
+            );
+            let shift = crate::kmeans::weighted_lloyd::max_shift(
+                &out.centroids,
+                &one.centroids,
+                ds.d,
+                2,
+            );
+            assert!(shift < 1e-7, "not a fixed point: shift {shift}");
+        });
+    }
+}

@@ -1,0 +1,116 @@
+//! Artifact manifest: the TSV written by `python/compile/aot.py` mapping
+//! (program, mcap, kcap, dcap) → HLO text file.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// One AOT-compiled shape variant.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Variant {
+    pub program: String,
+    pub mcap: usize,
+    pub kcap: usize,
+    pub dcap: usize,
+    pub file: String,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub variants: Vec<Variant>,
+}
+
+impl Manifest {
+    /// Load `manifest.tsv` (format: `program\tmcap\tkcap\tdcap\tfile`,
+    /// `#`-prefixed comment lines allowed).
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let mut variants = Vec::new();
+        for (no, line) in text.lines().enumerate() {
+            let t = line.trim();
+            if t.is_empty() || t.starts_with('#') {
+                continue;
+            }
+            let cols: Vec<&str> = t.split('\t').collect();
+            if cols.len() != 5 {
+                bail!("manifest line {}: expected 5 columns, got {}", no + 1, cols.len());
+            }
+            variants.push(Variant {
+                program: cols[0].to_string(),
+                mcap: cols[1].parse().context("mcap")?,
+                kcap: cols[2].parse().context("kcap")?,
+                dcap: cols[3].parse().context("dcap")?,
+                file: cols[4].to_string(),
+            });
+        }
+        if variants.is_empty() {
+            bail!("manifest has no variants");
+        }
+        Ok(Manifest { variants })
+    }
+
+    /// Smallest variant of `program` with mcap ≥ m, kcap ≥ k, dcap ≥ d
+    /// (ties broken toward smaller padded volume → least wasted compute).
+    pub fn pick(&self, program: &str, m: usize, k: usize, d: usize) -> Option<&Variant> {
+        self.variants
+            .iter()
+            .filter(|v| v.program == program && v.mcap >= m && v.kcap >= k && v.dcap >= d)
+            .min_by_key(|v| v.mcap * v.kcap * v.dcap)
+    }
+
+    /// Largest row capacity available for `program` at (k, d) — the chunk
+    /// size for streamed full-dataset programs.
+    pub fn largest_mcap(&self, program: &str, k: usize, d: usize) -> Option<usize> {
+        self.variants
+            .iter()
+            .filter(|v| v.program == program && v.kcap >= k && v.dcap >= d)
+            .map(|v| v.mcap)
+            .max()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "# program\tmcap\tkcap\tdcap\tfile\n\
+        wlloyd_step\t2048\t4\t4\ta.hlo.txt\n\
+        wlloyd_step\t2048\t32\t20\tb.hlo.txt\n\
+        wlloyd_step\t16384\t32\t20\tc.hlo.txt\n\
+        assign_err\t16384\t32\t20\td.hlo.txt\n";
+
+    #[test]
+    fn parses_and_picks_smallest_fit() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.variants.len(), 4);
+        let v = m.pick("wlloyd_step", 100, 3, 4).unwrap();
+        assert_eq!(v.file, "a.hlo.txt");
+        let v = m.pick("wlloyd_step", 100, 9, 17).unwrap();
+        assert_eq!(v.file, "b.hlo.txt");
+        let v = m.pick("wlloyd_step", 5000, 3, 3).unwrap();
+        assert_eq!(v.file, "c.hlo.txt");
+        assert!(m.pick("wlloyd_step", 100_000, 3, 3).is_none());
+        assert!(m.pick("wlloyd_step", 10, 64, 3).is_none());
+        assert!(m.pick("nope", 1, 1, 1).is_none());
+    }
+
+    #[test]
+    fn largest_mcap_for_chunking() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.largest_mcap("assign_err", 9, 19), Some(16384));
+        assert_eq!(m.largest_mcap("assign_err", 64, 19), None);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Manifest::parse("").is_err());
+        assert!(Manifest::parse("a\tb\n").is_err());
+        assert!(Manifest::parse("p\tx\t1\t1\tf\n").is_err());
+    }
+}

@@ -1,0 +1,274 @@
+//! PJRT runtime — the L3 side of the three-layer AOT bridge.
+//!
+//! `make artifacts` lowers the L2 JAX programs (which embed the L1 Pallas
+//! kernel) to **HLO text** once per padded-shape variant and writes
+//! `artifacts/manifest.tsv`. This module loads that manifest, compiles the
+//! requested variant on the PJRT CPU client (`xla` crate), and exposes:
+//!
+//! * [`Runtime::wlloyd_step`] — one weighted-Lloyd iteration on device;
+//! * [`Runtime::assign_err`]  — chunked full-dataset assignment + SSE;
+//! * [`PjrtStepper`] — a [`crate::kmeans::Stepper`] so BWKM's inner loop
+//!   can run end-to-end on the compiled artifacts (`bwkm::run_with`).
+//!
+//! Padding conventions (weight-0 rows, zero dims, masked centroid slots)
+//! are the ones pinned by `python/tests/test_model.py`; the Rust side is
+//! validated against the native stepper in `tests/runtime_vs_native.rs`.
+
+mod manifest;
+mod stepper;
+
+pub use manifest::{Manifest, Variant};
+pub use stepper::PjrtStepper;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::kmeans::StepOut;
+
+/// Large finite distance used by the artifacts to mask centroid slots.
+pub const MASK_BIG: f32 = 1e30;
+
+/// A compiled-executable cache over the artifact manifest.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    dir: PathBuf,
+    cache: HashMap<(String, usize, usize, usize), xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Default artifact directory: `$BWKM_ARTIFACTS` or `<repo>/artifacts`.
+    pub fn default_dir() -> PathBuf {
+        if let Ok(dir) = std::env::var("BWKM_ARTIFACTS") {
+            return PathBuf::from(dir);
+        }
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("../artifacts")
+    }
+
+    /// Open the runtime over an artifact directory (reads the manifest and
+    /// creates the PJRT CPU client; executables compile lazily per variant).
+    pub fn open(dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(&dir.join("manifest.tsv"))
+            .with_context(|| format!("loading manifest from {}", dir.display()))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e:?}"))?;
+        Ok(Runtime { client, manifest, dir: dir.to_path_buf(), cache: HashMap::new() })
+    }
+
+    /// Open from the default directory.
+    pub fn open_default() -> Result<Runtime> {
+        Self::open(&Self::default_dir())
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (or fetch from cache) the smallest variant of `program`
+    /// fitting (m, k, d). Returns the variant descriptor.
+    fn compile(&mut self, program: &str, m: usize, k: usize, d: usize) -> Result<Variant> {
+        let var = self
+            .manifest
+            .pick(program, m, k, d)
+            .ok_or_else(|| anyhow!("no {program} variant fits m={m} k={k} d={d}"))?
+            .clone();
+        let key = (program.to_string(), var.mcap, var.kcap, var.dcap);
+        if !self.cache.contains_key(&key) {
+            let path = self.dir.join(&var.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {}: {e:?}", path.display()))?;
+            self.cache.insert(key, exe);
+        }
+        Ok(var)
+    }
+
+    fn exe(&self, program: &str, var: &Variant) -> &xla::PjRtLoadedExecutable {
+        self.cache
+            .get(&(program.to_string(), var.mcap, var.kcap, var.dcap))
+            .expect("compiled above")
+    }
+
+    /// Execute one weighted-Lloyd iteration on the PJRT device.
+    ///
+    /// Inputs are f64 host-side (the crate's native precision) and are
+    /// converted to the artifacts' f32. Fails if no variant fits.
+    pub fn wlloyd_step(
+        &mut self,
+        reps: &[f64],
+        weights: &[f64],
+        d: usize,
+        centroids: &[f64],
+    ) -> Result<StepOut> {
+        let m = weights.len();
+        let k = centroids.len() / d;
+        let var = self.compile("wlloyd_step", m, k, d)?;
+        let (mcap, kcap, dcap) = (var.mcap, var.kcap, var.dcap);
+
+        let reps_l = pad_matrix(reps, m, d, mcap, dcap);
+        let weights_l = pad_vec(weights, mcap);
+        let cents_l = pad_matrix(centroids, k, d, kcap, dcap);
+        let mask_l = mask_vec(k, kcap);
+
+        let lits = execute_tuple(
+            self.exe("wlloyd_step", &var),
+            &[
+                literal_2d(&reps_l, mcap, dcap)?,
+                literal_1d(&weights_l),
+                literal_2d(&cents_l, kcap, dcap)?,
+                literal_1d(&mask_l),
+            ],
+            5,
+        )?;
+
+        let new_c_f: Vec<f32> = lits[0].to_vec().map_err(xerr)?;
+        let idx: Vec<i32> = lits[1].to_vec().map_err(xerr)?;
+        let d1: Vec<f32> = lits[2].to_vec().map_err(xerr)?;
+        let d2: Vec<f32> = lits[3].to_vec().map_err(xerr)?;
+        let wss: f32 = lits[4].to_vec::<f32>().map_err(xerr)?[0];
+
+        // Unpad.
+        let mut centroids_out = Vec::with_capacity(k * d);
+        for c in 0..k {
+            for j in 0..d {
+                centroids_out.push(new_c_f[c * dcap + j] as f64);
+            }
+        }
+        Ok(StepOut {
+            centroids: centroids_out,
+            assign: idx[..m].iter().map(|&i| i as u32).collect(),
+            d1: d1[..m].iter().map(|&x| x as f64).collect(),
+            d2: d2[..m]
+                .iter()
+                .map(|&x| if x >= MASK_BIG * 0.5 { f64::INFINITY } else { x as f64 })
+                .collect(),
+            werr: wss as f64,
+        })
+    }
+
+    /// Full-dataset assignment + SSE, chunked over the largest available
+    /// `assign_err` variant. Returns (assignments, sse).
+    pub fn assign_err(
+        &mut self,
+        data: &[f64],
+        d: usize,
+        centroids: &[f64],
+    ) -> Result<(Vec<u32>, f64)> {
+        let n = data.len() / d;
+        let k = centroids.len() / d;
+        let chunk = self
+            .manifest
+            .largest_mcap("assign_err", k, d)
+            .ok_or_else(|| anyhow!("no assign_err variant for k={k} d={d}"))?;
+        let mut assign = Vec::with_capacity(n);
+        let mut sse = 0.0f64;
+        let mut start = 0usize;
+        while start < n {
+            let rows = chunk.min(n - start);
+            let slice = &data[start * d..(start + rows) * d];
+            let var = self.compile("assign_err", rows, k, d)?;
+            let (mcap, kcap, dcap) = (var.mcap, var.kcap, var.dcap);
+            let pts = pad_matrix(slice, rows, d, mcap, dcap);
+            let w = pad_vec(&vec![1.0; rows], mcap);
+            let cents = pad_matrix(centroids, k, d, kcap, dcap);
+            let mask = mask_vec(k, kcap);
+            let lits = execute_tuple(
+                self.exe("assign_err", &var),
+                &[
+                    literal_2d(&pts, mcap, dcap)?,
+                    literal_1d(&w),
+                    literal_2d(&cents, kcap, dcap)?,
+                    literal_1d(&mask),
+                ],
+                2,
+            )?;
+            let idx: Vec<i32> = lits[0].to_vec().map_err(xerr)?;
+            let part: f32 = lits[1].to_vec::<f32>().map_err(xerr)?[0];
+            assign.extend(idx[..rows].iter().map(|&i| i as u32));
+            sse += part as f64;
+            start += rows;
+        }
+        Ok((assign, sse))
+    }
+}
+
+fn xerr(e: xla::Error) -> anyhow::Error {
+    anyhow!("xla: {e:?}")
+}
+
+/// Pad an r×c f64 matrix into an rcap×ccap f32 buffer (zeros elsewhere).
+fn pad_matrix(src: &[f64], r: usize, c: usize, rcap: usize, ccap: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; rcap * ccap];
+    for i in 0..r {
+        for j in 0..c {
+            out[i * ccap + j] = src[i * c + j] as f32;
+        }
+    }
+    out
+}
+
+fn pad_vec(src: &[f64], cap: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; cap];
+    for (i, &x) in src.iter().enumerate() {
+        out[i] = x as f32;
+    }
+    out
+}
+
+fn mask_vec(k: usize, kcap: usize) -> Vec<f32> {
+    let mut m = vec![0.0f32; kcap];
+    for slot in m.iter_mut().take(k) {
+        *slot = 1.0;
+    }
+    m
+}
+
+fn literal_2d(buf: &[f32], r: usize, c: usize) -> Result<xla::Literal> {
+    xla::Literal::vec1(buf).reshape(&[r as i64, c as i64]).map_err(xerr)
+}
+
+fn literal_1d(buf: &[f32]) -> xla::Literal {
+    xla::Literal::vec1(buf)
+}
+
+/// Execute and unpack the artifacts' `return_tuple=True` output.
+fn execute_tuple(
+    exe: &xla::PjRtLoadedExecutable,
+    args: &[xla::Literal],
+    arity: usize,
+) -> Result<Vec<xla::Literal>> {
+    let result = exe.execute::<xla::Literal>(args).map_err(xerr)?;
+    let lit = result[0][0].to_literal_sync().map_err(xerr)?;
+    let parts = lit.to_tuple().map_err(xerr)?;
+    if parts.len() != arity {
+        return Err(anyhow!("expected {arity}-tuple, got {}", parts.len()));
+    }
+    Ok(parts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn padding_helpers() {
+        let m = pad_matrix(&[1.0, 2.0, 3.0, 4.0], 2, 2, 3, 4);
+        assert_eq!(m.len(), 12);
+        assert_eq!(m[0], 1.0);
+        assert_eq!(m[1], 2.0);
+        assert_eq!(m[2], 0.0);
+        assert_eq!(m[4], 3.0);
+        assert_eq!(m[5], 4.0);
+        assert_eq!(&m[8..], &[0.0; 4]);
+
+        assert_eq!(mask_vec(2, 4), vec![1.0, 1.0, 0.0, 0.0]);
+        assert_eq!(pad_vec(&[5.0], 3), vec![5.0, 0.0, 0.0]);
+    }
+}

@@ -1,0 +1,59 @@
+//! [`PjrtStepper`]: the weighted-Lloyd [`Stepper`] backed by the AOT
+//! artifacts, so `bwkm::run_with` executes its inner loop on the compiled
+//! L2/L1 stack. Falls back to the native stepper for shapes no variant
+//! covers (e.g. a partition that outgrew the largest mcap tier), counting
+//! the same m·k distances either way — the accounting is algorithmic, not
+//! backend-dependent.
+
+use crate::kmeans::{NativeStepper, StepOut, Stepper};
+use crate::metrics::DistanceCounter;
+
+use super::Runtime;
+
+/// Stepper that executes iterations through PJRT.
+pub struct PjrtStepper {
+    runtime: Runtime,
+    fallback: NativeStepper,
+    /// Steps served by the device vs the native fallback (observability).
+    pub device_steps: u64,
+    pub fallback_steps: u64,
+}
+
+impl PjrtStepper {
+    pub fn new(runtime: Runtime) -> PjrtStepper {
+        PjrtStepper {
+            runtime,
+            fallback: NativeStepper::new(),
+            device_steps: 0,
+            fallback_steps: 0,
+        }
+    }
+
+    pub fn into_runtime(self) -> Runtime {
+        self.runtime
+    }
+}
+
+impl Stepper for PjrtStepper {
+    fn step(
+        &mut self,
+        reps: &[f64],
+        weights: &[f64],
+        d: usize,
+        centroids: &[f64],
+        counter: &DistanceCounter,
+    ) -> StepOut {
+        match self.runtime.wlloyd_step(reps, weights, d, centroids) {
+            Ok(out) => {
+                self.device_steps += 1;
+                // Same algorithmic count as the native path: m·k.
+                counter.add((weights.len() * (centroids.len() / d)) as u64);
+                out
+            }
+            Err(_) => {
+                self.fallback_steps += 1;
+                self.fallback.step(reps, weights, d, centroids, counter)
+            }
+        }
+    }
+}

@@ -1,0 +1,114 @@
+//! Failure injection: degenerate datasets, hostile parameters and broken
+//! inputs must fail loudly (documented panics / Result errors) or degrade
+//! gracefully — never loop forever or return garbage silently.
+
+use bwkm::bwkm::BwkmCfg;
+use bwkm::data::{Dataset, simulate};
+use bwkm::kmeans::init::{forgy, kmeanspp};
+use bwkm::kmeans::{lloyd, LloydCfg};
+use bwkm::metrics::{Budget, DistanceCounter};
+use bwkm::util::Rng;
+
+#[test]
+fn identical_points_everywhere() {
+    // n identical points, k > distinct values: everything must terminate
+    // with the degenerate (correct) answer.
+    let ds = Dataset::new(vec![2.5; 200], 1);
+    let c = DistanceCounter::new();
+    let cents = kmeanspp(&ds.data, 1, 4, &mut Rng::new(1), &c);
+    assert_eq!(cents, vec![2.5; 4]);
+    let l = lloyd(&ds.data, 1, &cents, &LloydCfg::default(), &c);
+    assert!(l.error < 1e-20);
+
+    let mut cfg = BwkmCfg::for_dataset(ds.n, ds.d, 3);
+    cfg.max_outer = 5;
+    let out = bwkm::bwkm::run(&ds, 3, &cfg, &mut Rng::new(2), &c);
+    assert!(out.centroids.iter().all(|&x| (x - 2.5).abs() < 1e-12));
+}
+
+#[test]
+#[should_panic(expected = "k=")]
+fn forgy_rejects_k_above_n() {
+    let data = vec![0.0, 1.0, 2.0];
+    forgy(&data, 1, 5, &mut Rng::new(1));
+}
+
+#[test]
+#[should_panic(expected = "n must be ≥ k")]
+fn bwkm_rejects_k_above_n() {
+    let ds = Dataset::new(vec![0.0, 1.0], 1);
+    let cfg = BwkmCfg::for_dataset(2, 1, 5);
+    bwkm::bwkm::run(&ds, 5, &cfg, &mut Rng::new(1), &DistanceCounter::new());
+}
+
+#[test]
+fn zero_budget_still_terminates_with_valid_output() {
+    let ds = simulate("3RN", 0.003, 1).unwrap();
+    let mut cfg = BwkmCfg::for_dataset(ds.n, ds.d, 3);
+    cfg.budget = Budget::of(1); // trips immediately after the first pass
+    cfg.max_outer = 100;
+    let c = DistanceCounter::new();
+    let out = bwkm::bwkm::run(&ds, 3, &cfg, &mut Rng::new(1), &c);
+    assert_eq!(out.centroids.len(), 3 * ds.d);
+    assert!(out.centroids.iter().all(|x| x.is_finite()));
+    assert!(out.trace.len() <= 2);
+}
+
+#[test]
+fn nan_dataset_detected_by_guard() {
+    let mut ds = simulate("WUY", 0.0005, 1).unwrap();
+    ds.data[7] = f64::NAN;
+    assert!(!ds.is_finite());
+    // The CLI refuses such data.
+    let p = std::env::temp_dir().join(format!("bwkm_nan_{}.csv", std::process::id()));
+    std::fs::write(&p, "1.0,2.0\nnan,1.0\n").unwrap();
+    // loader parses "nan" as f64::NAN; the run command must bail.
+    let err = bwkm::cli::main(&[
+        "run".into(),
+        format!("dataset=path:{}", p.display()),
+        "k=1".into(),
+        "method=fkm".into(),
+    ]);
+    assert!(err.is_err(), "NaN dataset must be rejected");
+    std::fs::remove_file(&p).ok();
+}
+
+#[test]
+fn outlier_heavy_data_stays_finite() {
+    // A single absurd outlier must not break partitions or centroids.
+    let mut g = Rng::new(3);
+    let mut data: Vec<f64> = (0..1000).map(|_| g.normal()).collect();
+    data[500] = 1e12;
+    let ds = Dataset::new(data, 2);
+    let mut cfg = BwkmCfg::for_dataset(ds.n, ds.d, 3);
+    cfg.max_outer = 8;
+    let c = DistanceCounter::new();
+    let out = bwkm::bwkm::run(&ds, 3, &cfg, &mut Rng::new(4), &c);
+    assert!(out.centroids.iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn single_point_dataset() {
+    let ds = Dataset::new(vec![3.0, 4.0], 2);
+    let cfg = BwkmCfg::for_dataset(1, 2, 1);
+    let c = DistanceCounter::new();
+    let out = bwkm::bwkm::run(&ds, 1, &cfg, &mut Rng::new(5), &c);
+    assert_eq!(out.centroids, vec![3.0, 4.0]);
+}
+
+#[test]
+fn config_rejects_malformed_values() {
+    let mut cfg = bwkm::config::RunConfig::default();
+    assert!(cfg.set("scale", "huge").is_err());
+    assert!(cfg.set("use_pjrt", "perhaps").is_err());
+    assert!(cfg.set("method", "definitely-not").is_err());
+    // Unknown keys are collected, not fatal (forward compatibility).
+    cfg.set("future_knob", "1").unwrap();
+}
+
+#[test]
+fn manifest_corruption_is_loud() {
+    use bwkm::runtime::Manifest;
+    assert!(Manifest::parse("wlloyd_step\tnot_a_number\t4\t4\tf\n").is_err());
+    assert!(Manifest::parse("").is_err());
+}

@@ -1,0 +1,121 @@
+//! Integration: the PJRT-executed artifacts (L2 weighted-Lloyd step over
+//! the L1 Pallas kernel) must match the native Rust hot path.
+//!
+//! Requires `make artifacts`; tests panic with a clear message otherwise
+//! (the Makefile sequences artifacts before `cargo test`).
+
+use bwkm::data::simulate;
+use bwkm::kmeans::{NativeStepper, Stepper};
+use bwkm::metrics::DistanceCounter;
+use bwkm::runtime::{PjrtStepper, Runtime};
+use bwkm::util::Rng;
+
+fn runtime() -> Runtime {
+    Runtime::open_default().expect("artifacts missing — run `make artifacts` first")
+}
+
+#[test]
+fn step_matches_native_small() {
+    let mut rt = runtime();
+    let mut rng = Rng::new(1);
+    for &(m, k, d) in &[(50usize, 3usize, 2usize), (300, 9, 17), (1500, 27, 19), (3000, 4, 4)] {
+        let reps: Vec<f64> = (0..m * d).map(|_| rng.normal() * 3.0).collect();
+        let weights: Vec<f64> = (0..m).map(|_| 1.0 + rng.usize(30) as f64).collect();
+        let cents: Vec<f64> = (0..k * d).map(|_| rng.normal() * 3.0).collect();
+
+        let device = rt.wlloyd_step(&reps, &weights, d, &cents).expect("device step");
+        let c = DistanceCounter::new();
+        let native = NativeStepper::new().step(&reps, &weights, d, &cents, &c);
+
+        // f32 artifacts vs f64 host: compare within f32 tolerance.
+        let mut mismatched_assign = 0usize;
+        for i in 0..m {
+            if device.assign[i] != native.assign[i] {
+                // Tolerate ties that f32 resolves differently.
+                let gap = (native.d2[i].sqrt() - native.d1[i].sqrt()).abs();
+                assert!(gap < 1e-3, "assign mismatch at {i} with clear gap {gap}");
+                mismatched_assign += 1;
+            }
+            assert!(
+                (device.d1[i] - native.d1[i]).abs() < 1e-2 * (1.0 + native.d1[i]),
+                "d1 mismatch at {i}: {} vs {}",
+                device.d1[i],
+                native.d1[i]
+            );
+        }
+        assert!(mismatched_assign * 50 <= m + 50, "too many tie mismatches");
+        assert!(
+            (device.werr - native.werr).abs() < 1e-3 * native.werr.max(1.0),
+            "werr {} vs {}",
+            device.werr,
+            native.werr
+        );
+        for (a, b) in device.centroids.iter().zip(&native.centroids) {
+            assert!((a - b).abs() < 5e-3 * (1.0 + b.abs()), "centroid {a} vs {b}");
+        }
+    }
+}
+
+#[test]
+fn assign_err_matches_host_eval_chunked() {
+    let mut rt = runtime();
+    // > 16384 rows forces multi-chunk execution.
+    let ds = simulate("WUY", 0.0005, 3).unwrap();
+    assert!(ds.n > 16384, "need a multi-chunk dataset, got {}", ds.n);
+    let mut rng = Rng::new(2);
+    let k = 9;
+    let cents: Vec<f64> = (0..k * ds.d).map(|_| rng.normal() * 3.0).collect();
+
+    let (assign, sse) = rt.assign_err(&ds.data, ds.d, &cents).expect("device assign_err");
+    assert_eq!(assign.len(), ds.n);
+    let c = DistanceCounter::new();
+    let host = bwkm::metrics::kmeans_error(&ds.data, ds.d, &cents, &c);
+    let rel = (sse - host).abs() / host;
+    assert!(rel < 1e-3, "device {sse} vs host {host} (rel {rel})");
+}
+
+#[test]
+fn masked_centroids_never_selected_on_device() {
+    let mut rt = runtime();
+    // k=3 runs in the kcap=4 variant: the padded 4th slot must never win.
+    let mut rng = Rng::new(4);
+    let (m, k, d) = (200usize, 3usize, 4usize);
+    let reps: Vec<f64> = (0..m * d).map(|_| rng.normal()).collect();
+    let weights = vec![1.0; m];
+    let cents: Vec<f64> = (0..k * d).map(|_| rng.normal()).collect();
+    let out = rt.wlloyd_step(&reps, &weights, d, &cents).unwrap();
+    assert!(out.assign.iter().all(|&a| (a as usize) < k));
+    // d2 is a real distance (not the mask sentinel) since k >= 2.
+    assert!(out.d2.iter().all(|&x| x.is_finite()));
+}
+
+#[test]
+fn bwkm_runs_end_to_end_on_pjrt() {
+    let rt = runtime();
+    let ds = simulate("3RN", 0.003, 7).unwrap();
+    let mut cfg = bwkm::bwkm::BwkmCfg::for_dataset(ds.n, ds.d, 3);
+    cfg.max_outer = 5;
+    cfg.eval_full_error = true;
+    let counter = DistanceCounter::new();
+    let mut stepper = PjrtStepper::new(rt);
+    let out = bwkm::bwkm::run_with(&mut stepper, &ds, 3, &cfg, &mut Rng::new(5), &counter);
+    assert!(stepper.device_steps > 0, "device path unused");
+    assert_eq!(out.centroids.len(), 3 * ds.d);
+    // Error decreases across the trace.
+    let first = out.trace.first().unwrap().full_error.unwrap();
+    let last = out.trace.last().unwrap().full_error.unwrap();
+    assert!(last <= first * (1.0 + 1e-6), "{first} -> {last}");
+}
+
+#[test]
+fn fixed_point_is_stable_on_device() {
+    let mut rt = runtime();
+    // Converged config: reps at ±1 around two centroids.
+    let reps = vec![-1.0, 0.0, 1.0, 0.0, 9.0, 0.0, 11.0, 0.0];
+    let weights = vec![2.0, 2.0, 3.0, 3.0];
+    let cents = vec![0.0, 0.0, 10.0, 0.0];
+    let out = rt.wlloyd_step(&reps, &weights, 2, &cents).unwrap();
+    for (a, b) in out.centroids.iter().zip(&cents) {
+        assert!((a - b).abs() < 1e-5, "fixed point moved: {a} vs {b}");
+    }
+}
