@@ -1,12 +1,16 @@
 //! Exp P1 — hot-path throughput of the assignment step (the cost center of
-//! every method): native stepper vs sharded stepper vs PJRT artifacts vs
-//! Hamerly-pruned, swept over (m, K, d). Reports representative-rows/s and
-//! effective distance-computations/s. Feeds EXPERIMENTS.md §Perf.
+//! every method): the unified engine's serial backend (`NativeStepper`)
+//! vs sharded vs norm-pruned vs PJRT artifacts vs Hamerly-pruned, swept
+//! over (m, K, d). All engine backends produce bit-identical output
+//! (DESIGN.md §2), so the columns differ only in time and — for the
+//! pruned ones — distance count. Reports representative-rows/s and, for
+//! the norm-pruned backend, the fraction of the n·k distance bill it
+//! actually paid. Feeds EXPERIMENTS.md §Perf.
 
 use bwkm::bench::{bench_secs, env_f64, write_csv};
 use bwkm::coordinator::sharded_weighted_step;
-use bwkm::kmeans::pruning::pruned_weighted_lloyd;
-use bwkm::kmeans::{NativeStepper, Stepper};
+use bwkm::kmeans::assign::weighted_step;
+use bwkm::kmeans::{NativeStepper, NormPrunedAssigner, Stepper};
 use bwkm::metrics::DistanceCounter;
 use bwkm::runtime::Runtime;
 use bwkm::util::{fmt_count, Rng};
@@ -26,8 +30,8 @@ fn main() {
 
     println!("=== P1: assignment-step throughput (rows/s, one weighted-Lloyd step) ===");
     println!(
-        "{:<18} {:>10} {:>12} {:>12} {:>12} {:>14}",
-        "m,k,d", "native", "sharded(4)", "pjrt", "pruned-run", "dists/s native"
+        "{:<18} {:>10} {:>12} {:>16} {:>12} {:>12} {:>14}",
+        "m,k,d", "native", "sharded(4)", "normprune(bill)", "pjrt", "pruned-run", "dists/s native"
     );
     let mut rows = vec![vec![
         "m".into(),
@@ -35,6 +39,8 @@ fn main() {
         "d".into(),
         "native_rows_s".into(),
         "sharded_rows_s".into(),
+        "normprune_rows_s".into(),
+        "normprune_bill_frac".into(),
         "pjrt_rows_s".into(),
         "pruned_rows_s".into(),
     ]];
@@ -52,6 +58,25 @@ fn main() {
         let t_shard = bench_secs(3, || {
             std::hint::black_box(sharded_weighted_step(&reps, &weights, d, &cents, 4, &c));
         });
+        let t_normprune = bench_secs(3, || {
+            std::hint::black_box(weighted_step(
+                &mut NormPrunedAssigner,
+                &reps,
+                &weights,
+                d,
+                &cents,
+                &c,
+            ));
+        });
+        // Fraction of the n·k pair bill actually evaluated, net of the
+        // documented m + k norm overhead (DESIGN.md §2.4), so 100% means
+        // "pruned nothing" (gaussian clouds are an adversarial case for
+        // norm pruning — real partitions with separated blocks prune much
+        // harder).
+        let c_np = DistanceCounter::new();
+        let _ = weighted_step(&mut NormPrunedAssigner, &reps, &weights, d, &cents, &c_np);
+        let pairs = c_np.get().saturating_sub((m + k) as u64);
+        let bill_frac = pairs as f64 / (m as f64 * k as f64);
         let t_pjrt = runtime.as_mut().map(|rt| {
             bench_secs(3, || {
                 std::hint::black_box(rt.wlloyd_step(&reps, &weights, d, &cents).unwrap());
@@ -60,17 +85,20 @@ fn main() {
         // Pruned runs a whole convergence loop; report rows/s per iteration.
         let mut iters = 1usize;
         let t_pruned = bench_secs(1, || {
-            let out = pruned_weighted_lloyd(&reps, &weights, d, &cents, 30, &c);
+            let out = bwkm::kmeans::pruning::pruned_weighted_lloyd(
+                &reps, &weights, d, &cents, 30, &c,
+            );
             iters = out.iters.max(1);
             std::hint::black_box(out);
         }) / iters as f64;
 
         let rps = |t: f64| m as f64 / t;
         println!(
-            "{:<18} {:>10} {:>12} {:>12} {:>12} {:>14}",
+            "{:<18} {:>10} {:>12} {:>16} {:>12} {:>12} {:>14}",
             format!("{m},{k},{d}"),
             fmt_count(rps(t_native) as u64),
             fmt_count(rps(t_shard) as u64),
+            format!("{} ({:.0}%)", fmt_count(rps(t_normprune) as u64), bill_frac * 100.0),
             t_pjrt.map(|t| fmt_count(rps(t) as u64)).unwrap_or_else(|| "-".into()),
             fmt_count(rps(t_pruned) as u64),
             fmt_count((rps(t_native) * k as f64) as u64),
@@ -81,6 +109,8 @@ fn main() {
             d.to_string(),
             format!("{:.0}", rps(t_native)),
             format!("{:.0}", rps(t_shard)),
+            format!("{:.0}", rps(t_normprune)),
+            format!("{:.4}", bill_frac),
             t_pjrt.map(|t| format!("{:.0}", rps(t))).unwrap_or_default(),
             format!("{:.0}", rps(t_pruned)),
         ]);

@@ -1,14 +1,19 @@
-//! The misassignment function ε (paper Def. 3), the boundary of a spatial
-//! partition (Def. 4) and the Theorem 2 accuracy bound.
+//! The misassignment function ε (paper Def. 3, via the δ margin of
+//! Def. 2), the boundary of a spatial partition (Def. 4) and the
+//! Theorem 2 accuracy bound.
 //!
 //! ε_{C,D}(B) = max(0, 2·l_B − δ_P(C)),  δ_P(C) = ‖P̄−c₂‖ − ‖P̄−c₁‖,
 //!
 //! where l_B is the block diagonal and c₁, c₂ the two nearest centroids to
 //! the representative P̄. Theorem 1: ε = 0 ⇒ every instance in the block is
 //! assigned to the same centroid as the representative (the block is *well
-//! assigned*). Everything here consumes the squared top-2 distances that
-//! the weighted-Lloyd step already produced — the "cheap criterion" of
-//! §2.1: no distances are recomputed.
+//! assigned*). Everything here consumes the squared top-2 distances
+//! `(d1, d2)` that the unified assignment engine already produced — the
+//! `d1`/`d2` fields of [`crate::kmeans::StepOut`] from the weighted-Lloyd
+//! step, or of [`crate::kmeans::AssignOut`] from a bare assignment pass —
+//! the "cheap criterion" of §2.1: **no distances are recomputed**, and ε
+//! therefore costs zero entries on the `DistanceCounter` (DESIGN.md
+//! §2.3).
 
 /// Misassignment value from a block diagonal and squared top-2 distances.
 /// `d2_sq = ∞` (single centroid) yields 0 — one centroid means every point
@@ -81,7 +86,7 @@ pub fn eps_w_for(eps: f64, bbox_diagonal: f64, n: usize) -> f64 {
 mod tests {
     use super::*;
     use crate::data::Dataset;
-    use crate::kmeans::{NativeStepper, Stepper};
+    use crate::kmeans::{Assigner, NativeStepper, SerialAssigner, Stepper};
     use crate::metrics::{kmeans_error, weighted_error, DistanceCounter};
     use crate::partition::Partition;
     use crate::util::prop;
@@ -96,6 +101,31 @@ mod tests {
         assert_eq!(epsilon(10.0, 4.0, f64::INFINITY), 0.0);
         // Zero diagonal (singleton block) is always well assigned.
         assert_eq!(epsilon(0.0, 1.0, 1.0), 0.0);
+    }
+
+    /// ε from a bare engine pass (`AssignOut`) equals ε from the fused
+    /// step (`StepOut`) on the same centroids — the "no recomputation"
+    /// contract holds whichever engine shape produced the top-2.
+    #[test]
+    fn epsilons_agree_across_engine_shapes() {
+        let mut g = prop::Gen { rng: crate::util::Rng::new(12), case: 0 };
+        let ds = Dataset::new(g.blobs(120, 2, 3, 1.0), 2);
+        let mut p = Partition::root(&ds);
+        for _ in 0..8 {
+            let b = g.rng.usize(p.len());
+            if p.blocks[b].weight() > 0 {
+                p.split(b, &ds);
+            }
+        }
+        let (reps, w, ids) = p.reps_weights();
+        let cents = g.cloud(3, 2, 5.0);
+        let c = DistanceCounter::new();
+        let bare = crate::kmeans::SerialAssigner.assign_top2(&reps, 2, &cents, &c);
+        let step = NativeStepper::new().step(&reps, &w, 2, &cents, &c);
+        assert_eq!(
+            epsilons(&p, &ids, &bare.d1, &bare.d2),
+            epsilons(&p, &ids, &step.d1, &step.d2)
+        );
     }
 
     #[test]

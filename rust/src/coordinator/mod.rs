@@ -4,10 +4,13 @@
 //!
 //! The leader owns partition + centroid state; workers own contiguous row
 //! shards. Two fan-out primitives cover every data-parallel phase of the
-//! pipeline (assignment/error evaluation and the weighted-Lloyd step), and
-//! [`streaming`] handles sources that never fit in memory. Reductions are
-//! performed in shard order, so results are bit-identical to the serial
-//! path — asserted by the equivalence tests.
+//! pipeline (assignment/error evaluation and the weighted-Lloyd step);
+//! both are thin wrappers over the assignment engine's sharded backend
+//! (`kmeans::assign::ShardedAssigner`, DESIGN.md §2.5), and [`streaming`]
+//! handles sources that never fit in memory. Shards come from the one
+//! canonical `shard_ranges` rule and reductions are performed in shard
+//! order, so results are bit-identical to the serial path — asserted by
+//! the equivalence tests.
 
 pub mod parallel;
 pub mod streaming;

@@ -1,11 +1,19 @@
 //! Sharded data-parallel primitives over `std::thread::scope` workers.
 //!
-//! Each worker processes a contiguous shard; the leader reduces partials in
-//! shard order (deterministic, serial-identical results). Distance
-//! accounting goes through the shared atomic [`DistanceCounter`].
+//! Both fan-out shapes here are thin wrappers over the shared assignment
+//! engine's sharded backend ([`crate::kmeans::assign::ShardedAssigner`],
+//! DESIGN.md §2.5): rows are split with the one canonical
+//! [`crate::kmeans::assign::shard_ranges`] rule (the same split
+//! `Dataset::shard_ranges` uses, so leader and workers can never disagree
+//! about row ownership), each worker runs the serial kernel on its
+//! contiguous shard, and the reduction is serial in row order. Results are
+//! therefore **bit-identical** to the serial path — not merely close —
+//! for every thread count, and distance accounting goes through the shared
+//! atomic [`DistanceCounter`] exactly as in the serial case (n·k per
+//! assignment pass).
 
 use crate::data::Dataset;
-use crate::geometry::sq_dist;
+use crate::kmeans::assign::{self, ShardedAssigner};
 use crate::kmeans::{StepOut, Stepper};
 use crate::metrics::DistanceCounter;
 
@@ -17,56 +25,20 @@ pub fn sharded_assign_err(
     threads: usize,
     counter: &DistanceCounter,
 ) -> (Vec<u32>, f64) {
-    let d = data.d;
-    let k = centroids.len() / d;
-    let ranges = data.shard_ranges(threads);
-    let mut partials: Vec<(Vec<u32>, f64)> = Vec::with_capacity(ranges.len());
-
-    std::thread::scope(|scope| {
-        let handles: Vec<_> = ranges
-            .iter()
-            .map(|r| {
-                let r = r.clone();
-                scope.spawn(move || {
-                    let mut assign = Vec::with_capacity(r.len());
-                    let mut sse = 0.0f64;
-                    for i in r.clone() {
-                        let p = data.row(i);
-                        let (mut bi, mut bd) = (0usize, f64::INFINITY);
-                        for c in 0..k {
-                            let dd = sq_dist(p, &centroids[c * d..(c + 1) * d]);
-                            if dd < bd {
-                                bd = dd;
-                                bi = c;
-                            }
-                        }
-                        assign.push(bi as u32);
-                        sse += bd;
-                    }
-                    counter.add((r.len() * k) as u64);
-                    (assign, sse)
-                })
-            })
-            .collect();
-        for h in handles {
-            partials.push(h.join().expect("worker panicked"));
-        }
-    });
-
-    // Ordered reduction.
-    let mut assign = Vec::with_capacity(data.n);
-    let mut sse = 0.0;
-    for (a, s) in partials {
-        assign.extend(a);
-        sse += s;
-    }
-    (assign, sse)
+    assign::assign_err(
+        &mut ShardedAssigner { threads },
+        &data.data,
+        data.d,
+        centroids,
+        counter,
+    )
 }
 
 /// One weighted-Lloyd step with the assignment phase fanned out over
-/// shards of the representatives; the leader merges per-shard cluster
-/// aggregates in shard order and applies the update rule (empty clusters
-/// keep their centroid — identical semantics to `NativeStepper`).
+/// shards of the representatives. Accumulation and the update rule (empty
+/// clusters keep their centroid) run serially in row order inside
+/// [`assign::weighted_step`], so the result equals `NativeStepper`'s bit
+/// for bit.
 pub fn sharded_weighted_step(
     reps: &[f64],
     weights: &[f64],
@@ -75,104 +47,14 @@ pub fn sharded_weighted_step(
     threads: usize,
     counter: &DistanceCounter,
 ) -> StepOut {
-    let m = weights.len();
-    let k = centroids.len() / d;
-    let threads = threads.max(1).min(m.max(1));
-    let base = m / threads;
-    let extra = m % threads;
-    let mut ranges = Vec::with_capacity(threads);
-    let mut start = 0usize;
-    for t in 0..threads {
-        let len = base + usize::from(t < extra);
-        ranges.push(start..start + len);
-        start += len;
-    }
-
-    struct Partial {
-        assign: Vec<u32>,
-        d1: Vec<f64>,
-        d2: Vec<f64>,
-        sums: Vec<f64>,
-        counts: Vec<f64>,
-        werr: f64,
-    }
-
-    let mut partials: Vec<Partial> = Vec::with_capacity(threads);
-    std::thread::scope(|scope| {
-        let handles: Vec<_> = ranges
-            .iter()
-            .map(|r| {
-                let r = r.clone();
-                scope.spawn(move || {
-                    let mut p = Partial {
-                        assign: Vec::with_capacity(r.len()),
-                        d1: Vec::with_capacity(r.len()),
-                        d2: Vec::with_capacity(r.len()),
-                        sums: vec![0.0; k * d],
-                        counts: vec![0.0; k],
-                        werr: 0.0,
-                    };
-                    for i in r.clone() {
-                        let row = &reps[i * d..(i + 1) * d];
-                        let (mut i1, mut b1, mut b2) = (0usize, f64::INFINITY, f64::INFINITY);
-                        for c in 0..k {
-                            let dd = sq_dist(row, &centroids[c * d..(c + 1) * d]);
-                            if dd < b1 {
-                                b2 = b1;
-                                b1 = dd;
-                                i1 = c;
-                            } else if dd < b2 {
-                                b2 = dd;
-                            }
-                        }
-                        p.assign.push(i1 as u32);
-                        p.d1.push(b1);
-                        p.d2.push(b2);
-                        let w = weights[i];
-                        p.werr += w * b1;
-                        p.counts[i1] += w;
-                        for j in 0..d {
-                            p.sums[i1 * d + j] += w * row[j];
-                        }
-                    }
-                    counter.add((r.len() * k) as u64);
-                    p
-                })
-            })
-            .collect();
-        for h in handles {
-            partials.push(h.join().expect("worker panicked"));
-        }
-    });
-
-    let mut assign = Vec::with_capacity(m);
-    let mut d1 = Vec::with_capacity(m);
-    let mut d2 = Vec::with_capacity(m);
-    let mut sums = vec![0.0; k * d];
-    let mut counts = vec![0.0; k];
-    let mut werr = 0.0;
-    for p in partials {
-        assign.extend(p.assign);
-        d1.extend(p.d1);
-        d2.extend(p.d2);
-        werr += p.werr;
-        for c in 0..k {
-            counts[c] += p.counts[c];
-            for j in 0..d {
-                sums[c * d + j] += p.sums[c * d + j];
-            }
-        }
-    }
-    let mut out = centroids.to_vec();
-    for c in 0..k {
-        if counts[c] > 0.0 {
-            let inv = 1.0 / counts[c];
-            for j in 0..d {
-                out[c * d + j] = sums[c * d + j] * inv;
-            }
-        }
-    }
-    StepOut { centroids: out, assign, d1, d2, werr }
+    assign::weighted_step(
+        &mut ShardedAssigner { threads },
+        reps,
+        weights,
+        d,
+        centroids,
+        counter,
+    )
 }
 
 /// [`Stepper`] adapter running every iteration through
@@ -202,6 +84,10 @@ mod tests {
 
     #[test]
     fn prop_sharded_step_equals_serial() {
+        // Since the port onto the unified engine this equivalence is exact
+        // (bit-for-bit), not tolerance-based: the sharded backend computes
+        // the same canonical kernel on the same rows and the accumulation
+        // is serial either way (DESIGN.md §2.5).
         prop::check("sharded-step", 20, |g| {
             let m = g.int(1, 200);
             let d = g.int(1, 5);
@@ -218,11 +104,11 @@ mod tests {
                 sharded_weighted_step(&reps, &weights, d, &cents, threads, &c2);
 
             assert_eq!(serial.assign, sharded.assign);
+            assert_eq!(serial.d1, sharded.d1);
+            assert_eq!(serial.d2, sharded.d2);
+            assert_eq!(serial.centroids, sharded.centroids);
+            assert_eq!(serial.werr.to_bits(), sharded.werr.to_bits());
             assert_eq!(c1.get(), c2.get());
-            for (a, b) in serial.centroids.iter().zip(&sharded.centroids) {
-                assert!((a - b).abs() < 1e-9);
-            }
-            assert!((serial.werr - sharded.werr).abs() < 1e-9 * serial.werr.max(1.0));
         });
     }
 
@@ -243,6 +129,20 @@ mod tests {
             assert!((sse - serial).abs() < 1e-9 * serial.max(1.0));
             assert_eq!(c1.get(), c2.get());
         });
+    }
+
+    #[test]
+    fn sharded_paths_share_shard_ranges() {
+        // The former hand-rolled base/extra split in this file could in
+        // principle drift from `Dataset::shard_ranges`; both now route
+        // through `assign::shard_ranges`, asserted here on the boundary
+        // cases (n < threads, n % threads != 0).
+        for n in [1usize, 5, 7, 64, 65, 100] {
+            for threads in 1..=8 {
+                let ds = Dataset::new(vec![0.0; n], 1);
+                assert_eq!(ds.shard_ranges(threads), assign::shard_ranges(n, threads));
+            }
+        }
     }
 
     #[test]

@@ -44,18 +44,11 @@ impl Dataset {
     }
 
     /// Split row indices into `shards` contiguous ranges (coordinator).
+    /// Delegates to the one canonical split rule,
+    /// [`crate::kmeans::assign::shard_ranges`] (DESIGN.md §2.5), so the
+    /// leader and the engine's sharded backend always agree on ownership.
     pub fn shard_ranges(&self, shards: usize) -> Vec<std::ops::Range<usize>> {
-        let shards = shards.max(1).min(self.n.max(1));
-        let base = self.n / shards;
-        let extra = self.n % shards;
-        let mut out = Vec::with_capacity(shards);
-        let mut start = 0;
-        for s in 0..shards {
-            let len = base + usize::from(s < extra);
-            out.push(start..start + len);
-            start += len;
-        }
-        out
+        crate::kmeans::assign::shard_ranges(self.n, shards)
     }
 
     /// Check for non-finite values (failure-injection guard).

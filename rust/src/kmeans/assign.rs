@@ -1,0 +1,901 @@
+//! The **assignment engine** — the one distance hot path every method in
+//! this crate shares (DESIGN.md §2).
+//!
+//! The assignment step — "for each point, find the nearest (and second
+//! nearest) centroid" — is the cost center of every K-means-family
+//! algorithm the paper evaluates (§1.2, §3): plain Lloyd, weighted Lloyd
+//! under BWKM/RPKM, Mini-batch, and the exact accelerated variants. BWKM
+//! additionally consumes the distance to the *second* nearest centroid,
+//! because the misassignment function (paper Eq. 3)
+//!
+//! ```text
+//! ε_{C,D}(B) = max(0, 2·l_B − (‖P̄−c₂‖ − ‖P̄−c₁‖))
+//! ```
+//!
+//! needs δ_P(C) = ‖P̄−c₂‖ − ‖P̄−c₁‖ for every representative. This module
+//! therefore computes nearest/top-2 once, behind one [`Assigner`] trait,
+//! and every consumer (`lloyd`, `weighted_lloyd::NativeStepper`,
+//! `minibatch`, `elkan`'s exact fallback pass,
+//! `coordinator::parallel::sharded_assign_err`, and `bwkm`'s ε machinery)
+//! rides on it instead of keeping a private distance loop.
+//!
+//! Contract highlights (normative text in DESIGN.md §2):
+//!
+//! * **Canonical kernel.** One squared-distance summation order —
+//!   [`sq_dist_kernel`], the 4-way split-accumulator form — is used by
+//!   every backend, so all backends produce **bit-identical**
+//!   `(assign, d1, d2)` for the same inputs. (`geometry::sq_dist` is the
+//!   plain left-to-right *reference* form; the two agree to ~1 ulp per
+//!   term and the property tests pin the engine against it at 1e-12.)
+//! * **Tie-breaking.** Strict `<` against the incumbent: the
+//!   lowest-indexed centroid wins equal distances, and `d2` is the second
+//!   *value* in scan order (`d2 = ∞` when k = 1).
+//! * **Counting.** Exact backends tick the shared [`DistanceCounter`]
+//!   with one unit per point-centroid pair — n·k per call, accounted
+//!   per cache block. Pruned backends count only what they compute
+//!   (plus the norm precomputations), and may therefore count *less*
+//!   while returning bit-identical output.
+//! * **Shard determinism.** [`ShardedAssigner`] splits rows with
+//!   [`shard_ranges`] (the same contiguous base/extra split as
+//!   `Dataset::shard_ranges`) and reduces in shard order, so its output
+//!   equals the serial backend's bit for bit, for every thread count.
+//!
+//! The kernel itself is blocked and cache-tiled: points are processed in
+//! [`POINT_BLOCK`]-row blocks and centroids in [`CENT_TILE`]-row tiles, so
+//! a tile of centroids is reused from L1 across the whole point block
+//! while the top-2 state lives in registers / stack arrays. Dimensions the
+//! Table-1 workloads use (§Perf iteration 1: 1.3–2.1x) get monomorphized
+//! fast paths with a compile-time `D`.
+
+use crate::metrics::DistanceCounter;
+
+use super::weighted_lloyd::StepOut;
+
+/// Rows per cache block of the tiled kernel (top-2 state for a block lives
+/// in stack arrays; 64 rows × 3 lanes × 8 B ≈ 1.5 KiB).
+pub const POINT_BLOCK: usize = 64;
+
+/// Centroids per tile of the tiled kernel (a tile of k ≤ 8, d ≤ 20
+/// centroids is ≤ 1.25 KiB — resident in L1 across the point block).
+pub const CENT_TILE: usize = 8;
+
+/// Result of a top-2 assignment pass: for every input row, the index of
+/// the nearest centroid and the two smallest squared distances
+/// (`d2[i] = ∞` when only one centroid exists).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct AssignOut {
+    pub assign: Vec<u32>,
+    pub d1: Vec<f64>,
+    pub d2: Vec<f64>,
+}
+
+impl AssignOut {
+    fn with_capacity(m: usize) -> AssignOut {
+        AssignOut {
+            assign: Vec::with_capacity(m),
+            d1: Vec::with_capacity(m),
+            d2: Vec::with_capacity(m),
+        }
+    }
+}
+
+/// A nearest/top-2 assignment backend (DESIGN.md §2.2). Implementations
+/// must obey the canonical-kernel, tie-breaking, counting and determinism
+/// rules spelled out there, so callers may swap backends freely.
+pub trait Assigner {
+    /// Assign every row of `points` (m×d flat) to its nearest centroid,
+    /// returning the top-2 squared distances alongside.
+    fn assign_top2(
+        &mut self,
+        points: &[f64],
+        d: usize,
+        centroids: &[f64],
+        counter: &DistanceCounter,
+    ) -> AssignOut;
+}
+
+/// The canonical squared-distance kernel (DESIGN.md §2.1): 4-way split
+/// accumulators so the FPU add latency chain is broken (the compiler may
+/// not reassociate FP adds itself — §Perf iteration 2), combined as
+/// `(a0 + a1) + (a2 + a3)`. Every engine backend computes *exactly* this
+/// value for every pair it evaluates.
+#[inline]
+pub fn sq_dist_kernel(p: &[f64], q: &[f64]) -> f64 {
+    debug_assert_eq!(p.len(), q.len());
+    let d = p.len();
+    let (mut a0, mut a1, mut a2, mut a3) = (0.0f64, 0.0, 0.0, 0.0);
+    let mut j = 0;
+    while j + 4 <= d {
+        let t0 = p[j] - q[j];
+        let t1 = p[j + 1] - q[j + 1];
+        let t2 = p[j + 2] - q[j + 2];
+        let t3 = p[j + 3] - q[j + 3];
+        a0 += t0 * t0;
+        a1 += t1 * t1;
+        a2 += t2 * t2;
+        a3 += t3 * t3;
+        j += 4;
+    }
+    while j < d {
+        let t = p[j] - q[j];
+        a0 += t * t;
+        j += 1;
+    }
+    (a0 + a1) + (a2 + a3)
+}
+
+/// Canonical *metric* distance: `sqrt` of [`sq_dist_kernel`]. `sqrt` is
+/// exact and monotone, so argmins and tie-breaks match the squared form.
+/// Consumers that work in metric space (Elkan's bounds) must use this for
+/// every point↔centroid distance, so their cached bounds stay consistent
+/// with the distances they are later compared against (DESIGN.md §2.6).
+#[inline]
+pub fn dist_kernel(p: &[f64], q: &[f64]) -> f64 {
+    sq_dist_kernel(p, q).sqrt()
+}
+
+/// Split `0..n` into at most `shards` contiguous ranges of near-equal
+/// length (the first `n % shards` ranges get one extra row). This is the
+/// *only* shard-range rule in the crate — `Dataset::shard_ranges` and both
+/// sharded coordinator paths route through it (DESIGN.md §2.5), so a
+/// leader and its workers can never disagree about row ownership.
+pub fn shard_ranges(n: usize, shards: usize) -> Vec<std::ops::Range<usize>> {
+    let shards = shards.max(1).min(n.max(1));
+    let base = n / shards;
+    let extra = n % shards;
+    let mut out = Vec::with_capacity(shards);
+    let mut start = 0usize;
+    for s in 0..shards {
+        let len = base + usize::from(s < extra);
+        out.push(start..start + len);
+        start += len;
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// The blocked, cache-tiled kernel.
+// ---------------------------------------------------------------------------
+
+/// Monomorphized blocked top-2 scan: `D` is a compile-time constant so the
+/// inner loop fully unrolls, and each row is hoisted into a fixed-size
+/// array that lives in registers across a centroid tile (§Perf
+/// iteration 3). Centroids are visited in increasing index order across
+/// tiles, so the result is bit-identical to a straight scan.
+fn top2_blocked<const D: usize>(
+    points: &[f64],
+    centroids: &[f64],
+    assign: &mut [u32],
+    d1: &mut [f64],
+    d2: &mut [f64],
+    counter: &DistanceCounter,
+) {
+    let m = assign.len();
+    let k = centroids.len() / D;
+    debug_assert_eq!(points.len(), m * D);
+    let mut base = 0usize;
+    while base < m {
+        let len = (m - base).min(POINT_BLOCK);
+        let mut bi = [0u32; POINT_BLOCK];
+        let mut b1 = [f64::INFINITY; POINT_BLOCK];
+        let mut b2 = [f64::INFINITY; POINT_BLOCK];
+        let mut tile = 0usize;
+        while tile < k {
+            let tlen = (k - tile).min(CENT_TILE);
+            for r in 0..len {
+                let i = base + r;
+                let p: &[f64; D] = points[i * D..i * D + D].try_into().unwrap();
+                for c in tile..tile + tlen {
+                    let q: &[f64; D] = centroids[c * D..c * D + D].try_into().unwrap();
+                    // Inlined canonical kernel (see `sq_dist_kernel`) on
+                    // register-resident rows.
+                    let (mut a0, mut a1, mut a2, mut a3) = (0.0f64, 0.0, 0.0, 0.0);
+                    let mut j = 0;
+                    while j + 4 <= D {
+                        let t0 = p[j] - q[j];
+                        let t1 = p[j + 1] - q[j + 1];
+                        let t2 = p[j + 2] - q[j + 2];
+                        let t3 = p[j + 3] - q[j + 3];
+                        a0 += t0 * t0;
+                        a1 += t1 * t1;
+                        a2 += t2 * t2;
+                        a3 += t3 * t3;
+                        j += 4;
+                    }
+                    while j < D {
+                        let t = p[j] - q[j];
+                        a0 += t * t;
+                        j += 1;
+                    }
+                    let acc = (a0 + a1) + (a2 + a3);
+                    if acc < b1[r] {
+                        b2[r] = b1[r];
+                        b1[r] = acc;
+                        bi[r] = c as u32;
+                    } else if acc < b2[r] {
+                        b2[r] = acc;
+                    }
+                }
+            }
+            tile += tlen;
+        }
+        for r in 0..len {
+            assign[base + r] = bi[r];
+            d1[base + r] = b1[r];
+            d2[base + r] = b2[r];
+        }
+        // Per-block accounting: one unit per point-centroid pair.
+        counter.add((len * k) as u64);
+        base += len;
+    }
+}
+
+/// Dynamic-dimension fallback of [`top2_blocked`] (identical structure and
+/// summation order; rows stay slices).
+fn top2_blocked_dyn(
+    points: &[f64],
+    d: usize,
+    centroids: &[f64],
+    assign: &mut [u32],
+    d1: &mut [f64],
+    d2: &mut [f64],
+    counter: &DistanceCounter,
+) {
+    let m = assign.len();
+    let k = centroids.len() / d;
+    debug_assert_eq!(points.len(), m * d);
+    let mut base = 0usize;
+    while base < m {
+        let len = (m - base).min(POINT_BLOCK);
+        let mut bi = [0u32; POINT_BLOCK];
+        let mut b1 = [f64::INFINITY; POINT_BLOCK];
+        let mut b2 = [f64::INFINITY; POINT_BLOCK];
+        let mut tile = 0usize;
+        while tile < k {
+            let tlen = (k - tile).min(CENT_TILE);
+            for r in 0..len {
+                let i = base + r;
+                let p = &points[i * d..i * d + d];
+                for c in tile..tile + tlen {
+                    let acc = sq_dist_kernel(p, &centroids[c * d..c * d + d]);
+                    if acc < b1[r] {
+                        b2[r] = b1[r];
+                        b1[r] = acc;
+                        bi[r] = c as u32;
+                    } else if acc < b2[r] {
+                        b2[r] = acc;
+                    }
+                }
+            }
+            tile += tlen;
+        }
+        for r in 0..len {
+            assign[base + r] = bi[r];
+            d1[base + r] = b1[r];
+            d2[base + r] = b2[r];
+        }
+        counter.add((len * k) as u64);
+        base += len;
+    }
+}
+
+/// Dispatch to a monomorphized body for the dimensions the Table-1
+/// workloads actually use (constant trip counts let LLVM fully unroll and
+/// vectorize the inner loop — §Perf iteration 1: 1.3–2.1x on the d=19/d=5
+/// sweeps).
+fn top2_dispatch(
+    points: &[f64],
+    d: usize,
+    centroids: &[f64],
+    assign: &mut [u32],
+    d1: &mut [f64],
+    d2: &mut [f64],
+    counter: &DistanceCounter,
+) {
+    match d {
+        2 => top2_blocked::<2>(points, centroids, assign, d1, d2, counter),
+        3 => top2_blocked::<3>(points, centroids, assign, d1, d2, counter),
+        4 => top2_blocked::<4>(points, centroids, assign, d1, d2, counter),
+        5 => top2_blocked::<5>(points, centroids, assign, d1, d2, counter),
+        17 => top2_blocked::<17>(points, centroids, assign, d1, d2, counter),
+        19 => top2_blocked::<19>(points, centroids, assign, d1, d2, counter),
+        20 => top2_blocked::<20>(points, centroids, assign, d1, d2, counter),
+        _ => top2_blocked_dyn(points, d, centroids, assign, d1, d2, counter),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Backends.
+// ---------------------------------------------------------------------------
+
+/// The serial backend: the blocked, cache-tiled canonical kernel on the
+/// calling thread. This is the default engine behind
+/// [`super::NativeStepper`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SerialAssigner;
+
+impl Assigner for SerialAssigner {
+    fn assign_top2(
+        &mut self,
+        points: &[f64],
+        d: usize,
+        centroids: &[f64],
+        counter: &DistanceCounter,
+    ) -> AssignOut {
+        let m = points.len() / d;
+        let mut out = AssignOut {
+            assign: vec![0u32; m],
+            d1: vec![0.0; m],
+            d2: vec![0.0; m],
+        };
+        top2_dispatch(points, d, centroids, &mut out.assign, &mut out.d1, &mut out.d2, counter);
+        out
+    }
+}
+
+/// The sharded backend: rows fanned out over `threads` scoped workers via
+/// [`shard_ranges`], each running the serial kernel on its contiguous
+/// shard, reduced in shard order. Bit-identical to [`SerialAssigner`] for
+/// every thread count (DESIGN.md §2.5).
+#[derive(Clone, Copy, Debug)]
+pub struct ShardedAssigner {
+    pub threads: usize,
+}
+
+impl Assigner for ShardedAssigner {
+    fn assign_top2(
+        &mut self,
+        points: &[f64],
+        d: usize,
+        centroids: &[f64],
+        counter: &DistanceCounter,
+    ) -> AssignOut {
+        let m = points.len() / d;
+        let ranges = shard_ranges(m, self.threads);
+        let mut partials: Vec<AssignOut> = Vec::with_capacity(ranges.len());
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = ranges
+                .iter()
+                .map(|r| {
+                    let r = r.clone();
+                    scope.spawn(move || {
+                        let len = r.len();
+                        let mut part = AssignOut {
+                            assign: vec![0u32; len],
+                            d1: vec![0.0; len],
+                            d2: vec![0.0; len],
+                        };
+                        top2_dispatch(
+                            &points[r.start * d..r.end * d],
+                            d,
+                            centroids,
+                            &mut part.assign,
+                            &mut part.d1,
+                            &mut part.d2,
+                            counter,
+                        );
+                        part
+                    })
+                })
+                .collect();
+            for h in handles {
+                partials.push(h.join().expect("assignment worker panicked"));
+            }
+        });
+        // Ordered reduction: shard order == row order.
+        let mut out = AssignOut::with_capacity(m);
+        for p in partials {
+            out.assign.extend(p.assign);
+            out.d1.extend(p.d1);
+            out.d2.extend(p.d2);
+        }
+        out
+    }
+}
+
+/// The norm-pruned backend: precomputes every centroid norm ‖c‖ and skips
+/// candidates that provably cannot enter the top-2, via the reverse
+/// triangle inequality ‖x−c‖ ≥ |‖x‖−‖c‖|. The skip test carries a
+/// scale-aware safety margin covering the rounding of the norm
+/// subtraction, so outputs stay **bit-identical** to [`SerialAssigner`];
+/// only the distance *count* shrinks (DESIGN.md §2.4: pruned backends
+/// count k centroid norms + 1 point norm per row + one unit per pair
+/// actually evaluated).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NormPrunedAssigner;
+
+impl Assigner for NormPrunedAssigner {
+    fn assign_top2(
+        &mut self,
+        points: &[f64],
+        d: usize,
+        centroids: &[f64],
+        counter: &DistanceCounter,
+    ) -> AssignOut {
+        let m = points.len() / d;
+        let k = centroids.len() / d;
+        let mut out = AssignOut {
+            assign: vec![0u32; m],
+            d1: vec![0.0; m],
+            d2: vec![0.0; m],
+        };
+        // Centroid norms, counted as k distance computations.
+        let mut cn = vec![0.0f64; k];
+        for c in 0..k {
+            cn[c] = norm_kernel(&centroids[c * d..(c + 1) * d]);
+        }
+        counter.add(k as u64);
+
+        let mut evaluated = 0u64;
+        for i in 0..m {
+            let p = &points[i * d..(i + 1) * d];
+            let pn = norm_kernel(p);
+            evaluated += 1; // the point norm
+            let (mut i1, mut b1, mut b2) = (0u32, f64::INFINITY, f64::INFINITY);
+            // sqrt of the running second-best, maintained lazily so the
+            // skip test runs in metric space.
+            let mut b2_rt = f64::INFINITY;
+            for c in 0..k {
+                let lb = (pn - cn[c]).abs();
+                // Sound skip: true ‖x−c‖ ≥ lb up to rounding of the two
+                // norms. The rounding of a d-term norm is ≤ ~(d/4+2)·ε
+                // relative, so the margin scales with d and stays ≥ ~100×
+                // the worst case at every dimension — a skipped candidate
+                // can never have entered the top-2 (asserted bit-for-bit
+                // by the property tests).
+                let margin = (4.0 + d as f64) * 1e-14 * (pn + cn[c]);
+                if lb > b2_rt + margin {
+                    continue;
+                }
+                let acc = sq_dist_kernel(p, &centroids[c * d..(c + 1) * d]);
+                evaluated += 1;
+                if acc < b1 {
+                    b2 = b1;
+                    b1 = acc;
+                    i1 = c as u32;
+                    b2_rt = b2.sqrt();
+                } else if acc < b2 {
+                    b2 = acc;
+                    b2_rt = b2.sqrt();
+                }
+            }
+            out.assign[i] = i1;
+            out.d1[i] = b1;
+            out.d2[i] = b2;
+        }
+        counter.add(evaluated);
+        out
+    }
+}
+
+/// Euclidean norm through the canonical summation order (identical to
+/// `sq_dist_kernel(p, 0)` — subtracting zero is exact — so norms round the
+/// same way distances do).
+fn norm_kernel(p: &[f64]) -> f64 {
+    let d = p.len();
+    let (mut a0, mut a1, mut a2, mut a3) = (0.0f64, 0.0, 0.0, 0.0);
+    let mut j = 0;
+    while j + 4 <= d {
+        a0 += p[j] * p[j];
+        a1 += p[j + 1] * p[j + 1];
+        a2 += p[j + 2] * p[j + 2];
+        a3 += p[j + 3] * p[j + 3];
+        j += 4;
+    }
+    while j < d {
+        a0 += p[j] * p[j];
+        j += 1;
+    }
+    ((a0 + a1) + (a2 + a3)).sqrt()
+}
+
+// ---------------------------------------------------------------------------
+// Shared consumers: the three shapes every retired loop reduces to.
+// ---------------------------------------------------------------------------
+
+/// Reusable accumulation scratch for [`weighted_step_with`], so steppers
+/// that iterate (the weighted-Lloyd outer loops) keep the retired
+/// `NativeStepper`'s "no per-iteration allocation in the hot loop"
+/// property for the cluster aggregates.
+#[derive(Clone, Debug, Default)]
+pub struct StepScratch {
+    sums: Vec<f64>,
+    counts: Vec<f64>,
+}
+
+/// One weighted-Lloyd iteration on any [`Assigner`] backend (paper Alg. 1
+/// steps 2/4): engine assignment, then a serial weighted accumulation in
+/// row order and the center-of-mass update (empty clusters keep their
+/// centroid). Because the accumulation is always serial and in row order,
+/// `werr`, `sums` and the updated centroids are bit-identical across
+/// backends (DESIGN.md §2.5). One-shot convenience over
+/// [`weighted_step_with`]; iterating callers hold a [`StepScratch`].
+pub fn weighted_step(
+    engine: &mut dyn Assigner,
+    reps: &[f64],
+    weights: &[f64],
+    d: usize,
+    centroids: &[f64],
+    counter: &DistanceCounter,
+) -> StepOut {
+    weighted_step_with(engine, &mut StepScratch::default(), reps, weights, d, centroids, counter)
+}
+
+/// [`weighted_step`] with caller-owned accumulation scratch (the returned
+/// assign/d1/d2 buffers are part of [`StepOut`] and necessarily fresh).
+pub fn weighted_step_with(
+    engine: &mut dyn Assigner,
+    scratch: &mut StepScratch,
+    reps: &[f64],
+    weights: &[f64],
+    d: usize,
+    centroids: &[f64],
+    counter: &DistanceCounter,
+) -> StepOut {
+    let m = weights.len();
+    let k = centroids.len() / d;
+    let top2 = engine.assign_top2(reps, d, centroids, counter);
+
+    scratch.sums.clear();
+    scratch.sums.resize(k * d, 0.0);
+    scratch.counts.clear();
+    scratch.counts.resize(k, 0.0);
+    let mut werr = 0.0f64;
+    for i in 0..m {
+        let w = weights[i];
+        werr += w * top2.d1[i];
+        let c = top2.assign[i] as usize;
+        let p = &reps[i * d..(i + 1) * d];
+        let s = &mut scratch.sums[c * d..(c + 1) * d];
+        for j in 0..d {
+            s[j] += w * p[j];
+        }
+        scratch.counts[c] += w;
+    }
+
+    let mut out = centroids.to_vec();
+    for c in 0..k {
+        if scratch.counts[c] > 0.0 {
+            let inv = 1.0 / scratch.counts[c];
+            for j in 0..d {
+                out[c * d + j] = scratch.sums[c * d + j] * inv;
+            }
+        }
+    }
+    StepOut { centroids: out, assign: top2.assign, d1: top2.d1, d2: top2.d2, werr }
+}
+
+/// Assignment + SSE on any [`Assigner`] backend — the E^D / E^P evaluator
+/// shape (`coordinator::sharded_assign_err` is a thin wrapper). The SSE is
+/// accumulated serially in row order, so it is backend-independent.
+pub fn assign_err(
+    engine: &mut dyn Assigner,
+    points: &[f64],
+    d: usize,
+    centroids: &[f64],
+    counter: &DistanceCounter,
+) -> (Vec<u32>, f64) {
+    let top2 = engine.assign_top2(points, d, centroids, counter);
+    let sse = top2.d1.iter().sum();
+    (top2.assign, sse)
+}
+
+/// Exact full-row fallback (DESIGN.md §2.6): all k squared distances of
+/// one point through the canonical kernel, written into `row`; returns
+/// (argmin, min). Counts k. This is the engine shape behind Elkan's
+/// bound-initialization pass, which needs *every* distance, not just the
+/// top 2.
+pub fn sq_dist_row(
+    p: &[f64],
+    centroids: &[f64],
+    d: usize,
+    row: &mut [f64],
+    counter: &DistanceCounter,
+) -> (usize, f64) {
+    let k = centroids.len() / d;
+    debug_assert_eq!(row.len(), k);
+    let (mut i1, mut b1) = (0usize, f64::INFINITY);
+    for c in 0..k {
+        let dd = sq_dist_kernel(p, &centroids[c * d..(c + 1) * d]);
+        row[c] = dd;
+        if dd < b1 {
+            b1 = dd;
+            i1 = c;
+        }
+    }
+    counter.add(k as u64);
+    (i1, b1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    /// Verbatim copy of the retired `NativeStepper` assignment loop (the
+    /// pre-engine hot path of `weighted_lloyd.rs`): straight row scan,
+    /// 4-way split accumulators, strict-`<` top-2. The engine must match
+    /// it bit for bit — same floats, same indices, same counts.
+    fn retired_reference(
+        reps: &[f64],
+        d: usize,
+        centroids: &[f64],
+        counter: &DistanceCounter,
+    ) -> AssignOut {
+        let m = reps.len() / d;
+        let k = centroids.len() / d;
+        let mut out = AssignOut {
+            assign: vec![0u32; m],
+            d1: vec![0.0; m],
+            d2: vec![0.0; m],
+        };
+        for i in 0..m {
+            let p = &reps[i * d..i * d + d];
+            let (mut i1, mut b1, mut b2) = (0usize, f64::INFINITY, f64::INFINITY);
+            for c in 0..k {
+                let q = &centroids[c * d..c * d + d];
+                let (mut a0, mut a1, mut a2, mut a3) = (0.0f64, 0.0, 0.0, 0.0);
+                let mut j = 0;
+                while j + 4 <= d {
+                    let t0 = p[j] - q[j];
+                    let t1 = p[j + 1] - q[j + 1];
+                    let t2 = p[j + 2] - q[j + 2];
+                    let t3 = p[j + 3] - q[j + 3];
+                    a0 += t0 * t0;
+                    a1 += t1 * t1;
+                    a2 += t2 * t2;
+                    a3 += t3 * t3;
+                    j += 4;
+                }
+                while j < d {
+                    let t = p[j] - q[j];
+                    a0 += t * t;
+                    j += 1;
+                }
+                let acc = (a0 + a1) + (a2 + a3);
+                if acc < b1 {
+                    b2 = b1;
+                    b1 = acc;
+                    i1 = c;
+                } else if acc < b2 {
+                    b2 = acc;
+                }
+            }
+            out.assign[i] = i1 as u32;
+            out.d1[i] = b1;
+            out.d2[i] = b2;
+        }
+        counter.add((m * k) as u64);
+        out
+    }
+
+    fn counter() -> DistanceCounter {
+        DistanceCounter::new()
+    }
+
+    #[test]
+    fn prop_engine_matches_retired_loop_bit_for_bit() {
+        // The acceptance property of the port: on random weighted corpora
+        // the engine's top-2 output and distance counts equal the retired
+        // per-algorithm loop exactly (no tolerance).
+        prop::check("engine-vs-retired", 40, |g| {
+            let m = g.int(1, 300);
+            let d = g.int(1, 24); // exercises every monomorphized path + dyn
+            let k = g.int(1, 20);
+            let reps = g.cloud(m, d, 3.0);
+            let cents = g.cloud(k, d, 3.0);
+
+            let c_ref = counter();
+            let reference = retired_reference(&reps, d, &cents, &c_ref);
+            let c_eng = counter();
+            let engine = SerialAssigner.assign_top2(&reps, d, &cents, &c_eng);
+
+            assert_eq!(engine.assign, reference.assign);
+            assert_eq!(engine.d1, reference.d1);
+            assert_eq!(engine.d2, reference.d2);
+            assert_eq!(c_eng.get(), c_ref.get());
+            assert_eq!(c_eng.get(), (m * k) as u64);
+        });
+    }
+
+    #[test]
+    fn prop_all_backends_bit_identical() {
+        prop::check("backend-equivalence", 30, |g| {
+            let m = g.int(1, 250);
+            let d = g.int(1, 8);
+            let k = g.int(1, 12);
+            let threads = g.int(1, 6);
+            let reps = g.cloud(m, d, 2.0);
+            let cents = g.cloud(k, d, 2.0);
+
+            let c1 = counter();
+            let serial = SerialAssigner.assign_top2(&reps, d, &cents, &c1);
+            let c2 = counter();
+            let sharded = ShardedAssigner { threads }.assign_top2(&reps, d, &cents, &c2);
+            let c3 = counter();
+            let pruned = NormPrunedAssigner.assign_top2(&reps, d, &cents, &c3);
+
+            // Sharded: identical output AND identical count.
+            assert_eq!(serial, sharded);
+            assert_eq!(c1.get(), c2.get());
+            // Pruned: identical output, count never exceeds the exact
+            // backends' n·k plus its documented norm overhead.
+            assert_eq!(serial, pruned);
+            assert!(c3.get() <= c1.get() + (k + m) as u64, "{} vs {}", c3.get(), c1.get());
+        });
+    }
+
+    #[test]
+    fn prop_weighted_step_backend_independent() {
+        prop::check("step-backend-equivalence", 20, |g| {
+            let m = g.int(1, 150);
+            let d = g.int(1, 5);
+            let k = g.int(1, 6);
+            let reps = g.cloud(m, d, 2.0);
+            let weights: Vec<f64> = (0..m).map(|_| g.int(1, 9) as f64).collect();
+            let cents = g.cloud(k, d, 2.0);
+            let threads = g.int(1, 5);
+
+            let c1 = counter();
+            let a = weighted_step(&mut SerialAssigner, &reps, &weights, d, &cents, &c1);
+            let c2 = counter();
+            let b = weighted_step(
+                &mut ShardedAssigner { threads },
+                &reps,
+                &weights,
+                d,
+                &cents,
+                &c2,
+            );
+            // Serial accumulation makes even werr and the updated
+            // centroids bit-identical, not merely close.
+            assert_eq!(a.assign, b.assign);
+            assert_eq!(a.d1, b.d1);
+            assert_eq!(a.d2, b.d2);
+            assert_eq!(a.werr.to_bits(), b.werr.to_bits());
+            assert_eq!(a.centroids, b.centroids);
+            assert_eq!(c1.get(), c2.get());
+        });
+    }
+
+    #[test]
+    fn prop_matches_reference_nearest2_tolerance() {
+        // Against the plain-summation *reference* kernel the contract is
+        // exact indices/counts and 1e-12 on values (DESIGN.md §2.1).
+        prop::check("engine-vs-nearest2", 25, |g| {
+            let m = g.int(1, 120);
+            let d = g.int(1, 6);
+            let k = g.int(1, 8);
+            let reps = g.cloud(m, d, 3.0);
+            let cents = g.cloud(k, d, 3.0);
+            let c1 = counter();
+            let out = SerialAssigner.assign_top2(&reps, d, &cents, &c1);
+            let c2 = counter();
+            for i in 0..m {
+                let (ii, dd1, dd2) =
+                    crate::metrics::nearest2(&reps[i * d..(i + 1) * d], &cents, d, &c2);
+                assert_eq!(out.assign[i], ii as u32);
+                assert!((out.d1[i] - dd1).abs() < 1e-12);
+                if dd2.is_finite() {
+                    assert!((out.d2[i] - dd2).abs() < 1e-12);
+                }
+            }
+            assert_eq!(c1.get(), c2.get());
+        });
+    }
+
+    #[test]
+    fn tie_break_lowest_index_wins() {
+        // Two coincident centroids: strict `<` keeps the first.
+        let cents = [1.0, 0.0, 1.0, 0.0, 5.0, 0.0];
+        let out = SerialAssigner.assign_top2(&[0.0, 0.0], 2, &cents, &counter());
+        assert_eq!(out.assign, vec![0]);
+        assert_eq!(out.d1, vec![1.0]);
+        assert_eq!(out.d2, vec![1.0]); // the duplicate is the runner-up
+    }
+
+    #[test]
+    fn single_centroid_d2_infinite() {
+        let out = SerialAssigner.assign_top2(&[3.0], 1, &[1.0], &counter());
+        assert_eq!(out.assign, vec![0]);
+        assert_eq!(out.d1, vec![4.0]);
+        assert!(out.d2[0].is_infinite());
+    }
+
+    #[test]
+    fn empty_input_counts_nothing() {
+        let c = counter();
+        let out = SerialAssigner.assign_top2(&[], 3, &[0.0, 0.0, 0.0], &c);
+        assert!(out.assign.is_empty());
+        assert_eq!(c.get(), 0);
+    }
+
+    #[test]
+    fn block_boundaries_are_seamless() {
+        // m straddling POINT_BLOCK and k straddling CENT_TILE: the tiled
+        // state handoff must not disturb results at the seams.
+        let mut g = prop::Gen { rng: crate::util::Rng::new(7), case: 0 };
+        for &(m, k) in &[
+            (POINT_BLOCK - 1, CENT_TILE),
+            (POINT_BLOCK, CENT_TILE + 1),
+            (POINT_BLOCK + 1, 2 * CENT_TILE + 3),
+            (3 * POINT_BLOCK + 5, 1),
+        ] {
+            let d = 3;
+            let reps = g.cloud(m, d, 2.0);
+            let cents = g.cloud(k, d, 2.0);
+            let c1 = counter();
+            let eng = SerialAssigner.assign_top2(&reps, d, &cents, &c1);
+            let c2 = counter();
+            let reference = retired_reference(&reps, d, &cents, &c2);
+            assert_eq!(eng, reference, "m={m} k={k}");
+            assert_eq!(c1.get(), (m * k) as u64);
+        }
+    }
+
+    #[test]
+    fn shard_ranges_cover_and_order() {
+        for n in [0usize, 1, 7, 10, 64, 65] {
+            for shards in 1..=12 {
+                let ranges = shard_ranges(n, shards);
+                let total: usize = ranges.iter().map(|r| r.len()).sum();
+                assert_eq!(total, n);
+                let mut prev = 0;
+                for r in &ranges {
+                    assert_eq!(r.start, prev);
+                    prev = r.end;
+                }
+                // Near-equal: lengths differ by at most one.
+                let lens: Vec<usize> = ranges.iter().map(|r| r.len()).collect();
+                let (lo, hi) = (lens.iter().min().unwrap(), lens.iter().max().unwrap());
+                assert!(hi - lo <= 1);
+            }
+        }
+    }
+
+    #[test]
+    fn sq_dist_row_fills_all_k() {
+        let c = counter();
+        let cents = [0.0, 0.0, 3.0, 0.0, 0.0, 4.0];
+        let mut row = vec![0.0; 3];
+        let (i1, b1) = sq_dist_row(&[0.0, 0.0], &cents, 2, &mut row, &c);
+        assert_eq!(i1, 0);
+        assert_eq!(b1, 0.0);
+        assert_eq!(row, vec![0.0, 9.0, 16.0]);
+        assert_eq!(c.get(), 3);
+    }
+
+    #[test]
+    fn norm_pruned_actually_prunes_separated_clusters() {
+        // Radially spread centroids: the norm bound removes most
+        // candidates once the top-2 tightens.
+        let mut g = prop::Gen { rng: crate::util::Rng::new(21), case: 0 };
+        let d = 3;
+        let k = 32;
+        let m = 2000;
+        // Centroids at widely different radii.
+        let mut cents = Vec::with_capacity(k * d);
+        for c in 0..k {
+            let r = 1.0 + 10.0 * c as f64;
+            cents.extend_from_slice(&[r, 0.0, 0.0]);
+        }
+        let reps: Vec<f64> = (0..m)
+            .flat_map(|_| {
+                let c = g.rng.usize(k);
+                let r = 1.0 + 10.0 * c as f64;
+                vec![r + g.rng.normal() * 0.1, g.rng.normal() * 0.1, g.rng.normal() * 0.1]
+            })
+            .collect();
+        let c_exact = counter();
+        let exact = SerialAssigner.assign_top2(&reps, d, &cents, &c_exact);
+        let c_pruned = counter();
+        let pruned = NormPrunedAssigner.assign_top2(&reps, d, &cents, &c_pruned);
+        assert_eq!(exact, pruned);
+        assert!(
+            c_pruned.get() < c_exact.get() / 2,
+            "pruned {} vs exact {}",
+            c_pruned.get(),
+            c_exact.get()
+        );
+    }
+}

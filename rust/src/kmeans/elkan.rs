@@ -5,10 +5,21 @@
 //!
 //! Stronger pruning than Hamerly at O(m·k) bound memory (Hamerly keeps 2
 //! bounds — see [`super::pruning`]); both reach the same fixed point as the
-//! plain stepper and count only the distances they actually compute.
+//! plain stepper and count only the distances they actually compute
+//! (DESIGN.md §2.4). The exact first pass — the *fallback path* that
+//! initializes every bound with a full distance row — runs through the
+//! shared assignment engine's `sq_dist_row` (see DESIGN.md §2.6), since
+//! it is the one place Elkan needs all k distances rather than the top 2.
+//! Every point↔centroid distance — the first pass *and* the in-loop
+//! tighten/reassign computations — goes through the engine's canonical
+//! kernel, so the cached bounds are always consistent with the distances
+//! they are later compared against; `geometry::dist` remains only for the
+//! centroid↔centroid bookkeeping (drifts, s(c)).
 
 use crate::geometry::dist;
 use crate::metrics::DistanceCounter;
+
+use super::assign::{dist_kernel, sq_dist_row};
 
 /// Outcome of an Elkan-accelerated weighted-Lloyd run.
 #[derive(Clone, Debug)]
@@ -41,21 +52,19 @@ pub fn elkan_weighted_lloyd(
     let mut sums = vec![0.0f64; k * d];
     let mut counts = vec![0.0f64; k];
 
-    // First pass: exact assignment, initialize all bounds.
+    // First pass (the exact fallback): full distance rows through the
+    // engine, then bounds from their square roots. argmin over squared
+    // distances equals argmin over metric distances (sqrt is monotone),
+    // and the engine counts the same k per representative.
+    let mut row = vec![0.0f64; k];
     for i in 0..m {
         let p = &reps[i * d..(i + 1) * d];
-        let (mut i1, mut b1) = (0usize, f64::INFINITY);
+        let (i1, b1_sq) = sq_dist_row(p, centroids.as_slice(), d, &mut row, counter);
         for c in 0..k {
-            let dd = dist(p, &centroids[c * d..(c + 1) * d]);
-            lower[i * k + c] = dd;
-            if dd < b1 {
-                b1 = dd;
-                i1 = c;
-            }
+            lower[i * k + c] = row[c].sqrt();
         }
-        counter.add(k as u64);
         assign[i] = i1 as u32;
-        upper[i] = b1;
+        upper[i] = b1_sq.sqrt();
         upper_stale[i] = false;
         let w = weights[i];
         counts[i1] += w;
@@ -137,7 +146,7 @@ pub fn elkan_weighted_lloyd(
                 }
                 // Tighten the upper bound once per point per iteration.
                 if upper_stale[i] {
-                    let du = dist(p, &centroids[cur * d..(cur + 1) * d]);
+                    let du = dist_kernel(p, &centroids[cur * d..(cur + 1) * d]);
                     counter.add(1);
                     upper[i] = du;
                     lower[i * k + cur] = du;
@@ -146,7 +155,7 @@ pub fn elkan_weighted_lloyd(
                         continue;
                     }
                 }
-                let dc = dist(p, &centroids[c * d..(c + 1) * d]);
+                let dc = dist_kernel(p, &centroids[c * d..(c + 1) * d]);
                 counter.add(1);
                 lower[i * k + c] = dc;
                 if dc < upper[i] {

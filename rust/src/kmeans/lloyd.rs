@@ -1,9 +1,10 @@
 //! Lloyd's algorithm over a full dataset (paper §1.2) with the Eq. 2
 //! stopping criterion — the engine behind the FKM / KM++ / KMC2 baselines.
 //!
-//! Implemented as weighted Lloyd with unit weights; the error E^D(C) falls
-//! out of the assignment step, so the stopping criterion costs no extra
-//! distance computations.
+//! Implemented as weighted Lloyd with unit weights — and therefore on the
+//! unified assignment engine (DESIGN.md §2) like every other method; the
+//! error E^D(C) falls out of the assignment step, so the stopping
+//! criterion costs no extra distance computations.
 
 use crate::metrics::{Budget, DistanceCounter};
 

@@ -1,14 +1,16 @@
 //! Mini-batch K-means (Sculley [31]) — the paper's MB baseline with
 //! batch sizes b ∈ {100, 500, 1000}.
 //!
-//! Per iteration: sample b points uniformly, assign each to its nearest
-//! centroid (b·k distances), then move each selected centroid toward the
-//! batch points with per-center learning rate 1/v[c], where v[c] counts all
-//! samples ever assigned to c.
+//! Per iteration: sample b points uniformly, assign the gathered batch
+//! through the shared assignment engine (DESIGN.md §2; b·k distances,
+//! identical accounting to the retired per-point `nearest` loop), then
+//! move each selected centroid toward the batch points with per-center
+//! learning rate 1/v[c], where v[c] counts all samples ever assigned to c.
 
-use crate::metrics::{nearest, Budget, DistanceCounter};
+use crate::metrics::{Budget, DistanceCounter};
 use crate::util::Rng;
 
+use super::assign::{Assigner, SerialAssigner};
 use super::init::forgy;
 use super::KmResult;
 
@@ -42,25 +44,33 @@ pub fn minibatch_kmeans(
     let mut v = vec![0u64; k]; // per-center sample counts
     let mut iters = 0;
 
-    let mut batch_assign = vec![0usize; cfg.batch];
+    let mut engine = SerialAssigner;
     let mut batch_idx = vec![0usize; cfg.batch];
+    // Gather scratch: the sampled rows, contiguous for the blocked kernel.
+    let mut batch_points = vec![0.0f64; cfg.batch * d];
 
     for _ in 0..cfg.max_iters {
         if cfg.budget.exceeded(counter) {
             break;
         }
         iters += 1;
-        // Sample and cache assignments (Sculley caches per-batch).
+        // Sample, then assign the whole batch in one engine pass (Sculley
+        // caches assignments per batch; same rng draw order as before).
         for b in 0..cfg.batch {
             let i = rng.usize(n);
             batch_idx[b] = i;
-            let (c, _) = nearest(&data[i * d..(i + 1) * d], &centroids, d, counter);
-            batch_assign[b] = c;
+            batch_points[b * d..(b + 1) * d].copy_from_slice(&data[i * d..(i + 1) * d]);
         }
+        // The engine's top-2 byproduct (d1/d2) goes unused here; that (and
+        // the per-batch AssignOut allocation) is the accepted price of
+        // running every method on the one canonical kernel (DESIGN.md §2)
+        // — it is O(b) against the O(b·k·d) distance work.
+        let top2 = engine.assign_top2(&batch_points, d, &centroids, counter);
+        let batch_assign = &top2.assign;
         // Gradient step with per-center rates.
         let mut max_shift2 = 0.0f64;
         for b in 0..cfg.batch {
-            let c = batch_assign[b];
+            let c = batch_assign[b] as usize;
             v[c] += 1;
             let eta = 1.0 / v[c] as f64;
             let x = &data[batch_idx[b] * d..(batch_idx[b] + 1) * d];

@@ -1,8 +1,18 @@
-//! K-means engines: the weighted Lloyd core (paper Alg. 1 steps 2/4, used
-//! by BWKM and RPKM), plain Lloyd over a dataset, the seeding algorithms
-//! (Forgy, K-means++, AFK-MC²) and Mini-batch K-means — every baseline of
-//! the paper's §3 — all with exact distance accounting.
+//! K-means engines: the unified assignment engine ([`assign`], DESIGN.md
+//! §2 — the one nearest/top-2 distance hot path every method shares), the
+//! weighted Lloyd outer loop (paper Alg. 1 steps 2/4, used by BWKM and
+//! RPKM), plain Lloyd over a dataset, the seeding algorithms (Forgy,
+//! K-means++, AFK-MC²) and Mini-batch K-means — every baseline of the
+//! paper's §3 — all with exact distance accounting.
+//!
+//! Layering (DESIGN.md §1/§2): [`assign`] owns the distance kernel and its
+//! counting/tie-breaking/determinism contract; [`weighted_lloyd`] owns the
+//! iteration and stopping logic over any [`Stepper`]; [`elkan`] and
+//! [`pruning`] are the exact accelerated variants (they count only what
+//! they compute); [`lloyd`] and [`minibatch`] are the full-dataset
+//! baselines of the paper's evaluation.
 
+pub mod assign;
 pub mod elkan;
 pub mod init;
 pub mod lloyd;
@@ -10,6 +20,7 @@ pub mod minibatch;
 pub mod pruning;
 pub mod weighted_lloyd;
 
+pub use assign::{Assigner, AssignOut, NormPrunedAssigner, SerialAssigner, ShardedAssigner};
 pub use elkan::{elkan_weighted_lloyd, ElkanOutcome};
 pub use lloyd::{lloyd, LloydCfg, LloydOutcome};
 pub use minibatch::{minibatch_kmeans, MiniBatchCfg};

@@ -1,4 +1,4 @@
-//! Weighted Lloyd's algorithm — the engine under both BWKM and RPKM
+//! Weighted Lloyd's algorithm — the outer loop under both BWKM and RPKM
 //! (paper §1.2.2.1): Lloyd's iterations over the representatives of a
 //! dataset partition, weighting each representative by its cardinality.
 //!
@@ -9,8 +9,15 @@
 //! nearest distances are retained because BWKM's misassignment function
 //! (Eq. 3) needs δ_P(C) = ‖P̄−c₂‖ − ‖P̄−c₁‖ for every representative —
 //! they fall out of the assignment step for free.
+//!
+//! The distance hot path itself lives in [`super::assign`] (DESIGN.md §2):
+//! [`NativeStepper`] is a thin adapter binding the outer loop to the
+//! serial assignment engine, and `coordinator::ShardedStepper` binds it to
+//! the sharded one. This module owns only the iteration/stopping logic.
 
 use crate::metrics::{Budget, DistanceCounter};
+
+use super::assign::{weighted_step_with, SerialAssigner, StepScratch};
 
 /// Result of one weighted-Lloyd iteration.
 #[derive(Clone, Debug)]
@@ -41,13 +48,18 @@ pub trait Stepper {
     ) -> StepOut;
 }
 
-/// The native (pure Rust) stepper — the optimized hot path.
-#[derive(Default)]
+/// The native (pure Rust) stepper — a thin adapter binding the weighted
+/// outer loop to the serial assignment engine
+/// ([`super::assign::SerialAssigner`]). The blocked, cache-tiled top-2
+/// kernel, the monomorphized fixed-`D` fast paths and the m·k distance
+/// accounting all live in [`super::assign`] now; this type only exists so
+/// the [`Stepper`] plug-point (native / sharded / PJRT) stays intact.
+#[derive(Clone, Debug, Default)]
 pub struct NativeStepper {
-    // Scratch buffers reused across iterations (no per-iteration allocation
-    // in the hot loop).
-    sums: Vec<f64>,
-    counts: Vec<f64>,
+    engine: SerialAssigner,
+    // Cluster-aggregate scratch reused across iterations (no per-iteration
+    // allocation in the hot loop, as in the retired stepper).
+    scratch: StepScratch,
 }
 
 impl NativeStepper {
@@ -65,189 +77,15 @@ impl Stepper for NativeStepper {
         centroids: &[f64],
         counter: &DistanceCounter,
     ) -> StepOut {
-        // Dispatch to a monomorphized body for the dimensions the Table-1
-        // workloads actually use: constant trip counts let LLVM fully
-        // unroll + vectorize the distance loop (§Perf iteration 1:
-        // 1.3–2.1x on the d=19/d=5 sweeps).
-        match d {
-            2 => self.step_d::<2>(reps, weights, centroids, counter),
-            3 => self.step_d::<3>(reps, weights, centroids, counter),
-            4 => self.step_d::<4>(reps, weights, centroids, counter),
-            5 => self.step_d::<5>(reps, weights, centroids, counter),
-            17 => self.step_d::<17>(reps, weights, centroids, counter),
-            19 => self.step_d::<19>(reps, weights, centroids, counter),
-            20 => self.step_d::<20>(reps, weights, centroids, counter),
-            _ => self.step_dyn(reps, weights, d, centroids, counter),
-        }
-    }
-}
-
-macro_rules! step_body {
-    ($self:ident, $reps:ident, $weights:ident, $d:ident, $centroids:ident, $counter:ident) => {{
-        let m = $weights.len();
-        let k = $centroids.len() / $d;
-        let mut assign = vec![0u32; m];
-        let mut d1 = vec![0.0; m];
-        let mut d2 = vec![0.0; m];
-        $self.sums.clear();
-        $self.sums.resize(k * $d, 0.0);
-        $self.counts.clear();
-        $self.counts.resize(k, 0.0);
-        let mut werr = 0.0;
-
-        for i in 0..m {
-            let p = &$reps[i * $d..i * $d + $d];
-            // Inlined top-2 scan (see metrics::nearest2); kept local so the
-            // compiler fuses the assignment and accumulation loops.
-            let (mut i1, mut b1, mut b2) = (0usize, f64::INFINITY, f64::INFINITY);
-            for c in 0..k {
-                let q = &$centroids[c * $d..c * $d + $d];
-                // 4-way split accumulators: FP adds can't be reassociated
-                // by the compiler, so a single `acc` serializes the whole
-                // distance on the FPU add latency (§Perf iteration 2).
-                let (mut a0, mut a1, mut a2, mut a3) = (0.0f64, 0.0, 0.0, 0.0);
-                let mut j = 0;
-                while j + 4 <= $d {
-                    let t0 = p[j] - q[j];
-                    let t1 = p[j + 1] - q[j + 1];
-                    let t2 = p[j + 2] - q[j + 2];
-                    let t3 = p[j + 3] - q[j + 3];
-                    a0 += t0 * t0;
-                    a1 += t1 * t1;
-                    a2 += t2 * t2;
-                    a3 += t3 * t3;
-                    j += 4;
-                }
-                while j < $d {
-                    let t = p[j] - q[j];
-                    a0 += t * t;
-                    j += 1;
-                }
-                let acc = (a0 + a1) + (a2 + a3);
-                if acc < b1 {
-                    b2 = b1;
-                    b1 = acc;
-                    i1 = c;
-                } else if acc < b2 {
-                    b2 = acc;
-                }
-            }
-            assign[i] = i1 as u32;
-            d1[i] = b1;
-            d2[i] = b2;
-            let w = $weights[i];
-            werr += w * b1;
-            let s = &mut $self.sums[i1 * $d..i1 * $d + $d];
-            for j in 0..$d {
-                s[j] += w * p[j];
-            }
-            $self.counts[i1] += w;
-        }
-        $counter.add((m * k) as u64);
-
-        // Update step: centers of mass; empty clusters keep their centroid.
-        let mut out = $centroids.to_vec();
-        for c in 0..k {
-            if $self.counts[c] > 0.0 {
-                let inv = 1.0 / $self.counts[c];
-                for j in 0..$d {
-                    out[c * $d + j] = $self.sums[c * $d + j] * inv;
-                }
-            }
-        }
-        StepOut { centroids: out, assign, d1, d2, werr }
-    }};
-}
-
-impl NativeStepper {
-    /// Monomorphized step: `D` is a compile-time constant, and each point
-    /// is hoisted into a fixed-size array so it lives in registers across
-    /// the whole centroid scan (§Perf iteration 3).
-    fn step_d<const D: usize>(
-        &mut self,
-        reps: &[f64],
-        weights: &[f64],
-        centroids: &[f64],
-        counter: &DistanceCounter,
-    ) -> StepOut {
-        let m = weights.len();
-        let k = centroids.len() / D;
-        let mut assign = vec![0u32; m];
-        let mut d1 = vec![0.0; m];
-        let mut d2 = vec![0.0; m];
-        self.sums.clear();
-        self.sums.resize(k * D, 0.0);
-        self.counts.clear();
-        self.counts.resize(k, 0.0);
-        let mut werr = 0.0;
-
-        for i in 0..m {
-            let p: &[f64; D] = reps[i * D..i * D + D].try_into().unwrap();
-            let (mut i1, mut b1, mut b2) = (0usize, f64::INFINITY, f64::INFINITY);
-            for c in 0..k {
-                let q: &[f64; D] = centroids[c * D..c * D + D].try_into().unwrap();
-                let (mut a0, mut a1, mut a2, mut a3) = (0.0f64, 0.0, 0.0, 0.0);
-                let mut j = 0;
-                while j + 4 <= D {
-                    let t0 = p[j] - q[j];
-                    let t1 = p[j + 1] - q[j + 1];
-                    let t2 = p[j + 2] - q[j + 2];
-                    let t3 = p[j + 3] - q[j + 3];
-                    a0 += t0 * t0;
-                    a1 += t1 * t1;
-                    a2 += t2 * t2;
-                    a3 += t3 * t3;
-                    j += 4;
-                }
-                while j < D {
-                    let t = p[j] - q[j];
-                    a0 += t * t;
-                    j += 1;
-                }
-                let acc = (a0 + a1) + (a2 + a3);
-                if acc < b1 {
-                    b2 = b1;
-                    b1 = acc;
-                    i1 = c;
-                } else if acc < b2 {
-                    b2 = acc;
-                }
-            }
-            assign[i] = i1 as u32;
-            d1[i] = b1;
-            d2[i] = b2;
-            let w = weights[i];
-            werr += w * b1;
-            let s = &mut self.sums[i1 * D..i1 * D + D];
-            for j in 0..D {
-                s[j] += w * p[j];
-            }
-            self.counts[i1] += w;
-        }
-        counter.add((m * k) as u64);
-
-        let mut out = centroids.to_vec();
-        for c in 0..k {
-            if self.counts[c] > 0.0 {
-                let inv = 1.0 / self.counts[c];
-                for j in 0..D {
-                    out[c * D + j] = self.sums[c * D + j] * inv;
-                }
-            }
-        }
-        StepOut { centroids: out, assign, d1, d2, werr }
-    }
-
-    /// Fallback for uncommon dimensions.
-    fn step_dyn(
-        &mut self,
-        reps: &[f64],
-        weights: &[f64],
-        d: usize,
-        centroids: &[f64],
-        counter: &DistanceCounter,
-    ) -> StepOut {
-        step_body!(self, reps, weights, d, centroids, counter)
+        weighted_step_with(
+            &mut self.engine,
+            &mut self.scratch,
+            reps,
+            weights,
+            d,
+            centroids,
+            counter,
+        )
     }
 }
 

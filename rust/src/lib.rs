@@ -2,12 +2,14 @@
 //!
 //! Production-shaped reproduction of Capó, Pérez & Lozano (2018),
 //! *"An efficient K-means clustering algorithm for massive data"*, as a
-//! three-layer Rust + JAX + Pallas system (see `DESIGN.md`):
+//! three-layer Rust + JAX + Pallas system (DESIGN.md §1):
 //!
 //! * **L3 (this crate)** — the BWKM coordinator: spatial partitions,
 //!   boundary detection, the Alg. 2–5 pipeline, every baseline of the
-//!   paper's evaluation, exact distance accounting, a sharded
-//!   leader/worker runtime and the bench harness regenerating Figures 2–6.
+//!   paper's evaluation, the unified assignment engine every method's
+//!   distance hot path runs through ([`kmeans::assign`], DESIGN.md §2),
+//!   exact distance accounting, a sharded leader/worker runtime and the
+//!   bench harness regenerating Figures 2–6.
 //! * **L2/L1 (python/, build-time only)** — the weighted-Lloyd step and a
 //!   Pallas distance+top-2 kernel, AOT-lowered to HLO text artifacts that
 //!   [`runtime`] loads and executes through PJRT (`xla` crate).
@@ -17,11 +19,18 @@
 //! ```no_run
 //! use bwkm::prelude::*;
 //!
-//! let ds = bwkm::data::simulate("WUY", 0.001, 42).unwrap();
+//! let ds = bwkm::data::simulate("WUY", 0.001, 42).expect("known Table-1 name");
 //! let counter = DistanceCounter::new();
-//! let cfg = BwkmCfg::for_dataset(ds.n, ds.d, 9);
+//! let mut cfg = BwkmCfg::for_dataset(ds.n, ds.d, 9);
+//! cfg.eval_full_error = true; // trace E^D per outer iteration (uncounted)
 //! let out = bwkm::bwkm::run(&ds, 9, &cfg, &mut Rng::new(7), &counter);
-//! println!("E^D = {} after {} distances", out.trace.last().unwrap().full_error.unwrap_or(f64::NAN), counter.get());
+//! let last = out.trace.last().expect("at least one outer iteration");
+//! println!(
+//!     "E^D = {:.4e} after {} distances (stop: {:?})",
+//!     last.full_error.unwrap_or(f64::NAN),
+//!     counter.get(),
+//!     out.stop,
+//! );
 //! ```
 
 pub mod bench;

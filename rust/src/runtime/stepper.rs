@@ -1,9 +1,13 @@
 //! [`PjrtStepper`]: the weighted-Lloyd [`Stepper`] backed by the AOT
 //! artifacts, so `bwkm::run_with` executes its inner loop on the compiled
-//! L2/L1 stack. Falls back to the native stepper for shapes no variant
-//! covers (e.g. a partition that outgrew the largest mcap tier), counting
-//! the same m·k distances either way — the accounting is algorithmic, not
-//! backend-dependent.
+//! L2/L1 stack. Falls back to the native stepper — and through it to the
+//! serial assignment engine (DESIGN.md §2) — for shapes no variant covers
+//! (e.g. a partition that outgrew the largest mcap tier), counting the
+//! same m·k distances either way: the accounting is algorithmic, not
+//! backend-dependent (DESIGN.md §2.4). Future device backends plug in
+//! exactly like this one: implement [`Stepper`] — or the engine's
+//! `Assigner` trait for bare assignment — and honor the DESIGN.md §2
+//! contract.
 
 use crate::kmeans::{NativeStepper, StepOut, Stepper};
 use crate::metrics::DistanceCounter;

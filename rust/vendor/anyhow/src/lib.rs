@@ -1,0 +1,151 @@
+//! Minimal offline stand-in for the `anyhow` crate (DESIGN.md §4: the
+//! crates.io mirror is unavailable, so the one error-handling dependency
+//! is vendored as this shim). It implements exactly the surface the bwkm
+//! crate uses: [`Error`], [`Result`], `anyhow!`, `bail!`, and the
+//! [`Context`] extension for `Result` and `Option`.
+//!
+//! Semantics are intentionally simplified relative to upstream: the error
+//! is a flattened message string (context is prepended as
+//! `"context: cause"`) rather than a source chain, and there is no
+//! downcasting — nothing in this repository uses either.
+
+use std::fmt;
+
+/// Flattened-message error type (stand-in for `anyhow::Error`).
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct from anything displayable (stand-in for `Error::msg`).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// The same blanket conversion upstream anyhow provides; coherent because
+// `Error` itself deliberately does NOT implement `std::error::Error`.
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// `anyhow::Result` alias: `Result<T>` defaults the error to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to a failure (stand-in for `anyhow::Context`).
+pub trait Context<T, E> {
+    /// Wrap the error/none case with a fixed context message.
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display;
+
+    /// Wrap the error/none case with a lazily evaluated context message.
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: fmt::Display> Context<T, E> for std::result::Result<T, E> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display,
+    {
+        self.map_err(|e| Error::msg(format!("{context}: {e}")))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display,
+    {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Build an [`Error`] from a format string (stand-in for `anyhow!`).
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Early-return an `Err(anyhow!(...))` (stand-in for `bail!`).
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &str) -> Result<usize> {
+        let n: usize = v.parse().context("not a number")?;
+        if n == 0 {
+            bail!("zero is not allowed (got `{v}`)");
+        }
+        Ok(n)
+    }
+
+    #[test]
+    fn context_and_bail_and_question_mark() {
+        assert_eq!(parse("7").unwrap(), 7);
+        assert_eq!(parse("x").unwrap_err().to_string(), "not a number: invalid digit found in string");
+        assert_eq!(parse("0").unwrap_err().to_string(), "zero is not allowed (got `0`)");
+    }
+
+    #[test]
+    fn option_context() {
+        let none: Option<u32> = None;
+        assert_eq!(none.context("missing").unwrap_err().to_string(), "missing");
+        assert_eq!(Some(3u32).with_context(|| "unused").unwrap(), 3);
+    }
+
+    #[test]
+    fn from_std_error_via_question_mark() {
+        fn io() -> Result<String> {
+            Ok(std::fs::read_to_string("/definitely/not/a/real/path/42")?)
+        }
+        let e = io().unwrap_err();
+        assert!(!e.to_string().is_empty());
+        assert_eq!(format!("{e}"), format!("{e:?}"));
+    }
+}

@@ -1,0 +1,98 @@
+//! Offline stub of the `xla` crate surface `bwkm::runtime` uses
+//! (DESIGN.md §4). The real PJRT bindings cannot be built without network
+//! access and a PJRT plugin, so every entry point reports unavailability.
+//! The runtime then degrades exactly as it does when AOT artifacts are
+//! absent: `Runtime::open` fails, `PjrtStepper` is never constructed (or
+//! its `wlloyd_step` errors and the native fallback serves the step), the
+//! benches print their "PJRT column skipped" note, and `bwkm info`
+//! reports "no artifacts found". Swap this path dependency for the real
+//! `xla` crate to light the device path up — no bwkm source changes
+//! needed (the type surface matches what the runtime calls).
+
+use std::fmt;
+
+/// Stub error carrying a fixed unavailability message; the runtime only
+/// ever formats it with `{:?}`.
+pub struct Error(pub String);
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+fn unavailable() -> Error {
+    Error("vendored offline xla stub: no PJRT runtime in this build".to_string())
+}
+
+/// Stub of the PJRT CPU client; construction always fails.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        Err(unavailable())
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        Err(unavailable())
+    }
+}
+
+/// Stub of a parsed HLO module; parsing always fails.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto, Error> {
+        Err(unavailable())
+    }
+}
+
+/// Stub computation wrapper (constructible — it carries no state).
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Stub compiled executable; execution always fails.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(unavailable())
+    }
+}
+
+/// Stub device buffer.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Err(unavailable())
+    }
+}
+
+/// Stub host literal. Shape-free: construction/reshape succeed (they are
+/// pure host bookkeeping) and every data access fails.
+#[derive(Clone)]
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1<T: Copy>(_data: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, Error> {
+        Ok(Literal)
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, Error> {
+        Err(unavailable())
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>, Error> {
+        Err(unavailable())
+    }
+}
