@@ -1,16 +1,21 @@
-//! Exp A3 — Hamerly distance pruning inside weighted Lloyd (the paper's
-//! §4 future-work integration, refs [13]/[15]): plain vs pruned weighted
-//! Lloyd over the representatives of a BWKM-like partition of the GS
-//! simulator, K = 27. Reports distances actually computed and the
-//! reduction factor ([15] reports >80% on favourable data).
+//! Exp A3 — distance pruning inside weighted Lloyd (the paper's §4
+//! future-work integration, refs [13]/[15]): plain vs Hamerly-pruned vs
+//! the engine's cross-iteration bounded backend (which now also powers
+//! `kmeans::elkan`) vs the auto-selecting backend, over the
+//! representatives of a BWKM-like partition of the GS simulator, K = 27.
+//! Reports distances actually computed, the reduction factor ([15]
+//! reports >80% on favourable data), the bounded backend's per-warm-step
+//! prune rate, and the per-step engine choices `AutoAssigner` logged on
+//! its counter (DESIGN.md §2.7).
 
 use bwkm::bench::{env_f64, write_csv};
 use bwkm::bwkm::{initial_partition, InitCfg};
 use bwkm::data::simulate;
+use bwkm::kmeans::assign::AutoAssigner;
 use bwkm::kmeans::elkan::elkan_weighted_lloyd;
 use bwkm::kmeans::init::weighted_kmeanspp;
 use bwkm::kmeans::pruning::pruned_weighted_lloyd;
-use bwkm::kmeans::{weighted_lloyd, WLloydCfg};
+use bwkm::kmeans::{weighted_lloyd, weighted_lloyd_with, EngineStepper, WLloydCfg};
 use bwkm::metrics::DistanceCounter;
 use bwkm::util::{fmt_count, Rng};
 
@@ -28,53 +33,117 @@ fn main() {
     let p = initial_partition(&ds, K, &cfg, &mut rng, &c0);
     let (reps, weights, _) = p.reps_weights();
     let init = weighted_kmeanspp(&reps, &weights, ds.d, K, &mut rng, &c0);
+    let m_reps = weights.len();
     println!(
-        "=== Ablation A3: pruning (GS sim, n={}, |P|={}, K={K}) ===",
-        ds.n,
-        weights.len()
+        "=== Ablation A3: pruning (GS sim, n={}, |P|={m_reps}, K={K}) ===",
+        ds.n
     );
 
+    let wl_cfg = WLloydCfg { max_iters: 100, tol: 0.0, ..Default::default() };
     let plain = DistanceCounter::new();
-    let out_plain = weighted_lloyd(
-        &reps,
-        &weights,
-        ds.d,
-        &init,
-        &WLloydCfg { max_iters: 100, tol: 0.0, ..Default::default() },
-        &plain,
-    );
+    let out_plain = weighted_lloyd(&reps, &weights, ds.d, &init, &wl_cfg, &plain);
     let hamerly = DistanceCounter::new();
     let out_hamerly = pruned_weighted_lloyd(&reps, &weights, ds.d, &init, 100, &hamerly);
-    let elkan = DistanceCounter::new();
-    let out_elkan = elkan_weighted_lloyd(&reps, &weights, ds.d, &init, 100, &elkan);
+    let bounded = DistanceCounter::new();
+    let out_bounded = elkan_weighted_lloyd(&reps, &weights, ds.d, &init, 100, &bounded);
+    let auto = DistanceCounter::new();
+    let mut auto_stepper: EngineStepper<AutoAssigner> = EngineStepper::new();
+    let out_auto =
+        weighted_lloyd_with(&mut auto_stepper, &reps, &weights, ds.d, &init, &wl_cfg, &auto);
+
+    // Bounded prune rate: fraction of the warm-iteration pair bill the
+    // bounds skipped (the priming pass pays m·k by contract).
+    let bill = (m_reps * K) as u64;
+    let bounded_warm_bill = bill * (out_bounded.iters as u64).saturating_sub(1);
+    let bounded_warm_paid = bounded.get().saturating_sub(bill);
+    let bounded_prune_rate = if bounded_warm_bill > 0 {
+        1.0 - bounded_warm_paid as f64 / bounded_warm_bill as f64
+    } else {
+        0.0
+    };
+    // Auto choice summary: the assigner's structured tallies (the
+    // counter's note log carries the same per-step choices for replay).
+    let (auto_serial, auto_normpruned, auto_bounded) = auto_stepper.engine().choice_counts();
+    let auto_summary =
+        format!("serial:{auto_serial} bounded:{auto_bounded} normpruned:{auto_normpruned}");
 
     let drift = |a: &[f64], b: &[f64]| -> f64 {
         a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max)
     };
     let d_h = drift(&out_plain.centroids, &out_hamerly.centroids);
-    let d_e = drift(&out_plain.centroids, &out_elkan.centroids);
+    let d_b = drift(&out_plain.centroids, &out_bounded.centroids);
+    let d_a = drift(&out_plain.centroids, &out_auto.centroids);
     let saved = |c: &DistanceCounter| 100.0 * (1.0 - c.get() as f64 / plain.get() as f64);
-    println!("{:<10} {:>14} {:>8} {:>8}", "variant", "distances", "iters", "saved");
-    println!("{:<10} {:>14} {:>8} {:>8}", "plain", fmt_count(plain.get()), out_plain.iters, "-");
     println!(
-        "{:<10} {:>14} {:>8} {:>7.1}%",
-        "hamerly", fmt_count(hamerly.get()), out_hamerly.iters, saved(&hamerly)
+        "{:<10} {:>14} {:>8} {:>8} {:>12}",
+        "variant", "distances", "iters", "saved", "prune-rate"
     );
     println!(
-        "{:<10} {:>14} {:>8} {:>7.1}%",
-        "elkan", fmt_count(elkan.get()), out_elkan.iters, saved(&elkan)
+        "{:<10} {:>14} {:>8} {:>8} {:>12}",
+        "plain", fmt_count(plain.get()), out_plain.iters, "-", "-"
     );
-    println!("max centroid drift vs plain: hamerly {d_h:.2e}, elkan {d_e:.2e}");
+    println!(
+        "{:<10} {:>14} {:>8} {:>7.1}% {:>12}",
+        "hamerly", fmt_count(hamerly.get()), out_hamerly.iters, saved(&hamerly), "-"
+    );
+    println!(
+        "{:<10} {:>14} {:>8} {:>7.1}% {:>11.1}%",
+        "bounded",
+        fmt_count(bounded.get()),
+        out_bounded.iters,
+        saved(&bounded),
+        bounded_prune_rate * 100.0
+    );
+    println!(
+        "{:<10} {:>14} {:>8} {:>7.1}% {:>12}",
+        "auto", fmt_count(auto.get()), out_auto.iters, saved(&auto), "-"
+    );
+    println!("auto choices: {auto_summary}");
+    println!("max centroid drift vs plain: hamerly {d_h:.2e}, bounded {d_b:.2e}, auto {d_a:.2e}");
     assert!(d_h < 1e-6, "hamerly diverged from plain");
-    assert!(d_e < 1e-6, "elkan diverged from plain");
+    assert!(d_b < 1e-6, "bounded diverged from plain");
+    assert!(d_a < 1e-6, "auto diverged from plain");
+    // The engine contract's bench-level check (DESIGN.md §2.7): warm
+    // bounded iterations must beat the plain bill.
+    if out_bounded.iters > 1 {
+        assert!(
+            bounded_warm_paid < bounded_warm_bill,
+            "bounded warm iterations pruned nothing: {bounded_warm_paid} of {bounded_warm_bill}"
+        );
+    }
 
     write_csv(
         "ablation_pruning",
         &[
-            vec!["variant".into(), "distances".into(), "iters".into()],
-            vec!["plain".into(), plain.get().to_string(), out_plain.iters.to_string()],
-            vec!["hamerly".into(), hamerly.get().to_string(), out_hamerly.iters.to_string()],
-            vec!["elkan".into(), elkan.get().to_string(), out_elkan.iters.to_string()],
+            vec![
+                "variant".into(),
+                "distances".into(),
+                "iters".into(),
+                "bounded_prune_rate".into(),
+                "auto_choice".into(),
+            ],
+            vec!["plain".into(), plain.get().to_string(), out_plain.iters.to_string(), "".into(), "".into()],
+            vec![
+                "hamerly".into(),
+                hamerly.get().to_string(),
+                out_hamerly.iters.to_string(),
+                "".into(),
+                "".into(),
+            ],
+            vec![
+                "bounded".into(),
+                bounded.get().to_string(),
+                out_bounded.iters.to_string(),
+                format!("{bounded_prune_rate:.4}"),
+                "".into(),
+            ],
+            vec![
+                "auto".into(),
+                auto.get().to_string(),
+                out_auto.iters.to_string(),
+                "".into(),
+                auto_summary,
+            ],
         ],
     );
 }

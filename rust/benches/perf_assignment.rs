@@ -1,15 +1,19 @@
 //! Exp P1 — hot-path throughput of the assignment step (the cost center of
 //! every method): the unified engine's serial backend (`NativeStepper`)
-//! vs sharded vs norm-pruned vs PJRT artifacts vs Hamerly-pruned, swept
-//! over (m, K, d). All engine backends produce bit-identical output
-//! (DESIGN.md §2), so the columns differ only in time and — for the
-//! pruned ones — distance count. Reports representative-rows/s and, for
-//! the norm-pruned backend, the fraction of the n·k distance bill it
-//! actually paid. Feeds EXPERIMENTS.md §Perf.
+//! vs sharded vs norm-pruned vs cross-iteration bounded vs auto-selected
+//! vs PJRT artifacts vs Hamerly-pruned, swept over (m, K, d). All engine
+//! backends produce bit-identical output (DESIGN.md §2), so the columns
+//! differ only in time and — for the pruned ones — distance count.
+//! Reports representative-rows/s, the fraction of the n·k distance bill
+//! each pruned backend actually paid (norm-pruned per pass; bounded on
+//! the *second* weighted-Lloyd iteration, i.e. the first warm one —
+//! gaussian clouds are the adversarial case, real partitions prune much
+//! harder), and the backend `AutoAssigner` settled on. Feeds
+//! EXPERIMENTS.md §Perf.
 
 use bwkm::bench::{bench_secs, env_f64, write_csv};
 use bwkm::coordinator::sharded_weighted_step;
-use bwkm::kmeans::assign::weighted_step;
+use bwkm::kmeans::assign::{weighted_step, AutoAssigner, BoundedAssigner};
 use bwkm::kmeans::{NativeStepper, NormPrunedAssigner, Stepper};
 use bwkm::metrics::DistanceCounter;
 use bwkm::runtime::Runtime;
@@ -30,8 +34,16 @@ fn main() {
 
     println!("=== P1: assignment-step throughput (rows/s, one weighted-Lloyd step) ===");
     println!(
-        "{:<18} {:>10} {:>12} {:>16} {:>12} {:>12} {:>14}",
-        "m,k,d", "native", "sharded(4)", "normprune(bill)", "pjrt", "pruned-run", "dists/s native"
+        "{:<18} {:>10} {:>12} {:>16} {:>16} {:>12} {:>12} {:>12} {:>14}",
+        "m,k,d",
+        "native",
+        "sharded(4)",
+        "normprune(bill)",
+        "bounded(bill)",
+        "auto",
+        "pjrt",
+        "pruned-run",
+        "dists/s native"
     );
     let mut rows = vec![vec![
         "m".into(),
@@ -41,6 +53,9 @@ fn main() {
         "sharded_rows_s".into(),
         "normprune_rows_s".into(),
         "normprune_bill_frac".into(),
+        "bounded_rows_s".into(),
+        "bounded_bill_frac".into(),
+        "auto_choice".into(),
         "pjrt_rows_s".into(),
         "pruned_rows_s".into(),
     ]];
@@ -77,6 +92,40 @@ fn main() {
         let _ = weighted_step(&mut NormPrunedAssigner, &reps, &weights, d, &cents, &c_np);
         let pairs = c_np.get().saturating_sub((m + k) as u64);
         let bill_frac = pairs as f64 / (m as f64 * k as f64);
+
+        // Bounded: throughput of the steady-state warm step (the backend's
+        // whole point is the cross-iteration regime), and the bill
+        // fraction of the *first* warm iteration of a real Lloyd
+        // trajectory (cold prime → update → warm step).
+        let mut bounded_steady = BoundedAssigner::new();
+        let c_b = DistanceCounter::new();
+        let _ = weighted_step(&mut bounded_steady, &reps, &weights, d, &cents, &c_b);
+        let t_bounded = bench_secs(3, || {
+            std::hint::black_box(weighted_step(
+                &mut bounded_steady,
+                &reps,
+                &weights,
+                d,
+                &cents,
+                &c_b,
+            ));
+        });
+        let mut bounded_traj = BoundedAssigner::new();
+        let c_bt = DistanceCounter::new();
+        let step1 = weighted_step(&mut bounded_traj, &reps, &weights, d, &cents, &c_bt);
+        let _ = weighted_step(&mut bounded_traj, &reps, &weights, d, &step1.centroids, &c_bt);
+        let b_stats = bounded_traj.last_stats();
+        let b_bill_frac = b_stats.pairs as f64 / (m as f64 * k as f64);
+
+        // Auto: what the selector settles on for this shape after a short
+        // warm sequence (choices also land in the counter's note log).
+        let mut auto = AutoAssigner::new();
+        let c_a = DistanceCounter::new();
+        let mut a_cents = cents.clone();
+        for _ in 0..3 {
+            a_cents = weighted_step(&mut auto, &reps, &weights, d, &a_cents, &c_a).centroids;
+        }
+        let auto_choice = auto.last_choice();
         let t_pjrt = runtime.as_mut().map(|rt| {
             bench_secs(3, || {
                 std::hint::black_box(rt.wlloyd_step(&reps, &weights, d, &cents).unwrap());
@@ -94,11 +143,13 @@ fn main() {
 
         let rps = |t: f64| m as f64 / t;
         println!(
-            "{:<18} {:>10} {:>12} {:>16} {:>12} {:>12} {:>14}",
+            "{:<18} {:>10} {:>12} {:>16} {:>16} {:>12} {:>12} {:>12} {:>14}",
             format!("{m},{k},{d}"),
             fmt_count(rps(t_native) as u64),
             fmt_count(rps(t_shard) as u64),
             format!("{} ({:.0}%)", fmt_count(rps(t_normprune) as u64), bill_frac * 100.0),
+            format!("{} ({:.0}%)", fmt_count(rps(t_bounded) as u64), b_bill_frac * 100.0),
+            auto_choice,
             t_pjrt.map(|t| fmt_count(rps(t) as u64)).unwrap_or_else(|| "-".into()),
             fmt_count(rps(t_pruned) as u64),
             fmt_count((rps(t_native) * k as f64) as u64),
@@ -111,6 +162,9 @@ fn main() {
             format!("{:.0}", rps(t_shard)),
             format!("{:.0}", rps(t_normprune)),
             format!("{:.4}", bill_frac),
+            format!("{:.0}", rps(t_bounded)),
+            format!("{:.4}", b_bill_frac),
+            auto_choice.to_string(),
             t_pjrt.map(|t| format!("{:.0}", rps(t))).unwrap_or_default(),
             format!("{:.0}", rps(t_pruned)),
         ]);

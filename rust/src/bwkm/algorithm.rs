@@ -9,7 +9,9 @@
 
 use crate::data::Dataset;
 use crate::kmeans::init::weighted_kmeanspp;
-use crate::kmeans::{weighted_lloyd_with, NativeStepper, Stepper, WLloydCfg};
+use crate::kmeans::{
+    weighted_lloyd_with, AutoAssigner, EngineStepper, NativeStepper, Stepper, WLloydCfg,
+};
 use crate::metrics::{kmeans_error, Budget, DistanceCounter};
 use crate::partition::Partition;
 use crate::util::{Cdf, Rng};
@@ -115,6 +117,25 @@ pub fn run(
     counter: &DistanceCounter,
 ) -> BwkmOutcome {
     run_with(&mut NativeStepper::new(), data, k, cfg, rng, counter)
+}
+
+/// Run BWKM with the auto-selecting engine (DESIGN.md §2.7): each inner
+/// weighted-Lloyd step picks serial / norm-pruned / cross-iteration
+/// bounded per step, the bounds re-priming automatically whenever the
+/// partition refines (the representative set changes). Under an unlimited
+/// budget the trajectory is bit-identical to [`run`]'s — the backends
+/// share the §2.1 canonical kernel — but the counter advances more
+/// slowly (so a finite [`Budget`] buys *more* refinement before
+/// tripping), and each step's engine choice is logged as a counter note.
+pub fn run_auto(
+    data: &Dataset,
+    k: usize,
+    cfg: &BwkmCfg,
+    rng: &mut Rng,
+    counter: &DistanceCounter,
+) -> BwkmOutcome {
+    let mut stepper: EngineStepper<AutoAssigner> = EngineStepper::new();
+    run_with(&mut stepper, data, k, cfg, rng, counter)
 }
 
 /// Run BWKM over an arbitrary weighted-Lloyd [`Stepper`] backend (the PJRT
@@ -264,6 +285,35 @@ mod tests {
         );
         // And it used far fewer distances than full Lloyd.
         assert!(c.get() < c2.get(), "bwkm {} vs lloyd {}", c.get(), c2.get());
+    }
+
+    #[test]
+    fn run_auto_matches_run_at_lower_cost() {
+        // Same seed, unlimited budget: the auto engine follows the exact
+        // same trajectory (bit-identical backends, same rng draws) while
+        // charging fewer distances, and logs one choice per inner step.
+        let mut g = prop::Gen { rng: Rng::new(41), case: 0 };
+        let ds = blob_ds(&mut g, 1500, 3, 5);
+        let mut cfg = BwkmCfg::for_dataset(ds.n, ds.d, 5);
+        cfg.max_outer = 8;
+        let c_plain = DistanceCounter::new();
+        let plain = run(&ds, 5, &cfg, &mut Rng::new(6), &c_plain);
+        let c_auto = DistanceCounter::new();
+        let auto = run_auto(&ds, 5, &cfg, &mut Rng::new(6), &c_auto);
+        assert_eq!(plain.centroids, auto.centroids);
+        assert_eq!(plain.stop, auto.stop);
+        // Warm bounded steps charge ~2 of k pairs per representative; a
+        // demoted norm-pruned step may overshoot the serial bill by its
+        // m + k norm overhead, hence the small slack.
+        assert!(
+            c_auto.get() <= c_plain.get() + c_plain.get() / 20,
+            "auto {} vs plain {}",
+            c_auto.get(),
+            c_plain.get()
+        );
+        let notes = c_auto.notes();
+        assert!(!notes.is_empty(), "auto must log its per-step choices");
+        assert!(notes.iter().all(|n| n.starts_with("auto[")), "{notes:?}");
     }
 
     #[test]

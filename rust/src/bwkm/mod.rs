@@ -12,6 +12,6 @@ pub mod algorithm;
 pub mod init_partition;
 pub mod misassignment;
 
-pub use algorithm::{run, run_with, BwkmCfg, BwkmOutcome, StopReason, TracePoint};
+pub use algorithm::{run, run_auto, run_with, BwkmCfg, BwkmOutcome, StopReason, TracePoint};
 pub use init_partition::{cutting_masses, initial_partition, starting_partition, InitCfg};
 pub use misassignment::{boundary, eps_w_for, epsilon, epsilons, theorem2_bound};

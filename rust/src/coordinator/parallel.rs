@@ -1,16 +1,20 @@
 //! Sharded data-parallel primitives over `std::thread::scope` workers.
 //!
 //! Both fan-out shapes here are thin wrappers over the shared assignment
-//! engine's sharded backend ([`crate::kmeans::assign::ShardedAssigner`],
-//! DESIGN.md §2.5): rows are split with the one canonical
-//! [`crate::kmeans::assign::shard_ranges`] rule (the same split
-//! `Dataset::shard_ranges` uses, so leader and workers can never disagree
-//! about row ownership), each worker runs the serial kernel on its
-//! contiguous shard, and the reduction is serial in row order. Results are
-//! therefore **bit-identical** to the serial path — not merely close —
-//! for every thread count, and distance accounting goes through the shared
-//! atomic [`DistanceCounter`] exactly as in the serial case (n·k per
-//! assignment pass).
+//! engine's sharding **combinator**
+//! ([`crate::kmeans::assign::Sharded`]`<B>`, DESIGN.md §2.5): rows are
+//! split with the one canonical [`crate::kmeans::assign::shard_ranges`]
+//! rule (the same split `Dataset::shard_ranges` uses, so leader and
+//! workers can never disagree about row ownership), each worker runs any
+//! inner engine backend on its contiguous shard, and the reduction is
+//! serial in row order. Results are therefore **bit-identical** to the
+//! serial path — not merely close — for every inner backend and thread
+//! count, and distance accounting goes through the shared atomic
+//! [`DistanceCounter`] exactly as in the serial case (n·k per assignment
+//! pass for the serial-kernel workers; the inner backend's own §2.4 rule,
+//! summed over shards, otherwise — e.g.
+//! `Sharded<BoundedAssigner>` keeps per-shard bounds warm between
+//! weighted-Lloyd iterations, DESIGN.md §2.7).
 
 use crate::data::Dataset;
 use crate::kmeans::assign::{self, ShardedAssigner};
@@ -26,7 +30,7 @@ pub fn sharded_assign_err(
     counter: &DistanceCounter,
 ) -> (Vec<u32>, f64) {
     assign::assign_err(
-        &mut ShardedAssigner { threads },
+        &mut ShardedAssigner::new(threads),
         &data.data,
         data.d,
         centroids,
@@ -48,7 +52,7 @@ pub fn sharded_weighted_step(
     counter: &DistanceCounter,
 ) -> StepOut {
     assign::weighted_step(
-        &mut ShardedAssigner { threads },
+        &mut ShardedAssigner::new(threads),
         reps,
         weights,
         d,
@@ -143,6 +147,42 @@ mod tests {
                 assert_eq!(ds.shard_ranges(threads), assign::shard_ranges(n, threads));
             }
         }
+    }
+
+    #[test]
+    fn prop_sharded_bounded_stepper_equals_serial_across_iterations() {
+        // The combinator payoff: a stepper over Sharded<BoundedAssigner>
+        // keeps per-shard bounds warm across weighted-Lloyd iterations and
+        // still matches the serial stepper bit for bit at every step.
+        use crate::kmeans::assign::{BoundedAssigner, Sharded};
+        use crate::kmeans::EngineStepper;
+        prop::check("sharded-bounded-stepper", 10, |g| {
+            let m = g.int(2, 180);
+            let d = g.int(1, 4);
+            let k = g.int(1, 6);
+            let threads = g.int(1, 5);
+            let reps = g.cloud(m, d, 2.0);
+            let weights: Vec<f64> = (0..m).map(|_| g.int(1, 7) as f64).collect();
+            let mut cents = g.cloud(k, d, 2.0);
+
+            let mut serial = NativeStepper::new();
+            let mut sharded_bounded =
+                EngineStepper::with_engine(Sharded::<BoundedAssigner>::new(threads));
+            for _ in 0..5 {
+                let c1 = DistanceCounter::new();
+                let a = serial.step(&reps, &weights, d, &cents, &c1);
+                let c2 = DistanceCounter::new();
+                let b = sharded_bounded.step(&reps, &weights, d, &cents, &c2);
+                assert_eq!(a.assign, b.assign);
+                assert_eq!(a.d1, b.d1);
+                assert_eq!(a.d2, b.d2);
+                assert_eq!(a.centroids, b.centroids);
+                assert_eq!(a.werr.to_bits(), b.werr.to_bits());
+                // Warm bounded shards charge at most the serial bill.
+                assert!(c2.get() <= c1.get() + (k * threads) as u64);
+                cents = a.centroids;
+            }
+        });
     }
 
     #[test]

@@ -32,13 +32,16 @@
 //!   *value* in scan order (`d2 = ∞` when k = 1).
 //! * **Counting.** Exact backends tick the shared [`DistanceCounter`]
 //!   with one unit per point-centroid pair — n·k per call, accounted
-//!   per cache block. Pruned backends count only what they compute
-//!   (plus the norm precomputations), and may therefore count *less*
-//!   while returning bit-identical output.
-//! * **Shard determinism.** [`ShardedAssigner`] splits rows with
+//!   per cache block. Pruned backends ([`NormPrunedAssigner`], the
+//!   cross-iteration [`BoundedAssigner`], and whatever [`AutoAssigner`]
+//!   selects per step) count only what they compute (plus their
+//!   documented bookkeeping), and may therefore count *less* while
+//!   returning bit-identical output.
+//! * **Shard determinism.** [`Sharded<B>`](Sharded) splits rows with
 //!   [`shard_ranges`] (the same contiguous base/extra split as
-//!   `Dataset::shard_ranges`) and reduces in shard order, so its output
-//!   equals the serial backend's bit for bit, for every thread count.
+//!   `Dataset::shard_ranges`), runs any inner backend per shard, and
+//!   reduces in shard order, so its output equals the serial backend's
+//!   bit for bit, for every inner backend and thread count.
 //!
 //! The kernel itself is blocked and cache-tiled: points are processed in
 //! [`POINT_BLOCK`]-row blocks and centroids in [`CENT_TILE`]-row tiles, so
@@ -333,16 +336,51 @@ impl Assigner for SerialAssigner {
     }
 }
 
-/// The sharded backend: rows fanned out over `threads` scoped workers via
-/// [`shard_ranges`], each running the serial kernel on its contiguous
-/// shard, reduced in shard order. Bit-identical to [`SerialAssigner`] for
-/// every thread count (DESIGN.md §2.5).
-#[derive(Clone, Copy, Debug)]
-pub struct ShardedAssigner {
-    pub threads: usize,
+/// The sharding **combinator** (DESIGN.md §2.5): rows fanned out over
+/// `threads` scoped workers via [`shard_ranges`], each worker running its
+/// own persistent copy of an arbitrary inner backend `B` on its contiguous
+/// shard, reduced in shard order. Because every backend is bit-identical
+/// to [`SerialAssigner`] on any row slice, `Sharded<B>` is bit-identical
+/// to [`SerialAssigner`] for every inner backend and every thread count —
+/// `Sharded<NormPrunedAssigner>` and `Sharded<BoundedAssigner>` exist for
+/// free and count whatever their inner backend counts, summed over shards.
+///
+/// Worker state persists across calls: shard `s` always owns the rows of
+/// `shard_ranges(m, threads)[s]`, so a stateful inner backend (the
+/// cross-iteration [`BoundedAssigner`]) sees a stable row slice between
+/// weighted-Lloyd iterations and keeps its bounds warm; when `m` changes
+/// the slices change and the inner backends re-prime themselves.
+#[derive(Clone, Debug)]
+pub struct Sharded<B: Assigner> {
+    threads: usize,
+    workers: Vec<B>,
 }
 
-impl Assigner for ShardedAssigner {
+/// The serial-kernel sharding of the original engine — the monolith is now
+/// just the combinator applied to [`SerialAssigner`].
+pub type ShardedAssigner = Sharded<SerialAssigner>;
+
+impl<B: Assigner + Clone> Sharded<B> {
+    /// `threads` workers, each a clone of `worker`.
+    pub fn with_backend(threads: usize, worker: B) -> Self {
+        let threads = threads.max(1);
+        Sharded { threads, workers: vec![worker; threads] }
+    }
+
+    /// `threads` workers of a defaultable backend.
+    pub fn new(threads: usize) -> Self
+    where
+        B: Default,
+    {
+        Self::with_backend(threads, B::default())
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+}
+
+impl<B: Assigner + Send> Assigner for Sharded<B> {
     fn assign_top2(
         &mut self,
         points: &[f64],
@@ -354,27 +392,16 @@ impl Assigner for ShardedAssigner {
         let ranges = shard_ranges(m, self.threads);
         let mut partials: Vec<AssignOut> = Vec::with_capacity(ranges.len());
         std::thread::scope(|scope| {
-            let handles: Vec<_> = ranges
-                .iter()
-                .map(|r| {
+            // `ranges.len() ≤ threads == workers.len()`, so the zip pairs
+            // every shard with its persistent worker, in shard order.
+            let handles: Vec<_> = self
+                .workers
+                .iter_mut()
+                .zip(&ranges)
+                .map(|(worker, r)| {
                     let r = r.clone();
                     scope.spawn(move || {
-                        let len = r.len();
-                        let mut part = AssignOut {
-                            assign: vec![0u32; len],
-                            d1: vec![0.0; len],
-                            d2: vec![0.0; len],
-                        };
-                        top2_dispatch(
-                            &points[r.start * d..r.end * d],
-                            d,
-                            centroids,
-                            &mut part.assign,
-                            &mut part.d1,
-                            &mut part.d2,
-                            counter,
-                        );
-                        part
+                        worker.assign_top2(&points[r.start * d..r.end * d], d, centroids, counter)
                     })
                 })
                 .collect();
@@ -487,6 +514,441 @@ fn norm_kernel(p: &[f64]) -> f64 {
         j += 1;
     }
     ((a0 + a1) + (a2 + a3)).sqrt()
+}
+
+// ---------------------------------------------------------------------------
+// Cross-iteration bounded pruning (DESIGN.md §2.7).
+// ---------------------------------------------------------------------------
+
+/// Relative deflation applied to a stored lower bound every drift round.
+/// It must dominate the floating-point error chain relating a cached
+/// metric distance to a later recomputation of the same pair — kernel
+/// summation (≲ (d/4+2)·ε rel), `sqrt` (½ ulp), the drift distance's own
+/// kernel error, and the subtraction ulps — which totals well under
+/// `(8+d)·1e-15`; the factor-10 margin keeps the skip test sound
+/// (DESIGN.md §2.7) with ~100× headroom while costing nothing measurable
+/// in prune rate.
+#[inline]
+fn bound_defl(d: usize) -> f64 {
+    (8.0 + d as f64) * 1e-14
+}
+
+/// What the [`BoundedAssigner`] charged on its most recent call — the
+/// backend's own exact account of its `DistanceCounter` activity, pinned
+/// by the conformance suite (`counter delta == pairs + bookkeeping`).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BoundedStats {
+    /// Point–centroid pairs actually evaluated through the canonical
+    /// kernel (cold call: exactly `m·k`).
+    pub pairs: u64,
+    /// Bookkeeping distances: the `k` centroid-drift distances of a warm
+    /// call (0 on a cold call).
+    pub bookkeeping: u64,
+    /// The unpruned bill `m·k` of the same call.
+    pub bill: u64,
+    /// Whether the call reused bounds (warm) or re-primed them (cold).
+    pub warm: bool,
+}
+
+impl BoundedStats {
+    /// Fraction of the `m·k` pair bill this call *skipped* (0 when cold).
+    pub fn prune_rate(&self) -> f64 {
+        if self.bill == 0 {
+            return 0.0;
+        }
+        1.0 - self.pairs as f64 / self.bill as f64
+    }
+}
+
+/// The cross-iteration bounded backend (DESIGN.md §2.7): Hamerly/Elkan-
+/// style bounds generalized to weighted representatives and to the
+/// engine's **bit-identical top-2** contract.
+///
+/// State per point: the previous winner and runner-up indices, plus one
+/// metric lower bound per centroid (`m·k`, Elkan's memory shape), kept
+/// valid across [`weighted_step`] calls on the same representative set by
+/// per-centroid drift updates `lb ← lb − ‖c − c'‖` (deflated by
+/// `bound_defl` so accumulated rounding can never make a bound
+/// overshoot a later recomputation).
+///
+/// A warm call evaluates, per point, the exact distances to the previous
+/// winner and runner-up — two distinct centroids, so the larger of the
+/// two caps the true second-nearest distance *exactly*, no drift
+/// inflation — then scans the remaining centroids in index order,
+/// skipping every candidate whose lower bound exceeds the running cap.
+/// Every skipped candidate is provably strictly farther than the final
+/// second-nearest value, so the returned `(assign, d1, d2)` equals
+/// [`SerialAssigner`]'s bit for bit (§2.1 tie-breaking included), while
+/// the counter is charged only `k` drift distances plus the pairs
+/// actually evaluated.
+///
+/// Input change detection is by value: a call whose `points` (or shapes)
+/// differ from the cached ones re-primes the bounds with a full `m·k`
+/// pass. Centroids may change arbitrarily between calls — drifts are
+/// measured from the *last seen* centroids, so skipping steps (as
+/// [`AutoAssigner`] does) keeps the bounds valid.
+#[derive(Clone, Debug, Default)]
+pub struct BoundedAssigner {
+    points: Vec<f64>,
+    centroids: Vec<f64>,
+    d: usize,
+    k: usize,
+    assign: Vec<u32>,
+    runner: Vec<u32>,
+    /// m×k metric lower bounds.
+    lower: Vec<f64>,
+    drift: Vec<f64>,
+    stats: BoundedStats,
+}
+
+impl BoundedAssigner {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Exact account of the most recent call (DESIGN.md §2.4/§2.7).
+    pub fn last_stats(&self) -> BoundedStats {
+        self.stats
+    }
+
+    /// Would a call with these inputs reuse the cached bounds?
+    pub fn is_warm_for(&self, points: &[f64], d: usize, k: usize) -> bool {
+        self.d == d && self.k == k && self.points == points
+    }
+
+    /// Cold pass: full distance rows through the canonical kernel (the
+    /// §2.6 engine shape, `k` counted per row — `m·k` total, exactly the
+    /// serial bill), priming tight per-centroid bounds and the
+    /// winner/runner-up pair. Top-2 selection scans the row in index
+    /// order with strict `<`, so the output equals the blocked kernel's
+    /// bit for bit.
+    fn prime(
+        &mut self,
+        points: &[f64],
+        d: usize,
+        centroids: &[f64],
+        counter: &DistanceCounter,
+    ) -> AssignOut {
+        let m = points.len() / d;
+        let k = centroids.len() / d;
+        self.points.clear();
+        self.points.extend_from_slice(points);
+        self.centroids.clear();
+        self.centroids.extend_from_slice(centroids);
+        self.d = d;
+        self.k = k;
+        self.assign.clear();
+        self.assign.resize(m, 0);
+        self.runner.clear();
+        self.runner.resize(m, 0);
+        self.lower.clear();
+        self.lower.resize(m * k, 0.0);
+        self.drift.clear();
+        self.drift.resize(k, 0.0);
+
+        let mut out = AssignOut::with_capacity(m);
+        let mut row = vec![0.0f64; k];
+        for i in 0..m {
+            let p = &points[i * d..(i + 1) * d];
+            let (_, _) = sq_dist_row(p, centroids, d, &mut row, counter);
+            let (mut i1, mut i2, mut b1, mut b2) = (0u32, 0u32, f64::INFINITY, f64::INFINITY);
+            for (c, &v) in row.iter().enumerate() {
+                self.lower[i * k + c] = v.sqrt();
+                if v < b1 {
+                    b2 = b1;
+                    i2 = i1;
+                    b1 = v;
+                    i1 = c as u32;
+                } else if v < b2 {
+                    b2 = v;
+                    i2 = c as u32;
+                }
+            }
+            self.assign[i] = i1;
+            self.runner[i] = i2;
+            out.assign.push(i1);
+            out.d1.push(b1);
+            out.d2.push(b2);
+        }
+        self.stats = BoundedStats {
+            pairs: (m as u64) * (k as u64),
+            bookkeeping: 0,
+            bill: (m as u64) * (k as u64),
+            warm: false,
+        };
+        out
+    }
+
+    /// Warm pass: drift-update the bounds, then the capped pruned scan.
+    fn step(
+        &mut self,
+        points: &[f64],
+        d: usize,
+        centroids: &[f64],
+        counter: &DistanceCounter,
+    ) -> AssignOut {
+        let m = points.len() / d;
+        let k = self.k;
+        let defl = bound_defl(d);
+
+        // Per-centroid drift from the last-seen centroids (k bookkeeping
+        // distances — DESIGN.md §2.4), then the deflated bound update.
+        for c in 0..k {
+            self.drift[c] =
+                dist_kernel(&self.centroids[c * d..(c + 1) * d], &centroids[c * d..(c + 1) * d]);
+        }
+        counter.add(k as u64);
+        for i in 0..m {
+            let row = &mut self.lower[i * k..(i + 1) * k];
+            for (c, lb) in row.iter_mut().enumerate() {
+                let dr = self.drift[c];
+                *lb = ((*lb - dr) - defl * (*lb + dr)).max(0.0);
+            }
+        }
+        self.centroids.clear();
+        self.centroids.extend_from_slice(centroids);
+
+        let mut out = AssignOut::with_capacity(m);
+        let mut pairs = 0u64;
+        for i in 0..m {
+            let p = &points[i * d..(i + 1) * d];
+            let cur = self.assign[i] as usize;
+            let d_cur = sq_dist_kernel(p, &centroids[cur * d..(cur + 1) * d]);
+            pairs += 1;
+            if k == 1 {
+                self.lower[i] = d_cur.sqrt();
+                out.assign.push(0);
+                out.d1.push(d_cur);
+                out.d2.push(f64::INFINITY);
+                continue;
+            }
+            let run = self.runner[i] as usize;
+            let d_run = sq_dist_kernel(p, &centroids[run * d..(run + 1) * d]);
+            pairs += 1;
+            // Two exact distances to two *distinct* centroids: the larger
+            // caps the final second-nearest value exactly.
+            let cap0 = d_cur.max(d_run).sqrt();
+
+            let (mut i1, mut i2, mut b1, mut b2) = (0u32, 0u32, f64::INFINITY, f64::INFINITY);
+            let mut b2_rt = f64::INFINITY;
+            for c in 0..k {
+                let acc = if c == cur {
+                    d_cur
+                } else if c == run {
+                    d_run
+                } else {
+                    // Sound skip (§2.7): the deflated lower bound still
+                    // under-estimates the distance this pair would compute,
+                    // so a candidate above the cap is strictly farther
+                    // than the final second-nearest — it could enter
+                    // neither top-2 slot of the serial scan.
+                    if self.lower[i * k + c] > b2_rt.min(cap0) {
+                        continue;
+                    }
+                    let v = sq_dist_kernel(p, &centroids[c * d..(c + 1) * d]);
+                    pairs += 1;
+                    self.lower[i * k + c] = v.sqrt();
+                    v
+                };
+                if acc < b1 {
+                    b2 = b1;
+                    i2 = i1;
+                    b1 = acc;
+                    i1 = c as u32;
+                    b2_rt = b2.sqrt();
+                } else if acc < b2 {
+                    b2 = acc;
+                    i2 = c as u32;
+                    b2_rt = b2.sqrt();
+                }
+            }
+            self.lower[i * k + cur] = d_cur.sqrt();
+            self.lower[i * k + run] = d_run.sqrt();
+            self.assign[i] = i1;
+            self.runner[i] = i2;
+            out.assign.push(i1);
+            out.d1.push(b1);
+            out.d2.push(b2);
+        }
+        counter.add(pairs);
+        self.stats = BoundedStats {
+            pairs,
+            bookkeeping: k as u64,
+            bill: (m as u64) * (k as u64),
+            warm: true,
+        };
+        out
+    }
+}
+
+impl Assigner for BoundedAssigner {
+    fn assign_top2(
+        &mut self,
+        points: &[f64],
+        d: usize,
+        centroids: &[f64],
+        counter: &DistanceCounter,
+    ) -> AssignOut {
+        let k = centroids.len() / d;
+        if self.is_warm_for(points, d, k) {
+            self.step(points, d, centroids, counter)
+        } else {
+            self.prime(points, d, centroids, counter)
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-step backend auto-selection (DESIGN.md §2.7).
+// ---------------------------------------------------------------------------
+
+/// Below this k the bounded machinery cannot beat the plain kernel (a warm
+/// step pays ≥ 2 of k pairs per point anyway).
+const AUTO_MIN_K: usize = 4;
+/// Below this m per call, backend overheads dwarf any pruning win.
+const AUTO_MIN_M: usize = 64;
+/// Keep using bounds while they skip at least this fraction of the bill.
+const AUTO_MIN_RATE: f64 = 0.2;
+/// While demoted to norm pruning, re-probe the bounds every this many
+/// warm steps (drifts shrink as Lloyd converges, so bounds recover).
+const AUTO_PROBE_EVERY: u64 = 8;
+
+/// A backend [`AutoAssigner`] can select. One enum drives dispatch, the
+/// choice tally *and* the note log, so the three can never disagree.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AutoChoice {
+    Serial = 0,
+    NormPruned = 1,
+    Bounded = 2,
+}
+
+impl AutoChoice {
+    pub fn name(self) -> &'static str {
+        match self {
+            AutoChoice::Serial => "serial",
+            AutoChoice::NormPruned => "normpruned",
+            AutoChoice::Bounded => "bounded",
+        }
+    }
+}
+
+/// Per-step backend auto-selection (DESIGN.md §2.7): picks
+/// [`SerialAssigner`], [`NormPrunedAssigner`] or [`BoundedAssigner`] per
+/// call from (m, k, d, warmth, last-step prune rate) and logs the choice
+/// as a [`DistanceCounter`] note, so the accounting report shows which
+/// engine produced each count. All candidate backends are bit-identical
+/// (§2.1), so the selection is unobservable in the output — only in time
+/// and count.
+///
+/// Policy (deterministic): a cold call — new representative set — runs
+/// serial when the problem is too small to amortize bound state
+/// (`k < 4 || m < 64`) and otherwise invests the same `m·k` bill in the
+/// bounded backend to prime its bounds; a warm call keeps the bounded
+/// backend while its last prune rate holds above 20%, demoting to the
+/// stateless norm-pruned backend otherwise, with a bounded re-probe every
+/// 8th warm step.
+#[derive(Clone, Debug)]
+pub struct AutoAssigner {
+    bounded: BoundedAssigner,
+    step: u64,
+    warm_steps: u64,
+    last_rate: f64,
+    last_choice: Option<AutoChoice>,
+    /// Selection tallies indexed by [`AutoChoice`] discriminant — the
+    /// structured form of the per-step note log, for reports that
+    /// aggregate choices rather than replay them.
+    choices: [u64; 3],
+}
+
+impl Default for AutoAssigner {
+    fn default() -> Self {
+        AutoAssigner {
+            bounded: BoundedAssigner::new(),
+            step: 0,
+            warm_steps: 0,
+            last_rate: 1.0,
+            last_choice: None,
+            choices: [0; 3],
+        }
+    }
+}
+
+impl AutoAssigner {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The backend the most recent call ran on (`"none"` before any
+    /// call).
+    pub fn last_choice(&self) -> &'static str {
+        self.last_choice.map(AutoChoice::name).unwrap_or("none")
+    }
+
+    /// How often each backend was selected: (serial, normpruned,
+    /// bounded).
+    pub fn choice_counts(&self) -> (u64, u64, u64) {
+        (self.choices[0], self.choices[1], self.choices[2])
+    }
+
+    /// The bounded backend's most recent stats (for bench columns).
+    pub fn last_bounded_stats(&self) -> BoundedStats {
+        self.bounded.last_stats()
+    }
+}
+
+impl Assigner for AutoAssigner {
+    fn assign_top2(
+        &mut self,
+        points: &[f64],
+        d: usize,
+        centroids: &[f64],
+        counter: &DistanceCounter,
+    ) -> AssignOut {
+        let m = points.len() / d;
+        let k = centroids.len() / d;
+        let warm = self.bounded.is_warm_for(points, d, k);
+        self.warm_steps = if warm { self.warm_steps + 1 } else { 0 };
+        let choice = if !warm {
+            if k >= AUTO_MIN_K && m >= AUTO_MIN_M {
+                AutoChoice::Bounded
+            } else {
+                AutoChoice::Serial
+            }
+        } else if self.last_rate >= AUTO_MIN_RATE || self.warm_steps % AUTO_PROBE_EVERY == 0 {
+            AutoChoice::Bounded
+        } else {
+            AutoChoice::NormPruned
+        };
+        let out = match choice {
+            AutoChoice::Bounded => {
+                // Dispatch on the warmth already computed above rather
+                // than through `assign_top2`, which would repeat the
+                // O(m·d) by-value input comparison.
+                let out = if warm {
+                    self.bounded.step(points, d, centroids, counter)
+                } else {
+                    self.bounded.prime(points, d, centroids, counter)
+                };
+                let stats = self.bounded.last_stats();
+                // A cold prime pays the full bill by construction; judge
+                // pruning from warm steps only.
+                self.last_rate = if stats.warm { stats.prune_rate() } else { 1.0 };
+                out
+            }
+            AutoChoice::Serial => SerialAssigner.assign_top2(points, d, centroids, counter),
+            AutoChoice::NormPruned => NormPrunedAssigner.assign_top2(points, d, centroids, counter),
+        };
+        self.step += 1;
+        self.last_choice = Some(choice);
+        self.choices[choice as usize] += 1;
+        counter.note(format!(
+            "auto[{}]: {} (m={m} k={k} d={d} warm={warm} prune={:.0}%)",
+            self.step,
+            choice.name(),
+            self.last_rate * 100.0
+        ));
+        out
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -711,7 +1173,7 @@ mod tests {
             let c1 = counter();
             let serial = SerialAssigner.assign_top2(&reps, d, &cents, &c1);
             let c2 = counter();
-            let sharded = ShardedAssigner { threads }.assign_top2(&reps, d, &cents, &c2);
+            let sharded = ShardedAssigner::new(threads).assign_top2(&reps, d, &cents, &c2);
             let c3 = counter();
             let pruned = NormPrunedAssigner.assign_top2(&reps, d, &cents, &c3);
 
@@ -740,7 +1202,7 @@ mod tests {
             let a = weighted_step(&mut SerialAssigner, &reps, &weights, d, &cents, &c1);
             let c2 = counter();
             let b = weighted_step(
-                &mut ShardedAssigner { threads },
+                &mut ShardedAssigner::new(threads),
                 &reps,
                 &weights,
                 d,
@@ -897,5 +1359,109 @@ mod tests {
             c_pruned.get(),
             c_exact.get()
         );
+    }
+
+    #[test]
+    fn prop_bounded_bit_identical_across_drifting_steps() {
+        // The tentpole property in miniature: one BoundedAssigner driven
+        // through a sequence of centroid updates on fixed points matches
+        // the serial backend bit for bit at every step, at a shrinking
+        // count. (The full fuzz lives in tests/engine_conformance.rs.)
+        prop::check("bounded-warm", 15, |g| {
+            let m = g.int(1, 200);
+            let d = g.int(1, 8);
+            let k = g.int(1, 10);
+            let reps = g.cloud(m, d, 2.0);
+            let mut cents = g.cloud(k, d, 2.0);
+            let mut bounded = BoundedAssigner::new();
+            for step in 0..6 {
+                let c1 = counter();
+                let serial = SerialAssigner.assign_top2(&reps, d, &cents, &c1);
+                let c2 = counter();
+                let out = bounded.assign_top2(&reps, d, &cents, &c2);
+                assert_eq!(serial, out, "step {step}");
+                let stats = bounded.last_stats();
+                assert_eq!(
+                    c2.get(),
+                    stats.pairs + stats.bookkeeping,
+                    "counter must equal the backend's own account"
+                );
+                assert_eq!(stats.warm, step > 0);
+                assert!(stats.pairs <= (m * k) as u64);
+                // Drift the centroids a little, as a Lloyd update would.
+                for v in cents.iter_mut() {
+                    *v += g.rng.normal() * 0.05;
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn bounded_reprimes_when_points_change() {
+        let mut g = prop::Gen { rng: crate::util::Rng::new(9), case: 0 };
+        let d = 3;
+        let reps_a = g.cloud(40, d, 2.0);
+        let reps_b = g.cloud(40, d, 2.0);
+        let cents = g.cloud(5, d, 2.0);
+        let mut bounded = BoundedAssigner::new();
+        let c = counter();
+        let _ = bounded.assign_top2(&reps_a, d, &cents, &c);
+        assert!(!bounded.last_stats().warm);
+        let _ = bounded.assign_top2(&reps_a, d, &cents, &c);
+        assert!(bounded.last_stats().warm);
+        let out = bounded.assign_top2(&reps_b, d, &cents, &c);
+        assert!(!bounded.last_stats().warm, "new points must re-prime the bounds");
+        assert_eq!(out, SerialAssigner.assign_top2(&reps_b, d, &cents, &counter()));
+    }
+
+    #[test]
+    fn prop_sharded_combinator_generic_over_backends() {
+        // Sharded<NormPruned> and Sharded<Bounded> exist for free and stay
+        // bit-identical to serial, warm steps included.
+        prop::check("sharded-combinator", 10, |g| {
+            let m = g.int(1, 150);
+            let d = g.int(1, 6);
+            let k = g.int(1, 8);
+            let threads = g.int(1, 5);
+            let reps = g.cloud(m, d, 2.0);
+            let mut cents = g.cloud(k, d, 2.0);
+            let mut sp: Sharded<NormPrunedAssigner> = Sharded::new(threads);
+            let mut sb: Sharded<BoundedAssigner> = Sharded::new(threads);
+            for _ in 0..3 {
+                let serial = SerialAssigner.assign_top2(&reps, d, &cents, &counter());
+                assert_eq!(serial, sp.assign_top2(&reps, d, &cents, &counter()));
+                assert_eq!(serial, sb.assign_top2(&reps, d, &cents, &counter()));
+                for v in cents.iter_mut() {
+                    *v += g.rng.normal() * 0.1;
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn auto_is_bit_identical_and_logs_choices() {
+        let mut g = prop::Gen { rng: crate::util::Rng::new(13), case: 0 };
+        let d = 3;
+        let m = 300;
+        let k = 6;
+        let reps = g.cloud(m, d, 2.0);
+        let mut cents = g.cloud(k, d, 2.0);
+        let mut auto = AutoAssigner::new();
+        let c = counter();
+        for _ in 0..5 {
+            let serial = SerialAssigner.assign_top2(&reps, d, &cents, &counter());
+            assert_eq!(serial, auto.assign_top2(&reps, d, &cents, &c));
+            for v in cents.iter_mut() {
+                *v += g.rng.normal() * 0.02;
+            }
+        }
+        let notes = c.notes();
+        assert_eq!(notes.len(), 5, "one choice note per call: {notes:?}");
+        assert!(notes[0].contains("bounded"), "large k/m cold call invests in bounds");
+        // Tiny problem: auto must not pay bound overheads.
+        let tiny = g.cloud(8, d, 1.0);
+        let c2 = counter();
+        let _ = auto.assign_top2(&tiny, d, &cents, &c2);
+        assert!(c2.notes()[0].contains("serial"), "{:?}", c2.notes());
     }
 }

@@ -20,13 +20,16 @@ pub mod minibatch;
 pub mod pruning;
 pub mod weighted_lloyd;
 
-pub use assign::{Assigner, AssignOut, NormPrunedAssigner, SerialAssigner, ShardedAssigner};
+pub use assign::{
+    Assigner, AssignOut, AutoAssigner, AutoChoice, BoundedAssigner, BoundedStats,
+    NormPrunedAssigner, SerialAssigner, Sharded, ShardedAssigner,
+};
 pub use elkan::{elkan_weighted_lloyd, ElkanOutcome};
 pub use lloyd::{lloyd, LloydCfg, LloydOutcome};
 pub use minibatch::{minibatch_kmeans, MiniBatchCfg};
 pub use weighted_lloyd::{
-    weighted_lloyd, weighted_lloyd_with, NativeStepper, StepOut, Stepper, WLloydCfg,
-    WLloydOutcome,
+    weighted_lloyd, weighted_lloyd_with, EngineStepper, NativeStepper, StepOut, Stepper,
+    WLloydCfg, WLloydOutcome,
 };
 
 /// Output of any end-to-end clustering method, as the bench harness

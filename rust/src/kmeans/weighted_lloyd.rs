@@ -11,13 +11,16 @@
 //! they fall out of the assignment step for free.
 //!
 //! The distance hot path itself lives in [`super::assign`] (DESIGN.md §2):
-//! [`NativeStepper`] is a thin adapter binding the outer loop to the
-//! serial assignment engine, and `coordinator::ShardedStepper` binds it to
-//! the sharded one. This module owns only the iteration/stopping logic.
+//! [`EngineStepper<B>`](EngineStepper) binds the outer loop to any engine
+//! backend — [`NativeStepper`] is its serial instantiation,
+//! `coordinator::ShardedStepper` the sharded one, and
+//! `EngineStepper<BoundedAssigner>` / `EngineStepper<AutoAssigner>` the
+//! cross-iteration pruned ones (DESIGN.md §2.7). This module owns only
+//! the iteration/stopping logic.
 
 use crate::metrics::{Budget, DistanceCounter};
 
-use super::assign::{weighted_step_with, SerialAssigner, StepScratch};
+use super::assign::{weighted_step_with, Assigner, SerialAssigner, StepScratch};
 
 /// Result of one weighted-Lloyd iteration.
 #[derive(Clone, Debug)]
@@ -48,27 +51,50 @@ pub trait Stepper {
     ) -> StepOut;
 }
 
-/// The native (pure Rust) stepper — a thin adapter binding the weighted
-/// outer loop to the serial assignment engine
-/// ([`super::assign::SerialAssigner`]). The blocked, cache-tiled top-2
-/// kernel, the monomorphized fixed-`D` fast paths and the m·k distance
-/// accounting all live in [`super::assign`] now; this type only exists so
-/// the [`Stepper`] plug-point (native / sharded / PJRT) stays intact.
+/// A [`Stepper`] over any assignment-engine backend (DESIGN.md §2.2): one
+/// weighted-Lloyd iteration per call, assignment through `B`, serial
+/// row-order accumulation through [`weighted_step_with`]. The blocked,
+/// cache-tiled top-2 kernel, the monomorphized fixed-`D` fast paths and
+/// the distance accounting all live in [`super::assign`]; this adapter
+/// only persists the engine (state matters for the cross-iteration
+/// [`super::assign::BoundedAssigner`]) and the accumulation scratch
+/// across iterations.
 #[derive(Clone, Debug, Default)]
-pub struct NativeStepper {
-    engine: SerialAssigner,
+pub struct EngineStepper<B: Assigner> {
+    engine: B,
     // Cluster-aggregate scratch reused across iterations (no per-iteration
     // allocation in the hot loop, as in the retired stepper).
     scratch: StepScratch,
 }
 
-impl NativeStepper {
+/// The native (pure Rust) stepper — the weighted outer loop on the serial
+/// assignment engine; the default behind [`weighted_lloyd`] and
+/// `bwkm::run`.
+pub type NativeStepper = EngineStepper<SerialAssigner>;
+
+impl<B: Assigner + Default> EngineStepper<B> {
     pub fn new() -> Self {
         Self::default()
     }
 }
 
-impl Stepper for NativeStepper {
+impl<B: Assigner> EngineStepper<B> {
+    /// Wrap a pre-configured engine (e.g. `Sharded::with_backend(..)`).
+    pub fn with_engine(engine: B) -> Self {
+        EngineStepper { engine, scratch: StepScratch::default() }
+    }
+
+    /// The wrapped engine (bench columns read backend stats from here).
+    pub fn engine(&self) -> &B {
+        &self.engine
+    }
+
+    pub fn engine_mut(&mut self) -> &mut B {
+        &mut self.engine
+    }
+}
+
+impl<B: Assigner> Stepper for EngineStepper<B> {
     fn step(
         &mut self,
         reps: &[f64],

@@ -6,11 +6,17 @@
 //! (`add(nk)` once per assignment pass) so the accounting costs nothing.
 
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 
-/// Monotone counter of Euclidean-distance computations.
+/// Monotone counter of Euclidean-distance computations, plus a free-form
+/// note log for accounting *annotations* (DESIGN.md §2.4): adaptive
+/// backends — `kmeans::assign::AutoAssigner` — record which engine served
+/// each step here, so a bench report can print the per-step choice next to
+/// the count it produced. Notes never affect the count.
 #[derive(Debug, Default)]
 pub struct DistanceCounter {
     count: AtomicU64,
+    notes: Mutex<Vec<String>>,
 }
 
 impl DistanceCounter {
@@ -30,9 +36,21 @@ impl DistanceCounter {
         self.count.load(Ordering::Relaxed)
     }
 
-    /// Reset to zero (between repetitions).
+    /// Attach an accounting annotation (e.g. `AutoAssigner`'s per-step
+    /// backend choice) to this counter's report.
+    pub fn note(&self, note: String) {
+        self.notes.lock().expect("counter note lock poisoned").push(note);
+    }
+
+    /// All annotations recorded so far, in order.
+    pub fn notes(&self) -> Vec<String> {
+        self.notes.lock().expect("counter note lock poisoned").clone()
+    }
+
+    /// Reset count *and* notes to empty (between repetitions).
     pub fn reset(&self) {
         self.count.store(0, Ordering::Relaxed);
+        self.notes.lock().expect("counter note lock poisoned").clear();
     }
 }
 
@@ -72,6 +90,19 @@ mod tests {
         c.add(7);
         assert_eq!(c.get(), 12);
         c.reset();
+        assert_eq!(c.get(), 0);
+    }
+
+    #[test]
+    fn notes_record_and_reset() {
+        let c = DistanceCounter::new();
+        assert!(c.notes().is_empty());
+        c.note("auto[1]: bounded".into());
+        c.note("auto[2]: serial".into());
+        assert_eq!(c.notes(), vec!["auto[1]: bounded", "auto[2]: serial"]);
+        c.add(3);
+        c.reset();
+        assert!(c.notes().is_empty());
         assert_eq!(c.get(), 0);
     }
 

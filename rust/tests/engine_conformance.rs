@@ -1,0 +1,370 @@
+//! Cross-backend conformance suite for the assignment engine
+//! (DESIGN.md §2): every backend — serial, the `Sharded<B>` combinator
+//! over every inner backend, norm-pruned, the cross-iteration bounded
+//! backend, and the auto-selector — must produce **bit-identical**
+//! `AssignOut` (`==`, no tolerances) on the same inputs, under the §2.1
+//! tie-breaking rules, while charging the `DistanceCounter` exactly what
+//! §2.4 prescribes. The fuzz deliberately covers the Table-1 dimensions
+//! (2, 3, 4, 5, 17, 19, 20), k = 1, duplicate points and exact-tie
+//! centroids, plus multi-iteration drift sequences that only a stateful
+//! backend can get wrong.
+
+use bwkm::bwkm::{boundary, epsilons, initial_partition, theorem2_bound, InitCfg};
+use bwkm::data::{simulate, Dataset};
+use bwkm::kmeans::assign::{
+    weighted_step, weighted_step_with, Assigner, AssignOut, AutoAssigner, BoundedAssigner,
+    NormPrunedAssigner, SerialAssigner, Sharded, StepScratch,
+};
+use bwkm::kmeans::init::weighted_kmeanspp;
+use bwkm::metrics::DistanceCounter;
+use bwkm::util::prop;
+use bwkm::util::Rng;
+
+/// The dimensions the paper's Table-1 workloads use (DESIGN.md §2.1 gives
+/// them monomorphized kernels — exactly the paths that could diverge),
+/// plus odd/dyn-path extras.
+const DIMS: [usize; 10] = [2, 3, 4, 5, 17, 19, 20, 1, 7, 23];
+
+fn counter() -> DistanceCounter {
+    DistanceCounter::new()
+}
+
+/// Fuzzed corpus with the adversarial features the §2.1 contract names:
+/// duplicate points (copied rows) and exact-tie centroids (duplicated and
+/// reflected rows — reflection preserves squared distance bit for bit for
+/// points at the origin, duplication for all points).
+fn adversarial_corpus(g: &mut prop::Gen, m: usize, d: usize, k: usize) -> (Vec<f64>, Vec<f64>) {
+    let mut reps = g.cloud(m, d, 2.0);
+    // Duplicate a batch of rows.
+    for _ in 0..g.int(0, (m / 2).max(1)) {
+        let (src, dst) = (g.int(0, m - 1), g.int(0, m - 1));
+        let row: Vec<f64> = reps[src * d..(src + 1) * d].to_vec();
+        reps[dst * d..(dst + 1) * d].copy_from_slice(&row);
+    }
+    // A few exact-zero rows (tie fodder for reflected centroids).
+    for _ in 0..g.int(0, 3) {
+        let dst = g.int(0, m - 1);
+        reps[dst * d..(dst + 1) * d].fill(0.0);
+    }
+    let mut cents = g.cloud(k, d, 2.0);
+    if k >= 2 {
+        // Exact-tie centroids: duplicate one row and reflect another.
+        let (src, dst) = (g.int(0, k - 1), g.int(0, k - 1));
+        let row: Vec<f64> = cents[src * d..(src + 1) * d].to_vec();
+        cents[dst * d..(dst + 1) * d].copy_from_slice(&row);
+        let (src, dst) = (g.int(0, k - 1), g.int(0, k - 1));
+        let row: Vec<f64> = cents[src * d..(src + 1) * d].iter().map(|x| -x).collect();
+        cents[dst * d..(dst + 1) * d].copy_from_slice(&row);
+    }
+    (reps, cents)
+}
+
+#[test]
+fn prop_every_backend_bit_identical_to_serial() {
+    prop::check("conformance-bit-identical", 40, |g| {
+        let d = DIMS[g.int(0, DIMS.len() - 1)];
+        let m = g.int(1, 220);
+        let k = g.int(1, 14); // includes k = 1 (d2 = ∞ per §2.1)
+        let threads = g.int(1, 5);
+        let (reps, mut cents) = adversarial_corpus(g, m, d, k);
+
+        let mut sharded_serial: Sharded<SerialAssigner> = Sharded::new(threads);
+        let mut sharded_pruned: Sharded<NormPrunedAssigner> = Sharded::new(threads);
+        let mut sharded_bounded: Sharded<BoundedAssigner> = Sharded::new(threads);
+        let mut bounded = BoundedAssigner::new();
+        let mut auto = AutoAssigner::new();
+
+        // A short drift sequence: step 0 is the cold path, steps 1..3 the
+        // warm (cross-iteration) paths of the stateful backends.
+        for step in 0..3 {
+            let c_serial = counter();
+            let serial = SerialAssigner.assign_top2(&reps, d, &cents, &c_serial);
+            assert_eq!(c_serial.get(), (m * k) as u64);
+
+            let checks: [(&str, AssignOut, u64); 6] = [
+                {
+                    let c = counter();
+                    let out = sharded_serial.assign_top2(&reps, d, &cents, &c);
+                    ("sharded-serial", out, c.get())
+                },
+                {
+                    let c = counter();
+                    let out = NormPrunedAssigner.assign_top2(&reps, d, &cents, &c);
+                    ("normpruned", out, c.get())
+                },
+                {
+                    let c = counter();
+                    let out = sharded_pruned.assign_top2(&reps, d, &cents, &c);
+                    ("sharded-normpruned", out, c.get())
+                },
+                {
+                    let c = counter();
+                    let out = bounded.assign_top2(&reps, d, &cents, &c);
+                    ("bounded", out, c.get())
+                },
+                {
+                    let c = counter();
+                    let out = sharded_bounded.assign_top2(&reps, d, &cents, &c);
+                    ("sharded-bounded", out, c.get())
+                },
+                {
+                    let c = counter();
+                    let out = auto.assign_top2(&reps, d, &cents, &c);
+                    ("auto", out, c.get())
+                },
+            ];
+            for (name, out, count) in &checks {
+                assert_eq!(&serial, out, "{name} diverged at step {step} (m={m} k={k} d={d})");
+                match *name {
+                    // Exact backends: exactly n·k, sharded or not (§2.4).
+                    "sharded-serial" => assert_eq!(*count, (m * k) as u64, "{name}"),
+                    // Pruned backends: never above the bill plus their
+                    // documented bookkeeping (norms / drift distances).
+                    "normpruned" => {
+                        assert!(*count <= ((m * k) + m + k) as u64, "{name}: {count}")
+                    }
+                    "sharded-normpruned" => {
+                        assert!(*count <= ((m * k) + m + k * threads) as u64, "{name}: {count}")
+                    }
+                    "bounded" | "sharded-bounded" => {
+                        assert!(*count <= ((m * k) + k * threads) as u64, "{name}: {count}")
+                    }
+                    _ => {}
+                }
+            }
+            // d2 = ∞ at k = 1 (§2.1).
+            if k == 1 {
+                assert!(serial.d2.iter().all(|x| x.is_infinite()));
+            }
+            // Drift the centroids, Lloyd-ishly.
+            for v in cents.iter_mut() {
+                *v += g.rng.normal() * 0.08;
+            }
+        }
+    });
+}
+
+#[test]
+fn exact_tie_centroids_lowest_index_wins_on_every_backend() {
+    // Three coincident centroids at index 1/2/3, a farther one at 0: the
+    // winner must be index 1 and d2 must equal d1 on every backend.
+    let d = 2;
+    let cents = [9.0, 9.0, 1.0, 0.0, 1.0, 0.0, 1.0, 0.0];
+    let reps = [0.0, 0.0, 1.0, 0.0, 2.0, 0.0, 0.0, 0.0]; // duplicate rows too
+    let serial = SerialAssigner.assign_top2(&reps, d, &cents, &counter());
+    assert_eq!(serial.assign, vec![1, 1, 1, 1]);
+    assert_eq!(serial.d1, serial.d2, "coincident runner-up: d2 == d1");
+    let mut bounded = BoundedAssigner::new();
+    let mut auto = AutoAssigner::new();
+    let mut shp: Sharded<NormPrunedAssigner> = Sharded::new(3);
+    let mut shb: Sharded<BoundedAssigner> = Sharded::new(3);
+    for _ in 0..2 {
+        assert_eq!(serial, NormPrunedAssigner.assign_top2(&reps, d, &cents, &counter()));
+        assert_eq!(serial, bounded.assign_top2(&reps, d, &cents, &counter()));
+        assert_eq!(serial, auto.assign_top2(&reps, d, &cents, &counter()));
+        assert_eq!(serial, shp.assign_top2(&reps, d, &cents, &counter()));
+        assert_eq!(serial, shb.assign_top2(&reps, d, &cents, &counter()));
+    }
+}
+
+#[test]
+fn prop_bounded_counter_is_exactly_its_own_account() {
+    // §2.4 exactness for the bounded backend: the counter delta of every
+    // call equals the backend's self-reported pairs + bookkeeping, the
+    // cold bill is exactly m·k, and warm pairs stay within [min(2,k)·m,
+    // m·k].
+    prop::check("conformance-bounded-count", 25, |g| {
+        let d = DIMS[g.int(0, DIMS.len() - 1)];
+        let m = g.int(1, 150);
+        let k = g.int(1, 10);
+        let (reps, mut cents) = adversarial_corpus(g, m, d, k);
+        let mut bounded = BoundedAssigner::new();
+        let c = counter();
+        let mut last = 0u64;
+        for step in 0..4 {
+            let _ = bounded.assign_top2(&reps, d, &cents, &c);
+            let delta = c.get() - last;
+            last = c.get();
+            let stats = bounded.last_stats();
+            assert_eq!(delta, stats.pairs + stats.bookkeeping, "step {step}");
+            assert_eq!(stats.bill, (m * k) as u64);
+            if step == 0 {
+                assert!(!stats.warm);
+                assert_eq!(stats.pairs, (m * k) as u64, "cold pass pays the serial bill");
+                assert_eq!(stats.bookkeeping, 0);
+            } else {
+                assert!(stats.warm);
+                assert_eq!(stats.bookkeeping, k as u64, "k drift distances per warm step");
+                assert!(stats.pairs >= (m * k.min(2)) as u64);
+                assert!(stats.pairs <= (m * k) as u64);
+            }
+            for v in cents.iter_mut() {
+                *v += g.rng.normal() * 0.05;
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_multi_iteration_bound_validity_vs_serial_recompute() {
+    // The stale-bound regression net (a single-pass test cannot catch a
+    // bound that only goes invalid after accumulated drift): run a real
+    // weighted-Lloyd trajectory on the bounded engine and, after *every*
+    // step, recompute the assignment with the serial backend on the same
+    // inputs — outputs must stay `==` for the whole run, including after
+    // an abrupt centroid teleport and a representative-set change.
+    prop::check("conformance-bound-validity", 15, |g| {
+        let d = g.int(1, 6);
+        let m = g.int(4, 160);
+        let k = g.int(2, 8).min(m);
+        let reps = g.blobs(m, d, k, 0.7);
+        let weights: Vec<f64> = (0..m).map(|_| g.int(1, 9) as f64).collect();
+        let mut cents: Vec<f64> = reps[..k * d].to_vec();
+
+        let mut bounded = BoundedAssigner::new();
+        let mut scratch = StepScratch::default();
+        let c = counter();
+        for step in 0..10 {
+            let out = weighted_step_with(&mut bounded, &mut scratch, &reps, &weights, d, &cents, &c);
+            let serial = weighted_step(&mut SerialAssigner, &reps, &weights, d, &cents, &counter());
+            assert_eq!(out.assign, serial.assign, "step {step}");
+            assert_eq!(out.d1, serial.d1, "step {step}");
+            assert_eq!(out.d2, serial.d2, "step {step}");
+            assert_eq!(out.centroids, serial.centroids, "step {step}");
+            assert_eq!(out.werr.to_bits(), serial.werr.to_bits(), "step {step}");
+            cents = out.centroids;
+            if step == 4 {
+                // Adversarial teleport: maximal drift, maximally stale
+                // bounds.
+                for v in cents.iter_mut() {
+                    *v = g.rng.normal() * 8.0;
+                }
+            }
+        }
+        // Representative-set change (BWKM splits a block): the backend
+        // must re-prime, not reuse bounds keyed to the old rows.
+        let mut reps2 = reps.clone();
+        reps2.extend(g.cloud(2, d, 2.0));
+        let mut weights2 = weights.clone();
+        weights2.extend([1.0, 1.0]);
+        let out = weighted_step_with(&mut bounded, &mut scratch, &reps2, &weights2, d, &cents, &c);
+        let serial = weighted_step(&mut SerialAssigner, &reps2, &weights2, d, &cents, &counter());
+        assert_eq!(out.assign, serial.assign);
+        assert_eq!(out.d1, serial.d1);
+        assert_eq!(out.d2, serial.d2);
+        assert!(!bounded.last_stats().warm, "changed reps must re-prime");
+    });
+}
+
+#[test]
+fn epsilon_machinery_charges_zero_over_multi_iteration_bwkm_run() {
+    // §2.3: ε, boundary and the Theorem 2 bound are computed from the
+    // top-2 distances the step already produced and never touch the
+    // counter — verified across a real multi-iteration BWKM-style loop
+    // (partition refinement included) on both the serial and the bounded
+    // engine.
+    let mut g = prop::Gen { rng: Rng::new(77), case: 0 };
+    let ds = Dataset::new(g.blobs(900, 3, 4, 0.5), 3);
+    let k = 4;
+    let cfg = InitCfg { m_prime: k + 1, m: 40, s: 30, r: 3 };
+    for engine_kind in 0..2 {
+        let c = counter();
+        let mut rng = Rng::new(5);
+        let mut partition = initial_partition(&ds, k, &cfg, &mut rng, &c);
+        let (mut reps, mut weights, mut ids) = partition.reps_weights();
+        let mut cents = weighted_kmeanspp(&reps, &weights, ds.d, k, &mut rng, &c);
+        let mut serial = SerialAssigner;
+        let mut bounded = BoundedAssigner::new();
+        for _outer in 0..4 {
+            let engine: &mut dyn Assigner =
+                if engine_kind == 0 { &mut serial } else { &mut bounded };
+            let step = weighted_step(engine, &reps, &weights, ds.d, &cents, &c);
+            cents = step.centroids.clone();
+
+            let before = c.get();
+            let eps = epsilons(&partition, &ids, &step.d1, &step.d2);
+            let f = boundary(&eps);
+            let bound = theorem2_bound(&partition, &ids, &weights, &step.d1, &eps);
+            assert!(bound.is_finite());
+            assert_eq!(
+                c.get(),
+                before,
+                "ε/boundary/Theorem-2 must not charge the counter (DESIGN.md §2.3)"
+            );
+
+            // Refine: split the first boundary blocks, as Alg. 5 would.
+            for &row in f.iter().take(3) {
+                if partition.blocks[ids[row]].weight() > 1 {
+                    partition.split(ids[row], &ds);
+                }
+            }
+            let rw = partition.reps_weights();
+            reps = rw.0;
+            weights = rw.1;
+            ids = rw.2;
+        }
+    }
+}
+
+#[test]
+fn bounded_beats_normpruned_after_first_iteration_on_clustered_data() {
+    // The acceptance criterion, on GS-style clustered data (the paper's
+    // d = 19 simulator) over a BWKM-like representative set: from
+    // iteration 1 on (warm bounds), the bounded backend must evaluate
+    // strictly fewer pairs — and charge strictly less in total — than the
+    // stateless norm-pruned backend on the identical inputs, at identical
+    // output.
+    let ds = simulate("GS", 0.001, 7).expect("GS simulator");
+    let k = 27;
+    let mut rng = Rng::new(11);
+    let c0 = counter();
+    let m_cfg = (10.0 * ((k * ds.d) as f64).sqrt()).ceil() as usize;
+    let cfg = InitCfg {
+        m_prime: (m_cfg / 4).max(k + 1),
+        m: m_cfg,
+        s: (ds.n as f64).sqrt() as usize,
+        r: 5,
+    };
+    let p = initial_partition(&ds, k, &cfg, &mut rng, &c0);
+    let (reps, weights, _) = p.reps_weights();
+    let m = weights.len();
+    let mut cents = weighted_kmeanspp(&reps, &weights, ds.d, k, &mut rng, &c0);
+
+    let mut bounded = BoundedAssigner::new();
+    // Iteration 0: cold prime (pays exactly the serial bill) + update.
+    let step = weighted_step(&mut bounded, &reps, &weights, ds.d, &cents, &counter());
+    assert_eq!(bounded.last_stats().pairs, (m * k) as u64);
+    cents = step.centroids;
+
+    for iter in 1..4 {
+        let cb = counter();
+        let b_out = bounded.assign_top2(&reps, ds.d, &cents, &cb);
+        let stats = bounded.last_stats();
+        assert!(stats.warm);
+
+        let cn = counter();
+        let n_out = NormPrunedAssigner.assign_top2(&reps, ds.d, &cents, &cn);
+        assert_eq!(b_out, n_out, "backends diverged at iteration {iter}");
+
+        // NormPruned charges k + m norms + its evaluated pairs.
+        let norm_pairs = cn.get() - (m + k) as u64;
+        assert!(
+            stats.pairs < norm_pairs,
+            "iteration {iter}: bounded evaluated {} pairs, norm-pruned {} (bill {})",
+            stats.pairs,
+            norm_pairs,
+            m * k
+        );
+        assert!(
+            cb.get() < cn.get(),
+            "iteration {iter}: bounded charged {} total, norm-pruned {}",
+            cb.get(),
+            cn.get()
+        );
+
+        // Advance the trajectory one weighted-Lloyd update (serial engine
+        // so the bounded backend's own warm stats above stay per-pass).
+        let step = weighted_step(&mut SerialAssigner, &reps, &weights, ds.d, &cents, &counter());
+        cents = step.centroids;
+    }
+}

@@ -1,0 +1,31 @@
+#!/usr/bin/env bash
+# Offline-safe CI gate for the bwkm crate (DESIGN.md §6).
+#
+#   scripts/ci.sh           # full tier-1: fmt check, release build, tests
+#   scripts/ci.sh --quick   # the cross-backend engine conformance suite only
+#
+# The build is hermetic (vendored path deps, no crates.io), so the script
+# forces cargo offline and never touches the network.
+
+set -euo pipefail
+cd "$(dirname "$0")/../rust"
+export CARGO_NET_OFFLINE=true
+
+if [[ "${1:-}" == "--quick" ]]; then
+    echo "== quick: engine conformance suite =="
+    cargo test -q --test engine_conformance
+    exit 0
+fi
+
+if cargo fmt --version >/dev/null 2>&1; then
+    echo "== cargo fmt --check =="
+    cargo fmt --check
+else
+    echo "== cargo fmt unavailable (rustfmt component not installed); skipping =="
+fi
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test -q =="
+cargo test -q
