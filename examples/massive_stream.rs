@@ -1,104 +1,103 @@
 //! Massive-data streaming scenario: the dataset lives on disk and never
-//! fits in memory at once. The coordinator streams binary chunks to
-//! (1) build BWKM's partition statistics, (2) run weighted Lloyd over the
-//! (tiny) representative set, and (3) evaluate the final E^D — all with
-//! bounded memory. This is the workload the paper's title is about.
+//! fits in memory at once. `StreamingBwkm` (DESIGN.md §5.1) runs the
+//! *full* BWKM loop — Alg. 2–4 initialization, weighted Lloyd over the
+//! tiny representative set, ε-guided partition refinement, §2.4.2
+//! stopping — against the file in bounded memory, streaming one pass per
+//! refinement and fanning each pass over sharded chunk workers. This is
+//! the workload the paper's title is about, and the run is pinned
+//! **bit-identical** to the in-memory `bwkm::run` on the same data and
+//! seed — which this example verifies at demo scale.
 //!
 //! ```bash
 //! cargo run --release --example massive_stream
 //! ```
 
-use bwkm::coordinator::{stream_assign_err, stream_partition_stats};
+use bwkm::coordinator::{stream_assign_err, StreamingBwkm};
 use bwkm::data::loader::{save_bin, BinChunks};
 use bwkm::data::simulate;
-use bwkm::kmeans::init::weighted_kmeanspp;
-use bwkm::kmeans::{weighted_lloyd, WLloydCfg};
 use bwkm::metrics::DistanceCounter;
-use bwkm::partition::Partition;
 use bwkm::util::{fmt_count, Rng};
 
 fn main() {
     let k = 9;
-    // Materialize a "massive" source on disk (simulated WUY), then forget
-    // the in-memory copy — everything below streams it in 4096-row chunks.
+    let seed = 11;
+    // Materialize a "massive" source on disk (simulated WUY), keeping the
+    // in-memory copy only to verify the bit-identity claim at the end —
+    // the streaming run itself touches nothing but the file.
     let ds = simulate("WUY", 0.005, 23).expect("simulator");
     let path = std::env::temp_dir().join("bwkm_massive_stream.bin");
     save_bin(&ds, &path).expect("write stream source");
     let (n, d) = (ds.n, ds.d);
-    let bbox = bwkm::geometry::BBox::of(&ds.data, d, None).unwrap();
-    drop(ds);
-    println!("stream source: {} rows x {d} dims at {}", fmt_count(n as u64), path.display());
+    println!(
+        "stream source: {} rows x {d} dims at {}",
+        fmt_count(n as u64),
+        path.display()
+    );
 
     let chunk_rows = 4096;
+    let threads = 4;
+    let cfg = bwkm::bwkm::BwkmCfg::for_dataset(n, d, k);
+
+    // --- The out-of-core run: full Alg. 5 against the file.
     let counter = DistanceCounter::new();
-    let mut rng = Rng::new(11);
-
-    // --- Build a spatial partition by iterative streaming refinement:
-    // each epoch streams the file once, accumulates per-block stats, and
-    // splits the heaviest x largest blocks (the Alg. 3 criterion computed
-    // from the stream instead of an in-memory sample).
-    let mut partition = Partition::root_spatial(bbox, d);
-    let target_blocks = 10 * ((k * d) as f64).sqrt().ceil() as usize;
-    let mut stats = None;
-    for epoch in 0..12 {
-        let chunks = BinChunks::open(&path, chunk_rows).expect("open stream");
-        let st = stream_partition_stats(&partition, d, chunks).expect("stream stats");
-        assert_eq!(st.rows, n);
-        if partition.len() >= target_blocks {
-            stats = Some(st);
-            break;
-        }
-        // Split the top blocks by l_B * |B| (streamed Alg. 3 heuristic).
-        let mut scored: Vec<(f64, usize)> = (0..partition.len())
-            .filter(|&b| st.counts[b] > 1)
-            .map(|b| {
-                let diag = st.tight[b].as_ref().map(|t| t.diagonal()).unwrap_or(0.0);
-                (diag * st.counts[b] as f64, b)
-            })
-            .collect();
-        scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
-        let budget = (target_blocks - partition.len()).min(scored.len()).max(1);
-        for &(_, b) in scored.iter().take(budget) {
-            if let Some(t) = st.tight[b].clone() {
-                let (axis, thr) = t.split_plane();
-                partition.split_at(b, axis, thr, None);
-            }
-        }
-        println!("epoch {epoch}: partition grew to {} blocks", partition.len());
-        stats = Some(st);
-    }
-    let stats = stats.expect("at least one epoch");
-
-    // --- Weighted Lloyd over the streamed representatives (in-memory: the
-    // representative set is tiny compared to the source).
-    let (reps, weights, _) = stats.reps_weights(d);
+    let t0 = std::time::Instant::now();
+    let mut coordinator =
+        StreamingBwkm::new(BinChunks::opener(&path, chunk_rows), d).with_threads(threads);
+    let out = coordinator
+        .run(k, &cfg, &mut Rng::new(seed), &counter)
+        .expect("streaming BWKM");
     println!(
-        "representatives: {} (weights sum {}, {:.4}% of the source rows)",
-        weights.len(),
-        fmt_count(weights.iter().sum::<f64>() as u64),
-        100.0 * weights.len() as f64 / n as f64
+        "\nstreamed BWKM: {} blocks, {} representatives, {} outer iterations, \
+         {} streaming passes, {} distances, {:.2?} ({:?})",
+        out.partition.len(),
+        out.weights.len(),
+        out.trace.len(),
+        out.passes,
+        fmt_count(counter.get()),
+        t0.elapsed(),
+        out.stop
     );
-    let init = weighted_kmeanspp(&reps, &weights, d, k, &mut rng, &counter);
-    let out = weighted_lloyd(&reps, &weights, d, &init, &WLloydCfg::default(), &counter);
+    for t in out.trace.iter().take(4) {
+        println!(
+            "  outer={:<3} dists={:>12} |B|={:<5} boundary={:<5} E^P={:.5e}",
+            t.outer_iter,
+            fmt_count(t.distances),
+            t.blocks,
+            t.boundary,
+            t.weighted_error
+        );
+    }
+    if out.trace.len() > 4 {
+        println!("  ... ({} more iterations)", out.trace.len() - 4);
+    }
 
-    // --- Final E^D evaluated by streaming the source once more.
+    // --- Final E^D by one more streamed scoring pass (separate counter).
     let eval = DistanceCounter::new();
     let chunks = BinChunks::open(&path, chunk_rows).expect("open stream");
-    let (rows, sse) = stream_assign_err(d, &out.centroids, chunks, &eval).expect("stream eval");
+    let (rows, sse) =
+        stream_assign_err(d, &out.centroids, chunks, &eval).expect("stream eval");
     assert_eq!(rows, n);
     println!(
-        "\nclustered {} streamed rows with {} algorithm distances \
-         (plus {} for the final scoring pass)",
-        fmt_count(n as u64),
-        fmt_count(counter.get()),
+        "final E^D = {sse:.6e} ({} scoring distances); peak working set ≈ \
+         {chunk_rows} rows/chunk + {} representatives (vs {} source rows)",
         fmt_count(eval.get()),
-    );
-    println!("final E^D = {sse:.6e}, weighted E^P = {:.6e}", out.werr);
-    println!(
-        "peak working set ≈ {} rows/chunk + {} representatives (vs {} source rows)",
-        chunk_rows,
-        weights.len(),
+        out.weights.len(),
         fmt_count(n as u64)
+    );
+
+    // --- The §5.1 guarantee, demonstrated: the in-memory run on the same
+    // data and seed produces the same centroids and the same bill, bit
+    // for bit.
+    let c_mem = DistanceCounter::new();
+    let mem = bwkm::bwkm::run(&ds, k, &cfg, &mut Rng::new(seed), &c_mem);
+    assert_eq!(out.centroids, mem.centroids, "bit-identity violated: centroids");
+    assert_eq!(counter.get(), c_mem.get(), "bit-identity violated: distance bill");
+    assert_eq!(out.stop, mem.stop);
+    println!(
+        "\nbit-identity check vs in-memory bwkm::run: centroids equal, \
+         {} = {} distances — out-of-core is the same algorithm, not an approximation",
+        fmt_count(counter.get()),
+        fmt_count(c_mem.get())
     );
     std::fs::remove_file(&path).ok();
 }

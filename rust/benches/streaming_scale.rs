@@ -1,0 +1,95 @@
+//! Exp S1 — out-of-core BWKM scaling (DESIGN.md §5.1): streamed-pass
+//! throughput and full-run wall time across chunk sizes and chunk-worker
+//! counts, with the in-memory run as the baseline the streamed one must
+//! (and does — asserted per row) equal bit for bit. Columns: statistics
+//! pass rows/s, full streamed run wall time and pass count, in-memory
+//! wall time, bit-identity flag.
+
+use bwkm::bench::{bench_secs, env_f64, write_csv};
+use bwkm::coordinator::{stream_partition_stats_with, ChunkCrew, StreamingBwkm};
+use bwkm::data::loader::{save_bin, BinChunks};
+use bwkm::data::simulate;
+use bwkm::metrics::DistanceCounter;
+use bwkm::util::{fmt_count, Rng};
+
+fn main() {
+    let mult = env_f64("BWKM_SCALE", 1.0);
+    let k = 9;
+    let seed = 5;
+    let ds = simulate("WUY", (0.01 * mult).min(1.0), 31).expect("simulator");
+    let (n, d) = (ds.n, ds.d);
+    let path = std::env::temp_dir().join(format!("bwkm_bench_stream_{}.bin", std::process::id()));
+    save_bin(&ds, &path).expect("write bench source");
+    println!("=== S1: out-of-core BWKM ({} rows x {d} dims, k={k}) ===", fmt_count(n as u64));
+
+    // Baseline: the in-memory run the streamed one must reproduce.
+    let cfg = bwkm::bwkm::BwkmCfg::for_dataset(n, d, k);
+    let c_mem = DistanceCounter::new();
+    let t_mem = bench_secs(1, || {
+        c_mem.reset();
+        std::hint::black_box(bwkm::bwkm::run(&ds, k, &cfg, &mut Rng::new(seed), &c_mem));
+    });
+    let mem = bwkm::bwkm::run(&ds, k, &cfg, &mut Rng::new(seed), &DistanceCounter::new());
+    println!("in-memory bwkm::run: {t_mem:.3}s, {} distances", fmt_count(c_mem.get()));
+
+    println!(
+        "{:<22} {:>14} {:>12} {:>8} {:>12}",
+        "chunk_rows,threads", "pass rows/s", "run wall", "passes", "bit-identical"
+    );
+    let mut rows = vec![vec![
+        "chunk_rows".into(),
+        "threads".into(),
+        "pass_rows_per_s".into(),
+        "run_secs".into(),
+        "passes".into(),
+        "mem_secs".into(),
+        "bit_identical".into(),
+    ]];
+    for &chunk_rows in &[1024usize, 8192] {
+        for &threads in &[1usize, 2, 4, 8] {
+            // Statistics-pass throughput over the final in-memory
+            // partition (the per-refinement cost of §5.1).
+            let crew = ChunkCrew::new(threads);
+            let t_pass = bench_secs(3, || {
+                let chunks = BinChunks::open(&path, chunk_rows).expect("open");
+                std::hint::black_box(
+                    stream_partition_stats_with(&mem.partition, d, chunks, &crew).expect("pass"),
+                );
+            });
+            let pass_rows_s = n as f64 / t_pass;
+
+            // Full streamed run.
+            let c_str = DistanceCounter::new();
+            let mut out = None;
+            let t_run = bench_secs(1, || {
+                c_str.reset();
+                let mut sb = StreamingBwkm::new(BinChunks::opener(&path, chunk_rows), d)
+                    .with_threads(threads);
+                out = Some(sb.run(k, &cfg, &mut Rng::new(seed), &c_str).expect("stream run"));
+            });
+            let out = out.expect("ran");
+            let identical =
+                out.centroids == mem.centroids && c_str.get() == c_mem.get();
+            assert!(identical, "streamed run diverged at chunk={chunk_rows} threads={threads}");
+            println!(
+                "{:<22} {:>14} {:>11.3}s {:>8} {:>12}",
+                format!("{chunk_rows},{threads}"),
+                fmt_count(pass_rows_s as u64),
+                t_run,
+                out.passes,
+                identical
+            );
+            rows.push(vec![
+                chunk_rows.to_string(),
+                threads.to_string(),
+                format!("{pass_rows_s:.0}"),
+                format!("{t_run:.4}"),
+                out.passes.to_string(),
+                format!("{t_mem:.4}"),
+                identical.to_string(),
+            ]);
+        }
+    }
+    write_csv("streaming_scale", &rows);
+    std::fs::remove_file(&path).ok();
+}

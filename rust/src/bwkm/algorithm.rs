@@ -7,17 +7,20 @@
 //! probability ∝ ε (only boundary blocks have mass), split them at the
 //! middle of the longest side of their tight bounding boxes, and repeat.
 
+use anyhow::Result;
+
 use crate::data::Dataset;
 use crate::kmeans::init::weighted_kmeanspp;
 use crate::kmeans::{
     weighted_lloyd_with, AutoAssigner, EngineStepper, NativeStepper, Stepper, WLloydCfg,
 };
-use crate::metrics::{kmeans_error, Budget, DistanceCounter};
+use crate::metrics::{Budget, DistanceCounter};
 use crate::partition::Partition;
 use crate::util::{Cdf, Rng};
 
-use super::init_partition::{initial_partition, InitCfg};
-use super::misassignment::{boundary, epsilons, theorem2_bound};
+use super::init_partition::{initial_partition_source, InitCfg};
+use super::misassignment::{boundary, epsilons_from_diags, theorem2_bound_from_diags};
+use super::source::{MemSource, RefineSource};
 
 /// Why a BWKM run stopped.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -148,13 +151,54 @@ pub fn run_with(
     rng: &mut Rng,
     counter: &DistanceCounter,
 ) -> BwkmOutcome {
+    let mut src = MemSource::new(data);
+    let out = run_source(stepper, &mut src, k, cfg, rng, counter)
+        .expect("the in-memory source is infallible");
+    BwkmOutcome {
+        centroids: out.centroids,
+        k: out.k,
+        d: out.d,
+        stop: out.stop,
+        trace: out.trace,
+        partition: src.into_partition(),
+    }
+}
+
+/// Outcome of [`run_source`]: everything in [`BwkmOutcome`] except the
+/// partition, which stays with the [`RefineSource`] (the in-memory
+/// wrapper extracts it with members; the streaming coordinator extracts
+/// the spatial tree plus its own statistics).
+#[derive(Clone, Debug)]
+pub struct SourceOutcome {
+    pub centroids: Vec<f64>,
+    pub k: usize,
+    pub d: usize,
+    pub stop: StopReason,
+    pub trace: Vec<TracePoint>,
+}
+
+/// The Alg. 5 main loop over any [`RefineSource`] (DESIGN.md §5.1) — the
+/// one driver behind both the in-memory entry points above and the
+/// out-of-core `coordinator::streaming::StreamingBwkm`. Control flow,
+/// RNG draw order and distance accounting are source-independent, so two
+/// sources exposing bit-identical block statistics produce bit-identical
+/// outcomes (pinned by `tests/streaming_conformance.rs`).
+pub fn run_source<S: RefineSource>(
+    stepper: &mut dyn Stepper,
+    src: &mut S,
+    k: usize,
+    cfg: &BwkmCfg,
+    rng: &mut Rng,
+    counter: &DistanceCounter,
+) -> Result<SourceOutcome> {
     assert!(k >= 1, "k must be ≥ 1");
-    assert!(data.n >= k, "n must be ≥ k");
+    assert!(src.n() >= k, "n must be ≥ k");
+    let d = src.d();
 
     // ---- Step 1: initial partition + weighted K-means++ seeding.
-    let mut partition = initial_partition(data, k, &cfg.init, rng, counter);
-    let (mut reps, mut weights, mut ids) = partition.reps_weights();
-    let mut centroids = weighted_kmeanspp(&reps, &weights, data.d, k, rng, counter);
+    initial_partition_source(src, k, &cfg.init, rng, counter)?;
+    let (mut reps, mut weights, mut ids) = src.reps_weights();
+    let mut centroids = weighted_kmeanspp(&reps, &weights, d, k, rng, counter);
 
     let mut trace = Vec::new();
     let mut stop = StopReason::MaxIters;
@@ -164,31 +208,33 @@ pub fn run_with(
         let mut wl_cfg = cfg.wl;
         wl_cfg.budget = cfg.budget;
         let out = weighted_lloyd_with(
-            stepper, &reps, &weights, data.d, &centroids, &wl_cfg, counter,
+            stepper, &reps, &weights, d, &centroids, &wl_cfg, counter,
         );
         let shift = crate::kmeans::weighted_lloyd::max_shift(
             &centroids,
             &out.centroids,
-            data.d,
+            d,
             k,
         );
         centroids = out.centroids.clone();
 
         // ---- Step 3 preamble: ε per block from the stored top-2 distances
         // ("we store ... the two closest centroids to the representative").
-        let eps = epsilons(&partition, &ids, &out.d1, &out.d2);
+        let diags: Vec<f64> = ids.iter().map(|&b| src.diagonal(b)).collect();
+        let eps = epsilons_from_diags(&diags, &out.d1, &out.d2);
         let f = boundary(&eps);
-        let bound = theorem2_bound(&partition, &ids, &weights, &out.d1, &eps);
+        let bound = theorem2_bound_from_diags(&diags, &weights, &out.d1, &eps);
 
-        let full_error = cfg.eval_full_error.then(|| {
-            let eval = DistanceCounter::new(); // uncounted instrumentation
-            kmeans_error(&data.data, data.d, &centroids, &eval)
-        });
+        let full_error = if cfg.eval_full_error {
+            Some(src.full_error(&centroids)?) // uncounted instrumentation
+        } else {
+            None
+        };
         trace.push(TracePoint {
             outer_iter: outer,
             distances: counter.get(),
-            blocks: partition.len(),
-            occupied: partition.occupied(),
+            blocks: src.partition().len(),
+            occupied: src.occupied(),
             boundary: f.len(),
             weighted_error: out.werr,
             bound,
@@ -233,18 +279,23 @@ pub fn run_with(
         for _ in 0..f.len() {
             hit[cdf.sample(rng)] = true;
         }
+        let mut any_split = false;
         for row in 0..ids.len() {
-            if hit[row] && partition.blocks[ids[row]].weight() > 1 {
-                partition.split(ids[row], data);
+            if hit[row] && src.weight(ids[row]) > 1 {
+                src.split(ids[row]);
+                any_split = true;
             }
         }
-        let rw = partition.reps_weights();
+        if any_split {
+            src.refresh()?;
+        }
+        let rw = src.reps_weights();
         reps = rw.0;
         weights = rw.1;
         ids = rw.2;
     }
 
-    BwkmOutcome { centroids, k, d: data.d, stop, trace, partition }
+    Ok(SourceOutcome { centroids, k, d, stop, trace })
 }
 
 #[cfg(test)]

@@ -12,6 +12,8 @@
 //!   partition has m blocks, then materializes the induced dataset
 //!   partition P = B(D) (one full pass — the only O(n) work).
 
+use anyhow::Result;
+
 use crate::data::Dataset;
 use crate::kmeans::init::weighted_kmeanspp;
 use crate::metrics::{nearest2, DistanceCounter};
@@ -19,6 +21,7 @@ use crate::partition::{Partition, SampleStats};
 use crate::util::{Cdf, Rng};
 
 use super::misassignment::epsilon;
+use super::source::{MemSource, RefineSource, SampleOnlySource};
 
 /// Parameters of the initial-partition construction (paper §2.4.1
 /// recommends m = 10·√(K·d), s = √n, r = 5, and m' ≥ K).
@@ -43,36 +46,50 @@ pub fn starting_partition(
     s: usize,
     rng: &mut Rng,
 ) -> Partition {
-    let mut partition = Partition::root(data);
-    // Build the tree spatially: we keep full membership out of the loop by
-    // splitting with sample statistics only; members are materialized by
-    // the caller (Alg. 2 Step 5). To keep the implementation simple and
-    // exact we *do* thread the real dataset through the splits (splitting
-    // touches only the split block's members — cheaper than a full
-    // rebuild, and the sample counts stay estimates as in the paper).
-    while partition.len() < m_prime {
-        let sample = sample_indices(rng, data.n, s);
-        let stats = SampleStats::collect(&partition, data, &sample);
+    let mut src = MemSource::new(data);
+    starting_partition_source(&mut src, m_prime, s, rng)
+        .expect("the in-memory source is infallible");
+    src.into_partition()
+}
+
+/// [`starting_partition`] over any [`RefineSource`] (DESIGN.md §5.1),
+/// refining the source's partition in place. Each round samples s row
+/// indices, fetches those rows, scores blocks by Pr(B) ∝ l_B·|B(S)| from
+/// the sample statistics, splits the drawn blocks at their tight-bbox
+/// split planes, and refreshes block statistics before the next round
+/// (a no-op in memory, one streamed pass out of core). The RNG draw
+/// sequence is identical for every source, so so are the splits.
+pub fn starting_partition_source<S: RefineSource>(
+    src: &mut S,
+    m_prime: usize,
+    s: usize,
+    rng: &mut Rng,
+) -> Result<()> {
+    while src.partition().len() < m_prime {
+        let sample = sample_indices(rng, src.n(), s);
+        let rows = src.fetch_rows(&sample)?;
+        let stats = SampleStats::collect_rows(src.partition(), &rows, src.d());
         // Pr(B) ∝ l_B · |B(S)|.
-        let probs: Vec<f64> = (0..partition.len())
+        let probs: Vec<f64> = (0..src.partition().len())
             .map(|b| {
                 if stats.counts[b] == 0 {
                     0.0
                 } else {
-                    stats.diagonal(&partition, b) * stats.counts[b] as f64
+                    stats.diagonal(src.partition(), b) * stats.counts[b] as f64
                 }
             })
             .collect();
-        let want = partition.len().min(m_prime - partition.len());
+        let want = src.partition().len().min(m_prime - src.partition().len());
         let selected = sample_with_replacement(&probs, want, rng);
         if selected.is_empty() {
             break; // degenerate: all mass zero (e.g. all points identical)
         }
         for b in selected {
-            partition.split(b, data);
+            src.split(b);
         }
+        src.refresh()?;
     }
-    partition
+    Ok(())
 }
 
 /// Alg. 4: cutting probabilities Pr(B) (Eq. 5) for the current partition.
@@ -90,11 +107,33 @@ pub fn cutting_masses(
     rng: &mut Rng,
     counter: &DistanceCounter,
 ) -> Vec<f64> {
-    let d = data.d;
-    let mut mass = vec![0.0; partition.len()];
+    // Read-only borrow: the driver only samples and locates, so no
+    // partition clone is needed (SampleOnlySource panics on refinement).
+    let mut src = SampleOnlySource::new(data, partition);
+    cutting_masses_source(&mut src, k, s, r, rng, counter)
+        .expect("the in-memory source is infallible")
+}
+
+/// [`cutting_masses`] over any [`RefineSource`]. Needs only the tree
+/// (to locate sampled rows) and the sampled rows themselves — no
+/// per-block dataset statistics — so it never triggers a streamed
+/// statistics pass. Distance accounting is identical for every source:
+/// the weighted K-means++ seeding cost plus one top-2 scan per sampled
+/// block, per repetition.
+pub fn cutting_masses_source<S: RefineSource>(
+    src: &mut S,
+    k: usize,
+    s: usize,
+    r: usize,
+    rng: &mut Rng,
+    counter: &DistanceCounter,
+) -> Result<Vec<f64>> {
+    let d = src.d();
+    let mut mass = vec![0.0; src.partition().len()];
     for _ in 0..r {
-        let sample = sample_indices(rng, data.n, s);
-        let stats = SampleStats::collect(partition, data, &sample);
+        let sample = sample_indices(rng, src.n(), s);
+        let rows = src.fetch_rows(&sample)?;
+        let stats = SampleStats::collect_rows(src.partition(), &rows, d);
         let (reps, weights, ids) = stats.reps_weights();
         if ids.is_empty() {
             continue;
@@ -106,10 +145,10 @@ pub fn cutting_masses(
         }
         for (row, &b) in ids.iter().enumerate() {
             let (_, d1, d2) = nearest2(&reps[row * d..(row + 1) * d], &cents, d, counter);
-            mass[b] += epsilon(stats.diagonal(partition, b), d1, d2);
+            mass[b] += epsilon(stats.diagonal(src.partition(), b), d1, d2);
         }
     }
-    mass
+    Ok(mass)
 }
 
 /// Alg. 2: the full initial-partition construction. Returns the partition
@@ -121,13 +160,34 @@ pub fn initial_partition(
     rng: &mut Rng,
     counter: &DistanceCounter,
 ) -> Partition {
+    let mut src = MemSource::new(data);
+    initial_partition_source(&mut src, k, cfg, rng, counter)
+        .expect("the in-memory source is infallible");
+    src.into_partition()
+}
+
+/// [`initial_partition`] over any [`RefineSource`], refining the
+/// source's partition in place (DESIGN.md §5.1). Step 5's explicit
+/// `assign_members` rebuild of the retired in-memory-only version is
+/// absorbed into the [`RefineSource::refresh`] contract: incremental
+/// splits already maintain member-exact counts/sums/tight boxes (they
+/// fold members in row order, exactly as a rebuild would — see
+/// `bwkm::source`), so the final rebuild was provably a no-op and every
+/// source ends this function with fully materialized block statistics.
+pub fn initial_partition_source<S: RefineSource>(
+    src: &mut S,
+    k: usize,
+    cfg: &InitCfg,
+    rng: &mut Rng,
+    counter: &DistanceCounter,
+) -> Result<()> {
     assert!(cfg.m_prime >= k.max(1), "m' must be ≥ K");
     assert!(cfg.m >= cfg.m_prime, "m must be ≥ m'");
-    let mut partition = starting_partition(data, cfg.m_prime, cfg.s, rng);
+    starting_partition_source(src, cfg.m_prime, cfg.s, rng)?;
 
-    while partition.len() < cfg.m {
-        let mass = cutting_masses(&partition, data, k, cfg.s, cfg.r, rng, counter);
-        let want = partition.len().min(cfg.m - partition.len());
+    while src.partition().len() < cfg.m {
+        let mass = cutting_masses_source(src, k, cfg.s, cfg.r, rng, counter)?;
+        let want = src.partition().len().min(cfg.m - src.partition().len());
         let selected = sample_with_replacement(&mass, want, rng);
         if selected.is_empty() {
             // Every sampled block is well assigned w.r.t. every seeding —
@@ -136,14 +196,11 @@ pub fn initial_partition(
             break;
         }
         for b in selected {
-            partition.split(b, data);
+            src.split(b);
         }
+        src.refresh()?;
     }
-
-    // Step 5: P = B(D). Splits above maintained exact membership, but a
-    // final rebuild also refreshes every tight bbox (the §2.3 refinement).
-    partition.assign_members(data);
-    partition
+    Ok(())
 }
 
 /// `want` draws with replacement ∝ `probs`, deduplicated (a block selected

@@ -35,9 +35,20 @@ pub fn epsilons(
     d1: &[f64],
     d2: &[f64],
 ) -> Vec<f64> {
-    ids.iter()
+    let diags: Vec<f64> =
+        ids.iter().map(|&b| partition.blocks[b].diagonal()).collect();
+    epsilons_from_diags(&diags, d1, d2)
+}
+
+/// [`epsilons`] from pre-gathered block diagonals (one per representative
+/// row). This is the shape the source-generic driver uses: the streaming
+/// path has no member-carrying blocks to read diagonals from, so the
+/// `RefineSource` supplies them (DESIGN.md §5.1).
+pub fn epsilons_from_diags(diags: &[f64], d1: &[f64], d2: &[f64]) -> Vec<f64> {
+    diags
+        .iter()
         .enumerate()
-        .map(|(row, &b)| epsilon(partition.blocks[b].diagonal(), d1[row], d2[row]))
+        .map(|(row, &l)| epsilon(l, d1[row], d2[row]))
         .collect()
 }
 
@@ -62,9 +73,21 @@ pub fn theorem2_bound(
     d1: &[f64],
     eps: &[f64],
 ) -> f64 {
+    let diags: Vec<f64> =
+        ids.iter().map(|&b| partition.blocks[b].diagonal()).collect();
+    theorem2_bound_from_diags(&diags, weights, d1, eps)
+}
+
+/// [`theorem2_bound`] from pre-gathered block diagonals — the
+/// source-generic shape (see [`epsilons_from_diags`]).
+pub fn theorem2_bound_from_diags(
+    diags: &[f64],
+    weights: &[f64],
+    d1: &[f64],
+    eps: &[f64],
+) -> f64 {
     let mut bound = 0.0;
-    for (row, &b) in ids.iter().enumerate() {
-        let l = partition.blocks[b].diagonal();
+    for (row, &l) in diags.iter().enumerate() {
         let w = weights[row];
         bound += 2.0 * w * eps[row] * (2.0 * l + d1[row].sqrt());
         bound += (w - 1.0) * 0.5 * l * l;

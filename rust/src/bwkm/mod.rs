@@ -6,12 +6,26 @@
 //! * [`init_partition`] — Algorithms 2–4 (the boundary-seeking initial
 //!   partition);
 //! * [`algorithm`] — Algorithm 5 (the main loop) with the §2.4.2 stopping
-//!   criteria.
+//!   criteria;
+//! * [`source`] — the [`RefineSource`] data-access seam (DESIGN.md §5.1)
+//!   that lets the same Alg. 2–5 drivers run in memory ([`MemSource`])
+//!   or out of core (`coordinator::streaming::StreamSource`).
 
 pub mod algorithm;
 pub mod init_partition;
 pub mod misassignment;
+pub mod source;
 
-pub use algorithm::{run, run_auto, run_with, BwkmCfg, BwkmOutcome, StopReason, TracePoint};
-pub use init_partition::{cutting_masses, initial_partition, starting_partition, InitCfg};
-pub use misassignment::{boundary, eps_w_for, epsilon, epsilons, theorem2_bound};
+pub use algorithm::{
+    run, run_auto, run_source, run_with, BwkmCfg, BwkmOutcome, SourceOutcome, StopReason,
+    TracePoint,
+};
+pub use init_partition::{
+    cutting_masses, cutting_masses_source, initial_partition, initial_partition_source,
+    starting_partition, starting_partition_source, InitCfg,
+};
+pub use misassignment::{
+    boundary, eps_w_for, epsilon, epsilons, epsilons_from_diags, theorem2_bound,
+    theorem2_bound_from_diags,
+};
+pub use source::{MemSource, RefineSource};

@@ -1,0 +1,286 @@
+//! Data access for the Alg. 2–5 pipeline — the seam between "the dataset
+//! is a slice" and "the dataset is a stream" (DESIGN.md §5.1).
+//!
+//! Every place the BWKM pipeline touches raw instances reduces to four
+//! operations: draw sampled rows by index, split a block by the paper's
+//! cutting rule, (re)establish per-block statistics (count, coordinate
+//! sum, tight bounding box), and evaluate E^D for instrumentation.
+//! [`RefineSource`] names exactly those operations, so one driver
+//! (`algorithm::run_source`, `init_partition::initial_partition_source`)
+//! serves both the in-memory path ([`MemSource`], wrapping
+//! [`Partition`] + [`Dataset`] with full membership) and the out-of-core
+//! path (`coordinator::streaming::StreamSource`, which re-scans a chunked
+//! source instead of holding members).
+//!
+//! **The bit-identity contract.** Both implementations must produce, for
+//! every block, *the same floating-point statistics*:
+//!
+//! * counts are integers and tight boxes are coordinate-wise min/max —
+//!   both are order-insensitive, so any evaluation order agrees;
+//! * coordinate sums are FP additions, which are **not** associative, so
+//!   the contract fixes one canonical order: a block's sum is the
+//!   sequential left-to-right sum over its member rows **in dataset row
+//!   order**. The in-memory path satisfies this for free (member lists
+//!   are built and split in row order, and `Partition::split_at` /
+//!   `Partition::assign_members` both fold members in that order); the
+//!   streaming path satisfies it by folding each pass serially in global
+//!   row order (DESIGN.md §5.1 merge-determinism rule).
+//!
+//! Under this contract the two paths see identical representatives,
+//! weights and diagonals at every step, draw identical random numbers,
+//! choose identical splits, and charge identical `DistanceCounter`
+//! totals — pinned with `==` by `tests/streaming_conformance.rs`.
+
+use anyhow::Result;
+
+use crate::data::Dataset;
+use crate::metrics::{kmeans_error, DistanceCounter};
+use crate::partition::Partition;
+
+/// Abstract access to a dataset being refined into a spatial partition
+/// (DESIGN.md §5.1). All methods are distance-free: implementations must
+/// never tick a caller-visible [`DistanceCounter`] — locating, splitting
+/// and statistics passes are partition work, not distance work
+/// (DESIGN.md §2.4).
+pub trait RefineSource {
+    /// Number of rows of the underlying dataset.
+    fn n(&self) -> usize;
+
+    /// Dimension.
+    fn d(&self) -> usize;
+
+    /// The rows at the given dataset indices, flat `idx.len()×d`, in
+    /// `idx` order (Alg. 3/4 sample in the RNG's draw order and fold
+    /// sample statistics in that order — the order must be preserved).
+    fn fetch_rows(&mut self, idx: &[usize]) -> Result<Vec<f64>>;
+
+    /// The spatial split tree. Streaming implementations carry no member
+    /// bookkeeping in the blocks; use the stats methods below instead of
+    /// `blocks[b].weight()` / `blocks[b].diagonal()`.
+    fn partition(&self) -> &Partition;
+
+    /// |P_b| — the number of dataset rows in block `b`.
+    fn weight(&self, b: usize) -> usize;
+
+    /// Number of non-empty blocks (|P| of the induced dataset partition).
+    fn occupied(&self) -> usize;
+
+    /// l_B of block `b`: the tight member-bbox diagonal when the block is
+    /// non-empty, the spatial cell diagonal otherwise (the same rule as
+    /// `partition::Block::diagonal`).
+    fn diagonal(&self, b: usize) -> f64;
+
+    /// Flat (reps, weights, block_ids) of the non-empty blocks — the
+    /// weighted point set the Lloyd engine consumes, in block-id order.
+    fn reps_weights(&self) -> (Vec<f64>, Vec<f64>, Vec<usize>);
+
+    /// Split block `b` with the paper's cutting rule (middle of the
+    /// longest side of its tight bbox, cell when empty). Implementations
+    /// may defer the children's statistics; callers must [`refresh`]
+    /// after a batch of splits before reading any per-block statistic.
+    ///
+    /// [`refresh`]: RefineSource::refresh
+    fn split(&mut self, b: usize);
+
+    /// Bring every per-block statistic up to date after a split batch.
+    /// In-memory: a no-op (splits maintain member-exact stats
+    /// incrementally). Streaming: one pass over the source, committed
+    /// only if the pass completes cleanly — a failed refresh must leave
+    /// the previous statistics in place.
+    fn refresh(&mut self) -> Result<()>;
+
+    /// E^D(C) over the full dataset — instrumentation only: must use a
+    /// private counter (never the method's own bill, DESIGN.md §2.4) and
+    /// must equal `metrics::kmeans_error` on the materialized data bit
+    /// for bit (reference kernel, SSE folded in row order).
+    fn full_error(&mut self, centroids: &[f64]) -> Result<f64>;
+}
+
+/// The in-memory [`RefineSource`]: a [`Partition`] with full membership
+/// over a borrowed [`Dataset`] — exactly the state `bwkm::run` always
+/// operated on, behind the trait.
+pub struct MemSource<'a> {
+    data: &'a Dataset,
+    partition: Partition,
+}
+
+impl<'a> MemSource<'a> {
+    /// Start from the single-block root partition (Alg. 2 Step 1).
+    pub fn new(data: &'a Dataset) -> MemSource<'a> {
+        MemSource { data, partition: Partition::root(data) }
+    }
+
+    /// Surrender the refined partition (members, sums and tight boxes
+    /// all populated).
+    pub fn into_partition(self) -> Partition {
+        self.partition
+    }
+}
+
+/// Read-only in-memory source over a *borrowed* partition — the shape
+/// behind the public `cutting_masses` wrapper, whose driver
+/// (`init_partition::cutting_masses_source`) only ever samples and
+/// locates: no splits, no refreshes, so no reason to deep-clone the
+/// partition's member lists the way an owning [`MemSource`] would
+/// require. Refinement through it is a programming error and panics.
+pub(crate) struct SampleOnlySource<'a> {
+    data: &'a Dataset,
+    partition: &'a Partition,
+}
+
+impl<'a> SampleOnlySource<'a> {
+    pub(crate) fn new(data: &'a Dataset, partition: &'a Partition) -> SampleOnlySource<'a> {
+        SampleOnlySource { data, partition }
+    }
+}
+
+impl RefineSource for SampleOnlySource<'_> {
+    fn n(&self) -> usize {
+        self.data.n
+    }
+
+    fn d(&self) -> usize {
+        self.data.d
+    }
+
+    fn fetch_rows(&mut self, idx: &[usize]) -> Result<Vec<f64>> {
+        Ok(self.data.gather(idx).data)
+    }
+
+    fn partition(&self) -> &Partition {
+        self.partition
+    }
+
+    fn weight(&self, b: usize) -> usize {
+        self.partition.blocks[b].weight()
+    }
+
+    fn occupied(&self) -> usize {
+        self.partition.occupied()
+    }
+
+    fn diagonal(&self, b: usize) -> f64 {
+        self.partition.blocks[b].diagonal()
+    }
+
+    fn reps_weights(&self) -> (Vec<f64>, Vec<f64>, Vec<usize>) {
+        self.partition.reps_weights()
+    }
+
+    fn split(&mut self, _b: usize) {
+        unreachable!("SampleOnlySource is read-only: the sampling drivers never split");
+    }
+
+    fn refresh(&mut self) -> Result<()> {
+        unreachable!("SampleOnlySource is read-only: the sampling drivers never refresh");
+    }
+
+    fn full_error(&mut self, centroids: &[f64]) -> Result<f64> {
+        let eval = DistanceCounter::new();
+        Ok(kmeans_error(&self.data.data, self.data.d, centroids, &eval))
+    }
+}
+
+impl RefineSource for MemSource<'_> {
+    fn n(&self) -> usize {
+        self.data.n
+    }
+
+    fn d(&self) -> usize {
+        self.data.d
+    }
+
+    fn fetch_rows(&mut self, idx: &[usize]) -> Result<Vec<f64>> {
+        Ok(self.data.gather(idx).data)
+    }
+
+    fn partition(&self) -> &Partition {
+        &self.partition
+    }
+
+    fn weight(&self, b: usize) -> usize {
+        self.partition.blocks[b].weight()
+    }
+
+    fn occupied(&self) -> usize {
+        self.partition.occupied()
+    }
+
+    fn diagonal(&self, b: usize) -> f64 {
+        self.partition.blocks[b].diagonal()
+    }
+
+    fn reps_weights(&self) -> (Vec<f64>, Vec<f64>, Vec<usize>) {
+        self.partition.reps_weights()
+    }
+
+    fn split(&mut self, b: usize) {
+        self.partition.split(b, self.data);
+    }
+
+    fn refresh(&mut self) -> Result<()> {
+        // Incremental splits keep member-exact stats: `split_at` folds
+        // each child's members in row order, which is exactly what a
+        // full `assign_members` rebuild would produce (the bit-identity
+        // contract above), so there is nothing to do.
+        Ok(())
+    }
+
+    fn full_error(&mut self, centroids: &[f64]) -> Result<f64> {
+        let eval = DistanceCounter::new(); // uncounted instrumentation
+        Ok(kmeans_error(&self.data.data, self.data.d, centroids, &eval))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn mem_source_mirrors_partition_state() {
+        let mut g = prop::Gen { rng: crate::util::Rng::new(71), case: 0 };
+        let ds = Dataset::new(g.blobs(200, 3, 2, 0.8), 3);
+        let mut src = MemSource::new(&ds);
+        assert_eq!(src.n(), 200);
+        assert_eq!(src.d(), 3);
+        assert_eq!(src.weight(0), 200);
+        assert_eq!(src.occupied(), 1);
+
+        src.split(0);
+        src.refresh().unwrap();
+        let p = src.partition();
+        assert_eq!(p.len(), 2);
+        for b in 0..2 {
+            assert_eq!(src.weight(b), p.blocks[b].weight());
+            assert_eq!(src.diagonal(b), p.blocks[b].diagonal());
+        }
+        let (reps, w, ids) = src.reps_weights();
+        let (reps2, w2, ids2) = src.partition().reps_weights();
+        assert_eq!(reps, reps2);
+        assert_eq!(w, w2);
+        assert_eq!(ids, ids2);
+    }
+
+    #[test]
+    fn fetch_rows_preserves_index_order() {
+        let ds = Dataset::new(vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0], 2);
+        let mut src = MemSource::new(&ds);
+        let rows = src.fetch_rows(&[2, 0]).unwrap();
+        assert_eq!(rows, vec![4.0, 5.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn full_error_matches_kmeans_error_and_counts_nothing() {
+        let mut g = prop::Gen { rng: crate::util::Rng::new(72), case: 0 };
+        let ds = Dataset::new(g.cloud(50, 2, 2.0), 2);
+        let cents = g.cloud(3, 2, 2.0);
+        let mut src = MemSource::new(&ds);
+        let c = DistanceCounter::new();
+        let e_ref = kmeans_error(&ds.data, 2, &cents, &c);
+        let before = c.get();
+        let e_src = src.full_error(&cents).unwrap();
+        assert_eq!(e_src.to_bits(), e_ref.to_bits());
+        assert_eq!(c.get(), before, "full_error must not tick caller counters");
+    }
+}

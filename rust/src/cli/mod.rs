@@ -30,7 +30,13 @@ USAGE:
   bwkm figure <NAME> [k=v ...]      regenerate a paper figure (CIF 3RN GS SUSY WUY)
 
 RUN KEYS: dataset scale seed k method budget threads use_pjrt eval_full_error
-          m m_prime s r max_outer    (method: bwkm fkm kmpp kmpp_init kmc2 mbN rpkm)
+          chunk_rows m m_prime s r max_outer
+          (method: bwkm fkm kmpp kmpp_init kmc2 mbN rpkm)
+          (dataset: a Table-1 name, path:FILE to load into memory, or
+           stream:FILE.bin to cluster out of core — method=bwkm only,
+           bit-identical to the in-memory run on the same data/seed;
+           the per-iteration E^D trace costs one pass per iteration out
+           of core, so it is opt-in there: eval_full_error=on)
 ";
 
 /// Entry point used by `src/main.rs`.
@@ -120,9 +126,80 @@ fn load_dataset(cfg: &RunConfig) -> Result<Dataset> {
     }
 }
 
+/// One line per outer BWKM iteration — shared by the in-memory and
+/// streaming runs so the two can never drift apart in layout.
+fn print_trace(trace: &[crate::bwkm::TracePoint]) {
+    for t in trace {
+        println!(
+            "  outer={:<3} dists={:>14} |B|={:<6} boundary={:<6} E^P={:.5e}{}",
+            t.outer_iter,
+            fmt_count(t.distances),
+            t.blocks,
+            t.boundary,
+            t.weighted_error,
+            t.full_error.map(|e| format!(" E^D={e:.5e}")).unwrap_or_default()
+        );
+    }
+}
+
+/// Out-of-core run: the full BWKM loop against a `stream:` binary file,
+/// never materializing the dataset (DESIGN.md §5.1). Bit-identical to
+/// `run` on the same data and seed.
+fn run_streaming(cfg: &RunConfig, path: &str) -> Result<()> {
+    use crate::coordinator::{stream_assign_err, StreamingBwkm};
+    use crate::data::loader::BinChunks;
+
+    if cfg.method != Method::Bwkm {
+        bail!("stream: datasets support method=bwkm only (got {})", cfg.method.name());
+    }
+    if cfg.use_pjrt {
+        bail!("stream: datasets do not support use_pjrt yet");
+    }
+    let p = Path::new(path);
+    let probe = BinChunks::open(p, cfg.chunk_rows)?; // header + truncation check
+    let (n, d) = (probe.n, probe.d);
+    drop(probe);
+    println!(
+        "run: dataset=stream:{path} n={n} d={d} k={} method=BWKM chunk_rows={} threads={}",
+        cfg.k, cfg.chunk_rows, cfg.threads
+    );
+    let mut bcfg = cfg.bwkm_cfg(n, d)?;
+    if !cfg.eval_full_error_explicit {
+        // Out of core every trace evaluation is one full pass over the
+        // source; keep the E^D trace opt-in here (eval_full_error=on).
+        bcfg.eval_full_error = false;
+    }
+    let counter = DistanceCounter::new();
+    let mut rng = Rng::new(cfg.seed);
+    let t0 = std::time::Instant::now();
+    let mut coordinator =
+        StreamingBwkm::new(BinChunks::opener(p, cfg.chunk_rows), d).with_threads(cfg.threads);
+    let out = coordinator.run(cfg.k, &bcfg, &mut rng, &counter)?;
+    print_trace(&out.trace);
+    // Final E^D by one more streamed scoring pass (its own counter).
+    let eval = DistanceCounter::new();
+    let (rows, sse) =
+        stream_assign_err(d, &out.centroids, BinChunks::open(p, cfg.chunk_rows)?, &eval)?;
+    if rows != n {
+        bail!("source changed during the run: scoring pass saw {rows} rows, expected {n}");
+    }
+    println!(
+        "result: E^D={sse:.6e} distances={} passes={} wall={:.2?} (stop={:?})",
+        fmt_count(counter.get()),
+        out.passes,
+        t0.elapsed(),
+        out.stop
+    );
+    Ok(())
+}
+
 fn run(args: &[String]) -> Result<()> {
     let mut cfg = RunConfig::default();
     parse_overrides(&mut cfg, args)?;
+    if let Some(path) = cfg.dataset.strip_prefix("stream:") {
+        let path = path.to_string();
+        return run_streaming(&cfg, &path);
+    }
     let ds = load_dataset(&cfg)?;
     if !ds.is_finite() {
         bail!("dataset contains non-finite values");
@@ -158,17 +235,7 @@ fn run(args: &[String]) -> Result<()> {
             } else {
                 crate::bwkm::run(&ds, cfg.k, &bcfg, &mut rng, &counter)
             };
-            for t in &out.trace {
-                println!(
-                    "  outer={:<3} dists={:>14} |B|={:<6} boundary={:<6} E^P={:.5e}{}",
-                    t.outer_iter,
-                    fmt_count(t.distances),
-                    t.blocks,
-                    t.boundary,
-                    t.weighted_error,
-                    t.full_error.map(|e| format!(" E^D={e:.5e}")).unwrap_or_default()
-                );
-            }
+            print_trace(&out.trace);
             let stop = out.stop;
             (out.centroids, format!("stop={stop:?}"))
         }
@@ -267,5 +334,30 @@ mod tests {
             "seed=1".into(),
         ])
         .unwrap();
+    }
+
+    #[test]
+    fn run_streaming_dataset_end_to_end() {
+        let ds = crate::data::simulate("3RN", 0.002, 7).unwrap();
+        let p = std::env::temp_dir()
+            .join(format!("bwkm_cli_stream_{}.bin", std::process::id()));
+        crate::data::loader::save_bin(&ds, &p).unwrap();
+        run(&[
+            format!("dataset=stream:{}", p.display()),
+            "k=3".into(),
+            "chunk_rows=256".into(),
+            "threads=2".into(),
+            "seed=1".into(),
+            "max_outer=3".into(),
+            "eval_full_error=off".into(),
+        ])
+        .unwrap();
+        // Non-BWKM methods must refuse the streaming path.
+        let err = run(&[
+            format!("dataset=stream:{}", p.display()),
+            "method=fkm".into(),
+        ]);
+        assert!(err.is_err());
+        std::fs::remove_file(&p).ok();
     }
 }

@@ -64,7 +64,9 @@ impl Method {
 /// A single clustering run's configuration.
 #[derive(Clone, Debug)]
 pub struct RunConfig {
-    /// Table-1 dataset name (simulated) or a `path:` prefixed file.
+    /// Table-1 dataset name (simulated), a `path:` prefixed file loaded
+    /// into memory, or a `stream:` prefixed binary file clustered out of
+    /// core (method=bwkm only; see `coordinator::streaming`).
     pub dataset: String,
     /// Simulator scale ∈ (0, 1].
     pub scale: f64,
@@ -79,6 +81,14 @@ pub struct RunConfig {
     pub use_pjrt: bool,
     /// Trace E^D per outer iteration (instrumentation).
     pub eval_full_error: bool,
+    /// Whether `eval_full_error` was explicitly set (config file or CLI)
+    /// rather than defaulted. The streaming runner consults this: out of
+    /// core, every trace evaluation costs one full pass over the source,
+    /// so it stays off unless asked for.
+    pub eval_full_error_explicit: bool,
+    /// Rows per chunk for `stream:` datasets (the out-of-core working
+    /// set; results are chunk-size independent, bit for bit).
+    pub chunk_rows: usize,
     /// Raw key/values for method-specific extras (m, m_prime, s, r, ...).
     pub extra: BTreeMap<String, String>,
 }
@@ -95,6 +105,8 @@ impl Default for RunConfig {
             threads: 1,
             use_pjrt: false,
             eval_full_error: true,
+            eval_full_error_explicit: false,
+            chunk_rows: 4096,
             extra: BTreeMap::new(),
         }
     }
@@ -131,7 +143,16 @@ impl RunConfig {
             "budget" => self.budget = value.parse().context("budget")?,
             "threads" => self.threads = value.parse().context("threads")?,
             "use_pjrt" => self.use_pjrt = parse_bool(value)?,
-            "eval_full_error" => self.eval_full_error = parse_bool(value)?,
+            "eval_full_error" => {
+                self.eval_full_error = parse_bool(value)?;
+                self.eval_full_error_explicit = true;
+            }
+            "chunk_rows" => {
+                self.chunk_rows = value.parse().context("chunk_rows")?;
+                if self.chunk_rows == 0 {
+                    bail!("chunk_rows must be ≥ 1");
+                }
+            }
             _ => {
                 self.extra.insert(key.to_string(), value.to_string());
             }
@@ -211,6 +232,16 @@ mod tests {
         assert_eq!(cfg.k, 3);
         assert!(cfg.set("scale", "abc").is_err());
         std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn chunk_rows_parses_and_rejects_zero() {
+        let mut cfg = RunConfig::default();
+        assert_eq!(cfg.chunk_rows, 4096);
+        cfg.set("chunk_rows", "512").unwrap();
+        assert_eq!(cfg.chunk_rows, 512);
+        assert!(cfg.set("chunk_rows", "0").is_err());
+        assert!(cfg.set("chunk_rows", "lots").is_err());
     }
 
     #[test]

@@ -7,13 +7,19 @@
 //! pipeline (assignment/error evaluation and the weighted-Lloyd step);
 //! both are thin wrappers over the assignment engine's sharded backend
 //! (`kmeans::assign::ShardedAssigner`, DESIGN.md §2.5), and [`streaming`]
-//! handles sources that never fit in memory. Shards come from the one
-//! canonical `shard_ranges` rule and reductions are performed in shard
-//! order, so results are bit-identical to the serial path — asserted by
-//! the equivalence tests.
+//! handles sources that never fit in memory — up to the full out-of-core
+//! BWKM loop ([`StreamingBwkm`], DESIGN.md §5.1), pinned bit-identical
+//! to the in-memory path. Shards come from the one canonical
+//! `shard_ranges` rule and reductions are performed in shard order, so
+//! results are bit-identical to the serial path — asserted by the
+//! equivalence tests.
 
 pub mod parallel;
 pub mod streaming;
 
 pub use parallel::{sharded_assign_err, sharded_weighted_step, ShardedStepper};
-pub use streaming::{stream_assign_err, stream_bwkm, stream_partition_stats, StreamBwkmCfg, StreamBwkmOutcome, StreamStats};
+pub use streaming::{
+    stream_assign_err, stream_assign_err_with, stream_partition_stats,
+    stream_partition_stats_with, ChunkCrew, StreamBwkmOutcome, StreamSource, StreamStats,
+    StreamingBwkm,
+};

@@ -1,17 +1,56 @@
-//! Streaming ingestion: the massive-data path where the dataset never fits
-//! in memory. Chunks come from any `Iterator<Item = Result<Vec<f64>>>`
-//! (e.g. [`crate::data::loader::BinChunks`]); the coordinator accumulates
-//! per-block statistics against a spatial [`Partition`] and evaluates
-//! errors chunk-by-chunk with bounded memory.
+//! Out-of-core BWKM (DESIGN.md §5.1): the massive-data path where the
+//! dataset never fits in memory.
+//!
+//! Chunks come from any *restartable* chunked source — a closure
+//! `FnMut() -> Result<I>` yielding an `Iterator<Item = Result<Vec<f64>>>`
+//! per pass (e.g. [`crate::data::loader::BinChunks`]). [`StreamSource`]
+//! implements the [`RefineSource`] data-access seam over such a source,
+//! so the *same* Alg. 2–5 drivers that power `bwkm::run` execute the
+//! full boundary-weighted loop while holding only
+//! O(chunk + |partition|) rows: per-block statistics live in a
+//! [`StreamStats`] side table instead of member lists, sampled rows are
+//! fetched by streaming, and every split batch is followed by one
+//! statistics pass (the O(n·d)-per-refinement price the paper's
+//! Problem 2 discussion assigns to partition updates).
+//!
+//! **Merge determinism (the §5.1 rule).** Each pass fans a chunk's rows
+//! out over sharded chunk workers ([`ChunkCrew`], the `Sharded<B>` idiom
+//! of `kmeans::assign`): workers compute only *per-row pure* results
+//! (block ids via tree descent, per-row nearest distances), which are
+//! concatenated in shard order; every floating-point accumulation —
+//! block coordinate sums, tight-box folds are order-free min/max, SSE —
+//! is performed by the leader serially in global row order. FP sums are
+//! therefore never merged across workers, and the result is bit-identical
+//! for every (chunk size, worker count) — and, because a block's members
+//! always appear in row order, bit-identical to the in-memory path's
+//! incremental member folds (see `bwkm::source`). The conformance suite
+//! (`tests/streaming_conformance.rs`) pins [`StreamingBwkm`] `==`
+//! `bwkm::run` — same splits, same reps/weights, same centroids, same
+//! `DistanceCounter` totals — with no tolerances.
+//!
+//! **Counting.** Statistics/fetch/extent passes are partition work and
+//! tick nothing (DESIGN.md §2.4); the distance bill comes only from the
+//! same seeding/Lloyd/ε machinery the in-memory path runs on the (tiny)
+//! representative set, plus any explicitly requested streamed E^D
+//! evaluation ([`stream_assign_err`], rows·k). Pass counts are reported
+//! in [`StreamBwkmOutcome::passes`].
 
-use anyhow::Result;
+use std::collections::HashMap;
 
+use anyhow::{anyhow, bail, Result};
+
+use crate::bwkm::source::RefineSource;
+use crate::bwkm::{run_source, BwkmCfg, StopReason, TracePoint};
 use crate::geometry::BBox;
+use crate::kmeans::assign::shard_ranges;
+use crate::kmeans::{AutoAssigner, EngineStepper, NativeStepper, Stepper};
 use crate::metrics::{nearest, DistanceCounter};
 use crate::partition::Partition;
+use crate::util::Rng;
 
 /// Per-block statistics accumulated from a stream (counts, sums and tight
-/// boxes — exactly what `Partition::assign_members` computes in-memory).
+/// boxes — exactly what `Partition::assign_members` computes in-memory,
+/// held beside a member-free spatial [`Partition`]).
 #[derive(Clone, Debug)]
 pub struct StreamStats {
     pub counts: Vec<usize>,
@@ -21,8 +60,9 @@ pub struct StreamStats {
 }
 
 impl StreamStats {
-    /// Flat (reps, weights, block_ids) — same contract as
-    /// `Partition::reps_weights`, but built from the stream.
+    /// Flat (reps, weights, block_ids) — same contract (and same
+    /// floating-point divisions) as `Partition::reps_weights`, but built
+    /// from the stream.
     pub fn reps_weights(&self, d: usize) -> (Vec<f64>, Vec<f64>, Vec<usize>) {
         let mut reps = Vec::new();
         let mut weights = Vec::new();
@@ -38,14 +78,172 @@ impl StreamStats {
         }
         (reps, weights, ids)
     }
+
+    /// Number of non-empty blocks.
+    pub fn occupied(&self) -> usize {
+        self.counts.iter().filter(|&&c| c > 0).count()
+    }
+}
+
+/// Validated row count of one chunk: a chunk whose length is not a
+/// multiple of `d` is a short read / corruption, never silently dropped.
+fn chunk_row_count(chunk: &[f64], d: usize) -> Result<usize> {
+    if chunk.len() % d != 0 {
+        bail!("ragged chunk: {} values is not a multiple of d={d}", chunk.len());
+    }
+    Ok(chunk.len() / d)
+}
+
+/// Below this many rows per chunk the worker fan-out costs more than it
+/// saves; the leader computes such chunks itself (bit-identical either
+/// way — workers only ever compute per-row pure results).
+const PAR_MIN_ROWS: usize = 64;
+
+/// The streamed-pass worker crew — the `Sharded<B>` idiom of
+/// `kmeans::assign` (DESIGN.md §2.5) applied to chunk passes: one team
+/// of **persistent** workers is stood up per pass (not per chunk) and
+/// fed over channels; for each chunk, rows are split with the one
+/// canonical [`shard_ranges`] rule, every worker computes a *per-row
+/// pure* function on its contiguous shard (no FP accumulation), and the
+/// partials are concatenated in shard order. The leader then folds in
+/// global row order, so results are bit-identical for every worker
+/// count (DESIGN.md §5.1).
+#[derive(Clone, Debug)]
+pub struct ChunkCrew {
+    threads: usize,
+}
+
+impl ChunkCrew {
+    pub fn new(threads: usize) -> ChunkCrew {
+        ChunkCrew { threads: threads.max(1) }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// One streamed pass: `per_row` is computed for every row (fanned
+    /// out over the persistent worker team), then `fold` is called once
+    /// per chunk with the chunk and its per-row values, **in stream
+    /// order** — all FP accumulation belongs in `fold`, on the leader.
+    /// Validates every chunk's shape; returns the total row count.
+    fn map_pass<I, T, W, FOLD>(
+        &self,
+        d: usize,
+        chunks: I,
+        per_row: W,
+        mut fold: FOLD,
+    ) -> Result<usize>
+    where
+        I: IntoIterator<Item = Result<Vec<f64>>>,
+        T: Send,
+        W: Fn(&[f64]) -> T + Sync,
+        FOLD: FnMut(&[f64], Vec<T>) -> Result<()>,
+    {
+        if d == 0 {
+            bail!("dimension must be positive");
+        }
+        if self.threads == 1 {
+            let mut rows = 0usize;
+            for chunk in chunks {
+                let chunk = chunk?;
+                rows += chunk_row_count(&chunk, d)?;
+                let vals: Vec<T> = chunk.chunks_exact(d).map(&per_row).collect();
+                fold(&chunk, vals)?;
+            }
+            return Ok(rows);
+        }
+        let per_row = &per_row;
+        let threads = self.threads;
+        std::thread::scope(move |scope| {
+            // Stand the team up once; each worker owns one task and one
+            // result channel and lives for the whole pass.
+            let mut task_tx = Vec::with_capacity(threads);
+            let mut result_rx = Vec::with_capacity(threads);
+            for _ in 0..threads {
+                let (ttx, trx) =
+                    std::sync::mpsc::channel::<(std::sync::Arc<Vec<f64>>, std::ops::Range<usize>)>();
+                let (rtx, rrx) = std::sync::mpsc::channel::<Vec<T>>();
+                scope.spawn(move || {
+                    for (chunk, r) in trx {
+                        let vals: Vec<T> = chunk[r.start * d..r.end * d]
+                            .chunks_exact(d)
+                            .map(per_row)
+                            .collect();
+                        if rtx.send(vals).is_err() {
+                            break; // leader bailed out mid-pass
+                        }
+                    }
+                });
+                task_tx.push(ttx);
+                result_rx.push(rrx);
+            }
+            // Double-buffered pipeline: while the workers compute chunk
+            // N, the leader reads chunk N+1 from the (possibly
+            // disk-bound) source, then drains N's results and folds them
+            // — fold order is stream order, so the §5.1 determinism rule
+            // is untouched; only the read latency hides behind compute.
+            let mut rows = 0usize;
+            let mut iter = chunks.into_iter();
+            let mut in_flight: Option<(std::sync::Arc<Vec<f64>>, usize)> = None;
+            loop {
+                let next = iter.next().transpose()?; // overlaps in-flight compute
+                if let Some((chunk, nranges)) = in_flight.take() {
+                    // Ordered reduction: worker order == shard order ==
+                    // row order.
+                    let mut vals: Vec<T> = Vec::with_capacity(chunk.len() / d);
+                    for rx in result_rx.iter().take(nranges) {
+                        vals.extend(rx.recv().expect("chunk worker died"));
+                    }
+                    fold(chunk.as_slice(), vals)?;
+                }
+                let chunk = match next {
+                    Some(chunk) => chunk,
+                    None => break,
+                };
+                let n = chunk_row_count(&chunk, d)?;
+                rows += n;
+                if n < PAR_MIN_ROWS {
+                    let vals: Vec<T> = chunk.chunks_exact(d).map(per_row).collect();
+                    fold(&chunk, vals)?;
+                } else {
+                    let ranges = shard_ranges(n, threads);
+                    let chunk = std::sync::Arc::new(chunk);
+                    for (w, r) in ranges.iter().enumerate() {
+                        task_tx[w]
+                            .send((chunk.clone(), r.clone()))
+                            .expect("chunk worker died");
+                    }
+                    in_flight = Some((chunk, ranges.len()));
+                }
+            }
+            drop(task_tx); // team drains and exits; the scope joins it
+            Ok(rows)
+        })
+    }
 }
 
 /// One pass over a chunked source, locating every row through the
-/// partition tree. O(chunk) memory.
+/// partition tree and folding per-block statistics in global row order
+/// (the §5.1 merge rule). O(chunk + |partition|) memory.
 pub fn stream_partition_stats<I>(
     partition: &Partition,
     d: usize,
     chunks: I,
+) -> Result<StreamStats>
+where
+    I: IntoIterator<Item = Result<Vec<f64>>>,
+{
+    stream_partition_stats_with(partition, d, chunks, &ChunkCrew::new(1))
+}
+
+/// [`stream_partition_stats`] with locate fanned out over a
+/// [`ChunkCrew`]; bit-identical to the serial form for every crew size.
+pub fn stream_partition_stats_with<I>(
+    partition: &Partition,
+    d: usize,
+    chunks: I,
+    crew: &ChunkCrew,
 ) -> Result<StreamStats>
 where
     I: IntoIterator<Item = Result<Vec<f64>>>,
@@ -57,26 +255,34 @@ where
         tight: vec![None; nb],
         rows: 0,
     };
-    for chunk in chunks {
-        let chunk = chunk?;
-        for row in chunk.chunks_exact(d) {
-            let b = partition.locate(row);
-            stats.counts[b] += 1;
-            for j in 0..d {
-                stats.sums[b][j] += row[j];
+    // Workers locate (per-row pure, no distance computations); the
+    // leader folds counts/sums/boxes in global row order (§5.1).
+    let rows = crew.map_pass(
+        d,
+        chunks,
+        |row| partition.locate(row) as u32,
+        |chunk, ids| {
+            for (r, row) in chunk.chunks_exact(d).enumerate() {
+                let b = ids[r] as usize;
+                stats.counts[b] += 1;
+                for j in 0..d {
+                    stats.sums[b][j] += row[j];
+                }
+                match &mut stats.tight[b] {
+                    Some(bb) => bb.expand(row),
+                    None => stats.tight[b] = Some(BBox::at(row)),
+                }
             }
-            match &mut stats.tight[b] {
-                Some(bb) => bb.expand(row),
-                None => stats.tight[b] = Some(BBox::at(row)),
-            }
-            stats.rows += 1;
-        }
-    }
+            Ok(())
+        },
+    )?;
+    stats.rows = rows;
     Ok(stats)
 }
 
 /// Streaming E^D evaluation: assignment + SSE over a chunked source.
-/// Counts rows·k distances. Returns (rows, sse).
+/// Counts rows·k distances. Returns (rows, sse); bit-identical to
+/// `metrics::kmeans_error` on the materialized data.
 pub fn stream_assign_err<I>(
     d: usize,
     centroids: &[f64],
@@ -86,146 +292,382 @@ pub fn stream_assign_err<I>(
 where
     I: IntoIterator<Item = Result<Vec<f64>>>,
 {
+    stream_assign_err_with(d, centroids, chunks, counter, &ChunkCrew::new(1))
+}
+
+/// [`stream_assign_err`] with the per-row distance work fanned out over a
+/// [`ChunkCrew`]; the SSE is still folded by the leader in row order, so
+/// the sum is bit-identical for every crew size.
+pub fn stream_assign_err_with<I>(
+    d: usize,
+    centroids: &[f64],
+    chunks: I,
+    counter: &DistanceCounter,
+    crew: &ChunkCrew,
+) -> Result<(usize, f64)>
+where
+    I: IntoIterator<Item = Result<Vec<f64>>>,
+{
+    // Workers compute per-row nearest distances through the reference
+    // kernel (`metrics::nearest` — the same per-row function
+    // `kmeans_error` uses; the counter is atomic, so the rows·k total is
+    // worker-count independent); the leader folds the SSE in global row
+    // order, so the sum is bit-identical for every crew size.
     let mut sse = 0.0;
-    let mut rows = 0usize;
-    for chunk in chunks {
-        let chunk = chunk?;
-        for row in chunk.chunks_exact(d) {
-            let (_, dd) = nearest(row, centroids, d, counter);
-            sse += dd;
-            rows += 1;
-        }
-    }
+    let rows = crew.map_pass(
+        d,
+        chunks,
+        |row| nearest(row, centroids, d, counter).1,
+        |_chunk, d1s| {
+            for dd in d1s {
+                sse += dd;
+            }
+            Ok(())
+        },
+    )?;
     Ok((rows, sse))
 }
 
-/// Out-of-core BWKM: the full boundary-weighted loop against a re-openable
-/// chunked source. Per outer iteration the source is streamed once to
-/// rebuild per-block statistics (the streaming trade-off the paper's
-/// Problem 2 discussion prices at O(n·d) per partition update); the
-/// weighted-Lloyd inner loop and the ε/boundary machinery run over the
-/// (tiny) representative set in memory.
-pub struct StreamBwkmCfg {
-    /// Initial partition size (the §2.4.1 m).
-    pub target_blocks: usize,
-    pub max_outer: usize,
-    pub wl: crate::kmeans::WLloydCfg,
-}
-
-/// Outcome of a streaming BWKM run.
-pub struct StreamBwkmOutcome {
-    pub centroids: Vec<f64>,
-    /// Streaming passes over the source.
-    pub passes: usize,
-    pub blocks: usize,
-    /// True if the run ended on an empty boundary (Thm 3 fixed point).
-    pub converged: bool,
-}
-
-/// Run BWKM against a source that can be re-opened for each pass.
-pub fn stream_bwkm<I, F>(
-    open: F,
-    d: usize,
-    k: usize,
-    cfg: &StreamBwkmCfg,
-    rng: &mut crate::util::Rng,
-    counter: &DistanceCounter,
-) -> Result<StreamBwkmOutcome>
+/// Extent pass: row count, bounding box and total coordinate sum of the
+/// stream — the root-block statistics (`Partition::root` computes the
+/// same three quantities in-memory, in the same fold order). This first
+/// pass also enforces the finite-data guard every in-memory entry point
+/// gets from `Dataset::is_finite`: a NaN/Inf value would silently poison
+/// bbox folds and tree descents, so it is a loud error here instead.
+fn pass_extent<I>(d: usize, chunks: I) -> Result<(usize, Option<BBox>, Vec<f64>)>
 where
     I: IntoIterator<Item = Result<Vec<f64>>>,
-    F: Fn() -> Result<I>,
 {
-    use crate::kmeans::init::weighted_kmeanspp;
-    use crate::kmeans::{weighted_lloyd, NativeStepper, Stepper};
-
-    // Pass 1: bounding box of the stream.
+    let mut rows = 0usize;
     let mut bbox: Option<BBox> = None;
-    let mut passes = 1usize;
-    for chunk in open()? {
-        for row in chunk?.chunks_exact(d) {
+    let mut sum = vec![0.0; d];
+    for chunk in chunks {
+        let chunk = chunk?;
+        chunk_row_count(&chunk, d)?;
+        for row in chunk.chunks_exact(d) {
+            if let Some(j) = (0..d).find(|&j| !row[j].is_finite()) {
+                bail!("stream contains a non-finite value at row {rows}, column {j}");
+            }
+            for j in 0..d {
+                sum[j] += row[j];
+            }
             match &mut bbox {
                 Some(bb) => bb.expand(row),
                 None => bbox = Some(BBox::at(row)),
             }
+            rows += 1;
         }
     }
-    let bbox = bbox.ok_or_else(|| anyhow::anyhow!("empty stream"))?;
-    let mut partition = Partition::root_spatial(bbox, d);
+    Ok((rows, bbox, sum))
+}
 
-    // Growth passes: streamed Alg. 3 (split heavy × large blocks).
-    let mut stats;
-    loop {
-        passes += 1;
-        stats = stream_partition_stats(&partition, d, open()?)?;
-        if partition.len() >= cfg.target_blocks {
-            break;
-        }
-        let mut scored: Vec<(f64, usize)> = (0..partition.len())
-            .filter(|&b| stats.counts[b] > 1)
-            .map(|b| {
-                let diag = stats.tight[b].as_ref().map(|t| t.diagonal()).unwrap_or(0.0);
-                (diag * stats.counts[b] as f64, b)
-            })
-            .filter(|&(s, _)| s > 0.0)
-            .collect();
-        if scored.is_empty() {
-            break;
-        }
-        scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
-        let budget = (cfg.target_blocks - partition.len()).min(scored.len()).max(1);
-        for &(_, b) in scored.iter().take(budget) {
-            if let Some(t) = stats.tight[b].clone() {
-                let (axis, thr) = t.split_plane();
-                partition.split_at(b, axis, thr, None);
-            }
-        }
+/// Fetch pass: the rows at the given dataset indices, flat `idx.len()×d`
+/// in `idx` order (duplicates allowed), plus the stream's total row count
+/// for cross-pass validation. O(idx + chunk) memory.
+fn pass_fetch<I>(d: usize, chunks: I, idx: &[usize]) -> Result<(Vec<f64>, usize)>
+where
+    I: IntoIterator<Item = Result<Vec<f64>>>,
+{
+    let mut want: HashMap<usize, Vec<usize>> = HashMap::new();
+    for (pos, &i) in idx.iter().enumerate() {
+        want.entry(i).or_default().push(pos);
     }
-
-    // Seed + boundary-weighted outer loop.
-    let (mut reps, mut weights, mut ids) = stats.reps_weights(d);
-    let mut centroids = weighted_kmeanspp(&reps, &weights, d, k.min(weights.len()), rng, counter);
-    let mut converged = false;
-    for _ in 0..cfg.max_outer {
-        let out = weighted_lloyd(&reps, &weights, d, &centroids, &cfg.wl, counter);
-        centroids = out.centroids.clone();
-
-        // ε from sample-tight diagonals (streamed equivalent of §2.3).
-        let eps: Vec<f64> = ids
-            .iter()
-            .enumerate()
-            .map(|(row, &b)| {
-                let diag = stats.tight[b].as_ref().map(|t| t.diagonal()).unwrap_or(0.0);
-                crate::bwkm::epsilon(diag, out.d1[row], out.d2[row])
-            })
-            .collect();
-        let boundary: Vec<usize> =
-            (0..eps.len()).filter(|&i| eps[i] > 0.0).collect();
-        if boundary.is_empty() {
-            converged = true;
-            break;
-        }
-        // Split every boundary block once (deterministic streamed variant;
-        // the in-memory path samples ∝ ε).
-        for &row in &boundary {
-            let b = ids[row];
-            if let Some(t) = stats.tight[b].clone() {
-                if stats.counts[b] > 1 && t.diagonal() > 0.0 {
-                    let (axis, thr) = t.split_plane();
-                    partition.split_at(b, axis, thr, None);
+    let mut out = vec![0.0; idx.len() * d];
+    let mut found = 0usize;
+    let mut row_id = 0usize;
+    for chunk in chunks {
+        let chunk = chunk?;
+        chunk_row_count(&chunk, d)?;
+        for row in chunk.chunks_exact(d) {
+            if let Some(positions) = want.get(&row_id) {
+                for &pos in positions {
+                    out[pos * d..(pos + 1) * d].copy_from_slice(row);
                 }
+                found += positions.len();
             }
+            row_id += 1;
         }
-        passes += 1;
-        stats = stream_partition_stats(&partition, d, open()?)?;
-        let rw = stats.reps_weights(d);
-        reps = rw.0;
-        weights = rw.1;
-        ids = rw.2;
-        // Keep the assignment warm for the next inner loop.
-        let _ = NativeStepper::new(); // (stepper is stateless between loops)
+    }
+    if found != idx.len() {
+        bail!(
+            "sample fetch found {found} of {} requested rows (stream has {row_id} rows)",
+            idx.len()
+        );
+    }
+    Ok((out, row_id))
+}
+
+/// [`RefineSource`] over a restartable chunked source: the spatial
+/// [`Partition`] plus a [`StreamStats`] side table stand in for member
+/// bookkeeping, and every statistic is (re)established by streamed
+/// passes. A failed pass leaves the previously committed statistics in
+/// place (commit-on-success), and every pass validates chunk integrity
+/// and the cross-pass row count, so a source that shrinks, grows or
+/// short-reads between passes surfaces as a clean `Err`.
+pub struct StreamSource<F> {
+    open: F,
+    d: usize,
+    n: usize,
+    partition: Partition,
+    stats: StreamStats,
+    crew: ChunkCrew,
+    passes: usize,
+    /// Splits applied since the last committed statistics pass.
+    dirty: bool,
+}
+
+impl<F, I> StreamSource<F>
+where
+    F: FnMut() -> Result<I>,
+    I: IntoIterator<Item = Result<Vec<f64>>>,
+{
+    /// Open the source once (the extent pass) and stand up the root
+    /// partition over the stream's bounding box.
+    pub fn new(mut open: F, d: usize, threads: usize) -> Result<StreamSource<F>> {
+        if d == 0 {
+            bail!("dimension must be positive");
+        }
+        let (rows, bbox, sum) = pass_extent(d, open()?)?;
+        let bbox = bbox.ok_or_else(|| anyhow!("empty stream"))?;
+        let partition = Partition::root_spatial(bbox.clone(), d);
+        let stats = StreamStats {
+            counts: vec![rows],
+            sums: vec![sum],
+            tight: vec![Some(bbox)],
+            rows,
+        };
+        Ok(StreamSource {
+            open,
+            d,
+            n: rows,
+            partition,
+            stats,
+            crew: ChunkCrew::new(threads),
+            passes: 1,
+            dirty: false,
+        })
     }
 
-    Ok(StreamBwkmOutcome { centroids, passes, blocks: partition.len(), converged })
+    /// Streaming passes over the source so far.
+    pub fn passes(&self) -> usize {
+        self.passes
+    }
+
+    /// The committed per-block statistics.
+    pub fn stats(&self) -> &StreamStats {
+        &self.stats
+    }
+
+    /// Surrender the spatial partition (blocks carry no members; the
+    /// statistics live in [`stats`](Self::stats)).
+    pub fn into_partition(self) -> Partition {
+        self.partition
+    }
+
+    fn open_pass(&mut self) -> Result<I> {
+        self.passes += 1;
+        (self.open)()
+    }
+}
+
+impl<F, I> RefineSource for StreamSource<F>
+where
+    F: FnMut() -> Result<I>,
+    I: IntoIterator<Item = Result<Vec<f64>>>,
+{
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn d(&self) -> usize {
+        self.d
+    }
+
+    fn fetch_rows(&mut self, idx: &[usize]) -> Result<Vec<f64>> {
+        let chunks = self.open_pass()?;
+        let (rows, seen) = pass_fetch(self.d, chunks, idx)?;
+        if seen != self.n {
+            bail!("source changed between passes: {seen} rows, expected {}", self.n);
+        }
+        Ok(rows)
+    }
+
+    fn partition(&self) -> &Partition {
+        &self.partition
+    }
+
+    fn weight(&self, b: usize) -> usize {
+        // Valid mid-split-batch only for blocks not split in the batch —
+        // exactly how the drivers use it (split targets are distinct).
+        self.stats.counts[b]
+    }
+
+    fn occupied(&self) -> usize {
+        debug_assert!(!self.dirty, "occupied() before refresh()");
+        self.stats.occupied()
+    }
+
+    fn diagonal(&self, b: usize) -> f64 {
+        debug_assert!(!self.dirty, "diagonal() before refresh()");
+        match &self.stats.tight[b] {
+            Some(bb) => bb.diagonal(),
+            None => self.partition.blocks[b].cell.diagonal(),
+        }
+    }
+
+    fn reps_weights(&self) -> (Vec<f64>, Vec<f64>, Vec<usize>) {
+        debug_assert!(!self.dirty, "reps_weights() before refresh()");
+        self.stats.reps_weights(self.d)
+    }
+
+    fn split(&mut self, b: usize) {
+        // The paper's cutting rule on the streamed statistics: tight
+        // member bbox when the block is non-empty, spatial cell otherwise
+        // (the same effective-bbox rule as `Partition::split`).
+        let (axis, thr) = match &self.stats.tight[b] {
+            Some(bb) => bb.split_plane(),
+            None => self.partition.blocks[b].cell.split_plane(),
+        };
+        self.partition.split_at(b, axis, thr, None);
+        self.dirty = true;
+    }
+
+    fn refresh(&mut self) -> Result<()> {
+        if !self.dirty {
+            return Ok(()); // committed stats are already current
+        }
+        let chunks = self.open_pass()?;
+        let stats = stream_partition_stats_with(&self.partition, self.d, chunks, &self.crew)?;
+        if stats.rows != self.n {
+            bail!("source changed between passes: {} rows, expected {}", stats.rows, self.n);
+        }
+        self.stats = stats; // commit only on success
+        self.dirty = false;
+        Ok(())
+    }
+
+    fn full_error(&mut self, centroids: &[f64]) -> Result<f64> {
+        let eval = DistanceCounter::new(); // uncounted instrumentation
+        let chunks = self.open_pass()?;
+        let crew = self.crew.clone();
+        let (rows, sse) = stream_assign_err_with(self.d, centroids, chunks, &eval, &crew)?;
+        if rows != self.n {
+            bail!("source changed between passes: {rows} rows, expected {}", self.n);
+        }
+        Ok(sse)
+    }
+}
+
+/// Outcome of a [`StreamingBwkm`] run: everything `bwkm::run` reports,
+/// plus the final representative set (the partition's blocks carry no
+/// members out of core) and the number of streaming passes consumed.
+#[derive(Clone, Debug)]
+pub struct StreamBwkmOutcome {
+    pub centroids: Vec<f64>,
+    pub k: usize,
+    pub d: usize,
+    pub stop: StopReason,
+    pub trace: Vec<TracePoint>,
+    /// Final spatial partition (member-free blocks).
+    pub partition: Partition,
+    /// Final flat representatives / weights / block ids — what
+    /// `partition.reps_weights()` returns on the in-memory side.
+    pub reps: Vec<f64>,
+    pub weights: Vec<f64>,
+    pub ids: Vec<usize>,
+    /// Streaming passes over the source (extent + sample fetches +
+    /// statistics refreshes + any `eval_full_error` evaluations).
+    pub passes: usize,
+}
+
+/// The out-of-core BWKM coordinator: the full Alg. 5 loop (initial
+/// partition, weighted Lloyd through any engine backend, ε-guided
+/// refinement, §2.4.2 stopping) against a restartable chunked source,
+/// pinned **bit-identical** to the in-memory `bwkm::run`/`run_auto` on
+/// the same data and seed (DESIGN.md §5.1).
+pub struct StreamingBwkm<F> {
+    open: F,
+    d: usize,
+    threads: usize,
+}
+
+impl<F, I> StreamingBwkm<F>
+where
+    F: FnMut() -> Result<I>,
+    I: IntoIterator<Item = Result<Vec<f64>>>,
+{
+    /// A coordinator over `open`, which must yield the same chunked rows
+    /// on every call (chunk *boundaries* may differ between passes;
+    /// values and row order may not).
+    pub fn new(open: F, d: usize) -> StreamingBwkm<F> {
+        StreamingBwkm { open, d, threads: 1 }
+    }
+
+    /// Fan each streamed pass out over `threads` chunk workers
+    /// (bit-identical results for every value — the §5.1 merge rule).
+    pub fn with_threads(mut self, threads: usize) -> StreamingBwkm<F> {
+        self.threads = threads.max(1);
+        self
+    }
+
+    /// Run with the serial native engine — the streamed twin of
+    /// [`crate::bwkm::run`].
+    pub fn run(
+        &mut self,
+        k: usize,
+        cfg: &BwkmCfg,
+        rng: &mut Rng,
+        counter: &DistanceCounter,
+    ) -> Result<StreamBwkmOutcome> {
+        self.run_with(&mut NativeStepper::new(), k, cfg, rng, counter)
+    }
+
+    /// Run with the auto-selecting engine (serial / norm-pruned /
+    /// bounded per inner step, DESIGN.md §2.7) — the streamed twin of
+    /// [`crate::bwkm::run_auto`]: same trajectory, smaller bill.
+    pub fn run_auto(
+        &mut self,
+        k: usize,
+        cfg: &BwkmCfg,
+        rng: &mut Rng,
+        counter: &DistanceCounter,
+    ) -> Result<StreamBwkmOutcome> {
+        let mut stepper: EngineStepper<AutoAssigner> = EngineStepper::new();
+        self.run_with(&mut stepper, k, cfg, rng, counter)
+    }
+
+    /// Run over an arbitrary weighted-Lloyd [`Stepper`] backend.
+    pub fn run_with(
+        &mut self,
+        stepper: &mut dyn Stepper,
+        k: usize,
+        cfg: &BwkmCfg,
+        rng: &mut Rng,
+        counter: &DistanceCounter,
+    ) -> Result<StreamBwkmOutcome> {
+        if k < 1 {
+            bail!("k must be ≥ 1");
+        }
+        let mut src = StreamSource::new(&mut self.open, self.d, self.threads)?;
+        if src.n() < k {
+            bail!("n must be ≥ k (stream has {} rows, k={k})", src.n());
+        }
+        let out = run_source(stepper, &mut src, k, cfg, rng, counter)?;
+        let (reps, weights, ids) = src.reps_weights();
+        let passes = src.passes();
+        Ok(StreamBwkmOutcome {
+            centroids: out.centroids,
+            k: out.k,
+            d: out.d,
+            stop: out.stop,
+            trace: out.trace,
+            reps,
+            weights,
+            ids,
+            passes,
+            partition: src.into_partition(),
+        })
+    }
 }
 
 #[cfg(test)]
@@ -234,53 +676,88 @@ mod tests {
     use crate::data::Dataset;
     use crate::util::prop;
 
-    #[test]
-    fn stream_bwkm_matches_in_memory_quality() {
-        let mut g = prop::Gen { rng: crate::util::Rng::new(91), case: 0 };
-        let ds = Dataset::new(g.blobs(3000, 3, 4, 0.4), 3);
-        let data = ds.data.clone();
-        let open = move || -> Result<Vec<Result<Vec<f64>>>> {
-            Ok(data.chunks(3 * 256).map(|c| Ok(c.to_vec())).collect())
-        };
-        let counter = DistanceCounter::new();
-        let cfg = StreamBwkmCfg {
-            target_blocks: 80,
-            max_outer: 10,
-            wl: crate::kmeans::WLloydCfg::default(),
-        };
-        let out =
-            stream_bwkm(open, 3, 4, &cfg, &mut crate::util::Rng::new(2), &counter).unwrap();
-        assert_eq!(out.centroids.len(), 4 * 3);
-        assert!(out.passes >= 3);
-
-        // Quality sanity: within 2x of an in-memory BWKM run.
-        let c2 = DistanceCounter::new();
-        let mut bcfg = crate::bwkm::BwkmCfg::for_dataset(ds.n, ds.d, 4);
-        bcfg.max_outer = 10;
-        let mem = crate::bwkm::run(&ds, 4, &bcfg, &mut crate::util::Rng::new(2), &c2);
-        let eval = DistanceCounter::new();
-        let e_stream = crate::metrics::kmeans_error(&ds.data, 3, &out.centroids, &eval);
-        let e_mem = crate::metrics::kmeans_error(&ds.data, 3, &mem.centroids, &eval);
-        assert!(
-            e_stream < e_mem * 2.0 + 1e-9,
-            "stream {e_stream} vs in-memory {e_mem}"
-        );
-    }
-
-    #[test]
-    fn stream_bwkm_rejects_empty_stream() {
-        let open = || -> Result<Vec<Result<Vec<f64>>>> { Ok(vec![]) };
-        let counter = DistanceCounter::new();
-        let cfg = StreamBwkmCfg {
-            target_blocks: 10,
-            max_outer: 3,
-            wl: crate::kmeans::WLloydCfg::default(),
-        };
-        assert!(stream_bwkm(open, 2, 2, &cfg, &mut crate::util::Rng::new(1), &counter).is_err());
-    }
-
     fn chunked(data: &[f64], d: usize, rows_per_chunk: usize) -> Vec<Result<Vec<f64>>> {
         data.chunks(rows_per_chunk * d).map(|c| Ok(c.to_vec())).collect()
+    }
+
+    fn vec_opener(
+        data: Vec<f64>,
+        d: usize,
+        rows_per_chunk: usize,
+    ) -> impl FnMut() -> Result<Vec<Result<Vec<f64>>>> {
+        move || Ok(chunked(&data, d, rows_per_chunk))
+    }
+
+    #[test]
+    fn streaming_bwkm_is_bit_identical_to_in_memory() {
+        // The tentpole property in miniature (the full grid lives in
+        // tests/streaming_conformance.rs): same data, same seed — same
+        // centroids, same stop, same bill, to the bit.
+        let mut g = prop::Gen { rng: crate::util::Rng::new(91), case: 0 };
+        let ds = Dataset::new(g.blobs(700, 3, 4, 0.4), 3);
+        let mut cfg = crate::bwkm::BwkmCfg::for_dataset(ds.n, ds.d, 4);
+        cfg.max_outer = 6;
+
+        let c_mem = DistanceCounter::new();
+        let mem = crate::bwkm::run(&ds, 4, &cfg, &mut crate::util::Rng::new(2), &c_mem);
+
+        let c_str = DistanceCounter::new();
+        let mut sb = StreamingBwkm::new(vec_opener(ds.data.clone(), 3, 97), 3).with_threads(3);
+        let out = sb.run(4, &cfg, &mut crate::util::Rng::new(2), &c_str).unwrap();
+
+        assert_eq!(out.centroids, mem.centroids);
+        assert_eq!(out.stop, mem.stop);
+        assert_eq!(c_str.get(), c_mem.get());
+        let (mreps, mweights, mids) = mem.partition.reps_weights();
+        assert_eq!(out.reps, mreps);
+        assert_eq!(out.weights, mweights);
+        assert_eq!(out.ids, mids);
+        assert!(out.passes >= 2, "at least the extent pass plus one fetch");
+    }
+
+    #[test]
+    fn streaming_bwkm_rejects_empty_stream() {
+        let mut sb = StreamingBwkm::new(|| Ok(Vec::<Result<Vec<f64>>>::new()), 2);
+        let cfg = crate::bwkm::BwkmCfg::for_dataset(10, 2, 2);
+        let c = DistanceCounter::new();
+        assert!(sb.run(2, &cfg, &mut crate::util::Rng::new(1), &c).is_err());
+    }
+
+    #[test]
+    fn ragged_chunk_is_a_clean_error() {
+        let ds = Dataset::new(vec![0.0; 20], 2);
+        let p = Partition::root(&ds);
+        // 5 values with d=2: not a multiple — must Err, not silently drop.
+        let chunks: Vec<Result<Vec<f64>>> = vec![Ok(vec![0.0; 5])];
+        assert!(stream_partition_stats(&p, 2, chunks).is_err());
+        let chunks: Vec<Result<Vec<f64>>> = vec![Ok(vec![0.0; 5])];
+        let c = DistanceCounter::new();
+        assert!(stream_assign_err(2, &[0.0, 0.0], chunks, &c).is_err());
+    }
+
+    #[test]
+    fn refresh_failure_preserves_committed_stats() {
+        // Pass 1 (extent) and pass 2 (fetch-free refresh) see different
+        // sources: the refresh must fail cleanly and leave the committed
+        // statistics untouched.
+        let data: Vec<f64> = (0..40).map(|x| x as f64).collect();
+        let mut opens = 0usize;
+        let open = move || -> Result<Vec<Result<Vec<f64>>>> {
+            opens += 1;
+            if opens == 1 {
+                Ok(data.chunks(10).map(|c| Ok(c.to_vec())).collect())
+            } else {
+                // Second pass drops the last row: row-count mismatch.
+                Ok(data[..38].chunks(10).map(|c| Ok(c.to_vec())).collect())
+            }
+        };
+        let mut src = StreamSource::new(open, 2, 1).unwrap();
+        let before = src.stats().clone();
+        src.split(0);
+        let err = src.refresh();
+        assert!(err.is_err(), "shrinking source must fail the refresh");
+        assert_eq!(src.stats().counts, before.counts, "failed refresh must not commit");
+        assert_eq!(src.stats().rows, before.rows);
     }
 
     #[test]
@@ -302,9 +779,70 @@ mod tests {
                 assert_eq!(stats.counts[b], blk.weight(), "block {b}");
                 if blk.weight() > 0 {
                     for j in 0..d {
-                        assert!((stats.sums[b][j] - blk.sum[j]).abs() < 1e-9);
+                        // Bit-identity, not closeness: both are sequential
+                        // member folds in row order.
+                        assert_eq!(
+                            stats.sums[b][j].to_bits(),
+                            blk.sum[j].to_bits(),
+                            "block {b} dim {j}"
+                        );
                     }
+                    assert_eq!(stats.tight[b], blk.tight, "block {b}");
                 }
+            }
+        });
+    }
+
+    #[test]
+    fn prop_crew_sizes_are_bit_identical() {
+        // The §5.1 merge rule in isolation: any worker count, any chunk
+        // size — same stats, same SSE, same counter, to the bit.
+        prop::check("stream-crew", 10, |g| {
+            let n = g.int(80, 400);
+            let d = g.int(1, 4);
+            let k = g.int(1, 5);
+            let ds = Dataset::new(g.blobs(n, d, 3, 1.0), d);
+            let cents = g.cloud(k, d, 3.0);
+            let mut p = Partition::root(&ds);
+            let mut rng = g.rng.fork(3);
+            for _ in 0..8 {
+                let b = rng.usize(p.len());
+                p.split(b, &ds);
+            }
+            let chunk = g.int(1, n + 10);
+            let base =
+                stream_partition_stats(&p, d, chunked(&ds.data, d, chunk)).unwrap();
+            let c_base = DistanceCounter::new();
+            let (rows_b, sse_b) =
+                stream_assign_err(d, &cents, chunked(&ds.data, d, chunk), &c_base).unwrap();
+            for threads in [2usize, 5, 8] {
+                let crew = ChunkCrew::new(threads);
+                let st = stream_partition_stats_with(
+                    &p,
+                    d,
+                    chunked(&ds.data, d, chunk),
+                    &crew,
+                )
+                .unwrap();
+                assert_eq!(st.counts, base.counts);
+                for b in 0..p.len() {
+                    for j in 0..d {
+                        assert_eq!(st.sums[b][j].to_bits(), base.sums[b][j].to_bits());
+                    }
+                    assert_eq!(st.tight[b], base.tight[b]);
+                }
+                let c = DistanceCounter::new();
+                let (rows, sse) = stream_assign_err_with(
+                    d,
+                    &cents,
+                    chunked(&ds.data, d, chunk),
+                    &c,
+                    &crew,
+                )
+                .unwrap();
+                assert_eq!(rows, rows_b);
+                assert_eq!(sse.to_bits(), sse_b.to_bits());
+                assert_eq!(c.get(), c_base.get());
             }
         });
     }
@@ -323,8 +861,21 @@ mod tests {
             assert_eq!(rows, n);
             let c2 = DistanceCounter::new();
             let full = crate::metrics::kmeans_error(&ds.data, d, &cents, &c2);
-            assert!((sse - full).abs() < 1e-9 * full.max(1.0));
+            assert_eq!(sse.to_bits(), full.to_bits(), "row-order fold must match exactly");
             assert_eq!(c1.get(), c2.get());
         });
+    }
+
+    #[test]
+    fn fetch_rows_match_dataset_rows_in_index_order() {
+        let data: Vec<f64> = (0..60).map(|x| x as f64 * 0.5).collect();
+        let ds = Dataset::new(data.clone(), 3);
+        let mut src = StreamSource::new(vec_opener(data, 3, 7), 3, 2).unwrap();
+        let idx = [19usize, 0, 7, 19];
+        let rows = src.fetch_rows(&idx).unwrap();
+        for (pos, &i) in idx.iter().enumerate() {
+            assert_eq!(&rows[pos * 3..(pos + 1) * 3], ds.row(i), "index {i}");
+        }
+        assert!(src.fetch_rows(&[99]).is_err(), "out-of-range index must Err");
     }
 }

@@ -70,14 +70,41 @@ pub fn save_bin(ds: &Dataset, path: &Path) -> Result<()> {
     Ok(())
 }
 
+/// Payload bytes a header-declared (n, d) implies, rejecting headers
+/// whose sizes overflow or declare d = 0 (corruption — `save_bin` can
+/// never write either) and files too short to hold them (truncation /
+/// short read — caught at open, before any chunk is read).
+fn payload_bytes(n: usize, d: usize, file_len: u64, path: &Path) -> Result<u64> {
+    if d == 0 {
+        bail!("{}: corrupt header (d=0)", path.display());
+    }
+    let bytes = (n as u64)
+        .checked_mul(d as u64)
+        .and_then(|x| x.checked_mul(8))
+        .ok_or_else(|| {
+            anyhow::anyhow!("{}: corrupt header (n={n}, d={d} overflows)", path.display())
+        })?;
+    let expected = 16 + bytes;
+    if file_len < expected {
+        bail!(
+            "{}: truncated binary dataset: {file_len} bytes, header (n={n}, d={d}) needs {expected}",
+            path.display()
+        );
+    }
+    Ok(bytes)
+}
+
 /// Load a raw binary dataset written by [`save_bin`].
 pub fn load_bin(path: &Path) -> Result<Dataset> {
-    let mut r = BufReader::new(File::open(path)?);
+    let f = File::open(path)?;
+    let file_len = f.metadata()?.len();
+    let mut r = BufReader::new(f);
     let mut hdr = [0u8; 16];
     r.read_exact(&mut hdr)?;
     let n = u64::from_le_bytes(hdr[0..8].try_into().unwrap()) as usize;
     let d = u64::from_le_bytes(hdr[8..16].try_into().unwrap()) as usize;
-    let mut buf = vec![0u8; n * d * 8];
+    let bytes = payload_bytes(n, d, file_len, path)?;
+    let mut buf = vec![0u8; bytes as usize];
     r.read_exact(&mut buf)?;
     let data: Vec<f64> = buf
         .chunks_exact(8)
@@ -99,12 +126,30 @@ pub struct BinChunks {
 
 impl BinChunks {
     pub fn open(path: &Path, chunk_rows: usize) -> Result<BinChunks> {
-        let mut reader = BufReader::new(File::open(path)?);
+        let f = File::open(path)?;
+        let file_len = f.metadata()?.len();
+        let mut reader = BufReader::new(f);
         let mut hdr = [0u8; 16];
         reader.read_exact(&mut hdr)?;
         let n = u64::from_le_bytes(hdr[0..8].try_into().unwrap()) as usize;
         let d = u64::from_le_bytes(hdr[8..16].try_into().unwrap()) as usize;
+        // Truncation and d=0 corruption are detected here, not
+        // mid-stream: a reader pinned to the header's (n, d) never hands
+        // a short chunk to the streaming coordinator (DESIGN.md §5.1
+        // failure contract).
+        payload_bytes(n, d, file_len, path)?;
         Ok(BinChunks { reader, n, d, chunk_rows: chunk_rows.max(1), read_rows: 0 })
+    }
+
+    /// A restartable opener for this file — the shape
+    /// `coordinator::streaming::StreamingBwkm` consumes: every call
+    /// re-opens the file and yields the same rows in the same order.
+    pub fn opener(
+        path: &Path,
+        chunk_rows: usize,
+    ) -> impl FnMut() -> Result<BinChunks> {
+        let path = path.to_path_buf();
+        move || BinChunks::open(&path, chunk_rows)
     }
 }
 
@@ -165,6 +210,50 @@ mod tests {
         let p = tmp("c.csv");
         std::fs::write(&p, "1,2\n3\n").unwrap();
         assert!(load_csv(&p, None).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn bin_open_rejects_truncation_and_corrupt_headers() {
+        let p = tmp("trunc.bin");
+        let ds = Dataset::new((0..30).map(|x| x as f64).collect(), 3);
+        save_bin(&ds, &p).unwrap();
+        // Chop the last row off the payload: both readers must refuse at
+        // open, before any chunk is handed out.
+        let f = std::fs::OpenOptions::new().write(true).open(&p).unwrap();
+        f.set_len(16 + 9 * 3 * 8 + 4).unwrap();
+        drop(f);
+        assert!(BinChunks::open(&p, 4).is_err(), "truncated file must fail at open");
+        assert!(load_bin(&p).is_err());
+        // Corrupt header: n·d·8 overflows u64.
+        let mut hdr = Vec::new();
+        hdr.extend_from_slice(&u64::MAX.to_le_bytes());
+        hdr.extend_from_slice(&u64::MAX.to_le_bytes());
+        std::fs::write(&p, &hdr).unwrap();
+        assert!(BinChunks::open(&p, 4).is_err(), "overflowing header must fail");
+        assert!(load_bin(&p).is_err());
+        // Corrupt header: d=0 (save_bin can never write one) must be a
+        // clean Err from both readers, not an assert panic downstream.
+        let mut hdr = Vec::new();
+        hdr.extend_from_slice(&7u64.to_le_bytes());
+        hdr.extend_from_slice(&0u64.to_le_bytes());
+        std::fs::write(&p, &hdr).unwrap();
+        assert!(BinChunks::open(&p, 4).is_err(), "d=0 header must fail");
+        assert!(load_bin(&p).is_err(), "d=0 header must fail in load_bin too");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn bin_opener_is_restartable() {
+        let p = tmp("opener.bin");
+        let ds = Dataset::new((0..24).map(|x| x as f64).collect(), 2);
+        save_bin(&ds, &p).unwrap();
+        let mut open = BinChunks::opener(&p, 5);
+        for _ in 0..2 {
+            let flat: Vec<f64> =
+                open().unwrap().map(|c| c.unwrap()).flatten().collect();
+            assert_eq!(flat, ds.data, "every pass must yield the same rows");
+        }
         std::fs::remove_file(&p).ok();
     }
 

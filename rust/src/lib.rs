@@ -8,7 +8,9 @@
 //!   boundary detection, the Alg. 2–5 pipeline, every baseline of the
 //!   paper's evaluation, the unified assignment engine every method's
 //!   distance hot path runs through ([`kmeans::assign`], DESIGN.md §2),
-//!   exact distance accounting, a sharded leader/worker runtime and the
+//!   exact distance accounting, a sharded leader/worker runtime, the
+//!   out-of-core streaming coordinator (`coordinator::streaming`,
+//!   DESIGN.md §5.1 — bit-identical to the in-memory path) and the
 //!   bench harness regenerating Figures 2–6.
 //! * **L2/L1 (python/, build-time only)** — the weighted-Lloyd step and a
 //!   Pallas distance+top-2 kernel, AOT-lowered to HLO text artifacts that

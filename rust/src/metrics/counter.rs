@@ -8,6 +8,10 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
+/// Maximum retained accounting notes per counter (see
+/// [`DistanceCounter::note`]).
+pub const NOTE_CAP: usize = 8192;
+
 /// Monotone counter of Euclidean-distance computations, plus a free-form
 /// note log for accounting *annotations* (DESIGN.md §2.4): adaptive
 /// backends — `kmeans::assign::AutoAssigner` — record which engine served
@@ -37,9 +41,21 @@ impl DistanceCounter {
     }
 
     /// Attach an accounting annotation (e.g. `AutoAssigner`'s per-step
-    /// backend choice) to this counter's report.
+    /// backend choice) to this counter's report. The log is capped at
+    /// [`NOTE_CAP`] entries (far above any single run's step count) so a
+    /// long-lived counter that is never `reset()` cannot grow without
+    /// bound; once full, one truncation marker is appended and further
+    /// notes are dropped — the structured tallies (e.g.
+    /// `AutoAssigner::choice_counts`) remain exact regardless.
     pub fn note(&self, note: String) {
-        self.notes.lock().expect("counter note lock poisoned").push(note);
+        let mut notes = self.notes.lock().expect("counter note lock poisoned");
+        match notes.len().cmp(&NOTE_CAP) {
+            std::cmp::Ordering::Less => notes.push(note),
+            std::cmp::Ordering::Equal => {
+                notes.push(format!("…note log capped at {NOTE_CAP} entries (reset() clears)"));
+            }
+            std::cmp::Ordering::Greater => {}
+        }
     }
 
     /// All annotations recorded so far, in order.
@@ -104,6 +120,20 @@ mod tests {
         c.reset();
         assert!(c.notes().is_empty());
         assert_eq!(c.get(), 0);
+    }
+
+    #[test]
+    fn note_log_caps_with_marker_and_reset_reopens() {
+        let c = DistanceCounter::new();
+        for i in 0..(NOTE_CAP + 50) {
+            c.note(format!("n{i}"));
+        }
+        let notes = c.notes();
+        assert_eq!(notes.len(), NOTE_CAP + 1, "cap plus one truncation marker");
+        assert!(notes.last().unwrap().contains("capped"));
+        c.reset();
+        c.note("fresh".into());
+        assert_eq!(c.notes(), vec!["fresh"]);
     }
 
     #[test]

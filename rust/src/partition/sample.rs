@@ -21,15 +21,28 @@ pub struct SampleStats {
 impl SampleStats {
     /// Locate every sampled row and accumulate per-block stats.
     pub fn collect(partition: &Partition, data: &Dataset, sample: &[usize]) -> SampleStats {
+        let mut rows = Vec::with_capacity(sample.len() * data.d);
+        for &i in sample {
+            rows.extend_from_slice(data.row(i));
+        }
+        Self::collect_rows(partition, &rows, data.d)
+    }
+
+    /// [`collect`](Self::collect) from already-materialized rows (flat
+    /// `s×d`, in sample order) — the shape the source-generic Alg. 3/4
+    /// drivers use after `RefineSource::fetch_rows` (streaming sources
+    /// fetch sampled rows from the stream; DESIGN.md §5.1). The fold
+    /// order is the row order of `rows`, so both entry points accumulate
+    /// identically.
+    pub fn collect_rows(partition: &Partition, rows: &[f64], d: usize) -> SampleStats {
         let nb = partition.len();
-        let d = partition.d;
+        debug_assert_eq!(d, partition.d);
         let mut stats = SampleStats {
             counts: vec![0; nb],
             sums: vec![vec![0.0; d]; nb],
             tight: vec![None; nb],
         };
-        for &i in sample {
-            let row = data.row(i);
+        for row in rows.chunks_exact(d) {
             let b = partition.locate(row);
             stats.counts[b] += 1;
             for j in 0..d {

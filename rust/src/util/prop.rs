@@ -1,15 +1,36 @@
 //! Minimal property-testing harness (offline replacement for `proptest`).
 //!
-//! A property is a closure over a deterministic [`Rng`]; `check` runs it for
-//! `cases` seeds and reports the first failing seed so failures reproduce
-//! exactly (`PROP_SEED=<n> cargo test <name>` replays a single case).
+//! A property is a closure over a deterministic [`Rng`]; `check` runs it
+//! for `cases` cases. Every property is seeded from its **name** (an
+//! FNV-1a hash mixed per case), so distinct properties explore
+//! independent random streams and a named run is reproducible forever;
+//! on failure the harness prints both the failing case index and the
+//! derived RNG seed, and `PROP_SEED=<case> cargo test <name>` replays
+//! exactly that case.
 //!
 //! This is intentionally tiny: generators are just helper methods on the
 //! per-case [`Gen`], and there is no shrinking — failing seeds are printed
 //! instead, which has proven sufficient for the numeric invariants tested
-//! here (paper Theorems 1, 2, 3, A.1, A.2 and the partition invariants).
+//! here (paper Theorems 1, 2, 3, A.1, A.2, the partition invariants and
+//! the streaming-conformance pins).
 
 use super::rng::Rng;
+
+/// FNV-1a over the property name: the per-property base seed.
+fn name_seed(name: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// The RNG seed of one case of one named property (documented so failure
+/// messages and external tooling can re-derive it).
+pub fn case_seed(name: &str, case: u64) -> u64 {
+    name_seed(name) ^ case.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
 
 /// Per-case generator handle.
 pub struct Gen {
@@ -47,18 +68,21 @@ impl Gen {
     }
 }
 
-/// Run `body` for `cases` generated cases; panic with the reproducing seed
-/// on the first failure (assertion panic inside `body`).
+/// Run `body` for `cases` generated cases; panic with the reproducing
+/// case index *and* the derived RNG seed on the first failure (assertion
+/// panic inside `body`).
 pub fn check(name: &str, cases: u64, mut body: impl FnMut(&mut Gen)) {
-    // Replay support: PROP_SEED pins a single case.
+    // Replay support: PROP_SEED pins a single case (of this property —
+    // the name participates in the seed).
     if let Ok(seed) = std::env::var("PROP_SEED") {
         let case: u64 = seed.parse().expect("PROP_SEED must be a u64");
-        let mut g = Gen { rng: Rng::new(0xB0C5_0000 ^ case), case };
+        let mut g = Gen { rng: Rng::new(case_seed(name, case)), case };
         body(&mut g);
         return;
     }
     for case in 0..cases {
-        let mut g = Gen { rng: Rng::new(0xB0C5_0000 ^ case), case };
+        let seed = case_seed(name, case);
+        let mut g = Gen { rng: Rng::new(seed), case };
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| body(&mut g)));
         if let Err(e) = result {
             let msg = e
@@ -67,8 +91,8 @@ pub fn check(name: &str, cases: u64, mut body: impl FnMut(&mut Gen)) {
                 .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
                 .unwrap_or_else(|| "<non-string panic>".into());
             panic!(
-                "property `{name}` failed at case {case} \
-                 (replay: PROP_SEED={case}): {msg}"
+                "property `{name}` failed at case {case} (rng seed {seed:#018x}; \
+                 replay: PROP_SEED={case}): {msg}"
             );
         }
     }
@@ -93,6 +117,13 @@ mod tests {
             // Deterministic failure at case 45.
             assert!(g.case < 45, "case={}", g.case);
         });
+    }
+
+    #[test]
+    fn names_derive_distinct_deterministic_seeds() {
+        assert_eq!(case_seed("a", 0), case_seed("a", 0));
+        assert_ne!(case_seed("a", 0), case_seed("b", 0));
+        assert_ne!(case_seed("a", 0), case_seed("a", 1));
     }
 
     #[test]

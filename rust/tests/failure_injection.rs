@@ -2,8 +2,11 @@
 //! inputs must fail loudly (documented panics / Result errors) or degrade
 //! gracefully — never loop forever or return garbage silently.
 
-use bwkm::bwkm::BwkmCfg;
-use bwkm::data::{Dataset, simulate};
+use anyhow::Result;
+use bwkm::bwkm::{BwkmCfg, RefineSource};
+use bwkm::coordinator::{StreamSource, StreamingBwkm};
+use bwkm::data::loader::{save_bin, BinChunks};
+use bwkm::data::{simulate, Dataset};
 use bwkm::kmeans::init::{forgy, kmeanspp};
 use bwkm::kmeans::{lloyd, LloydCfg};
 use bwkm::metrics::{Budget, DistanceCounter};
@@ -111,4 +114,131 @@ fn manifest_corruption_is_loud() {
     use bwkm::runtime::Manifest;
     assert!(Manifest::parse("wlloyd_step\tnot_a_number\t4\t4\tf\n").is_err());
     assert!(Manifest::parse("").is_err());
+}
+
+// ---------------------------------------------------------------------------
+// Streaming failure injection (DESIGN.md §5.1 failure contract): broken
+// chunked sources must surface as clean `Err`s — no panic, no partial
+// statistics committed.
+// ---------------------------------------------------------------------------
+
+fn stream_cfg(n: usize, d: usize, k: usize) -> BwkmCfg {
+    let mut cfg = BwkmCfg::for_dataset(n, d, k);
+    cfg.max_outer = 3;
+    cfg
+}
+
+#[test]
+fn streaming_truncated_file_is_clean_err() {
+    let ds = Dataset::new((0..300).map(|x| x as f64).collect(), 3);
+    let p = std::env::temp_dir()
+        .join(format!("bwkm_fail_trunc_{}.bin", std::process::id()));
+    save_bin(&ds, &p).unwrap();
+    // Chop half the payload off: the header promises 100 rows.
+    let f = std::fs::OpenOptions::new().write(true).open(&p).unwrap();
+    f.set_len(16 + 50 * 3 * 8).unwrap();
+    drop(f);
+    let mut sb = StreamingBwkm::new(BinChunks::opener(&p, 16), 3);
+    let c = DistanceCounter::new();
+    let out = sb.run(3, &stream_cfg(100, 3, 3), &mut Rng::new(1), &c);
+    assert!(out.is_err(), "truncated source must be a clean Err");
+    std::fs::remove_file(&p).ok();
+}
+
+#[test]
+fn streaming_mid_stream_read_error_is_clean_err() {
+    // A chunk-level IO error inside the stream (not at open).
+    let open = || -> Result<Vec<Result<Vec<f64>>>> {
+        Ok(vec![
+            Ok(vec![0.0, 0.0, 1.0, 1.0]),
+            Err(anyhow::anyhow!("disk vanished")),
+            Ok(vec![2.0, 2.0]),
+        ])
+    };
+    let mut sb = StreamingBwkm::new(open, 2);
+    let c = DistanceCounter::new();
+    let out = sb.run(2, &stream_cfg(3, 2, 2), &mut Rng::new(1), &c);
+    assert!(out.is_err(), "mid-stream read error must be a clean Err");
+}
+
+#[test]
+fn streaming_ragged_chunk_is_clean_err() {
+    // 5 values with d=2: a short read that is not a whole number of rows
+    // must never be silently dropped.
+    let open = || -> Result<Vec<Result<Vec<f64>>>> {
+        Ok(vec![Ok(vec![0.0, 0.0, 1.0, 1.0]), Ok(vec![2.0, 2.0, 3.0])])
+    };
+    let mut sb = StreamingBwkm::new(open, 2);
+    let c = DistanceCounter::new();
+    let out = sb.run(2, &stream_cfg(3, 2, 2), &mut Rng::new(1), &c);
+    assert!(out.is_err(), "ragged chunk must be a clean Err");
+}
+
+#[test]
+fn streaming_shrinking_source_is_clean_err() {
+    // The source yields fewer rows from the second pass on: every later
+    // pass validates the row count against the first, so the run must
+    // fail cleanly instead of computing statistics over a different
+    // dataset.
+    let data: Vec<f64> = (0..240).map(|x| (x as f64).sin()).collect();
+    let mut opens = 0usize;
+    let open = move || -> Result<Vec<Result<Vec<f64>>>> {
+        opens += 1;
+        let upto = if opens == 1 { data.len() } else { data.len() - 2 };
+        Ok(data[..upto].chunks(24).map(|c| Ok(c.to_vec())).collect())
+    };
+    let mut sb = StreamingBwkm::new(open, 2);
+    let c = DistanceCounter::new();
+    let out = sb.run(3, &stream_cfg(120, 2, 3), &mut Rng::new(2), &c);
+    assert!(out.is_err(), "a source that shrinks between passes must be a clean Err");
+}
+
+#[test]
+fn streaming_failed_refresh_commits_nothing() {
+    // Commit-on-success at the RefineSource level: a refresh pass that
+    // fails (here: the source shrinks) leaves the previously committed
+    // statistics — and therefore reps/weights — untouched.
+    let data: Vec<f64> = (0..80).map(|x| x as f64).collect();
+    let mut opens = 0usize;
+    let open = move || -> Result<Vec<Result<Vec<f64>>>> {
+        opens += 1;
+        let upto = if opens == 1 { data.len() } else { data.len() - 4 };
+        Ok(data[..upto].chunks(10).map(|c| Ok(c.to_vec())).collect())
+    };
+    let mut src = StreamSource::new(open, 2, 2).unwrap();
+    let stats_before = src.stats().clone();
+    let (_, weights_before, _) = src.reps_weights();
+    src.split(0);
+    assert!(src.refresh().is_err(), "the shrunken refresh pass must fail");
+    // The committed view is still the pre-split one, not a half-updated
+    // mixture: no statistics were attributed to the new spatial children.
+    assert_eq!(src.stats().counts, stats_before.counts, "no partial stats committed");
+    assert_eq!(src.stats().rows, stats_before.rows);
+    assert_eq!(
+        src.stats().reps_weights(2).1,
+        weights_before,
+        "weights unchanged after failed refresh"
+    );
+}
+
+#[test]
+fn streaming_non_finite_value_is_clean_err() {
+    // The in-memory CLI path refuses NaN datasets; the streaming path
+    // must too (a NaN would silently poison bbox folds and tree
+    // descents) — caught on the very first (extent) pass.
+    let open = || -> Result<Vec<Result<Vec<f64>>>> {
+        Ok(vec![Ok(vec![0.0, 0.0, f64::NAN, 1.0]), Ok(vec![2.0, 2.0])])
+    };
+    let mut sb = StreamingBwkm::new(open, 2);
+    let c = DistanceCounter::new();
+    let out = sb.run(2, &stream_cfg(3, 2, 2), &mut Rng::new(1), &c);
+    assert!(out.is_err(), "non-finite stream values must be a clean Err");
+}
+
+#[test]
+fn streaming_empty_stream_is_clean_err() {
+    let mut sb = StreamingBwkm::new(|| Ok(Vec::<Result<Vec<f64>>>::new()), 4);
+    let c = DistanceCounter::new();
+    let out = sb.run(1, &stream_cfg(1, 4, 1), &mut Rng::new(3), &c);
+    assert!(out.is_err());
 }

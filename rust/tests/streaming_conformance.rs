@@ -1,0 +1,343 @@
+//! Streaming conformance suite (DESIGN.md §5.1): the out-of-core BWKM
+//! coordinator (`coordinator::streaming::StreamingBwkm`) is pinned
+//! **bit-identical** — `==`, no tolerances — against the in-memory path
+//! (`bwkm::run` / `run_auto`) on the same data and seed: same splits
+//! (block-for-block identical spatial cells), same representatives and
+//! weights, same per-iteration trace (distances, weighted error, Theorem-2
+//! bound, boundary sizes), same final centroids, same `DistanceCounter`
+//! totals — across chunk sizes {1, 7, n}, worker counts {1, 2, 8} and the
+//! Table-1 dimension grid, plus empty-block and single-chunk degenerate
+//! cases and a file-backed multi-chunk source (`scripts/ci.sh
+//! --streaming` runs this suite; `--quick` runs the `degenerate` subset).
+//!
+//! Every test is seeded from a named fixed seed (below) or through
+//! `util::prop::check`, which derives per-property seeds from the
+//! property name and prints the failing case + RNG seed on failure.
+
+use anyhow::Result;
+use bwkm::bwkm::{BwkmCfg, BwkmOutcome};
+use bwkm::coordinator::{
+    stream_partition_stats, stream_partition_stats_with, ChunkCrew, StreamBwkmOutcome,
+    StreamingBwkm,
+};
+use bwkm::data::loader::{save_bin, BinChunks};
+use bwkm::data::Dataset;
+use bwkm::metrics::DistanceCounter;
+use bwkm::partition::Partition;
+use bwkm::util::{prop, Rng};
+
+/// Named fixed seeds — quoted in every assertion context so a failure
+/// names its reproduction.
+const GRID_SEED: u64 = 0x57AB_0001;
+const AUTO_SEED: u64 = 0x57AB_0002;
+const FILE_SEED: u64 = 0x57AB_0003;
+const DEGEN_SEED: u64 = 0x57AB_0004;
+
+fn vec_opener(
+    data: Vec<f64>,
+    d: usize,
+    chunk_rows: usize,
+) -> impl FnMut() -> Result<Vec<Result<Vec<f64>>>> {
+    let chunk_rows = chunk_rows.max(1);
+    move || Ok(data.chunks(chunk_rows * d).map(|c| Ok(c.to_vec())).collect())
+}
+
+/// The full `==` pin: centroids, stop reason, distance totals, splits
+/// (spatial cells), representatives/weights and the per-iteration trace.
+fn assert_conformant(
+    ctx: &str,
+    mem: &BwkmOutcome,
+    mem_distances: u64,
+    out: &StreamBwkmOutcome,
+    stream_distances: u64,
+) {
+    assert_eq!(out.centroids, mem.centroids, "{ctx}: centroids");
+    assert_eq!(out.stop, mem.stop, "{ctx}: stop reason");
+    assert_eq!(stream_distances, mem_distances, "{ctx}: distance totals");
+    assert_eq!(out.k, mem.k, "{ctx}: k");
+    assert_eq!(out.d, mem.d, "{ctx}: d");
+
+    // Same splits: the spatial trees agree block for block.
+    assert_eq!(out.partition.len(), mem.partition.len(), "{ctx}: |B|");
+    for (i, (sb, mb)) in
+        out.partition.blocks.iter().zip(&mem.partition.blocks).enumerate()
+    {
+        assert_eq!(sb.cell, mb.cell, "{ctx}: spatial cell of block {i}");
+    }
+
+    // Same representative set.
+    let (mreps, mweights, mids) = mem.partition.reps_weights();
+    assert_eq!(out.reps, mreps, "{ctx}: representatives");
+    assert_eq!(out.weights, mweights, "{ctx}: weights");
+    assert_eq!(out.ids, mids, "{ctx}: block ids");
+
+    // Same trace, bit for bit.
+    assert_eq!(out.trace.len(), mem.trace.len(), "{ctx}: trace length");
+    for (row, (a, b)) in out.trace.iter().zip(&mem.trace).enumerate() {
+        assert_eq!(a.outer_iter, b.outer_iter, "{ctx}: trace[{row}]");
+        assert_eq!(a.distances, b.distances, "{ctx}: trace[{row}] distances");
+        assert_eq!(a.blocks, b.blocks, "{ctx}: trace[{row}] blocks");
+        assert_eq!(a.occupied, b.occupied, "{ctx}: trace[{row}] occupied");
+        assert_eq!(a.boundary, b.boundary, "{ctx}: trace[{row}] boundary");
+        assert_eq!(
+            a.weighted_error.to_bits(),
+            b.weighted_error.to_bits(),
+            "{ctx}: trace[{row}] weighted error"
+        );
+        assert_eq!(a.bound.to_bits(), b.bound.to_bits(), "{ctx}: trace[{row}] bound");
+        assert_eq!(
+            a.full_error.map(f64::to_bits),
+            b.full_error.map(f64::to_bits),
+            "{ctx}: trace[{row}] full error"
+        );
+        assert_eq!(a.lloyd_iters, b.lloyd_iters, "{ctx}: trace[{row}] lloyd iters");
+    }
+}
+
+#[test]
+fn grid_dims_chunks_workers_bit_identical() {
+    // The Table-1 dimension grid the engine monomorphizes for (2, 3, 5,
+    // 17) × chunk sizes {1, 7, n} × worker counts {1, 2, 8}.
+    for &(d, k) in &[(2usize, 4usize), (3, 3), (5, 3), (17, 2)] {
+        let n = 240;
+        let mut g = prop::Gen { rng: Rng::new(GRID_SEED ^ d as u64), case: 0 };
+        let ds = Dataset::new(g.blobs(n, d, k, 0.7), d);
+        let mut cfg = BwkmCfg::for_dataset(n, d, k);
+        cfg.max_outer = 5;
+
+        let c_mem = DistanceCounter::new();
+        let mem = bwkm::bwkm::run(&ds, k, &cfg, &mut Rng::new(GRID_SEED), &c_mem);
+
+        for &chunk in &[1usize, 7, n] {
+            for &workers in &[1usize, 2, 8] {
+                let ctx = format!(
+                    "seed {GRID_SEED:#x}, d={d} k={k} chunk={chunk} workers={workers}"
+                );
+                let c_str = DistanceCounter::new();
+                let mut sb = StreamingBwkm::new(vec_opener(ds.data.clone(), d, chunk), d)
+                    .with_threads(workers);
+                let out = sb
+                    .run(k, &cfg, &mut Rng::new(GRID_SEED), &c_str)
+                    .unwrap_or_else(|e| panic!("{ctx}: run failed: {e}"));
+                assert_conformant(&ctx, &mem, c_mem.get(), &out, c_str.get());
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_streaming_conformance_random() {
+    prop::check("streaming-conformance", 6, |g| {
+        let n = g.int(30, 240);
+        let d = g.int(1, 6);
+        let k = g.int(1, 4).min(n);
+        let ds = Dataset::new(g.blobs(n, d, k.max(2), 0.8), d);
+        let mut cfg = BwkmCfg::for_dataset(n, d, k);
+        cfg.max_outer = g.int(1, 4);
+        cfg.eval_full_error = g.case % 2 == 0;
+        let chunk = [1, 7, n][g.int(0, 2)];
+        let workers = g.int(1, 8);
+        let seed = g.rng.next_u64();
+        let ctx = format!(
+            "case {} (seed {seed:#x}): n={n} d={d} k={k} chunk={chunk} workers={workers}",
+            g.case
+        );
+
+        let c_mem = DistanceCounter::new();
+        let mem = bwkm::bwkm::run(&ds, k, &cfg, &mut Rng::new(seed), &c_mem);
+        let c_str = DistanceCounter::new();
+        let mut sb = StreamingBwkm::new(vec_opener(ds.data.clone(), d, chunk), d)
+            .with_threads(workers);
+        let out = sb
+            .run(k, &cfg, &mut Rng::new(seed), &c_str)
+            .unwrap_or_else(|e| panic!("{ctx}: run failed: {e}"));
+        assert_conformant(&ctx, &mem, c_mem.get(), &out, c_str.get());
+    });
+}
+
+#[test]
+fn auto_engine_conformance_including_choice_log() {
+    // run_auto both sides: the auto-selected engine family is
+    // bit-identical too, the (smaller) bill matches exactly, and the
+    // per-step choice notes agree — the streaming path reproduces not
+    // just the answer but the engine decisions.
+    let (n, d, k) = (420, 3, 5);
+    let mut g = prop::Gen { rng: Rng::new(AUTO_SEED), case: 0 };
+    let ds = Dataset::new(g.blobs(n, d, k, 0.6), d);
+    let mut cfg = BwkmCfg::for_dataset(n, d, k);
+    cfg.max_outer = 6;
+
+    let c_mem = DistanceCounter::new();
+    let mem = bwkm::bwkm::run_auto(&ds, k, &cfg, &mut Rng::new(AUTO_SEED), &c_mem);
+    let c_str = DistanceCounter::new();
+    let mut sb = StreamingBwkm::new(vec_opener(ds.data.clone(), d, 61), d).with_threads(2);
+    let out = sb.run_auto(k, &cfg, &mut Rng::new(AUTO_SEED), &c_str).unwrap();
+
+    assert_conformant(
+        &format!("seed {AUTO_SEED:#x}: auto engine"),
+        &mem,
+        c_mem.get(),
+        &out,
+        c_str.get(),
+    );
+    assert_eq!(
+        c_str.notes(),
+        c_mem.notes(),
+        "seed {AUTO_SEED:#x}: per-step auto choices must match"
+    );
+}
+
+#[test]
+fn file_backed_multi_chunk_conformance() {
+    // The whole pipeline against a real on-disk binary source split into
+    // many chunks (this is the test `scripts/ci.sh --streaming` names).
+    let (n, d, k) = (500, 3, 4);
+    let mut g = prop::Gen { rng: Rng::new(FILE_SEED), case: 0 };
+    let ds = Dataset::new(g.blobs(n, d, k, 0.5), d);
+    let path = std::env::temp_dir()
+        .join(format!("bwkm_stream_conf_{}.bin", std::process::id()));
+    save_bin(&ds, &path).unwrap();
+
+    let mut cfg = BwkmCfg::for_dataset(n, d, k);
+    cfg.max_outer = 5;
+    let c_mem = DistanceCounter::new();
+    let mem = bwkm::bwkm::run(&ds, k, &cfg, &mut Rng::new(FILE_SEED), &c_mem);
+
+    for &(chunk_rows, workers) in &[(64usize, 2usize), (97, 4)] {
+        let ctx = format!(
+            "seed {FILE_SEED:#x}: file-backed chunk_rows={chunk_rows} workers={workers}"
+        );
+        let chunks = BinChunks::open(&path, chunk_rows).unwrap();
+        assert!(
+            (n + chunk_rows - 1) / chunk_rows >= 4,
+            "{ctx}: want a genuinely multi-chunk file"
+        );
+        drop(chunks);
+        let c_str = DistanceCounter::new();
+        let mut sb = StreamingBwkm::new(BinChunks::opener(&path, chunk_rows), d)
+            .with_threads(workers);
+        let out = sb
+            .run(k, &cfg, &mut Rng::new(FILE_SEED), &c_str)
+            .unwrap_or_else(|e| panic!("{ctx}: run failed: {e}"));
+        assert_conformant(&ctx, &mem, c_mem.get(), &out, c_str.get());
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn degenerate_single_chunk_source_is_conformant() {
+    // chunk ≥ n: the whole stream arrives as one chunk (and one larger
+    // than the stream), workers both idle and active.
+    let (n, d, k) = (150, 3, 3);
+    let mut g = prop::Gen { rng: Rng::new(DEGEN_SEED), case: 0 };
+    let ds = Dataset::new(g.blobs(n, d, k, 0.6), d);
+    let mut cfg = BwkmCfg::for_dataset(n, d, k);
+    cfg.max_outer = 4;
+    let c_mem = DistanceCounter::new();
+    let mem = bwkm::bwkm::run(&ds, k, &cfg, &mut Rng::new(DEGEN_SEED), &c_mem);
+    for &chunk in &[n, n + 999] {
+        for &workers in &[1usize, 4] {
+            let ctx = format!(
+                "seed {DEGEN_SEED:#x}: single-chunk chunk={chunk} workers={workers}"
+            );
+            let c_str = DistanceCounter::new();
+            let mut sb = StreamingBwkm::new(vec_opener(ds.data.clone(), d, chunk), d)
+                .with_threads(workers);
+            let out = sb.run(k, &cfg, &mut Rng::new(DEGEN_SEED), &c_str).unwrap();
+            assert_conformant(&ctx, &mem, c_mem.get(), &out, c_str.get());
+        }
+    }
+}
+
+#[test]
+fn degenerate_empty_block_statistics_match_in_memory() {
+    // The split rule never creates empty blocks (a tight-box midpoint has
+    // members on both sides), so force one with an off-data plane and pin
+    // the streamed statistics against a full in-memory rebuild: zero
+    // count, zero sums, no tight box, skipped by reps_weights — for every
+    // crew size.
+    let ds = Dataset::new(
+        vec![0.0, 0.0, 1.0, 0.5, 0.25, 0.75, 0.9, 0.1, 0.4, 0.6],
+        2,
+    );
+    let mut p = Partition::root(&ds);
+    p.split_at(0, 0, 50.0, Some(&ds)); // right child far beyond the data
+    p.split(0, &ds);
+    let mut rebuilt = p.clone();
+    rebuilt.assign_members(&ds);
+
+    let chunks =
+        || ds.data.chunks(2).map(|c| Ok(c.to_vec())).collect::<Vec<Result<Vec<f64>>>>();
+    let base = stream_partition_stats(&p, 2, chunks()).unwrap();
+    for threads in [1usize, 2, 8] {
+        let ctx = format!("empty-block crew={threads}");
+        let stats =
+            stream_partition_stats_with(&p, 2, chunks(), &ChunkCrew::new(threads)).unwrap();
+        assert_eq!(stats.counts, base.counts, "{ctx}");
+        for (b, blk) in rebuilt.blocks.iter().enumerate() {
+            assert_eq!(stats.counts[b], blk.weight(), "{ctx}: block {b} count");
+            assert_eq!(stats.tight[b], blk.tight, "{ctx}: block {b} tight");
+            for j in 0..2 {
+                assert_eq!(
+                    stats.sums[b][j].to_bits(),
+                    blk.sum[j].to_bits(),
+                    "{ctx}: block {b} sum[{j}]"
+                );
+            }
+        }
+        let (reps, weights, ids) = stats.reps_weights(2);
+        let (rreps, rweights, rids) = rebuilt.reps_weights();
+        assert_eq!(reps, rreps, "{ctx}: reps skip the empty block");
+        assert_eq!(weights, rweights, "{ctx}");
+        assert_eq!(ids, rids, "{ctx}");
+    }
+}
+
+#[test]
+fn degenerate_identical_points_conformant() {
+    // Zero-diameter everything: the cutting rule has no mass anywhere,
+    // kmeans++ falls back to weight-proportional draws, the boundary
+    // empties immediately — both paths must walk the identical degenerate
+    // route.
+    let ds = Dataset::new(vec![1.5; 120], 2); // 60 identical 2-d points
+    let k = 2;
+    let mut cfg = BwkmCfg::for_dataset(ds.n, ds.d, k);
+    cfg.max_outer = 4;
+    let c_mem = DistanceCounter::new();
+    let mem = bwkm::bwkm::run(&ds, k, &cfg, &mut Rng::new(DEGEN_SEED), &c_mem);
+    let c_str = DistanceCounter::new();
+    let mut sb = StreamingBwkm::new(vec_opener(ds.data.clone(), 2, 7), 2).with_threads(2);
+    let out = sb.run(k, &cfg, &mut Rng::new(DEGEN_SEED), &c_str).unwrap();
+    assert_conformant(
+        &format!("seed {DEGEN_SEED:#x}: identical points"),
+        &mem,
+        c_mem.get(),
+        &out,
+        c_str.get(),
+    );
+    assert!(out.centroids.iter().all(|&x| (x - 1.5).abs() < 1e-12));
+}
+
+#[test]
+fn passes_stay_bounded_by_refinement_rounds() {
+    // Memory/pass accounting sanity: the pass count is O(split rounds +
+    // sample rounds + evals), never O(n) — the whole point of doing all
+    // expensive work on the representative set.
+    let (n, d, k) = (300, 2, 3);
+    let mut g = prop::Gen { rng: Rng::new(GRID_SEED ^ 0xff), case: 0 };
+    let ds = Dataset::new(g.blobs(n, d, k, 0.5), d);
+    let mut cfg = BwkmCfg::for_dataset(n, d, k);
+    cfg.max_outer = 6;
+    let c = DistanceCounter::new();
+    let mut sb = StreamingBwkm::new(vec_opener(ds.data.clone(), d, 32), d);
+    let out = sb.run(k, &cfg, &mut Rng::new(GRID_SEED), &c).unwrap();
+    // Per outer iteration at most one refresh; init needs O(log m) split
+    // rounds with a fetch + refresh each, plus r fetches per Alg. 2 round.
+    let m = cfg.init.m;
+    let generous = 3 + 2 * (m + cfg.init.r * m) + 2 * cfg.max_outer;
+    assert!(
+        out.passes <= generous,
+        "pass count {} exploded (bound {generous})",
+        out.passes
+    );
+}

@@ -1,8 +1,10 @@
 #!/usr/bin/env bash
 # Offline-safe CI gate for the bwkm crate (DESIGN.md §6).
 #
-#   scripts/ci.sh           # full tier-1: fmt check, release build, tests
-#   scripts/ci.sh --quick   # the cross-backend engine conformance suite only
+#   scripts/ci.sh              # full tier-1: fmt check, release build, tests
+#   scripts/ci.sh --quick      # engine conformance + streaming degenerate subset
+#   scripts/ci.sh --streaming  # the full streaming conformance suite
+#                              # (includes the generated multi-chunk-file run)
 #
 # The build is hermetic (vendored path deps, no crates.io), so the script
 # forces cargo offline and never touches the network.
@@ -14,6 +16,14 @@ export CARGO_NET_OFFLINE=true
 if [[ "${1:-}" == "--quick" ]]; then
     echo "== quick: engine conformance suite =="
     cargo test -q --test engine_conformance
+    echo "== quick: streaming degenerate subset =="
+    cargo test -q --test streaming_conformance degenerate
+    exit 0
+fi
+
+if [[ "${1:-}" == "--streaming" ]]; then
+    echo "== streaming conformance suite (incl. generated multi-chunk file) =="
+    cargo test -q --test streaming_conformance
     exit 0
 fi
 
