@@ -1,8 +1,9 @@
-//! Seeding-strategy comparison (the paper's §3 conclusion that BWKM is "a
-//! competitive initialization strategy for Lloyd's algorithm"): run Forgy,
-//! K-means++, AFK-MC² and BWKM as *initializers*, hand each result to the
-//! same Lloyd refinement, and report seeding cost vs final quality on the
-//! simulated SUSY dataset.
+//! Seeding-strategy comparison through the `Seeder` trait (DESIGN.md
+//! §2.8): run all four backends — Forgy, K-means++, AFK-MC² and
+//! K-means|| — as initializers, hand each result to the same Lloyd
+//! refinement, and report seeding cost vs final quality on the simulated
+//! SUSY dataset. BWKM-as-initializer rides along as the paper's §3
+//! closing comparison point.
 //!
 //! ```bash
 //! cargo run --release --example init_comparison
@@ -10,7 +11,7 @@
 
 use bwkm::bwkm::BwkmCfg;
 use bwkm::data::simulate;
-use bwkm::kmeans::init::{forgy, kmc2, kmeanspp, Kmc2Cfg};
+use bwkm::kmeans::init::{SeedMethod, SeedPolicy, Seeder};
 use bwkm::kmeans::{lloyd, LloydCfg};
 use bwkm::metrics::{kmeans_error, Budget, DistanceCounter};
 use bwkm::util::{fmt_count, mean_std, Rng};
@@ -19,60 +20,72 @@ fn main() {
     let k = 27;
     let reps = 5;
     let ds = simulate("SUSY", 0.004, 31).expect("simulator");
-    println!("init comparison: simulated SUSY, n={}, d={}, K={k}, {reps} repetitions\n", ds.n, ds.d);
+    let weights = vec![1.0f64; ds.n]; // raw instances: unit weights
+    println!(
+        "init comparison: simulated SUSY, n={}, d={}, K={k}, {reps} repetitions\n",
+        ds.n, ds.d
+    );
 
-    let strategies: Vec<&str> = vec!["Forgy", "KM++", "KMC2", "BWKM"];
     println!(
         "{:<8} {:>14} {:>14} {:>14} {:>8}",
         "seeding", "init dists", "E^D (seed)", "E^D (+Lloyd)", "iters"
     );
-    for name in strategies {
-        let mut init_d = Vec::new();
-        let mut seed_e = Vec::new();
-        let mut final_e = Vec::new();
-        let mut iters = Vec::new();
-        for rep in 0..reps {
-            let mut rng = Rng::new(0x5EED ^ rep);
-            let c = DistanceCounter::new();
-            let init = match name {
-                "Forgy" => forgy(&ds.data, ds.d, k, &mut rng),
-                "KM++" => kmeanspp(&ds.data, ds.d, k, &mut rng, &c),
-                "KMC2" => kmc2(&ds.data, ds.d, k, &Kmc2Cfg::default(), &mut rng, &c),
-                "BWKM" => {
-                    let mut cfg = BwkmCfg::for_dataset(ds.n, ds.d, k);
-                    // As an initializer: stop early, cap the budget at ~2
-                    // full-data passes worth of distances.
-                    cfg.max_outer = 6;
-                    cfg.budget = Budget::of((2 * ds.n * k) as u64);
-                    bwkm::bwkm::run(&ds, k, &cfg, &mut rng, &c).centroids
-                }
-                _ => unreachable!(),
-            };
-            let eval = DistanceCounter::new();
-            seed_e.push(kmeans_error(&ds.data, ds.d, &init, &eval));
-            init_d.push(c.get() as f64);
-            let l = lloyd(
-                &ds.data,
-                ds.d,
-                &init,
-                &LloydCfg { max_iters: 30, ..Default::default() },
-                &DistanceCounter::new(),
-            );
-            final_e.push(l.error);
-            iters.push(l.iters as f64);
-        }
-        println!(
-            "{:<8} {:>14} {:>14.5e} {:>14.5e} {:>8.1}",
-            name,
-            fmt_count(mean_std(&init_d).0 as u64),
-            mean_std(&seed_e).0,
-            mean_std(&final_e).0,
-            mean_std(&iters).0,
-        );
+
+    // The four Seeder backends, selected exactly as the CLI's `init=`
+    // policy would select them.
+    let methods = [SeedMethod::Forgy, SeedMethod::Kmpp, SeedMethod::Kmc2, SeedMethod::Par];
+    for method in methods {
+        let policy = SeedPolicy::of(method);
+        let mut seeder = policy.seeder();
+        report(seeder.name(), reps, |rng, c| {
+            seeder.seed(&ds.data, &weights, ds.d, k, rng, c)
+        }, &ds);
+    }
+
+    // BWKM as an initializer (the §3 closing observation): stop early,
+    // cap the budget at ~2 full-data passes worth of distances.
+    report("BWKM", reps, |rng, c| {
+        let mut cfg = BwkmCfg::for_dataset(ds.n, ds.d, k);
+        cfg.max_outer = 6;
+        cfg.budget = Budget::of((2 * ds.n * k) as u64);
+        bwkm::bwkm::run(&ds, k, &cfg, rng, c).centroids
+    }, &ds);
+
+    println!(
+        "\nreading: `par` (K-means||) buys K-means++-grade seeds in r+2 passes \
+         instead of K serial ones at a comparable bill (m·|C| + |C|·(K−1) \
+         distances); BWKM's seeds still start Lloyd closest to its fixed \
+         point at a comparable budget (the paper's §3 closing observation)."
+    );
+}
+
+/// Run one seeding strategy `reps` times and print its table row.
+fn report<F>(name: &str, reps: u64, mut init_fn: F, ds: &bwkm::data::Dataset)
+where
+    F: FnMut(&mut Rng, &DistanceCounter) -> Vec<f64>,
+{
+    let lcfg = LloydCfg { max_iters: 30, ..Default::default() };
+    let mut init_d = Vec::new();
+    let mut seed_e = Vec::new();
+    let mut final_e = Vec::new();
+    let mut iters = Vec::new();
+    for rep in 0..reps {
+        let mut rng = Rng::new(0x5EED ^ rep);
+        let c = DistanceCounter::new();
+        let init = init_fn(&mut rng, &c);
+        init_d.push(c.get() as f64);
+        let eval = DistanceCounter::new();
+        seed_e.push(kmeans_error(&ds.data, ds.d, &init, &eval));
+        let l = lloyd(&ds.data, ds.d, &init, &lcfg, &DistanceCounter::new());
+        final_e.push(l.error);
+        iters.push(l.iters as f64);
     }
     println!(
-        "\nreading: compare `E^D (seed)` — BWKM's seeds start Lloyd far closer to \
-         its fixed point than the sampling-based seedings at a comparable \
-         distance bill (the paper's §3 closing observation)."
+        "{:<8} {:>14} {:>14.5e} {:>14.5e} {:>8.1}",
+        name,
+        fmt_count(mean_std(&init_d).0 as u64),
+        mean_std(&seed_e).0,
+        mean_std(&final_e).0,
+        mean_std(&iters).0,
     );
 }

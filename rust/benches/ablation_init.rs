@@ -1,15 +1,21 @@
-//! Exp A2 — ablation of the §2.2 initial partition (Alg. 2–4) vs a
-//! dataset-independent uniform start of the same size, on the CIF
-//! simulator (the paper's hardest regime: small n, high d), K = 9.
+//! Exp A2 — two initialization ablations on the CIF simulator (the
+//! paper's hardest regime: small n, high d), K = 9:
 //!
-//! Expected shape: the boundary-seeking initial partition yields a lower
-//! error at the same partition size / distance budget because its blocks
-//! concentrate where cluster affiliation is ambiguous (§2.2's motivation).
+//! * **Partition ablation** (§2.2): the misassignment-guided Alg. 2
+//!   initial partition vs a dataset-aware-but-boundary-blind Alg. 3 run
+//!   of the same size. Expected shape: the boundary-seeking partition
+//!   yields a lower error at the same partition size / distance budget.
+//! * **Seeding ablation** (DESIGN.md §2.8): all four `Seeder` backends —
+//!   Forgy, K-means++, AFK-MC², K-means|| — over the same Alg. 2
+//!   representative set, reporting each method's own seeding bill, the
+//!   total distances after the weighted-Lloyd polish, and the final E^D:
+//!   the distances-vs-quality trade-off K-means|| exists to move
+//!   (O(r) engine passes instead of K serial ones).
 
 use bwkm::bwkm::{initial_partition, starting_partition, InitCfg};
 use bwkm::bench::{env_f64, env_u64, write_csv};
 use bwkm::data::simulate;
-use bwkm::kmeans::init::weighted_kmeanspp;
+use bwkm::kmeans::init::{SeedMethod, SeedPolicy, Seeder as _};
 use bwkm::kmeans::{weighted_lloyd, WLloydCfg};
 use bwkm::metrics::{kmeans_error, DistanceCounter};
 use bwkm::util::{fmt_count, Rng};
@@ -51,6 +57,60 @@ fn main() {
         emit_row(&mut rows, "Alg.3-only (density)", rep, c.get(), e, occ);
     }
     write_csv("ablation_init", &rows);
+
+    // --- Seeding ablation: the §2.8 backends over one Alg. 2 partition.
+    println!("\n=== Ablation A2b: Seeder backends over the Alg.2 reps ===");
+    println!(
+        "{:<8} {:>14} {:>14} {:>12} {:>8}",
+        "seeding", "seed dists", "total dists", "E^D", "iters"
+    );
+    let mut srows = vec![vec![
+        "seeding".into(),
+        "rep".into(),
+        "seed_distances".into(),
+        "total_distances".into(),
+        "error".into(),
+        "lloyd_iters".into(),
+    ]];
+    for rep in 0..reps {
+        // One partition per repetition, shared by every seeding method so
+        // the only variable is the seeder.
+        let cfg = InitCfg { m_prime: (m / 4).max(K + 1), m, s, r: 5 };
+        let c_part = DistanceCounter::new();
+        let mut rng = Rng::new(400 + rep);
+        let p = initial_partition(&ds, K, &cfg, &mut rng, &c_part);
+        let (preps, pweights, _) = p.reps_weights();
+
+        for method in [SeedMethod::Forgy, SeedMethod::Kmpp, SeedMethod::Kmc2, SeedMethod::Par] {
+            let policy = SeedPolicy::of(method);
+            let mut seeder = policy.seeder();
+            let c = DistanceCounter::new();
+            let mut rng = Rng::new(500 + rep);
+            let cents = seeder.seed(&preps, &pweights, ds.d, K, &mut rng, &c);
+            let seed_d = c.get();
+            let out =
+                weighted_lloyd(&preps, &pweights, ds.d, &cents, &WLloydCfg::default(), &c);
+            let eval = DistanceCounter::new();
+            let e = kmeans_error(&ds.data, ds.d, &out.centroids, &eval);
+            println!(
+                "{:<8} {:>14} {:>14} {:>12.5e} {:>8}",
+                seeder.name(),
+                fmt_count(seed_d),
+                fmt_count(c.get()),
+                e,
+                out.iters
+            );
+            srows.push(vec![
+                seeder.name().into(),
+                rep.to_string(),
+                seed_d.to_string(),
+                c.get().to_string(),
+                format!("{e:.8e}"),
+                out.iters.to_string(),
+            ]);
+        }
+    }
+    write_csv("ablation_init_seeding", &srows);
 }
 
 fn finish(
@@ -60,7 +120,10 @@ fn finish(
     counter: &DistanceCounter,
 ) -> (f64, usize) {
     let (reps, weights, _) = p.reps_weights();
-    let cents = weighted_kmeanspp(&reps, &weights, ds.d, K, rng, counter);
+    // The default §2.8 policy (weighted K-means++) — the Alg. 5 Step-1
+    // seeding both partition variants share.
+    let cents =
+        SeedPolicy::default().seeder().seed(&reps, &weights, ds.d, K, rng, counter);
     let out = weighted_lloyd(&reps, &weights, ds.d, &cents, &WLloydCfg::default(), counter);
     let eval = DistanceCounter::new();
     (kmeans_error(&ds.data, ds.d, &out.centroids, &eval), p.occupied())

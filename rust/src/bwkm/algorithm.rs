@@ -10,7 +10,7 @@
 use anyhow::Result;
 
 use crate::data::Dataset;
-use crate::kmeans::init::weighted_kmeanspp;
+use crate::kmeans::init::{SeedPolicy, Seeder as _};
 use crate::kmeans::{
     weighted_lloyd_with, AutoAssigner, EngineStepper, NativeStepper, Stepper, WLloydCfg,
 };
@@ -43,6 +43,11 @@ pub enum StopReason {
 #[derive(Clone, Copy, Debug)]
 pub struct BwkmCfg {
     pub init: InitCfg,
+    /// Seeding policy for the Alg. 5 Step-1 centroids over the initial
+    /// partition's representatives (DESIGN.md §2.8). The default —
+    /// weighted K-means++ — is the paper's Alg. 4 choice and reproduces
+    /// the pre-policy pipeline bit for bit.
+    pub seed: SeedPolicy,
     /// Inner weighted-Lloyd loop settings.
     pub wl: WLloydCfg,
     /// Maximum outer (partition-refinement) iterations.
@@ -68,6 +73,7 @@ impl BwkmCfg {
         let m_prime = (m / 4).max(k + 1).min(m);
         BwkmCfg {
             init: InitCfg { m_prime, m, s: (n as f64).sqrt().ceil() as usize, r: 5 },
+            seed: SeedPolicy::default(),
             wl: WLloydCfg::default(),
             max_outer: 40,
             budget: Budget::unlimited(),
@@ -195,10 +201,13 @@ pub fn run_source<S: RefineSource>(
     assert!(src.n() >= k, "n must be ≥ k");
     let d = src.d();
 
-    // ---- Step 1: initial partition + weighted K-means++ seeding.
+    // ---- Step 1: initial partition + seeding over its representatives
+    // (the configured §2.8 policy; default: the paper's weighted
+    // K-means++). Seeding always runs in memory — the representative set
+    // is tiny — so in-memory and streamed runs draw identically.
     initial_partition_source(src, k, &cfg.init, rng, counter)?;
     let (mut reps, mut weights, mut ids) = src.reps_weights();
-    let mut centroids = weighted_kmeanspp(&reps, &weights, d, k, rng, counter);
+    let mut centroids = cfg.seed.seeder().seed(&reps, &weights, d, k, rng, counter);
 
     let mut trace = Vec::new();
     let mut stop = StopReason::MaxIters;

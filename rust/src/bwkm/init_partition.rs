@@ -15,7 +15,7 @@
 use anyhow::Result;
 
 use crate::data::Dataset;
-use crate::kmeans::init::weighted_kmeanspp;
+use crate::kmeans::init::{KmppSeeder, Seeder};
 use crate::metrics::{nearest2, DistanceCounter};
 use crate::partition::{Partition, SampleStats};
 use crate::util::{Cdf, Rng};
@@ -139,7 +139,10 @@ pub fn cutting_masses_source<S: RefineSource>(
             continue;
         }
         let kk = k.min(ids.len());
-        let cents = weighted_kmeanspp(&reps, &weights, d, kk, rng, counter);
+        // Alg. 4 is pinned to weighted K-means++ by the paper (Eq. 5's
+        // Cⁱ are D²-sampled) — deliberately *not* the configurable §2.8
+        // seeding policy, which only governs the Alg. 5 Step-1 seeding.
+        let cents = KmppSeeder.seed(&reps, &weights, d, kk, rng, counter);
         if kk < 2 {
             continue; // ε is 0 against a single centroid
         }

@@ -30,6 +30,14 @@
 //! weights and diagonals at every step, draw identical random numbers,
 //! choose identical splits, and charge identical `DistanceCounter`
 //! totals — pinned with `==` by `tests/streaming_conformance.rs`.
+//!
+//! Seeding needs no hook here: the Alg. 5 Step-1 seeding (the §2.8
+//! `SeedPolicy`, weighted K-means++ by default) runs on the
+//! representative set both paths expose identically, so any policy is
+//! source-independent for free. Seeding the *raw* rows of a stream —
+//! K-means|| over data that never materializes — is the separate
+//! `coordinator::streaming::StreamSeeder` path, built on the same
+//! chunk-pass machinery (DESIGN.md §2.8).
 
 use anyhow::Result;
 

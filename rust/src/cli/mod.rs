@@ -31,7 +31,12 @@ USAGE:
 
 RUN KEYS: dataset scale seed k method budget threads use_pjrt eval_full_error
           chunk_rows m m_prime s r max_outer
+          init oversample_l init_rounds chain_length
           (method: bwkm fkm kmpp kmpp_init kmc2 mbN rpkm)
+          (init: forgy pp kmc2 par — the BWKM/RPKM seeding policy over
+           partition representatives, DESIGN.md §2.8; par is K-means||
+           with init_rounds rounds and oversampling l = oversample_l,
+           0 = auto 2k)
           (dataset: a Table-1 name, path:FILE to load into memory, or
            stream:FILE.bin to cluster out of core — method=bwkm only,
            bit-identical to the in-memory run on the same data/seed;
@@ -184,11 +189,12 @@ fn run_streaming(cfg: &RunConfig, path: &str) -> Result<()> {
         bail!("source changed during the run: scoring pass saw {rows} rows, expected {n}");
     }
     println!(
-        "result: E^D={sse:.6e} distances={} passes={} wall={:.2?} (stop={:?})",
+        "result: E^D={sse:.6e} distances={} passes={} wall={:.2?} (stop={:?} init={})",
         fmt_count(counter.get()),
         out.passes,
         t0.elapsed(),
-        out.stop
+        out.stop,
+        bcfg.seed.method.name()
     );
     Ok(())
 }
@@ -237,7 +243,7 @@ fn run(args: &[String]) -> Result<()> {
             };
             print_trace(&out.trace);
             let stop = out.stop;
-            (out.centroids, format!("stop={stop:?}"))
+            (out.centroids, format!("stop={stop:?} init={}", bcfg.seed.method.name()))
         }
         Method::Fkm => {
             let init = forgy(&ds.data, ds.d, cfg.k, &mut rng);
@@ -264,7 +270,11 @@ fn run(args: &[String]) -> Result<()> {
             (r.centroids, format!("iters={}", r.iters))
         }
         Method::Rpkm => {
-            let rcfg = RpkmCfg { budget: cfg.budget(), ..Default::default() };
+            let rcfg = RpkmCfg {
+                budget: cfg.budget(),
+                seed: cfg.seed_policy(crate::kmeans::init::SeedMethod::Forgy)?,
+                ..Default::default()
+            };
             let out = grid_rpkm(&ds, cfg.k, &rcfg, &mut rng, &counter);
             (out.centroids, format!("levels={}", out.trace.len()))
         }
@@ -334,6 +344,35 @@ mod tests {
             "seed=1".into(),
         ])
         .unwrap();
+    }
+
+    #[test]
+    fn run_bwkm_with_par_init_policy() {
+        run(&[
+            "dataset=3RN".into(),
+            "scale=0.002".into(),
+            "k=3".into(),
+            "method=bwkm".into(),
+            "init=par".into(),
+            "init_rounds=2".into(),
+            "oversample_l=6".into(),
+            "max_outer=2".into(),
+            "seed=1".into(),
+            "eval_full_error=off".into(),
+        ])
+        .unwrap();
+        // RPKM honors the policy keys too.
+        run(&[
+            "dataset=3RN".into(),
+            "scale=0.002".into(),
+            "k=3".into(),
+            "method=rpkm".into(),
+            "init=pp".into(),
+            "seed=1".into(),
+        ])
+        .unwrap();
+        // A bad init value is a clean error.
+        assert!(run(&["dataset=3RN".into(), "scale=0.002".into(), "init=quantum".into()]).is_err());
     }
 
     #[test]

@@ -8,6 +8,7 @@ use std::path::Path;
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::bwkm::BwkmCfg;
+use crate::kmeans::init::{SeedMethod, SeedPolicy};
 use crate::metrics::Budget;
 
 /// Which clustering method a run executes.
@@ -169,8 +170,39 @@ impl RunConfig {
         }
     }
 
+    /// Seeding policy (DESIGN.md §2.8) from the `init`, `oversample_l`
+    /// and `init_rounds` keys. `default` is the consumer's paper-pinned
+    /// method when no `init` key is present: weighted K-means++ for BWKM
+    /// (Alg. 4), Forgy for RPKM ([8]).
+    pub fn seed_policy(&self, default: SeedMethod) -> Result<SeedPolicy> {
+        let mut policy = SeedPolicy { method: default, ..SeedPolicy::default() };
+        if let Some(v) = self.extra.get("init") {
+            policy.method = SeedMethod::parse(v)?;
+        }
+        if let Some(v) = self.extra.get("oversample_l") {
+            policy.oversample_l = v.parse().context("oversample_l")?;
+            if !(policy.oversample_l >= 0.0) || !policy.oversample_l.is_finite() {
+                bail!("oversample_l must be a finite value ≥ 0 (0 = auto)");
+            }
+        }
+        if let Some(v) = self.extra.get("init_rounds") {
+            policy.init_rounds = v.parse().context("init_rounds")?;
+            if policy.init_rounds == 0 {
+                bail!("init_rounds must be ≥ 1");
+            }
+        }
+        if let Some(v) = self.extra.get("chain_length") {
+            policy.chain_length = v.parse().context("chain_length")?;
+            if policy.chain_length == 0 {
+                bail!("chain_length must be ≥ 1");
+            }
+        }
+        Ok(policy)
+    }
+
     /// BWKM configuration for a dataset of n rows, honoring `extra`
-    /// overrides m, m_prime, s, r, max_outer.
+    /// overrides m, m_prime, s, r, max_outer and the seeding-policy keys
+    /// init / oversample_l / init_rounds / chain_length.
     pub fn bwkm_cfg(&self, n: usize, d: usize) -> Result<BwkmCfg> {
         let mut cfg = BwkmCfg::for_dataset(n, d, self.k);
         if let Some(v) = self.extra.get("m") {
@@ -188,6 +220,7 @@ impl RunConfig {
         if let Some(v) = self.extra.get("max_outer") {
             cfg.max_outer = v.parse().context("max_outer")?;
         }
+        cfg.seed = self.seed_policy(SeedMethod::Kmpp)?;
         cfg.budget = self.budget();
         cfg.eval_full_error = self.eval_full_error;
         Ok(cfg)
@@ -254,5 +287,33 @@ mod tests {
         assert_eq!(b.init.m, 123);
         assert_eq!(b.init.r, 2);
         assert_eq!(b.budget.max_distances, 5000);
+        // No init key: BWKM defaults to the paper's weighted K-means++.
+        assert_eq!(b.seed.method, SeedMethod::Kmpp);
+    }
+
+    #[test]
+    fn seed_policy_keys_parse_and_validate() {
+        let mut cfg = RunConfig::default();
+        cfg.set("init", "par").unwrap();
+        cfg.set("oversample_l", "6.5").unwrap();
+        cfg.set("init_rounds", "3").unwrap();
+        let p = cfg.seed_policy(SeedMethod::Kmpp).unwrap();
+        assert_eq!(p.method, SeedMethod::Par);
+        assert_eq!(p.oversample_l, 6.5);
+        assert_eq!(p.init_rounds, 3);
+        // The policy flows into the BWKM config.
+        assert_eq!(cfg.bwkm_cfg(1000, 3).unwrap().seed, p);
+        // Per-consumer defaults differ.
+        let q = RunConfig::default().seed_policy(SeedMethod::Forgy).unwrap();
+        assert_eq!(q.method, SeedMethod::Forgy);
+        // Validation.
+        cfg.set("init", "quantum").unwrap();
+        assert!(cfg.seed_policy(SeedMethod::Kmpp).is_err());
+        cfg.set("init", "pp").unwrap();
+        cfg.set("init_rounds", "0").unwrap();
+        assert!(cfg.seed_policy(SeedMethod::Kmpp).is_err());
+        cfg.set("init_rounds", "2").unwrap();
+        cfg.set("oversample_l", "-1").unwrap();
+        assert!(cfg.seed_policy(SeedMethod::Kmpp).is_err());
     }
 }

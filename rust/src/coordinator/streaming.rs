@@ -42,7 +42,9 @@ use anyhow::{anyhow, bail, Result};
 use crate::bwkm::source::RefineSource;
 use crate::bwkm::{run_source, BwkmCfg, StopReason, TracePoint};
 use crate::geometry::BBox;
-use crate::kmeans::assign::shard_ranges;
+use crate::kmeans::assign::{nearest_in, shard_ranges};
+use crate::kmeans::init::kmeans_par::{kmeans_par_source, ParSource};
+use crate::kmeans::init::ParCfg;
 use crate::kmeans::{AutoAssigner, EngineStepper, NativeStepper, Stepper};
 use crate::metrics::{nearest, DistanceCounter};
 use crate::partition::Partition;
@@ -667,6 +669,185 @@ where
             passes,
             partition: src.into_partition(),
         })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Out-of-core seeding (DESIGN.md §2.8).
+// ---------------------------------------------------------------------------
+
+/// The streamed [`ParSource`]: each K-means|| round is **one** chunked
+/// pass over the restartable source. Workers compute only the per-row
+/// pure nearest-candidate value ([`nearest_in`] against the round's
+/// batch — bit-identical to the in-memory engine refresh, §2.1); the
+/// leader replays every row in global row order through the shared
+/// driver's `visit` fold, which owns all FP accumulation (ψ, candidate
+/// masses) and every RNG draw — the §5.1 merge-determinism rule applied
+/// to seeding. Per-row side state (min-distance, nearest-candidate id)
+/// lives with the driver: O(n) *scalars*, a factor d smaller than
+/// materializing the rows.
+struct StreamParSource<'a, F> {
+    open: &'a mut F,
+    d: usize,
+    n: usize,
+    crew: ChunkCrew,
+    passes: usize,
+}
+
+impl<F, I> ParSource for StreamParSource<'_, F>
+where
+    F: FnMut() -> Result<I>,
+    I: IntoIterator<Item = Result<Vec<f64>>>,
+{
+    fn rows(&self) -> usize {
+        self.n
+    }
+
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn fetch(&mut self, idx: usize) -> Result<Vec<f64>> {
+        self.passes += 1;
+        let (row, seen) = pass_fetch(self.d, (self.open)()?, &[idx])?;
+        if seen != self.n {
+            bail!("source changed between passes: {seen} rows, expected {}", self.n);
+        }
+        Ok(row)
+    }
+
+    fn pass(
+        &mut self,
+        batch: &[f64],
+        counter: &DistanceCounter,
+        visit: &mut dyn FnMut(usize, &[f64], f64, u32),
+    ) -> Result<()> {
+        self.passes += 1;
+        let d = self.d;
+        let b = batch.len() / d;
+        let n = self.n;
+        let mut gi = 0usize;
+        let chunks = (self.open)()?;
+        let crew = &self.crew;
+        let rows = crew.map_pass(
+            d,
+            chunks,
+            |row| nearest_in(row, batch, d),
+            |chunk, vals| {
+                for (r, row) in chunk.chunks_exact(d).enumerate() {
+                    // The driver's fold state is sized to the count
+                    // pass's row total: a source that *grows* between
+                    // passes must be a clean Err before the extra row
+                    // reaches `visit` (the shrink case is caught by the
+                    // row-count check after the pass).
+                    if gi >= n {
+                        bail!("source changed between passes: more than {n} rows");
+                    }
+                    let (dnew, jnew) = vals[r];
+                    visit(gi, row, dnew, jnew);
+                    gi += 1;
+                }
+                Ok(())
+            },
+        )?;
+        if rows != self.n {
+            bail!("source changed between passes: {rows} rows, expected {}", self.n);
+        }
+        // rows·b, exactly the engine's bill for the same refresh (§2.4).
+        counter.add((rows as u64) * (b as u64));
+        Ok(())
+    }
+}
+
+/// Outcome of a streamed seeding run.
+#[derive(Clone, Debug)]
+pub struct StreamSeedOutcome {
+    /// Flat k×d centroids — bit-identical to the in-memory seeder's.
+    pub centroids: Vec<f64>,
+    /// Candidates |C| the K-means|| rounds accumulated.
+    pub candidates: usize,
+    /// Rows in the stream.
+    pub rows: usize,
+    /// Streaming passes consumed (count + c₀ fetch + prime + rounds +
+    /// final refresh).
+    pub passes: usize,
+}
+
+/// Out-of-core seeding over a restartable chunked source (DESIGN.md
+/// §2.8): true K-means|| seeding of a dataset that never fits in memory,
+/// pinned **bit-identical** — centroids, `DistanceCounter` totals and
+/// notes — to [`crate::kmeans::init::KmeansParSeeder`] on the
+/// materialized rows with unit weights, for every chunk size and worker
+/// count (`tests/init_conformance.rs`).
+pub struct StreamSeeder<F> {
+    open: F,
+    d: usize,
+    threads: usize,
+}
+
+impl<F, I> StreamSeeder<F>
+where
+    F: FnMut() -> Result<I>,
+    I: IntoIterator<Item = Result<Vec<f64>>>,
+{
+    /// A seeder over `open`, which must yield the same chunked rows on
+    /// every call (chunk boundaries may differ between passes).
+    pub fn new(open: F, d: usize) -> StreamSeeder<F> {
+        StreamSeeder { open, d, threads: 1 }
+    }
+
+    /// Fan each pass's per-row work out over `threads` chunk workers
+    /// (bit-identical results for every value — the §5.1 merge rule).
+    pub fn with_threads(mut self, threads: usize) -> StreamSeeder<F> {
+        self.threads = threads.max(1);
+        self
+    }
+
+    /// Streamed K-means|| (unit row weights — the raw-instance shape).
+    pub fn kmeans_par(
+        &mut self,
+        k: usize,
+        cfg: &ParCfg,
+        rng: &mut Rng,
+        counter: &DistanceCounter,
+    ) -> Result<StreamSeedOutcome> {
+        if self.d == 0 {
+            bail!("dimension must be positive");
+        }
+        if k < 1 {
+            bail!("k must be ≥ 1");
+        }
+        // Count pass: row total + chunk-shape validation, plus the same
+        // finite-data guard as `pass_extent`: a NaN/Inf value would
+        // poison every min-distance fold (NaN fails every strict `<`, so
+        // ψ saturates at ∞ and no round could ever sample a batch — the
+        // seeder would silently return k copies of c₀), so it is a loud
+        // error here instead.
+        let mut rows = 0usize;
+        for chunk in (self.open)()? {
+            let chunk = chunk?;
+            chunk_row_count(&chunk, self.d)?;
+            for row in chunk.chunks_exact(self.d) {
+                if let Some(j) = (0..self.d).find(|&j| !row[j].is_finite()) {
+                    bail!("stream contains a non-finite value at row {rows}, column {j}");
+                }
+                rows += 1;
+            }
+        }
+        if rows == 0 {
+            bail!("empty stream");
+        }
+        let weights = vec![1.0f64; rows];
+        let mut src = StreamParSource {
+            open: &mut self.open,
+            d: self.d,
+            n: rows,
+            crew: ChunkCrew::new(self.threads),
+            passes: 1,
+        };
+        let (centroids, stats) = kmeans_par_source(&mut src, &weights, k, cfg, rng, counter)?;
+        let passes = src.passes;
+        Ok(StreamSeedOutcome { centroids, candidates: stats.candidates, rows, passes })
     }
 }
 

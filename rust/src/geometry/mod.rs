@@ -41,17 +41,33 @@ impl BBox {
 
     /// Smallest bounding box of the rows of `data` selected by `members`
     /// (all rows when `members` is None). Returns None for empty input.
+    /// Two monomorphic loops — this sits on the split/refresh hot path,
+    /// where a boxed iterator would cost an allocation plus a virtual
+    /// call per row.
     pub fn of(data: &[f64], d: usize, members: Option<&[u32]>) -> Option<BBox> {
-        let mut it: Box<dyn Iterator<Item = usize>> = match members {
-            Some(m) => Box::new(m.iter().map(|&i| i as usize)),
-            None => Box::new(0..data.len() / d),
-        };
-        let first = it.next()?;
-        let mut bb = BBox::at(&data[first * d..(first + 1) * d]);
-        for i in it {
-            bb.expand(&data[i * d..(i + 1) * d]);
+        match members {
+            Some(m) => {
+                let (&first, rest) = m.split_first()?;
+                let first = first as usize;
+                let mut bb = BBox::at(&data[first * d..(first + 1) * d]);
+                for &i in rest {
+                    let i = i as usize;
+                    bb.expand(&data[i * d..(i + 1) * d]);
+                }
+                Some(bb)
+            }
+            None => {
+                let n = data.len() / d;
+                if n == 0 {
+                    return None;
+                }
+                let mut bb = BBox::at(&data[..d]);
+                for i in 1..n {
+                    bb.expand(&data[i * d..(i + 1) * d]);
+                }
+                Some(bb)
+            }
         }
-        Some(bb)
     }
 
     pub fn dim(&self) -> usize {

@@ -1042,6 +1042,28 @@ pub fn assign_err(
     (top2.assign, sse)
 }
 
+/// Nearest centroid of a single row through the canonical kernel — the
+/// per-row *pure* shape streamed fan-outs hand to their chunk workers
+/// (the K-means|| refresh of DESIGN.md §2.8: workers compute this,
+/// the leader folds). Straight scan in index order with strict `<`, so
+/// `(d1, argmin)` equals the blocked kernel's output bit for bit (§2.1;
+/// tiling only reorders memory traffic). Returns `(∞, 0)` when
+/// `centroids` is empty. Counts nothing itself — callers account rows·k
+/// per pass, exactly as the engine's per-block batching does.
+#[inline]
+pub fn nearest_in(p: &[f64], centroids: &[f64], d: usize) -> (f64, u32) {
+    let k = centroids.len() / d;
+    let (mut b1, mut i1) = (f64::INFINITY, 0u32);
+    for c in 0..k {
+        let v = sq_dist_kernel(p, &centroids[c * d..(c + 1) * d]);
+        if v < b1 {
+            b1 = v;
+            i1 = c as u32;
+        }
+    }
+    (b1, i1)
+}
+
 /// Exact full-row fallback (DESIGN.md §2.6): all k squared distances of
 /// one point through the canonical kernel, written into `row`; returns
 /// (argmin, min). Counts k. This is the engine shape behind Elkan's

@@ -4,6 +4,11 @@ use crate::util::Rng;
 
 /// Select `k` distinct rows of `data` uniformly at random as centroids.
 /// Panics if `k` exceeds the number of rows. Computes no distances.
+///
+/// Legacy surface, deprecated in favor of the
+/// [`Seeder`](super::Seeder) trait: [`super::ForgySeeder`] is
+/// bit-identical (and handles k > n) — new call sites should go through
+/// the trait / the `init=` policy (DESIGN.md §2.8).
 pub fn forgy(data: &[f64], d: usize, k: usize, rng: &mut Rng) -> Vec<f64> {
     let n = data.len() / d;
     assert!(k <= n, "forgy: k={k} > n={n}");

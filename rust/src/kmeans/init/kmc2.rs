@@ -27,6 +27,10 @@ impl Default for Kmc2Cfg {
 }
 
 /// Run AFK-MC² over `data`; returns flat k×d centroids.
+///
+/// Legacy surface, deprecated in favor of the
+/// [`Seeder`](super::Seeder) trait: [`super::Kmc2Seeder`] is
+/// bit-identical for the same [`Kmc2Cfg`] (DESIGN.md §2.8).
 pub fn kmc2(
     data: &[f64],
     d: usize,

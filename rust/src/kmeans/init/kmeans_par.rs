@@ -1,0 +1,443 @@
+//! Scalable K-means++ — **K-means||** (Bahmani et al., "Scalable
+//! K-Means++") as a [`Seeder`] backend (DESIGN.md §2.8).
+//!
+//! K-means++'s D² sampling is inherently serial: k sequential passes,
+//! each conditioned on the previous draw. K-means|| collapses that to
+//! r ∈ O(log n) rounds by *oversampling*: each round samples every row
+//! independently with probability min(1, l·w·D²(x,C)/ψ) (l ≈ 2k rows in
+//! expectation), so one pass yields a whole batch of candidates; after r
+//! rounds the ~r·l candidates are weighted by the mass of the rows they
+//! are nearest to and reclustered with weighted K-means++ down to k.
+//!
+//! **Round structure** (normative; DESIGN.md §2.8). One *prime* pass
+//! against the first centroid, then r fused *round* passes, then one
+//! *final* pass:
+//!
+//! * prime: c₀ by weight-proportional draw (the same first draw as
+//!   weighted K-means++); one pass sets `mind2[i] = D²(xᵢ, c₀)`,
+//!   `assign[i] = 0`, and folds ψ = Σ w·mind2 in global row order.
+//! * round t (t = 1..r): **one pass** that (a) refreshes `mind2`/`assign`
+//!   against the batch sampled in round t−1 (empty for t = 1), (b)
+//!   re-folds ψ in global row order, and (c) draws one uniform per row —
+//!   in row order — admitting row i into batch Bₜ iff
+//!   `u·ψ_prev < l·w·mind2[i]`, where ψ_prev is the ψ of the *previous*
+//!   pass. The numerator is therefore fully fresh and the normalizer one
+//!   batch stale; ψ is non-increasing, so inclusion probabilities are a
+//!   conservative lower bound on Bahmani's exact form (and exact for
+//!   t = 1). The lag is what lets a round be a *single* pass out of core.
+//! * final: one pass refreshing against B_r (skipped when empty), then
+//!   candidate masses `cw[j] = Σ_{assign[i]=j} wᵢ` folded in row order,
+//!   then `weighted_kmeanspp(C, cw, k)`.
+//!
+//! **Refresh = the unified engine.** The per-round min-distance refresh
+//! is one [`Assigner::assign_top2`] call against the new batch only —
+//! `Sharded<B>` parallelizes it for free — and the incremental update
+//! `mind2 ← min(mind2, d1)` with strict `<` equals a full index-order
+//! scan over all candidates bit for bit (new candidates have higher
+//! indices, and ties keep the incumbent — the §2.1 tie-break).
+//!
+//! **Counting** (pinned by `rust/tests/init_conformance.rs`): every
+//! batch is scanned against all m rows exactly once, so the total bill
+//! is **m·|C| + |C|·(k−1)** with |C| = 1 + Σₜ|Bₜ| (the recluster is a
+//! weighted K-means++ over the |C| candidates).
+//!
+//! The same driver runs in memory ([`MemParSource`]) and over a chunked
+//! stream (`coordinator::streaming::StreamSeeder`): the [`ParSource`]
+//! seam delivers per-row `(D², argmin)` values in global row order, and
+//! every floating-point fold (ψ, candidate masses) plus every RNG draw
+//! happens in the shared driver — so the two paths are bit-identical by
+//! construction (same centroids, same counter totals, same notes), the
+//! §5.1 merge-determinism rule applied to seeding.
+
+use anyhow::Result;
+
+use crate::metrics::DistanceCounter;
+use crate::util::Rng;
+
+use super::super::assign::{Assigner, SerialAssigner};
+use super::kmeanspp::weighted_kmeanspp;
+use super::seeder::Seeder;
+
+/// K-means|| configuration.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ParCfg {
+    /// Sampling rounds r (Bahmani et al. report r ≈ 5 suffices; each
+    /// round is one pass over the data).
+    pub rounds: usize,
+    /// Oversampling factor l — the expected batch size per round.
+    /// 0 selects the standard l = 2·k.
+    pub oversample: f64,
+}
+
+impl Default for ParCfg {
+    fn default() -> Self {
+        ParCfg { rounds: 5, oversample: 0.0 }
+    }
+}
+
+impl ParCfg {
+    /// The effective l for a given k (resolves the 0 = auto default).
+    pub fn effective_l(&self, k: usize) -> f64 {
+        if self.oversample > 0.0 {
+            self.oversample
+        } else {
+            (2 * k) as f64
+        }
+    }
+}
+
+/// What a K-means|| run did — enough to reproduce its exact distance
+/// bill (DESIGN.md §2.8).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ParStats {
+    /// Total candidates |C| (c₀ plus every round batch).
+    pub candidates: usize,
+    /// Per-round batch sizes |Bₜ| (may be shorter than `rounds` when
+    /// seeding converged early on ψ = 0).
+    pub batches: Vec<usize>,
+}
+
+impl ParStats {
+    /// The closed-form distance bill of the run that produced these
+    /// stats: m·|C| (every batch scanned once against all rows, the
+    /// prime pass included) + |C|·(k−1) (the weighted K-means++
+    /// recluster).
+    pub fn bill(&self, m: usize, k: usize) -> u64 {
+        (m * self.candidates + self.candidates * (k - 1)) as u64
+    }
+}
+
+/// Data access for the K-means|| driver — the seeding twin of
+/// `bwkm::source::RefineSource` (DESIGN.md §2.8): one trait, two
+/// implementations (in-memory below, streamed in
+/// `coordinator::streaming`), one shared driver holding every fold and
+/// every RNG draw.
+pub(crate) trait ParSource {
+    /// Number of rows m.
+    fn rows(&self) -> usize;
+
+    /// Dimension d.
+    fn dim(&self) -> usize;
+
+    /// The row at dataset index `idx` (flat d) — fetches c₀'s
+    /// coordinates (one streamed pass out of core, a copy in memory).
+    fn fetch(&mut self, idx: usize) -> Result<Vec<f64>>;
+
+    /// One pass: for **every** row in **global row order**, call `visit`
+    /// with `(i, row, dnew, jnew)` where `(dnew, jnew)` is the smallest
+    /// squared distance / argmin of the row against `batch` (flat b×d;
+    /// `(∞, 0)` when b = 0), computed through the canonical kernel in
+    /// batch index order with strict `<`
+    /// ([`crate::kmeans::assign::nearest_in`]). Implementations charge
+    /// exactly rows·b to `counter` and perform **no** floating-point
+    /// accumulation of their own — every fold lives in `visit`, on the
+    /// driver (the §5.1 merge-determinism rule).
+    fn pass(
+        &mut self,
+        batch: &[f64],
+        counter: &DistanceCounter,
+        visit: &mut dyn FnMut(usize, &[f64], f64, u32),
+    ) -> Result<()>;
+}
+
+/// The in-memory [`ParSource`]: borrowed flat rows, refresh through any
+/// unified-engine backend (`Sharded<B>` for free parallelism).
+pub(crate) struct MemParSource<'a, B: Assigner> {
+    pub data: &'a [f64],
+    pub d: usize,
+    pub engine: &'a mut B,
+}
+
+impl<B: Assigner> ParSource for MemParSource<'_, B> {
+    fn rows(&self) -> usize {
+        self.data.len() / self.d
+    }
+
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn fetch(&mut self, idx: usize) -> Result<Vec<f64>> {
+        Ok(self.data[idx * self.d..(idx + 1) * self.d].to_vec())
+    }
+
+    fn pass(
+        &mut self,
+        batch: &[f64],
+        counter: &DistanceCounter,
+        visit: &mut dyn FnMut(usize, &[f64], f64, u32),
+    ) -> Result<()> {
+        let d = self.d;
+        if batch.is_empty() {
+            for (i, row) in self.data.chunks_exact(d).enumerate() {
+                visit(i, row, f64::INFINITY, 0);
+            }
+            return Ok(());
+        }
+        // One engine call per round: the blocked/tiled kernel (or any
+        // §2.2 backend) computes every row's nearest new candidate and
+        // charges rows·b — bit-identical to the straight `nearest_in`
+        // scan the streamed workers run (§2.1).
+        let out = self.engine.assign_top2(self.data, d, batch, counter);
+        for (i, row) in self.data.chunks_exact(d).enumerate() {
+            visit(i, row, out.d1[i], out.assign[i]);
+        }
+        Ok(())
+    }
+}
+
+/// The K-means|| driver over any [`ParSource`] — all folds in global row
+/// order, all randomness from `rng`, notes on `counter` (one per round),
+/// so every source produces bit-identical results (DESIGN.md §2.8).
+pub(crate) fn kmeans_par_source<S: ParSource>(
+    src: &mut S,
+    weights: &[f64],
+    k: usize,
+    cfg: &ParCfg,
+    rng: &mut Rng,
+    counter: &DistanceCounter,
+) -> Result<(Vec<f64>, ParStats)> {
+    let m = src.rows();
+    let d = src.dim();
+    assert!(k >= 1 && m >= 1, "kmeans||: need k>=1, n>=1");
+    assert_eq!(weights.len(), m, "kmeans||: one weight per row");
+    let l = cfg.effective_l(k);
+
+    // c₀: weight-proportional draw — the same first draw as weighted
+    // K-means++.
+    let c0 = rng.weighted_index(weights).unwrap_or(0);
+    let mut cands = src.fetch(c0)?;
+    let mut mind2 = vec![f64::INFINITY; m];
+    let mut assign = vec![0u32; m];
+
+    // Prime pass: D² to c₀ (m pairs), ψ folded in global row order.
+    let mut psi = {
+        let mut psi_acc = 0.0f64;
+        src.pass(&cands, counter, &mut |i, _row, dnew, jnew| {
+            if dnew < mind2[i] {
+                mind2[i] = dnew;
+                assign[i] = jnew;
+            }
+            psi_acc += weights[i] * mind2[i];
+        })?;
+        psi_acc
+    };
+    counter.note(format!("kmpar[prime]: cands=1 psi={psi:e}"));
+
+    let mut stats = ParStats::default();
+    // The candidate range the next pass must refresh against (B_{t−1};
+    // empty before round 1 — the prime pass already covered c₀).
+    let mut pend = 0usize..0usize;
+    for t in 1..=cfg.rounds {
+        if psi <= 0.0 {
+            // Every row coincides with a candidate: no further round can
+            // sample anything (and refreshing B_{t−1} cannot lower a
+            // zero min-distance), so seeding has converged.
+            counter.note(format!("kmpar[{t}]: psi=0, converged"));
+            break;
+        }
+        let psi_prev = psi;
+        let base = pend.start as u32;
+        let mut next: Vec<f64> = Vec::new();
+        let mut psi_acc = 0.0f64;
+        src.pass(&cands[pend.start * d..pend.end * d], counter, &mut |i, row, dnew, jnew| {
+            if dnew < mind2[i] {
+                mind2[i] = dnew;
+                assign[i] = base + jnew;
+            }
+            psi_acc += weights[i] * mind2[i];
+            let u = rng.f64();
+            if u * psi_prev < l * weights[i] * mind2[i] {
+                next.extend_from_slice(row);
+            }
+        })?;
+        psi = psi_acc;
+        let b = next.len() / d;
+        let start = cands.len() / d;
+        cands.extend_from_slice(&next);
+        pend = start..start + b;
+        stats.batches.push(b);
+        counter.note(format!("kmpar[{t}]: batch={b} cands={} psi={psi:e}", start + b));
+    }
+    // Final refresh against the last round's batch (skipped when empty:
+    // a no-batch pass could neither move an assignment nor a distance).
+    if !pend.is_empty() {
+        let base = pend.start as u32;
+        src.pass(&cands[pend.start * d..pend.end * d], counter, &mut |i, _row, dnew, jnew| {
+            if dnew < mind2[i] {
+                mind2[i] = dnew;
+                assign[i] = base + jnew;
+            }
+        })?;
+    }
+
+    // Candidate masses: each row's weight accrues to its nearest
+    // candidate, folded in global row order.
+    let c = cands.len() / d;
+    let mut cw = vec![0.0f64; c];
+    for i in 0..m {
+        cw[assign[i] as usize] += weights[i];
+    }
+    // Recluster the weighted candidate set down to k (|C|·(k−1) pairs).
+    let centroids = weighted_kmeanspp(&cands, &cw, d, k, rng, counter);
+    stats.candidates = c;
+    counter.note(format!("kmpar[final]: cands={c} k={k}"));
+    Ok((centroids, stats))
+}
+
+/// K-means|| as a [`Seeder`], refreshing through any unified-engine
+/// backend `B` (default serial; `Sharded<B>` parallelizes every round's
+/// refresh with bit-identical output — DESIGN.md §2.5).
+#[derive(Clone, Debug, Default)]
+pub struct KmeansParSeeder<B: Assigner = SerialAssigner> {
+    cfg: ParCfg,
+    engine: B,
+    stats: ParStats,
+}
+
+impl KmeansParSeeder<SerialAssigner> {
+    pub fn new(cfg: ParCfg) -> Self {
+        KmeansParSeeder { cfg, engine: SerialAssigner, stats: ParStats::default() }
+    }
+}
+
+impl<B: Assigner> KmeansParSeeder<B> {
+    /// Seed through a pre-configured engine backend.
+    pub fn with_engine(cfg: ParCfg, engine: B) -> Self {
+        KmeansParSeeder { cfg, engine, stats: ParStats::default() }
+    }
+
+    /// What the most recent [`Seeder::seed`] call did — the conformance
+    /// suite asserts `counter delta == stats.bill(m, k)`.
+    pub fn last_stats(&self) -> &ParStats {
+        &self.stats
+    }
+}
+
+impl<B: Assigner> Seeder for KmeansParSeeder<B> {
+    fn name(&self) -> &'static str {
+        "par"
+    }
+
+    fn seed(
+        &mut self,
+        data: &[f64],
+        weights: &[f64],
+        d: usize,
+        k: usize,
+        rng: &mut Rng,
+        counter: &DistanceCounter,
+    ) -> Vec<f64> {
+        let cfg = self.cfg;
+        let mut src = MemParSource { data, d, engine: &mut self.engine };
+        let (centroids, stats) = kmeans_par_source(&mut src, weights, k, &cfg, rng, counter)
+            .expect("the in-memory source is infallible");
+        self.stats = stats;
+        centroids
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kmeans::assign::Sharded;
+    use crate::metrics::kmeans_error;
+    use crate::util::prop;
+
+    fn unit(m: usize) -> Vec<f64> {
+        vec![1.0; m]
+    }
+
+    #[test]
+    fn counter_matches_closed_form() {
+        let mut g = prop::Gen { rng: Rng::new(51), case: 0 };
+        let data = g.blobs(400, 2, 4, 0.5);
+        let c = DistanceCounter::new();
+        let mut s = KmeansParSeeder::new(ParCfg::default());
+        let cents = s.seed(&data, &unit(400), 2, 4, &mut Rng::new(9), &c);
+        assert_eq!(cents.len(), 4 * 2);
+        let stats = s.last_stats();
+        assert!(stats.candidates >= 1);
+        assert_eq!(c.get(), stats.bill(400, 4), "bill must be m·|C| + |C|·(k−1)");
+    }
+
+    #[test]
+    fn prop_sharded_engine_bit_identical() {
+        // Sharded<Serial> refresh == serial refresh: same centroids, same
+        // counts, same notes, for every thread count (DESIGN.md §2.5).
+        prop::check("kmpar-sharded", 8, |g| {
+            let m = g.int(10, 300);
+            let d = g.int(1, 5);
+            let k = g.int(1, 6);
+            let data = g.cloud(m, d, 3.0);
+            let w: Vec<f64> = (0..m).map(|_| g.int(1, 7) as f64).collect();
+            let cfg = ParCfg { rounds: g.int(1, 4), oversample: 0.0 };
+            let c1 = DistanceCounter::new();
+            let a = KmeansParSeeder::new(cfg).seed(&data, &w, d, k, &mut Rng::new(77), &c1);
+            for threads in [2usize, 5] {
+                let c2 = DistanceCounter::new();
+                let mut s = KmeansParSeeder::with_engine(
+                    cfg,
+                    Sharded::<SerialAssigner>::new(threads),
+                );
+                let b = s.seed(&data, &w, d, k, &mut Rng::new(77), &c2);
+                assert_eq!(a, b);
+                assert_eq!(c1.get(), c2.get());
+                assert_eq!(c1.notes(), c2.notes());
+            }
+        });
+    }
+
+    #[test]
+    fn seeds_are_dataset_rows() {
+        let mut g = prop::Gen { rng: Rng::new(52), case: 0 };
+        let data = g.cloud(120, 3, 2.0);
+        let c = DistanceCounter::new();
+        let cents = KmeansParSeeder::new(ParCfg::default())
+            .seed(&data, &unit(120), 3, 5, &mut Rng::new(4), &c);
+        for cent in cents.chunks(3) {
+            assert!(data.chunks(3).any(|r| r == cent), "{cent:?}");
+        }
+    }
+
+    #[test]
+    fn degenerate_identical_points() {
+        let data = vec![2.5; 12]; // 12 identical rows, d=1
+        let c = DistanceCounter::new();
+        let mut s = KmeansParSeeder::new(ParCfg::default());
+        let cents = s.seed(&data, &unit(12), 1, 3, &mut Rng::new(6), &c);
+        assert_eq!(cents, vec![2.5; 3]);
+        // ψ = 0 after the prime pass: rounds sample nothing, so |C| = 1
+        // and the bill collapses to m + (k−1).
+        assert_eq!(s.last_stats().candidates, 1);
+        assert_eq!(c.get(), (12 + 2) as u64);
+    }
+
+    #[test]
+    fn k1_skips_the_recluster_bill() {
+        let mut g = prop::Gen { rng: Rng::new(53), case: 0 };
+        let data = g.cloud(80, 2, 2.0);
+        let c = DistanceCounter::new();
+        let mut s = KmeansParSeeder::new(ParCfg::default());
+        let cents = s.seed(&data, &unit(80), 2, 1, &mut Rng::new(8), &c);
+        assert_eq!(cents.len(), 2);
+        assert_eq!(c.get(), s.last_stats().bill(80, 1));
+    }
+
+    #[test]
+    fn quality_close_to_kmeanspp_on_blobs() {
+        // Seeding-error sanity on separated blobs, averaged over seeds.
+        let mut g = prop::Gen { rng: Rng::new(54), case: 0 };
+        let data = g.blobs(600, 2, 4, 0.3);
+        let (mut e_par, mut e_pp) = (0.0, 0.0);
+        for seed in 0..10 {
+            let c = DistanceCounter::new();
+            let cp = KmeansParSeeder::new(ParCfg::default())
+                .seed(&data, &unit(600), 2, 4, &mut Rng::new(seed), &c);
+            e_par += kmeans_error(&data, 2, &cp, &c);
+            let ck = super::super::kmeanspp::kmeanspp(&data, 2, 4, &mut Rng::new(seed), &c);
+            e_pp += kmeans_error(&data, 2, &ck, &c);
+        }
+        assert!(e_par < e_pp * 2.0, "km|| err {e_par} vs km++ {e_pp}");
+    }
+}

@@ -14,6 +14,10 @@ use crate::metrics::DistanceCounter;
 use crate::util::Rng;
 
 /// Plain K-means++ over `data`. Returns flat k×d centroids.
+///
+/// Legacy surface, deprecated in favor of the
+/// [`Seeder`](super::Seeder) trait: [`super::KmppSeeder`] with unit
+/// weights is bit-identical (DESIGN.md §2.8).
 pub fn kmeanspp(
     data: &[f64],
     d: usize,
@@ -26,6 +30,8 @@ pub fn kmeanspp(
 }
 
 /// Weighted K-means++: D² sampling with probabilities ∝ w(x)·D²(x).
+/// (The canonical implementation behind [`super::KmppSeeder`] and the
+/// K-means|| recluster step — DESIGN.md §2.8.)
 pub fn weighted_kmeanspp(
     data: &[f64],
     weights: &[f64],

@@ -1,12 +1,32 @@
-//! Seeding strategies (paper §1.2.1): Forgy, K-means++ (plain and
-//! weighted — the weighted form seeds BWKM's runs over representatives,
-//! Alg. 4 / Alg. 5 Step 1), and AFK-MC² (the MCMC approximation of
-//! K-means++, the paper's "KMC2" baseline).
+//! The seeding subsystem (paper §1.2.1, DESIGN.md §2.8): one [`Seeder`]
+//! trait — k centroids from weighted rows, exact accounting, seeded RNG —
+//! with four backends:
+//!
+//! * **Forgy** [14]: K instances uniformly at random ([`ForgySeeder`]);
+//! * **K-means++** [2], plain and weighted — the weighted form seeds
+//!   BWKM's runs over representatives, Alg. 4 / Alg. 5 Step 1
+//!   ([`KmppSeeder`]);
+//! * **AFK-MC²** [3] (the paper's "KMC2" baseline), the MCMC
+//!   approximation of K-means++ ([`Kmc2Seeder`]);
+//! * **K-means||** (Bahmani et al.): r rounds of l-oversampled D²
+//!   sampling with the per-round refresh on the unified assignment
+//!   engine, then a weighted-K-means++ recluster of the candidate set
+//!   ([`KmeansParSeeder`]; streamed twin in
+//!   `coordinator::streaming::StreamSeeder`).
+//!
+//! The historical free functions ([`forgy`], [`kmeanspp`],
+//! [`weighted_kmeanspp`], [`kmc2`]) are kept as the legacy surface; the
+//! trait backends are bit-identical to them and are what the rest of the
+//! crate (BWKM, RPKM, CLI `init=` policy) now routes through.
 
 pub mod forgy;
 pub mod kmc2;
+pub mod kmeans_par;
 pub mod kmeanspp;
+pub mod seeder;
 
 pub use forgy::forgy;
 pub use kmc2::{kmc2, Kmc2Cfg};
+pub use kmeans_par::{KmeansParSeeder, ParCfg, ParStats};
 pub use kmeanspp::{kmeanspp, weighted_kmeanspp};
+pub use seeder::{ForgySeeder, Kmc2Seeder, KmppSeeder, SeedMethod, SeedPolicy, Seeder};

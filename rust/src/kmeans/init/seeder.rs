@@ -1,0 +1,268 @@
+//! The `Seeder` trait — the seeding subsystem's one entry shape
+//! (DESIGN.md §2.8).
+//!
+//! Every initialization method in the crate seeds k centroids from a
+//! *weighted* row set: the raw dataset (unit weights), a partition's
+//! representatives (weights = block cardinalities — BWKM's Alg. 4 /
+//! Alg. 5 Step 1 shape), or a grid level's occupied cells (RPKM).
+//! Historically the three methods were free functions with ad-hoc
+//! signatures; the trait names the common contract so BWKM, RPKM, the
+//! CLI's seeding policy and the out-of-core coordinator can swap methods
+//! without knowing them:
+//!
+//! * **Inputs.** Flat m×d `data`, per-row `weights` (length m, positive),
+//!   a seeded [`Rng`] (the *only* randomness source — identical seeds
+//!   give identical centroids), and the caller's [`DistanceCounter`].
+//! * **Accounting.** Exact and closed-form per backend (DESIGN.md §2.4 /
+//!   §2.8): Forgy 0, K-means++ m·(k−1), AFK-MC²
+//!   m + chain·k·(k−1)/2 for k ≥ 2 (0 for k = 1 — the proposal pass is
+//!   skipped), K-means|| m·|C| + |C|·(k−1).
+//!   `rust/tests/init_conformance.rs` pins every formula with `==`.
+//! * **Output.** Flat k×d centroids; every centroid is (a copy of) an
+//!   input row.
+//!
+//! Weight-blind baselines (Forgy, AFK-MC²) are defined by their papers on
+//! unweighted instances; their backends ignore `weights` — documented per
+//! backend — so that on unit weights every backend is **bit-identical**
+//! to the legacy free function it wraps.
+
+use anyhow::{bail, Result};
+
+use crate::metrics::DistanceCounter;
+use crate::util::Rng;
+
+use super::forgy::forgy;
+use super::kmc2::{kmc2, Kmc2Cfg};
+use super::kmeans_par::{KmeansParSeeder, ParCfg};
+use super::kmeanspp::weighted_kmeanspp;
+
+/// A seeding backend: k centroids from weighted rows, exact distance
+/// accounting, all randomness from the caller's [`Rng`] (DESIGN.md §2.8).
+pub trait Seeder {
+    /// The method's CLI/report name (`forgy`, `pp`, `kmc2`, `par`).
+    fn name(&self) -> &'static str;
+
+    /// Seed `k` centroids (flat k×d) from the m×d `data` rows carrying
+    /// `weights`. Must draw randomness only from `rng` and tick `counter`
+    /// by the backend's documented closed-form bill.
+    fn seed(
+        &mut self,
+        data: &[f64],
+        weights: &[f64],
+        d: usize,
+        k: usize,
+        rng: &mut Rng,
+        counter: &DistanceCounter,
+    ) -> Vec<f64>;
+}
+
+/// Forgy [14] as a [`Seeder`]: k distinct rows uniformly at random.
+/// Weight-blind (the paper's baseline is defined on instances, not
+/// masses) and distance-free — bit-identical to [`forgy`] whenever
+/// k ≤ m. The k > m degenerate (unreachable through the free function,
+/// which panics) takes every row once and fills the remainder with
+/// weight-proportional draws with replacement — the same fallback rule
+/// weighted K-means++ uses when it runs out of distinct mass.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ForgySeeder;
+
+impl Seeder for ForgySeeder {
+    fn name(&self) -> &'static str {
+        "forgy"
+    }
+
+    fn seed(
+        &mut self,
+        data: &[f64],
+        weights: &[f64],
+        d: usize,
+        k: usize,
+        rng: &mut Rng,
+        _counter: &DistanceCounter,
+    ) -> Vec<f64> {
+        let m = weights.len();
+        if k <= m {
+            return forgy(data, d, k, rng);
+        }
+        let mut out = forgy(data, d, m, rng);
+        for _ in m..k {
+            let i = rng.weighted_index(weights).unwrap_or(0);
+            out.extend_from_slice(&data[i * d..(i + 1) * d]);
+        }
+        out
+    }
+}
+
+/// Weighted K-means++ [2] as a [`Seeder`] — the D² sampler BWKM's Alg. 4
+/// is pinned to. Bit-identical to [`weighted_kmeanspp`] (and to
+/// [`super::kmeanspp`] on unit weights). Counts exactly m·(k−1).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct KmppSeeder;
+
+impl Seeder for KmppSeeder {
+    fn name(&self) -> &'static str {
+        "pp"
+    }
+
+    fn seed(
+        &mut self,
+        data: &[f64],
+        weights: &[f64],
+        d: usize,
+        k: usize,
+        rng: &mut Rng,
+        counter: &DistanceCounter,
+    ) -> Vec<f64> {
+        weighted_kmeanspp(data, weights, d, k, rng, counter)
+    }
+}
+
+/// AFK-MC² [3] as a [`Seeder`]. Weight-blind (the MCMC proposal is
+/// defined on instances); bit-identical to [`kmc2`] with the same
+/// [`Kmc2Cfg`]. Counts exactly m + chain·k·(k−1)/2 for k ≥ 2, and 0 for
+/// k = 1 (the single centroid is a uniform draw — [`kmc2`] returns
+/// before the proposal pass).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Kmc2Seeder {
+    pub cfg: Kmc2Cfg,
+}
+
+impl Seeder for Kmc2Seeder {
+    fn name(&self) -> &'static str {
+        "kmc2"
+    }
+
+    fn seed(
+        &mut self,
+        data: &[f64],
+        _weights: &[f64],
+        d: usize,
+        k: usize,
+        rng: &mut Rng,
+        counter: &DistanceCounter,
+    ) -> Vec<f64> {
+        kmc2(data, d, k, &self.cfg, rng, counter)
+    }
+}
+
+/// Which [`Seeder`] backend a run uses (the CLI's `init=` key).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SeedMethod {
+    Forgy,
+    /// (Weighted) K-means++ — BWKM's Alg. 4 default.
+    Kmpp,
+    /// AFK-MC² (the paper's KMC2 baseline).
+    Kmc2,
+    /// Scalable K-means++ (K-means||, Bahmani et al.) — DESIGN.md §2.8.
+    Par,
+}
+
+impl SeedMethod {
+    /// Parse a CLI/config `init=` value.
+    pub fn parse(s: &str) -> Result<SeedMethod> {
+        Ok(match s.trim().to_ascii_lowercase().as_str() {
+            "forgy" => SeedMethod::Forgy,
+            "pp" | "kmpp" | "km++" | "kmeans++" => SeedMethod::Kmpp,
+            "kmc2" | "afkmc2" => SeedMethod::Kmc2,
+            "par" | "kmeans_par" | "km||" | "kmeanspar" => SeedMethod::Par,
+            other => bail!("unknown init method `{other}` (expected forgy|pp|kmc2|par)"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SeedMethod::Forgy => "forgy",
+            SeedMethod::Kmpp => "pp",
+            SeedMethod::Kmc2 => "kmc2",
+            SeedMethod::Par => "par",
+        }
+    }
+}
+
+/// A run's seeding policy (DESIGN.md §2.8): the backend plus its knobs,
+/// carried by `BwkmCfg`/`RpkmCfg` and populated from the `init`,
+/// `oversample_l` and `init_rounds` config keys. The default —
+/// weighted K-means++ — reproduces the pre-policy pipeline bit for bit.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SeedPolicy {
+    pub method: SeedMethod,
+    /// K-means|| oversampling factor l (0 = auto: 2·k).
+    pub oversample_l: f64,
+    /// K-means|| sampling rounds r.
+    pub init_rounds: usize,
+    /// AFK-MC² chain length.
+    pub chain_length: usize,
+}
+
+impl Default for SeedPolicy {
+    fn default() -> Self {
+        SeedPolicy {
+            method: SeedMethod::Kmpp,
+            oversample_l: 0.0,
+            init_rounds: ParCfg::default().rounds,
+            chain_length: Kmc2Cfg::default().chain_length,
+        }
+    }
+}
+
+impl SeedPolicy {
+    /// A policy running `method` with default knobs.
+    pub fn of(method: SeedMethod) -> SeedPolicy {
+        SeedPolicy { method, ..SeedPolicy::default() }
+    }
+
+    /// The K-means|| configuration this policy encodes.
+    pub fn par_cfg(&self) -> ParCfg {
+        ParCfg { rounds: self.init_rounds, oversample: self.oversample_l }
+    }
+
+    /// Instantiate the backend (serial engine; parallel seeding goes
+    /// through [`KmeansParSeeder::with_engine`] and a `Sharded` backend).
+    pub fn seeder(&self) -> Box<dyn Seeder> {
+        match self.method {
+            SeedMethod::Forgy => Box::new(ForgySeeder),
+            SeedMethod::Kmpp => Box::new(KmppSeeder),
+            SeedMethod::Kmc2 => {
+                Box::new(Kmc2Seeder { cfg: Kmc2Cfg { chain_length: self.chain_length } })
+            }
+            SeedMethod::Par => Box::new(KmeansParSeeder::new(self.par_cfg())),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_round_trips_and_rejects() {
+        for m in [SeedMethod::Forgy, SeedMethod::Kmpp, SeedMethod::Kmc2, SeedMethod::Par] {
+            assert_eq!(SeedMethod::parse(m.name()).unwrap(), m);
+        }
+        assert_eq!(SeedMethod::parse("KM++").unwrap(), SeedMethod::Kmpp);
+        assert_eq!(SeedMethod::parse("km||").unwrap(), SeedMethod::Par);
+        assert!(SeedMethod::parse("quantum").is_err());
+    }
+
+    #[test]
+    fn default_policy_is_kmpp() {
+        // The pre-policy pipeline seeded with weighted K-means++; the
+        // default must keep that bit-compatible.
+        assert_eq!(SeedPolicy::default().method, SeedMethod::Kmpp);
+    }
+
+    #[test]
+    fn forgy_seeder_pads_past_row_count() {
+        let data = [0.0, 10.0, 20.0]; // 3 rows, d=1
+        let w = [1.0, 1.0, 1.0];
+        let c = DistanceCounter::new();
+        let out = ForgySeeder.seed(&data, &w, 1, 5, &mut Rng::new(3), &c);
+        assert_eq!(out.len(), 5);
+        assert!(out.iter().all(|v| data.contains(v)));
+        // The first 3 are distinct rows.
+        let mut head = out[..3].to_vec();
+        head.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(head, data.to_vec());
+        assert_eq!(c.get(), 0, "forgy computes no distances");
+    }
+}

@@ -24,6 +24,7 @@ pub use assign::{
     Assigner, AssignOut, AutoAssigner, AutoChoice, BoundedAssigner, BoundedStats,
     NormPrunedAssigner, SerialAssigner, Sharded, ShardedAssigner,
 };
+pub use init::{KmeansParSeeder, ParCfg, SeedMethod, SeedPolicy, Seeder};
 pub use elkan::{elkan_weighted_lloyd, ElkanOutcome};
 pub use lloyd::{lloyd, LloydCfg, LloydOutcome};
 pub use minibatch::{minibatch_kmeans, MiniBatchCfg};

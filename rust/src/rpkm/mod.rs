@@ -11,7 +11,7 @@ use std::collections::HashMap;
 
 use crate::data::Dataset;
 use crate::geometry::BBox;
-use crate::kmeans::init::forgy;
+use crate::kmeans::init::{SeedMethod, SeedPolicy, Seeder as _};
 use crate::kmeans::{weighted_lloyd, WLloydCfg};
 use crate::metrics::{kmeans_error, Budget, DistanceCounter};
 use crate::util::Rng;
@@ -59,6 +59,11 @@ pub struct RpkmCfg {
     pub max_levels: u32,
     pub wl: WLloydCfg,
     pub budget: Budget,
+    /// First-level seeding policy over the grid representatives
+    /// (DESIGN.md §2.8). [8] seeds with Forgy, so that is the default
+    /// (bit-identical to the pre-policy behavior); later levels always
+    /// warm-start from the previous level's centroids.
+    pub seed: SeedPolicy,
     /// Trace E^D after every level (uncounted instrumentation).
     pub eval_full_error: bool,
 }
@@ -69,6 +74,7 @@ impl Default for RpkmCfg {
             max_levels: 6,
             wl: WLloydCfg::default(),
             budget: Budget::unlimited(),
+            seed: SeedPolicy::of(SeedMethod::Forgy),
             eval_full_error: false,
         }
     }
@@ -111,8 +117,9 @@ pub fn grid_rpkm(
         let m = weights.len();
         let init = match centroids.take() {
             Some(c) => c,
-            // [8] seeds the first level with Forgy over the representatives.
-            None => forgy(&reps, data.d, k.min(m), rng),
+            // First level: the configured §2.8 policy over the grid
+            // representatives ([8]'s choice — Forgy — is the default).
+            None => cfg.seed.seeder().seed(&reps, &weights, data.d, k.min(m), rng, counter),
         };
         let mut wl_cfg = cfg.wl;
         wl_cfg.budget = cfg.budget;

@@ -1,0 +1,343 @@
+//! Conformance suite for the seeding subsystem (DESIGN.md §2.8):
+//!
+//! * every `Seeder` trait backend is **bit-identical** (`==`, no
+//!   tolerances) to the legacy free function it wraps, at identical
+//!   counter totals;
+//! * every seeder's distance count is pinned by its exact closed-form
+//!   bill — Forgy 0, K-means++ m·(k−1), AFK-MC² m + chain·k·(k−1)/2,
+//!   K-means|| m·|C| + |C|·(k−1);
+//! * K-means|| is bit-identical across engines (serial vs `Sharded<B>`
+//!   refresh) and across the in-memory / out-of-core divide: the
+//!   streamed `StreamSeeder` equals the in-memory `KmeansParSeeder` —
+//!   centroids, counter totals, counter notes — over the chunk-size ×
+//!   worker-count grid;
+//! * degenerates hold: k = 1, k > distinct points, identical points,
+//!   k > n (the ForgySeeder pad);
+//! * the seeding policy flows through BWKM identically in memory and out
+//!   of core.
+
+use bwkm::bwkm::BwkmCfg;
+use bwkm::coordinator::{StreamSeeder, StreamingBwkm};
+use bwkm::data::Dataset;
+use bwkm::kmeans::init::{
+    forgy, kmc2, kmeanspp, weighted_kmeanspp, ForgySeeder, Kmc2Cfg, Kmc2Seeder, KmeansParSeeder,
+    KmppSeeder, ParCfg, SeedMethod, SeedPolicy, Seeder,
+};
+use bwkm::kmeans::{SerialAssigner, Sharded};
+use bwkm::metrics::DistanceCounter;
+use bwkm::util::prop;
+use bwkm::util::Rng;
+
+fn counter() -> DistanceCounter {
+    DistanceCounter::new()
+}
+
+fn unit(m: usize) -> Vec<f64> {
+    vec![1.0; m]
+}
+
+fn chunked(data: &[f64], d: usize, rows_per_chunk: usize) -> Vec<anyhow::Result<Vec<f64>>> {
+    data.chunks(rows_per_chunk * d).map(|c| Ok(c.to_vec())).collect()
+}
+
+fn vec_opener(
+    data: Vec<f64>,
+    d: usize,
+    rows_per_chunk: usize,
+) -> impl FnMut() -> anyhow::Result<Vec<anyhow::Result<Vec<f64>>>> {
+    move || Ok(chunked(&data, d, rows_per_chunk))
+}
+
+// ---------------------------------------------------------------------------
+// Trait backends == legacy free functions, bit for bit.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_trait_backends_match_free_functions() {
+    prop::check("seeder-vs-free", 25, |g| {
+        let m = g.int(2, 200);
+        let d = g.int(1, 6);
+        let k = g.int(1, m.min(8));
+        let data = g.cloud(m, d, 2.0);
+        let weights: Vec<f64> = (0..m).map(|_| g.int(1, 9) as f64).collect();
+        let seed = g.rng.next_u64();
+
+        // Forgy (weight-blind, distance-free).
+        let c1 = counter();
+        let a = ForgySeeder.seed(&data, &weights, d, k, &mut Rng::new(seed), &c1);
+        let b = forgy(&data, d, k, &mut Rng::new(seed));
+        assert_eq!(a, b);
+        assert_eq!(c1.get(), 0);
+
+        // Weighted K-means++.
+        let c1 = counter();
+        let a = KmppSeeder.seed(&data, &weights, d, k, &mut Rng::new(seed), &c1);
+        let c2 = counter();
+        let b = weighted_kmeanspp(&data, &weights, d, k, &mut Rng::new(seed), &c2);
+        assert_eq!(a, b);
+        assert_eq!(c1.get(), c2.get());
+
+        // Plain K-means++ == the trait backend on unit weights.
+        let c1 = counter();
+        let a = KmppSeeder.seed(&data, &unit(m), d, k, &mut Rng::new(seed), &c1);
+        let c2 = counter();
+        let b = kmeanspp(&data, d, k, &mut Rng::new(seed), &c2);
+        assert_eq!(a, b);
+        assert_eq!(c1.get(), c2.get());
+
+        // AFK-MC² (weight-blind).
+        let cfg = Kmc2Cfg { chain_length: g.int(2, 40) };
+        let c1 = counter();
+        let a = Kmc2Seeder { cfg }.seed(&data, &weights, d, k, &mut Rng::new(seed), &c1);
+        let c2 = counter();
+        let b = kmc2(&data, d, k, &cfg, &mut Rng::new(seed), &c2);
+        assert_eq!(a, b);
+        assert_eq!(c1.get(), c2.get());
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Exact counter pins (DESIGN.md §2.8's closed forms).
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_counter_closed_forms() {
+    prop::check("seeder-bills", 20, |g| {
+        let m = g.int(2, 150);
+        let d = g.int(1, 5);
+        let k = g.int(1, m.min(7));
+        let data = g.cloud(m, d, 2.0);
+        let w = unit(m);
+        let seed = g.rng.next_u64();
+
+        // Forgy: 0 — selection is sampling, never distance work.
+        let c = counter();
+        let _ = ForgySeeder.seed(&data, &w, d, k, &mut Rng::new(seed), &c);
+        assert_eq!(c.get(), 0);
+
+        // K-means++: each added centroid refreshes the min-distance
+        // array with one new distance per row → m·(k−1).
+        let c = counter();
+        let _ = KmppSeeder.seed(&data, &w, d, k, &mut Rng::new(seed), &c);
+        assert_eq!(c.get(), (m * (k - 1)) as u64);
+
+        // AFK-MC²: one proposal pass (m) plus, per added centroid
+        // j = 1..k−1, a chain of `chain` states costing |C| = j each →
+        // m + chain·k·(k−1)/2 for k ≥ 2; for k = 1 the documented bill
+        // is 0 (the single centroid is a uniform draw — the proposal
+        // pass is skipped).
+        let chain = g.int(2, 30);
+        let c = counter();
+        let _ = Kmc2Seeder { cfg: Kmc2Cfg { chain_length: chain } }
+            .seed(&data, &w, d, k, &mut Rng::new(seed), &c);
+        if k == 1 {
+            assert_eq!(c.get(), 0);
+        } else {
+            assert_eq!(c.get(), (m + chain * (k * (k - 1)) / 2) as u64);
+        }
+
+        // K-means||: every candidate batch (the c₀ prime included) is
+        // scanned against all m rows exactly once, and the recluster is
+        // a weighted K-means++ over the |C| candidates →
+        // m·|C| + |C|·(k−1).
+        let cfg = ParCfg { rounds: g.int(1, 5), oversample: g.f64(0.5, 8.0) };
+        let c = counter();
+        let mut s = KmeansParSeeder::new(cfg);
+        let cents = s.seed(&data, &w, d, k, &mut Rng::new(seed), &c);
+        assert_eq!(cents.len(), k * d);
+        let stats = s.last_stats().clone();
+        assert_eq!(stats.candidates, 1 + stats.batches.iter().sum::<usize>());
+        assert_eq!(c.get(), stats.bill(m, k), "kmeans|| bill must be m·|C| + |C|·(k−1)");
+    });
+}
+
+// ---------------------------------------------------------------------------
+// K-means||: sharded and streamed == serial, bit for bit.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_kmeans_par_sharded_and_streamed_bit_identical() {
+    prop::check("kmpar-grid", 8, |g| {
+        let m = g.int(20, 300);
+        let d = [2usize, 3, 5, 17][g.int(0, 3)];
+        let k = g.int(1, 6);
+        let data = g.cloud(m, d, 3.0);
+        let cfg = ParCfg { rounds: g.int(1, 4), oversample: 0.0 };
+        let seed = g.rng.next_u64();
+
+        // Reference: serial in-memory seeder on unit weights.
+        let c_ref = counter();
+        let mut s_ref = KmeansParSeeder::new(cfg);
+        let reference = s_ref.seed(&data, &unit(m), d, k, &mut Rng::new(seed), &c_ref);
+
+        // Sharded engine refresh.
+        for threads in [2usize, 8] {
+            let c = counter();
+            let mut s = KmeansParSeeder::with_engine(cfg, Sharded::<SerialAssigner>::new(threads));
+            let out = s.seed(&data, &unit(m), d, k, &mut Rng::new(seed), &c);
+            assert_eq!(out, reference, "threads={threads}");
+            assert_eq!(c.get(), c_ref.get());
+            assert_eq!(c.notes(), c_ref.notes());
+        }
+
+        // Streamed: chunk sizes {1, 7, n} × workers {1, 2, 8}.
+        for chunk in [1usize, 7, m] {
+            for threads in [1usize, 2, 8] {
+                let c = counter();
+                let mut sb =
+                    StreamSeeder::new(vec_opener(data.clone(), d, chunk), d).with_threads(threads);
+                let out = sb.kmeans_par(k, &cfg, &mut Rng::new(seed), &c).unwrap();
+                assert_eq!(out.centroids, reference, "chunk={chunk} threads={threads}");
+                assert_eq!(out.rows, m);
+                assert_eq!(out.candidates, s_ref.last_stats().candidates);
+                assert_eq!(c.get(), c_ref.get(), "counter totals must match");
+                assert_eq!(c.notes(), c_ref.notes(), "round notes must match");
+            }
+        }
+    });
+}
+
+#[test]
+fn streamed_seeder_rejects_bad_streams() {
+    let c = counter();
+    let mut empty = StreamSeeder::new(|| Ok(Vec::<anyhow::Result<Vec<f64>>>::new()), 2);
+    assert!(empty.kmeans_par(2, &ParCfg::default(), &mut Rng::new(1), &c).is_err());
+    // Ragged chunk (5 values, d=2) is a clean error, never a silent drop.
+    let mut ragged = StreamSeeder::new(|| Ok(vec![Ok(vec![0.0; 5])]), 2);
+    assert!(ragged.kmeans_par(1, &ParCfg::default(), &mut Rng::new(1), &c).is_err());
+    // A source that shrinks between passes is detected.
+    let data: Vec<f64> = (0..40).map(|x| x as f64).collect();
+    let mut opens = 0usize;
+    let base = data.clone();
+    let mut shrinking = StreamSeeder::new(
+        move || -> anyhow::Result<Vec<anyhow::Result<Vec<f64>>>> {
+            opens += 1;
+            let take = if opens == 1 { 40 } else { 38 };
+            Ok(base[..take].chunks(10).map(|c| Ok(c.to_vec())).collect())
+        },
+        2,
+    );
+    assert!(shrinking.kmeans_par(2, &ParCfg::default(), &mut Rng::new(1), &c).is_err());
+    // A source that *grows* between passes must be a clean Err too (the
+    // driver's fold state is sized to the count pass), never a panic.
+    // Growth starts after the count and c₀-fetch passes, so it is the
+    // prime pass's own fold guard that has to catch it.
+    let mut opens = 0usize;
+    let base = data.clone();
+    let mut growing = StreamSeeder::new(
+        move || -> anyhow::Result<Vec<anyhow::Result<Vec<f64>>>> {
+            opens += 1;
+            let mut rows = base.clone();
+            if opens > 2 {
+                rows.extend_from_slice(&[99.0, 99.0, 98.0, 98.0]);
+            }
+            Ok(rows.chunks(10).map(|c| Ok(c.to_vec())).collect())
+        },
+        2,
+    );
+    assert!(growing.kmeans_par(2, &ParCfg::default(), &mut Rng::new(1), &c).is_err());
+    // Non-finite values are a loud error at the count pass (a NaN would
+    // otherwise silently collapse every round's sampling).
+    let mut nan = data.clone();
+    nan[13] = f64::NAN;
+    let mut poisoned = StreamSeeder::new(vec_opener(nan, 2, 10), 2);
+    assert!(poisoned.kmeans_par(2, &ParCfg::default(), &mut Rng::new(1), &c).is_err());
+}
+
+// ---------------------------------------------------------------------------
+// Degenerates.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn degenerate_cases_hold_for_every_backend() {
+    let policies = [SeedMethod::Forgy, SeedMethod::Kmpp, SeedMethod::Kmc2, SeedMethod::Par];
+
+    // k = 1: every backend returns one row of the data.
+    let mut g = prop::Gen { rng: Rng::new(61), case: 0 };
+    let data = g.cloud(30, 2, 2.0);
+    for method in policies {
+        let c = counter();
+        let cents =
+            SeedPolicy::of(method).seeder().seed(&data, &unit(30), 2, 1, &mut Rng::new(5), &c);
+        assert_eq!(cents.len(), 2, "{method:?}");
+        assert!(data.chunks(2).any(|r| r == &cents[..]), "{method:?}");
+    }
+
+    // Identical points, k > distinct points: k copies of the point.
+    let flat = vec![7.5; 20];
+    for method in policies {
+        let c = counter();
+        let cents =
+            SeedPolicy::of(method).seeder().seed(&flat, &unit(20), 1, 4, &mut Rng::new(6), &c);
+        assert_eq!(cents, vec![7.5; 4], "{method:?}");
+    }
+
+    // K-means|| on identical points: ψ = 0 after the prime pass, so the
+    // rounds sample nothing and the bill collapses to m + (k−1).
+    let c = counter();
+    let mut s = KmeansParSeeder::new(ParCfg::default());
+    let _ = s.seed(&flat, &unit(20), 1, 4, &mut Rng::new(7), &c);
+    assert_eq!(s.last_stats().candidates, 1);
+    assert_eq!(c.get(), (20 + 3) as u64);
+
+    // Streamed twin of the identical-point degenerate.
+    let c2 = counter();
+    let mut sb = StreamSeeder::new(vec_opener(flat.clone(), 1, 3), 1);
+    let out = sb.kmeans_par(4, &ParCfg::default(), &mut Rng::new(7), &c2).unwrap();
+    assert_eq!(out.centroids, vec![7.5; 4]);
+    assert_eq!(c2.get(), c.get());
+
+    // k > n: the ForgySeeder pad (unreachable through the free function).
+    let tiny = [0.0, 5.0];
+    let c = counter();
+    let cents = ForgySeeder.seed(&tiny, &unit(2), 1, 4, &mut Rng::new(8), &c);
+    assert_eq!(cents.len(), 4);
+    assert!(cents.iter().all(|v| tiny.contains(v)));
+    // Both rows appear (the first n draws are distinct).
+    assert!(cents[..2].contains(&0.0) && cents[..2].contains(&5.0));
+}
+
+// ---------------------------------------------------------------------------
+// The policy flows through BWKM identically in memory and out of core.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn bwkm_par_policy_streamed_equals_in_memory() {
+    let mut g = prop::Gen { rng: Rng::new(62), case: 0 };
+    let ds = Dataset::new(g.blobs(600, 3, 4, 0.4), 3);
+    let mut cfg = BwkmCfg::for_dataset(ds.n, ds.d, 4);
+    cfg.seed = SeedPolicy::of(SeedMethod::Par);
+    cfg.max_outer = 4;
+
+    let c_mem = counter();
+    let mem = bwkm::bwkm::run(&ds, 4, &cfg, &mut Rng::new(3), &c_mem);
+
+    let c_str = counter();
+    let mut sb = StreamingBwkm::new(vec_opener(ds.data.clone(), 3, 83), 3).with_threads(2);
+    let out = sb.run(4, &cfg, &mut Rng::new(3), &c_str).unwrap();
+
+    assert_eq!(out.centroids, mem.centroids);
+    assert_eq!(out.stop, mem.stop);
+    assert_eq!(c_str.get(), c_mem.get());
+    assert_eq!(c_str.notes(), c_mem.notes(), "kmpar round notes must match");
+}
+
+// ---------------------------------------------------------------------------
+// Direction sanity: K-means|| seeds competitively with K-means++.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn kmeans_par_quality_tracks_kmeanspp() {
+    let mut g = prop::Gen { rng: Rng::new(63), case: 0 };
+    let data = g.blobs(800, 2, 5, 0.3);
+    let (mut e_par, mut e_pp) = (0.0, 0.0);
+    for seed in 0..8 {
+        let c = counter();
+        let cp = KmeansParSeeder::new(ParCfg::default())
+            .seed(&data, &unit(800), 2, 5, &mut Rng::new(seed), &c);
+        e_par += bwkm::metrics::kmeans_error(&data, 2, &cp, &c);
+        let ck = kmeanspp(&data, 2, 5, &mut Rng::new(seed), &c);
+        e_pp += bwkm::metrics::kmeans_error(&data, 2, &ck, &c);
+    }
+    assert!(e_par < e_pp * 2.0, "km|| seeding error {e_par} vs km++ {e_pp}");
+}

@@ -5,6 +5,8 @@
 #   scripts/ci.sh --quick      # engine conformance + streaming degenerate subset
 #   scripts/ci.sh --streaming  # the full streaming conformance suite
 #                              # (includes the generated multi-chunk-file run)
+#   scripts/ci.sh --init       # the seeding conformance + counter-pin suite
+#                              # (Seeder backends, K-means|| grids, closed forms)
 #
 # The build is hermetic (vendored path deps, no crates.io), so the script
 # forces cargo offline and never touches the network.
@@ -24,6 +26,12 @@ fi
 if [[ "${1:-}" == "--streaming" ]]; then
     echo "== streaming conformance suite (incl. generated multi-chunk file) =="
     cargo test -q --test streaming_conformance
+    exit 0
+fi
+
+if [[ "${1:-}" == "--init" ]]; then
+    echo "== seeding conformance + counter-pin suite =="
+    cargo test -q --test init_conformance
     exit 0
 fi
 
