@@ -8,14 +8,17 @@
 //! prune rate, and the per-step engine choices `AutoAssigner` logged on
 //! its counter (DESIGN.md §2.7).
 
-use bwkm::bench::{env_f64, write_csv};
+use bwkm::bench::{env_f64, write_bench_json, write_csv};
 use bwkm::bwkm::{initial_partition, InitCfg};
 use bwkm::data::simulate;
 use bwkm::kmeans::assign::AutoAssigner;
 use bwkm::kmeans::elkan::elkan_weighted_lloyd;
 use bwkm::kmeans::init::weighted_kmeanspp;
 use bwkm::kmeans::pruning::pruned_weighted_lloyd;
-use bwkm::kmeans::{weighted_lloyd, weighted_lloyd_with, EngineStepper, WLloydCfg};
+use bwkm::kmeans::{
+    stepper_for, weighted_lloyd, weighted_lloyd_with, AssignCfg, AssignMode, EngineStepper,
+    Stepper, WLloydCfg,
+};
 use bwkm::metrics::DistanceCounter;
 use bwkm::util::{fmt_count, Rng};
 
@@ -63,9 +66,50 @@ fn main() {
     };
     // Auto choice summary: the assigner's structured tallies (the
     // counter's note log carries the same per-step choices for replay).
-    let (auto_serial, auto_normpruned, auto_bounded) = auto_stepper.engine().choice_counts();
-    let auto_summary =
-        format!("serial:{auto_serial} bounded:{auto_bounded} normpruned:{auto_normpruned}");
+    let auto_summary = auto_stepper.engine().choice_counts().summary();
+
+    // Approximate regime (DESIGN.md §2.9): the same Lloyd run through the
+    // closure and sampled backends. These are NOT held to the exact
+    // backends' bit-identity contract — they self-report a measured
+    // relative gap instead, so they stay out of the drift asserts below.
+    let closure_c = DistanceCounter::new();
+    let mut closure_stepper = stepper_for(&AssignCfg {
+        mode: AssignMode::Closure,
+        closure_expand: 2,
+        ..Default::default()
+    });
+    let out_closure = weighted_lloyd_with(
+        closure_stepper.as_mut(),
+        &reps,
+        &weights,
+        ds.d,
+        &init,
+        &wl_cfg,
+        &closure_c,
+    );
+    let closure_gap = closure_stepper
+        .quality_gap(&reps, &weights, ds.d, &out_closure.centroids)
+        .map(|g| g.rel_gap())
+        .unwrap_or(0.0);
+    let sampled_c = DistanceCounter::new();
+    let mut sampled_stepper = stepper_for(&AssignCfg {
+        mode: AssignMode::Sampled,
+        sample_rows: (m_reps / 2).max(1),
+        ..Default::default()
+    });
+    let out_sampled = weighted_lloyd_with(
+        sampled_stepper.as_mut(),
+        &reps,
+        &weights,
+        ds.d,
+        &init,
+        &wl_cfg,
+        &sampled_c,
+    );
+    let sampled_gap = sampled_stepper
+        .quality_gap(&reps, &weights, ds.d, &out_sampled.centroids)
+        .map(|g| g.rel_gap())
+        .unwrap_or(0.0);
 
     let drift = |a: &[f64], b: &[f64]| -> f64 {
         a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max)
@@ -98,6 +142,22 @@ fn main() {
         "{:<10} {:>14} {:>8} {:>7.1}% {:>12}",
         "auto", fmt_count(auto.get()), out_auto.iters, saved(&auto), "-"
     );
+    println!(
+        "{:<10} {:>14} {:>8} {:>7.1}% {:>12}",
+        "closure",
+        fmt_count(closure_c.get()),
+        out_closure.iters,
+        saved(&closure_c),
+        format!("gap {closure_gap:.1e}")
+    );
+    println!(
+        "{:<10} {:>14} {:>8} {:>7.1}% {:>12}",
+        "sampled",
+        fmt_count(sampled_c.get()),
+        out_sampled.iters,
+        saved(&sampled_c),
+        format!("gap {sampled_gap:.1e}")
+    );
     println!("auto choices: {auto_summary}");
     println!("max centroid drift vs plain: hamerly {d_h:.2e}, bounded {d_b:.2e}, auto {d_a:.2e}");
     assert!(d_h < 1e-6, "hamerly diverged from plain");
@@ -121,12 +181,21 @@ fn main() {
                 "iters".into(),
                 "bounded_prune_rate".into(),
                 "auto_choice".into(),
+                "rel_gap".into(),
             ],
-            vec!["plain".into(), plain.get().to_string(), out_plain.iters.to_string(), "".into(), "".into()],
+            vec![
+                "plain".into(),
+                plain.get().to_string(),
+                out_plain.iters.to_string(),
+                "".into(),
+                "".into(),
+                "".into(),
+            ],
             vec![
                 "hamerly".into(),
                 hamerly.get().to_string(),
                 out_hamerly.iters.to_string(),
+                "".into(),
                 "".into(),
                 "".into(),
             ],
@@ -136,14 +205,54 @@ fn main() {
                 out_bounded.iters.to_string(),
                 format!("{bounded_prune_rate:.4}"),
                 "".into(),
+                "".into(),
             ],
             vec![
                 "auto".into(),
                 auto.get().to_string(),
                 out_auto.iters.to_string(),
                 "".into(),
-                auto_summary,
+                auto_summary.clone(),
+                "".into(),
             ],
+            vec![
+                "closure".into(),
+                closure_c.get().to_string(),
+                out_closure.iters.to_string(),
+                "".into(),
+                "".into(),
+                format!("{closure_gap:.6}"),
+            ],
+            vec![
+                "sampled".into(),
+                sampled_c.get().to_string(),
+                out_sampled.iters.to_string(),
+                "".into(),
+                "".into(),
+                format!("{sampled_gap:.6}"),
+            ],
+        ],
+    );
+    // Machine-readable mirror at the repo root (BENCH_ablation_pruning.json):
+    // one object per variant — exact variants report rel_gap = 0 by the
+    // bit-identity contract just asserted above.
+    let jrow = |variant: &str, dists: u64, iters: usize, gap: f64| {
+        vec![
+            ("variant".to_string(), variant.to_string()),
+            ("distances".to_string(), dists.to_string()),
+            ("iters".to_string(), iters.to_string()),
+            ("rel_gap".to_string(), format!("{gap:.6}")),
+        ]
+    };
+    write_bench_json(
+        "ablation_pruning",
+        &[
+            jrow("plain", plain.get(), out_plain.iters, 0.0),
+            jrow("hamerly", hamerly.get(), out_hamerly.iters, 0.0),
+            jrow("bounded", bounded.get(), out_bounded.iters, 0.0),
+            jrow("auto", auto.get(), out_auto.iters, 0.0),
+            jrow("closure", closure_c.get(), out_closure.iters, closure_gap),
+            jrow("sampled", sampled_c.get(), out_sampled.iters, sampled_gap),
         ],
     );
 }

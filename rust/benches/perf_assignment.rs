@@ -11,10 +11,10 @@
 //! harder), and the backend `AutoAssigner` settled on. Feeds
 //! EXPERIMENTS.md §Perf.
 
-use bwkm::bench::{bench_secs, env_f64, write_csv};
+use bwkm::bench::{bench_secs, env_f64, write_bench_json, write_csv};
 use bwkm::coordinator::sharded_weighted_step;
-use bwkm::kmeans::assign::{weighted_step, AutoAssigner, BoundedAssigner};
-use bwkm::kmeans::{NativeStepper, NormPrunedAssigner, Stepper};
+use bwkm::kmeans::assign::{weighted_step, Assigner, AutoAssigner, BoundedAssigner, ClosureAssigner};
+use bwkm::kmeans::{NativeStepper, NormPrunedAssigner, SampledStepper, Stepper};
 use bwkm::metrics::DistanceCounter;
 use bwkm::runtime::Runtime;
 use bwkm::util::{fmt_count, Rng};
@@ -34,12 +34,14 @@ fn main() {
 
     println!("=== P1: assignment-step throughput (rows/s, one weighted-Lloyd step) ===");
     println!(
-        "{:<18} {:>10} {:>12} {:>16} {:>16} {:>12} {:>12} {:>12} {:>14}",
+        "{:<18} {:>10} {:>12} {:>16} {:>16} {:>16} {:>16} {:>12} {:>12} {:>12} {:>14}",
         "m,k,d",
         "native",
         "sharded(4)",
         "normprune(bill)",
         "bounded(bill)",
+        "closure(bill)",
+        "sampled(bill)",
         "auto",
         "pjrt",
         "pruned-run",
@@ -55,10 +57,19 @@ fn main() {
         "normprune_bill_frac".into(),
         "bounded_rows_s".into(),
         "bounded_bill_frac".into(),
+        "closure_rows_s".into(),
+        "closure_bill_frac".into(),
+        "closure_rel_gap".into(),
+        "sampled_rows_s".into(),
+        "sampled_bill_frac".into(),
+        "sampled_rel_gap".into(),
         "auto_choice".into(),
         "pjrt_rows_s".into(),
         "pruned_rows_s".into(),
     ]];
+    // Machine-readable exact/closure/sampled rows (BENCH_assignment.json
+    // at the repo root).
+    let mut jrows: Vec<Vec<(String, String)>> = Vec::new();
     for (m, k, d) in sweeps {
         let mut rng = Rng::new(3);
         let reps: Vec<f64> = (0..m * d).map(|_| rng.normal() * 3.0).collect();
@@ -117,6 +128,36 @@ fn main() {
         let b_stats = bounded_traj.last_stats();
         let b_bill_frac = b_stats.pairs as f64 / (m as f64 * k as f64);
 
+        // Approximate regime (DESIGN.md §2.9): closure candidates in the
+        // warm steady state (a total/non-amortizing closure honestly
+        // reports bill_frac = 1 — it falls back to exact), and the
+        // sampled stepper at half the rows. Both report the fraction of
+        // the m·k bill actually charged plus their measured relative gap.
+        let mut closure = ClosureAssigner::new(2);
+        let c_cl = DistanceCounter::new();
+        let _ = weighted_step(&mut closure, &reps, &weights, d, &cents, &c_cl); // cold prime
+        let t_closure = bench_secs(3, || {
+            std::hint::black_box(weighted_step(&mut closure, &reps, &weights, d, &cents, &c_cl));
+        });
+        let cl_stats = closure.last_stats();
+        let cl_bill_frac = (cl_stats.pairs + cl_stats.bookkeeping) as f64 / (m as f64 * k as f64);
+        let cl_gap = closure
+            .quality_gap(&reps, Some(&weights), d, &cents)
+            .map(|gp| gp.rel_gap())
+            .unwrap_or(0.0);
+
+        let mut sampled = SampledStepper::new(m / 2, 0xB16D);
+        let c_sp = DistanceCounter::new();
+        let _ = sampled.step(&reps, &weights, d, &cents, &c_sp); // cold prime
+        let t_sampled = bench_secs(3, || {
+            std::hint::black_box(sampled.step(&reps, &weights, d, &cents, &c_sp));
+        });
+        let sp_stats = sampled.last_stats();
+        let sp_bill_frac = sp_stats.pairs as f64 / (m as f64 * k as f64);
+        let sp_gap = Stepper::quality_gap(&mut sampled, &reps, &weights, d, &cents)
+            .map(|gp| gp.rel_gap())
+            .unwrap_or(0.0);
+
         // Auto: what the selector settles on for this shape after a short
         // warm sequence (choices also land in the counter's note log).
         let mut auto = AutoAssigner::new();
@@ -143,12 +184,14 @@ fn main() {
 
         let rps = |t: f64| m as f64 / t;
         println!(
-            "{:<18} {:>10} {:>12} {:>16} {:>16} {:>12} {:>12} {:>12} {:>14}",
+            "{:<18} {:>10} {:>12} {:>16} {:>16} {:>16} {:>16} {:>12} {:>12} {:>12} {:>14}",
             format!("{m},{k},{d}"),
             fmt_count(rps(t_native) as u64),
             fmt_count(rps(t_shard) as u64),
             format!("{} ({:.0}%)", fmt_count(rps(t_normprune) as u64), bill_frac * 100.0),
             format!("{} ({:.0}%)", fmt_count(rps(t_bounded) as u64), b_bill_frac * 100.0),
+            format!("{} ({:.0}%)", fmt_count(rps(t_closure) as u64), cl_bill_frac * 100.0),
+            format!("{} ({:.0}%)", fmt_count(rps(t_sampled) as u64), sp_bill_frac * 100.0),
             auto_choice,
             t_pjrt.map(|t| fmt_count(rps(t) as u64)).unwrap_or_else(|| "-".into()),
             fmt_count(rps(t_pruned) as u64),
@@ -164,10 +207,31 @@ fn main() {
             format!("{:.4}", bill_frac),
             format!("{:.0}", rps(t_bounded)),
             format!("{:.4}", b_bill_frac),
+            format!("{:.0}", rps(t_closure)),
+            format!("{:.4}", cl_bill_frac),
+            format!("{:.4e}", cl_gap),
+            format!("{:.0}", rps(t_sampled)),
+            format!("{:.4}", sp_bill_frac),
+            format!("{:.4e}", sp_gap),
             auto_choice.to_string(),
             t_pjrt.map(|t| format!("{:.0}", rps(t))).unwrap_or_default(),
             format!("{:.0}", rps(t_pruned)),
         ]);
+        let jrow = |backend: &str, rows_s: f64, frac: f64, gap: f64| {
+            vec![
+                ("backend".to_string(), backend.to_string()),
+                ("m".to_string(), m.to_string()),
+                ("k".to_string(), k.to_string()),
+                ("d".to_string(), d.to_string()),
+                ("rows_per_s".to_string(), format!("{rows_s:.0}")),
+                ("bill_frac".to_string(), format!("{frac:.6}")),
+                ("rel_gap".to_string(), format!("{gap:.6}")),
+            ]
+        };
+        jrows.push(jrow("exact", rps(t_native), 1.0, 0.0));
+        jrows.push(jrow("closure", rps(t_closure), cl_bill_frac, cl_gap));
+        jrows.push(jrow("sampled", rps(t_sampled), sp_bill_frac, sp_gap));
     }
     write_csv("perf_assignment", &rows);
+    write_bench_json("assignment", &jrows);
 }

@@ -35,6 +35,69 @@ pub fn write_csv(name: &str, rows: &[Vec<String>]) {
     eprintln!("wrote {}", path.display());
 }
 
+/// Write rows of `(key, value)` string pairs as a machine-readable JSON
+/// array of objects to `BENCH_<name>.json` at the **repo root** (the
+/// drivers' pickup location; the human-facing CSVs stay in `bench_out/`).
+/// Values are typed conservatively: anything that parses as a `u64` or a
+/// finite `f64` is emitted as a JSON number in Rust's canonical shortest
+/// round-trip form (so `"007"` becomes `7`, never invalid-JSON
+/// passthrough); everything else is an escaped string. Hand-rolled
+/// because serde is unavailable offline (DESIGN.md §4).
+pub fn write_bench_json(name: &str, rows: &[Vec<(String, String)>]) {
+    let path =
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join(format!("../BENCH_{name}.json"));
+    let mut s = String::from("[\n");
+    for (i, row) in rows.iter().enumerate() {
+        s.push_str("  {");
+        for (j, (k, v)) in row.iter().enumerate() {
+            if j > 0 {
+                s.push_str(", ");
+            }
+            s.push('"');
+            s.push_str(&json_escape(k));
+            s.push_str("\": ");
+            s.push_str(&json_value(v));
+        }
+        s.push('}');
+        if i + 1 < rows.len() {
+            s.push(',');
+        }
+        s.push('\n');
+    }
+    s.push_str("]\n");
+    std::fs::write(&path, s).expect("write bench json");
+    eprintln!("wrote {}", path.display());
+}
+
+/// One JSON value from a bench cell (see [`write_bench_json`]).
+fn json_value(v: &str) -> String {
+    if let Ok(u) = v.parse::<u64>() {
+        return u.to_string();
+    }
+    if let Ok(x) = v.parse::<f64>() {
+        if x.is_finite() {
+            return x.to_string();
+        }
+    }
+    format!("\"{}\"", json_escape(v))
+}
+
+fn json_escape(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for ch in v.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
 /// Env-var override with default (the BWKM_SCALE / BWKM_REPS knobs).
 pub fn env_f64(name: &str, default: f64) -> f64 {
     std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
@@ -58,6 +121,37 @@ mod tests {
             std::hint::black_box(acc);
         });
         assert!(s >= 0.0 && s < 1.0);
+    }
+
+    #[test]
+    fn json_values_are_typed_conservatively() {
+        assert_eq!(json_value("42"), "42");
+        assert_eq!(json_value("007"), "7", "canonical form, never invalid passthrough");
+        assert_eq!(json_value("0.25"), "0.25");
+        assert_eq!(json_value("0.2500"), "0.25");
+        assert_eq!(json_value("NaN"), "\"NaN\"", "non-finite floats stay strings");
+        assert_eq!(json_value("inf"), "\"inf\"");
+        assert_eq!(json_value("exact"), "\"exact\"");
+        assert_eq!(json_value(""), "\"\"");
+        assert_eq!(json_value("a\"b\\c"), "\"a\\\"b\\\\c\"");
+    }
+
+    #[test]
+    fn bench_json_lands_at_the_repo_root() {
+        let name = format!("harness_selftest_{}", std::process::id());
+        write_bench_json(
+            &name,
+            &[vec![
+                ("backend".to_string(), "exact".to_string()),
+                ("pairs".to_string(), "123".to_string()),
+                ("frac".to_string(), "0.5".to_string()),
+            ]],
+        );
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join(format!("../BENCH_{name}.json"));
+        let text = std::fs::read_to_string(&path).expect("bench json written");
+        assert_eq!(text, "[\n  {\"backend\": \"exact\", \"pairs\": 123, \"frac\": 0.5}\n]\n");
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -12,7 +12,8 @@ use anyhow::Result;
 use crate::data::Dataset;
 use crate::kmeans::init::{SeedPolicy, Seeder as _};
 use crate::kmeans::{
-    weighted_lloyd_with, AutoAssigner, EngineStepper, NativeStepper, Stepper, WLloydCfg,
+    stepper_for, weighted_lloyd_with, AssignCfg, AssignMode, AutoAssigner, EngineStepper,
+    Stepper, WLloydCfg,
 };
 use crate::metrics::{Budget, DistanceCounter};
 use crate::partition::Partition;
@@ -62,6 +63,11 @@ pub struct BwkmCfg {
     /// evaluation uses a *separate* counter, so it never pollutes the
     /// method's own accounting (bench instrumentation only).
     pub eval_full_error: bool,
+    /// Assignment regime for the inner weighted-Lloyd steps
+    /// (DESIGN.md §2.9). The default — exact — reproduces the pre-regime
+    /// pipeline bit for bit; the approximate modes self-report their
+    /// measured quality gap as a `"gap[...]"` counter note.
+    pub assign: AssignCfg,
 }
 
 impl BwkmCfg {
@@ -80,6 +86,7 @@ impl BwkmCfg {
             shift_tol: None,
             bound_tol: None,
             eval_full_error: false,
+            assign: AssignCfg::default(),
         }
     }
 }
@@ -117,7 +124,9 @@ pub struct BwkmOutcome {
     pub partition: Partition,
 }
 
-/// Run BWKM with the native weighted-Lloyd stepper.
+/// Run BWKM with the stepper `cfg.assign` asks for: the native
+/// weighted-Lloyd stepper in the default exact mode, or the closure /
+/// sampled approximate backends (DESIGN.md §2.9).
 pub fn run(
     data: &Dataset,
     k: usize,
@@ -125,7 +134,8 @@ pub fn run(
     rng: &mut Rng,
     counter: &DistanceCounter,
 ) -> BwkmOutcome {
-    run_with(&mut NativeStepper::new(), data, k, cfg, rng, counter)
+    let mut stepper = stepper_for(&cfg.assign);
+    run_with(stepper.as_mut(), data, k, cfg, rng, counter)
 }
 
 /// Run BWKM with the auto-selecting engine (DESIGN.md §2.7): each inner
@@ -143,8 +153,21 @@ pub fn run_auto(
     rng: &mut Rng,
     counter: &DistanceCounter,
 ) -> BwkmOutcome {
-    let mut stepper: EngineStepper<AutoAssigner> = EngineStepper::new();
-    run_with(&mut stepper, data, k, cfg, rng, counter)
+    match cfg.assign.mode {
+        // Approximate regime: closure joins auto's choice set (§2.9);
+        // the sampled stepper replaces the engine loop outright (it owns
+        // the whole step, so there is nothing for auto to select).
+        AssignMode::Closure => {
+            let mut stepper =
+                EngineStepper::with_engine(AutoAssigner::with_closure(cfg.assign.closure_expand));
+            run_with(&mut stepper, data, k, cfg, rng, counter)
+        }
+        AssignMode::Sampled => run(data, k, cfg, rng, counter),
+        AssignMode::Exact => {
+            let mut stepper: EngineStepper<AutoAssigner> = EngineStepper::new();
+            run_with(&mut stepper, data, k, cfg, rng, counter)
+        }
+    }
 }
 
 /// Run BWKM over an arbitrary weighted-Lloyd [`Stepper`] backend (the PJRT
@@ -302,6 +325,14 @@ pub fn run_source<S: RefineSource>(
         reps = rw.0;
         weights = rw.1;
         ids = rw.2;
+    }
+
+    // §2.9: every approximate run self-reports its measured quality gap
+    // on the final representatives/centroids as a counter note (uncounted
+    // instrumentation); exact steppers return None and add nothing, so
+    // exact trajectories and note logs are untouched.
+    if let Some(gap) = stepper.quality_gap(&reps, &weights, d, &centroids) {
+        counter.note(gap.note());
     }
 
     Ok(SourceOutcome { centroids, k, d, stop, trace })

@@ -32,7 +32,13 @@ USAGE:
 RUN KEYS: dataset scale seed k method budget threads use_pjrt eval_full_error
           chunk_rows m m_prime s r max_outer
           init oversample_l init_rounds chain_length
+          assign closure_expand sample_rows sample_seed
           (method: bwkm fkm kmpp kmpp_init kmc2 mbN rpkm)
+          (assign: exact closure sampled — the §2.9 assignment regime for
+           bwkm/rpkm; closure scans closure_expand+1 candidate centroids
+           per point, sampled runs each step on sample_rows rows seeded
+           by sample_seed; approximate runs print their measured gap[..]
+           note and still pay an exactly-accounted bill)
           (init: forgy pp kmc2 par — the BWKM/RPKM seeding policy over
            partition representatives, DESIGN.md §2.8; par is K-means||
            with init_rounds rounds and oversampling l = oversample_l,
@@ -188,6 +194,10 @@ fn run_streaming(cfg: &RunConfig, path: &str) -> Result<()> {
     if rows != n {
         bail!("source changed during the run: scoring pass saw {rows} rows, expected {n}");
     }
+    // Approximate runs self-report their measured quality gap (§2.9).
+    for note in counter.notes().iter().filter(|note| note.starts_with("gap[")) {
+        println!("  {note}");
+    }
     println!(
         "result: E^D={sse:.6e} distances={} passes={} wall={:.2?} (stop={:?} init={})",
         fmt_count(counter.get()),
@@ -226,7 +236,16 @@ fn run(args: &[String]) -> Result<()> {
     let (centroids, note) = match &cfg.method {
         Method::Bwkm => {
             let bcfg = cfg.bwkm_cfg(ds.n, ds.d)?;
-            let out = if cfg.use_pjrt {
+            let approx = bcfg.assign.mode != crate::kmeans::AssignMode::Exact;
+            if cfg.use_pjrt && approx {
+                bail!("use_pjrt supports assign=exact only (the device step is exact)");
+            }
+            let out = if approx {
+                // Approximate regimes run their own (serial) stepper —
+                // closures / sampled steps carry state across steps.
+                let mut stepper = crate::kmeans::stepper_for(&bcfg.assign);
+                crate::bwkm::run_with(stepper.as_mut(), &ds, cfg.k, &bcfg, &mut rng, &counter)
+            } else if cfg.use_pjrt {
                 let rt = crate::runtime::Runtime::open_default()?;
                 let mut stepper = crate::runtime::PjrtStepper::new(rt);
                 let o = crate::bwkm::run_with(&mut stepper, &ds, cfg.k, &bcfg, &mut rng, &counter);
@@ -273,6 +292,7 @@ fn run(args: &[String]) -> Result<()> {
             let rcfg = RpkmCfg {
                 budget: cfg.budget(),
                 seed: cfg.seed_policy(crate::kmeans::init::SeedMethod::Forgy)?,
+                assign: cfg.assign_cfg()?,
                 ..Default::default()
             };
             let out = grid_rpkm(&ds, cfg.k, &rcfg, &mut rng, &counter);
@@ -284,6 +304,10 @@ fn run(args: &[String]) -> Result<()> {
     } else {
         kmeans_error(&ds.data, ds.d, &centroids, &eval)
     };
+    // Approximate runs self-report their measured quality gap (§2.9).
+    for n in counter.notes().iter().filter(|n| n.starts_with("gap[")) {
+        println!("  {n}");
+    }
     println!(
         "result: E^D={err:.6e} distances={} wall={:.2?} ({note})",
         fmt_count(counter.get()),
@@ -373,6 +397,50 @@ mod tests {
         .unwrap();
         // A bad init value is a clean error.
         assert!(run(&["dataset=3RN".into(), "scale=0.002".into(), "init=quantum".into()]).is_err());
+    }
+
+    #[test]
+    fn run_approximate_assign_modes() {
+        // BWKM with closure candidates.
+        run(&[
+            "dataset=3RN".into(),
+            "scale=0.002".into(),
+            "k=3".into(),
+            "method=bwkm".into(),
+            "assign=closure".into(),
+            "closure_expand=2".into(),
+            "max_outer=3".into(),
+            "seed=1".into(),
+            "eval_full_error=off".into(),
+        ])
+        .unwrap();
+        // RPKM with sampled steps.
+        run(&[
+            "dataset=3RN".into(),
+            "scale=0.002".into(),
+            "k=3".into(),
+            "method=rpkm".into(),
+            "assign=sampled".into(),
+            "sample_rows=64".into(),
+            "seed=1".into(),
+        ])
+        .unwrap();
+        // Validation surfaces as clean errors.
+        assert!(run(&[
+            "dataset=3RN".into(),
+            "scale=0.002".into(),
+            "method=bwkm".into(),
+            "assign=sampled".into(), // sample_rows missing
+        ])
+        .is_err());
+        assert!(run(&[
+            "dataset=3RN".into(),
+            "scale=0.002".into(),
+            "method=bwkm".into(),
+            "assign=closure".into(),
+            "use_pjrt=on".into(), // exact-only path
+        ])
+        .is_err());
     }
 
     #[test]

@@ -9,6 +9,7 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::bwkm::BwkmCfg;
 use crate::kmeans::init::{SeedMethod, SeedPolicy};
+use crate::kmeans::{AssignCfg, AssignMode};
 use crate::metrics::Budget;
 
 /// Which clustering method a run executes.
@@ -200,9 +201,43 @@ impl RunConfig {
         Ok(policy)
     }
 
+    /// Assignment-regime configuration (DESIGN.md §2.9) from the
+    /// `assign`, `closure_expand`, `sample_rows` and `sample_seed` keys.
+    /// No keys → the exact default (bit-identical to the pre-regime
+    /// behavior).
+    pub fn assign_cfg(&self) -> Result<AssignCfg> {
+        let mut cfg = AssignCfg::default();
+        if let Some(v) = self.extra.get("assign") {
+            cfg.mode = match v.to_ascii_lowercase().as_str() {
+                "exact" => AssignMode::Exact,
+                "closure" => AssignMode::Closure,
+                "sampled" => AssignMode::Sampled,
+                _ => bail!("unknown assign mode `{v}` (exact|closure|sampled)"),
+            };
+        }
+        if let Some(v) = self.extra.get("closure_expand") {
+            cfg.closure_expand = v.parse().context("closure_expand")?;
+            if cfg.closure_expand == 0 {
+                bail!("closure_expand must be ≥ 1");
+            }
+        }
+        if let Some(v) = self.extra.get("sample_rows") {
+            cfg.sample_rows = v.parse().context("sample_rows")?;
+        }
+        if let Some(v) = self.extra.get("sample_seed") {
+            cfg.sample_seed = v.parse().context("sample_seed")?;
+        }
+        if cfg.mode == AssignMode::Sampled && cfg.sample_rows == 0 {
+            bail!("assign = sampled requires sample_rows ≥ 1");
+        }
+        Ok(cfg)
+    }
+
     /// BWKM configuration for a dataset of n rows, honoring `extra`
-    /// overrides m, m_prime, s, r, max_outer and the seeding-policy keys
-    /// init / oversample_l / init_rounds / chain_length.
+    /// overrides m, m_prime, s, r, max_outer, the seeding-policy keys
+    /// init / oversample_l / init_rounds / chain_length, and the §2.9
+    /// assignment-regime keys assign / closure_expand / sample_rows /
+    /// sample_seed.
     pub fn bwkm_cfg(&self, n: usize, d: usize) -> Result<BwkmCfg> {
         let mut cfg = BwkmCfg::for_dataset(n, d, self.k);
         if let Some(v) = self.extra.get("m") {
@@ -223,6 +258,7 @@ impl RunConfig {
         cfg.seed = self.seed_policy(SeedMethod::Kmpp)?;
         cfg.budget = self.budget();
         cfg.eval_full_error = self.eval_full_error;
+        cfg.assign = self.assign_cfg()?;
         Ok(cfg)
     }
 }
@@ -289,6 +325,35 @@ mod tests {
         assert_eq!(b.budget.max_distances, 5000);
         // No init key: BWKM defaults to the paper's weighted K-means++.
         assert_eq!(b.seed.method, SeedMethod::Kmpp);
+    }
+
+    #[test]
+    fn assign_cfg_keys_parse_and_validate() {
+        let mut cfg = RunConfig::default();
+        // No keys: the exact default, bit-identical to pre-regime runs.
+        assert_eq!(cfg.assign_cfg().unwrap(), AssignCfg::default());
+        cfg.set("assign", "closure").unwrap();
+        cfg.set("closure_expand", "4").unwrap();
+        let a = cfg.assign_cfg().unwrap();
+        assert_eq!(a.mode, AssignMode::Closure);
+        assert_eq!(a.closure_expand, 4);
+        // Flows into the BWKM config.
+        assert_eq!(cfg.bwkm_cfg(1000, 3).unwrap().assign, a);
+        // Sampled requires an explicit sample size.
+        cfg.set("assign", "sampled").unwrap();
+        assert!(cfg.assign_cfg().is_err());
+        cfg.set("sample_rows", "256").unwrap();
+        cfg.set("sample_seed", "7").unwrap();
+        let s = cfg.assign_cfg().unwrap();
+        assert_eq!(s.mode, AssignMode::Sampled);
+        assert_eq!(s.sample_rows, 256);
+        assert_eq!(s.sample_seed, 7);
+        // Validation.
+        cfg.set("assign", "psychic").unwrap();
+        assert!(cfg.assign_cfg().is_err());
+        cfg.set("assign", "exact").unwrap();
+        cfg.set("closure_expand", "0").unwrap();
+        assert!(cfg.assign_cfg().is_err());
     }
 
     #[test]

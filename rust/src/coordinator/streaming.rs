@@ -45,7 +45,7 @@ use crate::geometry::BBox;
 use crate::kmeans::assign::{nearest_in, shard_ranges};
 use crate::kmeans::init::kmeans_par::{kmeans_par_source, ParSource};
 use crate::kmeans::init::ParCfg;
-use crate::kmeans::{AutoAssigner, EngineStepper, NativeStepper, Stepper};
+use crate::kmeans::{stepper_for, AssignMode, AutoAssigner, EngineStepper, Stepper};
 use crate::metrics::{nearest, DistanceCounter};
 use crate::partition::Partition;
 use crate::util::Rng;
@@ -612,7 +612,8 @@ where
         self
     }
 
-    /// Run with the serial native engine — the streamed twin of
+    /// Run with the stepper `cfg.assign` selects (DESIGN.md §2.9; the
+    /// exact default is the serial native engine) — the streamed twin of
     /// [`crate::bwkm::run`].
     pub fn run(
         &mut self,
@@ -621,12 +622,16 @@ where
         rng: &mut Rng,
         counter: &DistanceCounter,
     ) -> Result<StreamBwkmOutcome> {
-        self.run_with(&mut NativeStepper::new(), k, cfg, rng, counter)
+        let mut stepper = stepper_for(&cfg.assign);
+        self.run_with(stepper.as_mut(), k, cfg, rng, counter)
     }
 
     /// Run with the auto-selecting engine (serial / norm-pruned /
     /// bounded per inner step, DESIGN.md §2.7) — the streamed twin of
-    /// [`crate::bwkm::run_auto`]: same trajectory, smaller bill.
+    /// [`crate::bwkm::run_auto`]: same trajectory, smaller bill. With
+    /// `assign = closure` the selector additionally learns the closure
+    /// backend (§2.9); `assign = sampled` has nothing for the selector
+    /// to choose between and delegates to [`StreamingBwkm::run`].
     pub fn run_auto(
         &mut self,
         k: usize,
@@ -634,8 +639,18 @@ where
         rng: &mut Rng,
         counter: &DistanceCounter,
     ) -> Result<StreamBwkmOutcome> {
-        let mut stepper: EngineStepper<AutoAssigner> = EngineStepper::new();
-        self.run_with(&mut stepper, k, cfg, rng, counter)
+        match cfg.assign.mode {
+            AssignMode::Closure => {
+                let mut stepper =
+                    EngineStepper::with_engine(AutoAssigner::with_closure(cfg.assign.closure_expand));
+                self.run_with(&mut stepper, k, cfg, rng, counter)
+            }
+            AssignMode::Sampled => self.run(k, cfg, rng, counter),
+            AssignMode::Exact => {
+                let mut stepper: EngineStepper<AutoAssigner> = EngineStepper::new();
+                self.run_with(&mut stepper, k, cfg, rng, counter)
+            }
+        }
     }
 
     /// Run over an arbitrary weighted-Lloyd [`Stepper`] backend.

@@ -37,6 +37,12 @@
 //!   selects per step) count only what they compute (plus their
 //!   documented bookkeeping), and may therefore count *less* while
 //!   returning bit-identical output.
+//! * **Approximate regime (DESIGN.md §2.9, opt-in).** [`ClosureAssigner`]
+//!   (and `weighted_lloyd::SampledStepper`) trade the bit-identity
+//!   guarantee for a smaller bill. Their *accounting* stays exact —
+//!   `counter delta == pairs + bookkeeping`, self-reported stats — and
+//!   the measured quality gap is available on demand through
+//!   [`Assigner::quality_gap`].
 //! * **Shard determinism.** [`Sharded<B>`](Sharded) splits rows with
 //!   [`shard_ranges`] (the same contiguous base/extra split as
 //!   `Dataset::shard_ranges`), runs any inner backend per shard, and
@@ -50,7 +56,7 @@
 //! Table-1 workloads use (§Perf iteration 1: 1.3–2.1x) get monomorphized
 //! fast paths with a compile-time `D`.
 
-use crate::metrics::DistanceCounter;
+use crate::metrics::{DistanceCounter, QualityGap};
 
 use super::weighted_lloyd::StepOut;
 
@@ -95,6 +101,22 @@ pub trait Assigner {
         centroids: &[f64],
         counter: &DistanceCounter,
     ) -> AssignOut;
+
+    /// The approximate regime's self-report hook (DESIGN.md §2.9): the
+    /// measured cost of this backend's current approximation on these
+    /// inputs, as **uncounted instrumentation** (§2.4 — private
+    /// counters, nothing charged to any caller-visible account). Exact
+    /// backends — every backend by default — have no gap and return
+    /// `None`.
+    fn quality_gap(
+        &mut self,
+        _points: &[f64],
+        _weights: Option<&[f64]>,
+        _d: usize,
+        _centroids: &[f64],
+    ) -> Option<QualityGap> {
+        None
+    }
 }
 
 /// The canonical squared-distance kernel (DESIGN.md §2.1): 4-way split
@@ -799,6 +821,365 @@ impl Assigner for BoundedAssigner {
 }
 
 // ---------------------------------------------------------------------------
+// Approximate regime: cluster-closure candidate lists (DESIGN.md §2.9).
+// ---------------------------------------------------------------------------
+
+/// Which assignment regime a run uses (DESIGN.md §2.9): the exact engine
+/// (the default — bit-identical backends, §2.1), the cluster-closure
+/// candidate backend, or the Big-means-style sampled stepper.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AssignMode {
+    Exact,
+    Closure,
+    Sampled,
+}
+
+impl AssignMode {
+    pub fn name(self) -> &'static str {
+        match self {
+            AssignMode::Exact => "exact",
+            AssignMode::Closure => "closure",
+            AssignMode::Sampled => "sampled",
+        }
+    }
+}
+
+/// Assignment-regime configuration carried by `BwkmCfg`/`RpkmCfg` and the
+/// CLI's `assign=exact|closure|sampled`, `closure_expand=`, `sample_rows=`
+/// and `sample_seed=` keys (DESIGN.md §2.9).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AssignCfg {
+    pub mode: AssignMode,
+    /// Closure radius: every point's candidate list is the closure of its
+    /// previous winner — that centroid plus its `closure_expand` nearest
+    /// others (clamped to ≥ 1; a closure that would be *total* routes
+    /// through the exact fallback instead).
+    pub closure_expand: usize,
+    /// Rows per sampled weighted-Lloyd step (`≥ m` runs the exact step).
+    pub sample_rows: usize,
+    /// Seed of the sampled stepper's **private** index stream. Kept out
+    /// of the run's main `Rng` so switching `assign=` modes leaves every
+    /// other random draw of the run identical.
+    pub sample_seed: u64,
+}
+
+impl Default for AssignCfg {
+    fn default() -> Self {
+        AssignCfg {
+            mode: AssignMode::Exact,
+            closure_expand: 2,
+            sample_rows: 0,
+            sample_seed: 0xB16D_A7A5,
+        }
+    }
+}
+
+/// What the [`ClosureAssigner`] charged on its most recent call — the
+/// backend's own exact account of its `DistanceCounter` activity, pinned
+/// by the conformance suite with `counter delta == pairs + bookkeeping`
+/// (the [`BoundedStats`] pattern).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ClosureStats {
+    /// Point–candidate pairs evaluated through the canonical kernel
+    /// (exact fallback: exactly `m·k`).
+    pub pairs: u64,
+    /// Bookkeeping distances: the `k·(k−1)/2` inter-centroid distances a
+    /// warm call spends building the closures (0 on a fallback).
+    pub bookkeeping: u64,
+    /// The unpruned bill `m·k` of the same call.
+    pub bill: u64,
+    /// Whether the call ran the approximate closure scan (`false`: it
+    /// fell back to the exact engine).
+    pub warm: bool,
+    /// Candidates per point of a warm call (0 on a fallback).
+    pub candidates: usize,
+    /// Points whose winner landed strictly inside its closure, i.e. not
+    /// on the rim (a fallback counts every point: exact always "hits").
+    pub hits: u64,
+    /// Points assigned by the call.
+    pub points: u64,
+    /// Cumulative exact fallbacks over the backend's lifetime (cold
+    /// primes included).
+    pub fallbacks: u64,
+}
+
+impl ClosureStats {
+    /// Fraction of points whose winner did not land on its closure's rim
+    /// — the observed probability that the candidate list was wide
+    /// enough. 1.0 before any call and after exact fallbacks.
+    pub fn hit_rate(&self) -> f64 {
+        if self.points == 0 {
+            1.0
+        } else {
+            self.hits as f64 / self.points as f64
+        }
+    }
+}
+
+/// The cluster-closure **approximate** backend (DESIGN.md §2.9, after
+/// "Fast Approximate K-means via Cluster Closures", PAPERS.md): a warm
+/// call evaluates each point only against the *closure* of its previous
+/// winner — that centroid plus its `expand` nearest others — instead of
+/// all k centroids. The same boundary intuition as BWKM's cutting
+/// criterion: a point's next winner is almost always in the immediate
+/// neighborhood of its current one.
+///
+/// Unlike every other backend in this module the output is **not**
+/// bit-identical to [`SerialAssigner`] on warm calls — the returned
+/// `(assign, d1, d2)` is exact *restricted to the candidate set* (same
+/// kernel, same strict-`<` index-order tie-breaking), so `d1 ≥` serial's
+/// and `d2` is the candidate-set runner-up. What *is* pinned exactly is
+/// the accounting: every call charges `pairs + bookkeeping` with
+/// self-reported [`ClosureStats`], and the measured quality gap is
+/// available on demand via [`Assigner::quality_gap`].
+///
+/// Exact fallbacks (cold anchors, shape change, total closure, or a
+/// closure build that would not amortize) run [`SerialAssigner`]
+/// verbatim — bit-identical output at the full `m·k` bill — and re-prime
+/// the anchors; `fallbacks` tallies them.
+#[derive(Clone, Debug)]
+pub struct ClosureAssigner {
+    expand: usize,
+    points: Vec<f64>,
+    d: usize,
+    k: usize,
+    /// Previous winner per point — the closure anchor of the next call.
+    assign: Vec<u32>,
+    stats: ClosureStats,
+    fallbacks: u64,
+}
+
+impl Default for ClosureAssigner {
+    fn default() -> Self {
+        Self::new(AssignCfg::default().closure_expand)
+    }
+}
+
+impl ClosureAssigner {
+    /// Candidate lists of `1 + expand` centroids. `expand` is clamped to
+    /// ≥ 1 so every warm-evaluated point keeps a genuine runner-up for
+    /// `d2` (BWKM's ε machinery would read `d2 = ∞` as a zero
+    /// misassignment bound otherwise).
+    pub fn new(expand: usize) -> Self {
+        ClosureAssigner {
+            expand: expand.max(1),
+            points: Vec::new(),
+            d: 0,
+            k: 0,
+            assign: Vec::new(),
+            stats: ClosureStats::default(),
+            fallbacks: 0,
+        }
+    }
+
+    pub fn expand(&self) -> usize {
+        self.expand
+    }
+
+    /// Exact account of the most recent call (DESIGN.md §2.4/§2.9).
+    pub fn last_stats(&self) -> ClosureStats {
+        self.stats
+    }
+
+    /// Would a call with these inputs reuse the cached anchors?
+    pub fn is_warm_for(&self, points: &[f64], d: usize, k: usize) -> bool {
+        self.d == d && self.k == k && self.points == points
+    }
+
+    /// Candidates per point a warm call would scan.
+    fn candidates(&self, k: usize) -> usize {
+        (self.expand + 1).min(k)
+    }
+
+    /// Is the closure scan a strict win over the exact `m·k` bill? False
+    /// when the closure would be total (`c == k`: nothing left to prune
+    /// — the degenerate "empty closure complement") or when the
+    /// `k·(k−1)/2` closure build would not amortize over `m` points, so
+    /// an approximate bill can never exceed the exact one.
+    pub fn approx_viable(&self, m: usize, k: usize) -> bool {
+        let c = self.candidates(k);
+        c < k && (k * (k - 1)) / 2 + m * c < m * k
+    }
+}
+
+/// The closure table of one centroid set: for every anchor centroid, the
+/// candidate list of itself plus its `c − 1` nearest other centroids
+/// (nearest-first selection, index tie-breaking, then re-sorted to
+/// ascending index so the strict-`<` candidate scan inherits the serial
+/// tie-breaking on the subset), plus the anchor's **rim** — the farthest
+/// member of its own closure. Returns `(closures, rims, bookkeeping)`
+/// where `closures` is k×c row-major and `bookkeeping = k·(k−1)/2`
+/// kernel evaluations.
+fn build_closures(centroids: &[f64], d: usize, k: usize, c: usize) -> (Vec<u32>, Vec<u32>, u64) {
+    let mut dist = vec![0.0f64; k * k];
+    for a in 0..k {
+        for b in (a + 1)..k {
+            let v =
+                sq_dist_kernel(&centroids[a * d..(a + 1) * d], &centroids[b * d..(b + 1) * d]);
+            dist[a * k + b] = v;
+            dist[b * k + a] = v;
+        }
+    }
+    let bookkeeping = (k * (k - 1) / 2) as u64;
+    let mut closures = vec![0u32; k * c];
+    let mut rims = vec![0u32; k];
+    let mut order: Vec<u32> = Vec::with_capacity(k);
+    for a in 0..k {
+        order.clear();
+        order.extend(0..k as u32);
+        order.sort_by(|&x, &y| {
+            let (dx, dy) = (dist[a * k + x as usize], dist[a * k + y as usize]);
+            dx.partial_cmp(&dy).expect("finite centroid distances").then(x.cmp(&y))
+        });
+        let sel = &mut closures[a * c..(a + 1) * c];
+        sel.copy_from_slice(&order[..c]);
+        rims[a] = sel[c - 1];
+        sel.sort_unstable();
+    }
+    (closures, rims, bookkeeping)
+}
+
+/// One approximate pass: each point scanned against the closure of its
+/// anchor (previous winner), exact kernel over the candidate subset.
+/// Returns the pass plus `(pairs, hits)`.
+fn closure_scan(
+    points: &[f64],
+    d: usize,
+    centroids: &[f64],
+    anchors: &[u32],
+    closures: &[u32],
+    c: usize,
+    rims: &[u32],
+) -> (AssignOut, u64, u64) {
+    let m = points.len() / d;
+    let mut out = AssignOut::with_capacity(m);
+    let mut hits = 0u64;
+    for i in 0..m {
+        let p = &points[i * d..(i + 1) * d];
+        let a = anchors[i] as usize;
+        let cand = &closures[a * c..(a + 1) * c];
+        let (mut i1, mut b1, mut b2) = (cand[0], f64::INFINITY, f64::INFINITY);
+        for &cc in cand {
+            let v = sq_dist_kernel(p, &centroids[cc as usize * d..(cc as usize + 1) * d]);
+            if v < b1 {
+                b2 = b1;
+                b1 = v;
+                i1 = cc;
+            } else if v < b2 {
+                b2 = v;
+            }
+        }
+        if i1 != rims[a] {
+            hits += 1;
+        }
+        out.assign.push(i1);
+        out.d1.push(b1);
+        out.d2.push(b2);
+    }
+    (out, (m * c) as u64, hits)
+}
+
+impl Assigner for ClosureAssigner {
+    fn assign_top2(
+        &mut self,
+        points: &[f64],
+        d: usize,
+        centroids: &[f64],
+        counter: &DistanceCounter,
+    ) -> AssignOut {
+        let m = points.len() / d;
+        let k = centroids.len() / d;
+        if !self.is_warm_for(points, d, k) || !self.approx_viable(m, k) {
+            // Exact fallback (cold anchors, shape change, or a closure
+            // that would be total / would not amortize): the serial
+            // engine at its full `m·k` bill, which also re-primes the
+            // anchors.
+            let out = SerialAssigner.assign_top2(points, d, centroids, counter);
+            self.points.clear();
+            self.points.extend_from_slice(points);
+            self.d = d;
+            self.k = k;
+            self.assign.clear();
+            self.assign.extend_from_slice(&out.assign);
+            self.fallbacks += 1;
+            self.stats = ClosureStats {
+                pairs: (m as u64) * (k as u64),
+                bookkeeping: 0,
+                bill: (m as u64) * (k as u64),
+                warm: false,
+                candidates: 0,
+                hits: m as u64,
+                points: m as u64,
+                fallbacks: self.fallbacks,
+            };
+            return out;
+        }
+        let c = self.candidates(k);
+        let (closures, rims, bookkeeping) = build_closures(centroids, d, k, c);
+        let (out, pairs, hits) =
+            closure_scan(points, d, centroids, &self.assign, &closures, c, &rims);
+        counter.add(pairs + bookkeeping);
+        self.assign.copy_from_slice(&out.assign);
+        self.stats = ClosureStats {
+            pairs,
+            bookkeeping,
+            bill: (m as u64) * (k as u64),
+            warm: true,
+            candidates: c,
+            hits,
+            points: m as u64,
+            fallbacks: self.fallbacks,
+        };
+        out
+    }
+
+    /// Measured E-vs-exact of the state this backend is in *right now*:
+    /// replays the scan the next warm call would run (read-only — the
+    /// anchors are untouched) against a serial pass, both on private
+    /// counters (uncounted instrumentation, DESIGN.md §2.4). The weighted
+    /// errors are accumulated in row order on both sides, so
+    /// `approx_err ≥ exact_err` holds exactly (each term is a min over a
+    /// subset of the same kernel values; rounded summation is monotone).
+    fn quality_gap(
+        &mut self,
+        points: &[f64],
+        weights: Option<&[f64]>,
+        d: usize,
+        centroids: &[f64],
+    ) -> Option<QualityGap> {
+        let m = points.len() / d;
+        let k = centroids.len() / d;
+        let probe = DistanceCounter::new();
+        let exact = SerialAssigner.assign_top2(points, d, centroids, &probe);
+        let wsum = |out: &AssignOut| {
+            let mut e = 0.0f64;
+            for i in 0..m {
+                e += weights.map_or(1.0, |w| w[i]) * out.d1[i];
+            }
+            e
+        };
+        let exact_err = wsum(&exact);
+        let approx_err = if self.is_warm_for(points, d, k) && self.approx_viable(m, k) {
+            let c = self.candidates(k);
+            let (closures, rims, _) = build_closures(centroids, d, k, c);
+            let (out, _, _) =
+                closure_scan(points, d, centroids, &self.assign, &closures, c, &rims);
+            wsum(&out)
+        } else {
+            // The next call would fall back to the exact engine.
+            exact_err
+        };
+        Some(QualityGap {
+            backend: "closure",
+            approx_err,
+            exact_err,
+            hit_rate: self.stats.hit_rate(),
+            fallbacks: self.fallbacks,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Per-step backend auto-selection (DESIGN.md §2.7).
 // ---------------------------------------------------------------------------
 
@@ -812,6 +1193,10 @@ const AUTO_MIN_RATE: f64 = 0.2;
 /// While demoted to norm pruning, re-probe the bounds every this many
 /// warm steps (drifts shrink as Lloyd converges, so bounds recover).
 const AUTO_PROBE_EVERY: u64 = 8;
+/// Approximate regime only: keep the closure backend while its observed
+/// hit rate holds at least this fraction (the §2.9 analogue of
+/// [`AUTO_MIN_RATE`]).
+const AUTO_MIN_HIT: f64 = 0.5;
 
 /// A backend [`AutoAssigner`] can select. One enum drives dispatch, the
 /// choice tally *and* the note log, so the three can never disagree.
@@ -820,15 +1205,64 @@ pub enum AutoChoice {
     Serial = 0,
     NormPruned = 1,
     Bounded = 2,
+    /// The approximate closure backend — selectable only after
+    /// [`AutoAssigner::with_closure`] opted the engine into the
+    /// approximate regime (DESIGN.md §2.9); the default engine never
+    /// picks it.
+    Closure = 3,
 }
 
 impl AutoChoice {
+    /// Every selectable backend, in discriminant order.
+    pub const ALL: [AutoChoice; 4] =
+        [AutoChoice::Serial, AutoChoice::NormPruned, AutoChoice::Bounded, AutoChoice::Closure];
+
     pub fn name(self) -> &'static str {
         match self {
             AutoChoice::Serial => "serial",
             AutoChoice::NormPruned => "normpruned",
             AutoChoice::Bounded => "bounded",
+            AutoChoice::Closure => "closure",
         }
+    }
+}
+
+/// Per-[`AutoChoice`] selection tallies — the structured form of the
+/// per-step note log, keyed by choice rather than by tuple position so a
+/// new backend can never silently alias an existing counter.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ChoiceCounts {
+    counts: [u64; 4],
+}
+
+impl ChoiceCounts {
+    /// How often `choice` was selected.
+    pub fn get(&self, choice: AutoChoice) -> u64 {
+        self.counts[choice as usize]
+    }
+
+    /// Total calls tallied.
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// `(choice, count)` pairs in discriminant order.
+    pub fn iter(&self) -> impl Iterator<Item = (AutoChoice, u64)> + '_ {
+        AutoChoice::ALL.iter().map(move |&c| (c, self.get(c)))
+    }
+
+    /// `"serial:a normpruned:b bounded:c closure:d"` — the bench-report
+    /// column form.
+    pub fn summary(&self) -> String {
+        AutoChoice::ALL
+            .iter()
+            .map(|&c| format!("{}:{}", c.name(), self.get(c)))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+
+    fn bump(&mut self, choice: AutoChoice) {
+        self.counts[choice as usize] += 1;
     }
 }
 
@@ -847,28 +1281,41 @@ impl AutoChoice {
 /// backend while its last prune rate holds above 20%, demoting to the
 /// stateless norm-pruned backend otherwise, with a bounded re-probe every
 /// 8th warm step.
+///
+/// **Approximate regime (opt-in):** [`with_closure`](Self::with_closure)
+/// adds the [`ClosureAssigner`] as a fourth selectable choice, preferred
+/// while its observed hit rate holds ≥ 50% (DESIGN.md §2.9). The default
+/// (`new`) engine never selects it, so exact auto runs stay bit-identical
+/// to serial.
 #[derive(Clone, Debug)]
 pub struct AutoAssigner {
     bounded: BoundedAssigner,
+    /// The approximate fourth choice; `None` on the default exact engine.
+    closure: Option<ClosureAssigner>,
     step: u64,
     warm_steps: u64,
     last_rate: f64,
+    /// Observed closure hit rate (approximate regime only; 1.0 before
+    /// any closure call).
+    last_hit: f64,
     last_choice: Option<AutoChoice>,
-    /// Selection tallies indexed by [`AutoChoice`] discriminant — the
-    /// structured form of the per-step note log, for reports that
-    /// aggregate choices rather than replay them.
-    choices: [u64; 3],
+    /// Per-choice selection tallies — the structured form of the
+    /// per-step note log, for reports that aggregate choices rather than
+    /// replay them.
+    choices: ChoiceCounts,
 }
 
 impl Default for AutoAssigner {
     fn default() -> Self {
         AutoAssigner {
             bounded: BoundedAssigner::new(),
+            closure: None,
             step: 0,
             warm_steps: 0,
             last_rate: 1.0,
+            last_hit: 1.0,
             last_choice: None,
-            choices: [0; 3],
+            choices: ChoiceCounts::default(),
         }
     }
 }
@@ -878,21 +1325,70 @@ impl AutoAssigner {
         Self::default()
     }
 
+    /// Opt the auto policy into the approximate regime (DESIGN.md §2.9):
+    /// the [`ClosureAssigner`] with the given `expand` becomes a fourth
+    /// selectable backend, learned from its observed hit rate.
+    pub fn with_closure(expand: usize) -> Self {
+        AutoAssigner { closure: Some(ClosureAssigner::new(expand)), ..Self::default() }
+    }
+
     /// The backend the most recent call ran on (`"none"` before any
     /// call).
     pub fn last_choice(&self) -> &'static str {
         self.last_choice.map(AutoChoice::name).unwrap_or("none")
     }
 
-    /// How often each backend was selected: (serial, normpruned,
-    /// bounded).
-    pub fn choice_counts(&self) -> (u64, u64, u64) {
-        (self.choices[0], self.choices[1], self.choices[2])
+    /// How often each backend was selected, keyed by [`AutoChoice`].
+    pub fn choice_counts(&self) -> ChoiceCounts {
+        self.choices
     }
 
     /// The bounded backend's most recent stats (for bench columns).
     pub fn last_bounded_stats(&self) -> BoundedStats {
         self.bounded.last_stats()
+    }
+
+    /// The approximate-regime policy (DESIGN.md §2.9): run the closure
+    /// backend — whose cold calls are its own exact re-priming fallback —
+    /// while its observed hit rate holds ≥ [`AUTO_MIN_HIT`], demoting to
+    /// the stateless exact norm-pruned backend otherwise, with a closure
+    /// re-probe every [`AUTO_PROBE_EVERY`]-th warm step (anchors stay
+    /// valid while the points do, so the closure can recover).
+    fn assign_closure(
+        &mut self,
+        points: &[f64],
+        d: usize,
+        centroids: &[f64],
+        counter: &DistanceCounter,
+        m: usize,
+        k: usize,
+    ) -> AssignOut {
+        let warm = self.closure.as_ref().map_or(false, |cl| cl.is_warm_for(points, d, k));
+        self.warm_steps = if warm { self.warm_steps + 1 } else { 0 };
+        let choice = if self.last_hit >= AUTO_MIN_HIT || self.warm_steps % AUTO_PROBE_EVERY == 0 {
+            AutoChoice::Closure
+        } else {
+            AutoChoice::NormPruned
+        };
+        let out = match choice {
+            AutoChoice::Closure => {
+                let cl = self.closure.as_mut().expect("closure policy without a backend");
+                let out = cl.assign_top2(points, d, centroids, counter);
+                self.last_hit = cl.last_stats().hit_rate();
+                out
+            }
+            _ => NormPrunedAssigner.assign_top2(points, d, centroids, counter),
+        };
+        self.step += 1;
+        self.last_choice = Some(choice);
+        self.choices.bump(choice);
+        counter.note(format!(
+            "auto[{}]: {} (m={m} k={k} d={d} warm={warm} hit={:.0}%)",
+            self.step,
+            choice.name(),
+            self.last_hit * 100.0
+        ));
+        out
     }
 }
 
@@ -906,6 +1402,9 @@ impl Assigner for AutoAssigner {
     ) -> AssignOut {
         let m = points.len() / d;
         let k = centroids.len() / d;
+        if self.closure.is_some() {
+            return self.assign_closure(points, d, centroids, counter, m, k);
+        }
         let warm = self.bounded.is_warm_for(points, d, k);
         self.warm_steps = if warm { self.warm_steps + 1 } else { 0 };
         let choice = if !warm {
@@ -936,11 +1435,13 @@ impl Assigner for AutoAssigner {
                 out
             }
             AutoChoice::Serial => SerialAssigner.assign_top2(points, d, centroids, counter),
-            AutoChoice::NormPruned => NormPrunedAssigner.assign_top2(points, d, centroids, counter),
+            AutoChoice::NormPruned | AutoChoice::Closure => {
+                NormPrunedAssigner.assign_top2(points, d, centroids, counter)
+            }
         };
         self.step += 1;
         self.last_choice = Some(choice);
-        self.choices[choice as usize] += 1;
+        self.choices.bump(choice);
         counter.note(format!(
             "auto[{}]: {} (m={m} k={k} d={d} warm={warm} prune={:.0}%)",
             self.step,
@@ -948,6 +1449,18 @@ impl Assigner for AutoAssigner {
             self.last_rate * 100.0
         ));
         out
+    }
+
+    /// Exact-mode auto has no gap to report; the approximate regime
+    /// delegates to its closure backend (DESIGN.md §2.9).
+    fn quality_gap(
+        &mut self,
+        points: &[f64],
+        weights: Option<&[f64]>,
+        d: usize,
+        centroids: &[f64],
+    ) -> Option<QualityGap> {
+        self.closure.as_mut()?.quality_gap(points, weights, d, centroids)
     }
 }
 
@@ -1485,5 +1998,105 @@ mod tests {
         let c2 = counter();
         let _ = auto.assign_top2(&tiny, d, &cents, &c2);
         assert!(c2.notes()[0].contains("serial"), "{:?}", c2.notes());
+    }
+
+    #[test]
+    fn closure_cold_and_total_calls_are_exact_fallbacks() {
+        // Cold anchors and total closures (expand ≥ k−1) both route
+        // through the serial engine: bit-identical output, the exact
+        // `m·k` bill, and a tallied fallback (DESIGN.md §2.9).
+        let mut g = prop::Gen { rng: crate::util::Rng::new(31), case: 0 };
+        let (m, d, k) = (120, 3, 4);
+        let reps = g.cloud(m, d, 2.0);
+        let cents = g.cloud(k, d, 2.0);
+        let mut cl = ClosureAssigner::new(9); // 1+9 ≥ k ⇒ total closure
+        let c = counter();
+        for step in 0..3u64 {
+            let serial = SerialAssigner.assign_top2(&reps, d, &cents, &counter());
+            let before = c.get();
+            let out = cl.assign_top2(&reps, d, &cents, &c);
+            assert_eq!(serial, out, "step {step}");
+            let stats = cl.last_stats();
+            assert!(!stats.warm);
+            assert_eq!(c.get() - before, stats.pairs + stats.bookkeeping);
+            assert_eq!(stats.pairs, (m * k) as u64);
+            assert_eq!(stats.fallbacks, step + 1);
+            assert_eq!(stats.hit_rate(), 1.0);
+        }
+    }
+
+    #[test]
+    fn closure_warm_call_pays_exactly_its_own_account() {
+        let mut g = prop::Gen { rng: crate::util::Rng::new(32), case: 0 };
+        let (m, d, k) = (200, 3, 8);
+        let reps = g.cloud(m, d, 2.0);
+        let mut cents = g.cloud(k, d, 2.0);
+        let mut cl = ClosureAssigner::new(2);
+        let c = counter();
+        let _ = cl.assign_top2(&reps, d, &cents, &c); // cold prime
+        assert!(!cl.last_stats().warm);
+        for v in cents.iter_mut() {
+            *v += g.rng.normal() * 0.05;
+        }
+        let before = c.get();
+        let out = cl.assign_top2(&reps, d, &cents, &c);
+        let stats = cl.last_stats();
+        assert!(stats.warm);
+        // The §2.9 bill pin: counter delta == pairs + bookkeeping, with
+        // pairs = m·(1+expand) and bookkeeping = k·(k−1)/2, strictly
+        // under the exact m·k bill.
+        assert_eq!(c.get() - before, stats.pairs + stats.bookkeeping);
+        assert_eq!(stats.pairs, (m * 3) as u64);
+        assert_eq!(stats.bookkeeping, (k * (k - 1) / 2) as u64);
+        assert_eq!(stats.bill, (m * k) as u64);
+        assert!(stats.pairs + stats.bookkeeping < stats.bill);
+        // expand ≥ 1 guarantees a genuine runner-up on warm calls.
+        assert!(out.d2.iter().all(|v| v.is_finite()));
+        // The gap self-report is available, ordered, and uncounted.
+        let after = c.get();
+        let gap = cl
+            .quality_gap(&reps, None, d, &cents)
+            .expect("approximate backends always report a gap");
+        assert_eq!(gap.backend, "closure");
+        assert!(gap.approx_err >= gap.exact_err);
+        assert!(gap.rel_gap() >= 0.0);
+        assert_eq!(c.get(), after, "gap measurement is uncounted instrumentation");
+    }
+
+    #[test]
+    fn closure_expand_is_clamped_to_one() {
+        assert_eq!(ClosureAssigner::new(0).expand(), 1);
+    }
+
+    #[test]
+    fn auto_with_closure_selects_logs_and_reports() {
+        let mut g = prop::Gen { rng: crate::util::Rng::new(33), case: 0 };
+        let (m, d, k) = (300, 3, 6);
+        let reps = g.cloud(m, d, 2.0);
+        let mut cents = g.cloud(k, d, 2.0);
+        let mut auto = AutoAssigner::with_closure(2);
+        let c = counter();
+        for _ in 0..4 {
+            let _ = auto.assign_top2(&reps, d, &cents, &c);
+            for v in cents.iter_mut() {
+                *v += g.rng.normal() * 0.02;
+            }
+        }
+        let counts = auto.choice_counts();
+        assert_eq!(counts.total(), 4);
+        assert!(counts.get(AutoChoice::Closure) >= 1, "{}", counts.summary());
+        let notes = c.notes();
+        assert!(notes[0].starts_with("auto[1]: closure ("), "{:?}", notes);
+        assert!(notes[0].contains("hit="), "{:?}", notes);
+        assert!(
+            auto.quality_gap(&reps, None, d, &cents).is_some(),
+            "approximate auto must self-report a gap"
+        );
+        // The exact engine never selects (or reports) the closure.
+        let mut exact = AutoAssigner::new();
+        let c2 = counter();
+        let _ = exact.assign_top2(&reps, d, &cents, &c2);
+        assert_eq!(exact.choice_counts().get(AutoChoice::Closure), 0);
+        assert!(exact.quality_gap(&reps, None, d, &cents).is_none());
     }
 }

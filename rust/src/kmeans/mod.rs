@@ -21,16 +21,17 @@ pub mod pruning;
 pub mod weighted_lloyd;
 
 pub use assign::{
-    Assigner, AssignOut, AutoAssigner, AutoChoice, BoundedAssigner, BoundedStats,
-    NormPrunedAssigner, SerialAssigner, Sharded, ShardedAssigner,
+    AssignCfg, AssignMode, Assigner, AssignOut, AutoAssigner, AutoChoice, BoundedAssigner,
+    BoundedStats, ChoiceCounts, ClosureAssigner, ClosureStats, NormPrunedAssigner,
+    SerialAssigner, Sharded, ShardedAssigner,
 };
 pub use init::{KmeansParSeeder, ParCfg, SeedMethod, SeedPolicy, Seeder};
 pub use elkan::{elkan_weighted_lloyd, ElkanOutcome};
 pub use lloyd::{lloyd, LloydCfg, LloydOutcome};
 pub use minibatch::{minibatch_kmeans, MiniBatchCfg};
 pub use weighted_lloyd::{
-    weighted_lloyd, weighted_lloyd_with, EngineStepper, NativeStepper, StepOut, Stepper,
-    WLloydCfg, WLloydOutcome,
+    stepper_for, weighted_lloyd, weighted_lloyd_with, EngineStepper, NativeStepper, SampleStats,
+    SampledStepper, StepOut, Stepper, WLloydCfg, WLloydOutcome,
 };
 
 /// Output of any end-to-end clustering method, as the bench harness

@@ -18,9 +18,13 @@
 //! cross-iteration pruned ones (DESIGN.md §2.7). This module owns only
 //! the iteration/stopping logic.
 
-use crate::metrics::{Budget, DistanceCounter};
+use crate::metrics::{Budget, DistanceCounter, QualityGap};
+use crate::util::Rng;
 
-use super::assign::{weighted_step_with, Assigner, SerialAssigner, StepScratch};
+use super::assign::{
+    sq_dist_kernel, weighted_step_with, AssignCfg, AssignMode, Assigner, ClosureAssigner,
+    SerialAssigner, StepScratch,
+};
 
 /// Result of one weighted-Lloyd iteration.
 #[derive(Clone, Debug)]
@@ -40,7 +44,9 @@ pub struct StepOut {
 /// One weighted-Lloyd iteration (assignment + update) over representatives.
 pub trait Stepper {
     /// `reps`: m×d flat, `weights`: m, `centroids`: k×d flat.
-    /// Implementations must count m·k distances on `counter`.
+    /// Exact implementations must count m·k distances on `counter`;
+    /// approximate ones (DESIGN.md §2.9) count exactly what they compute
+    /// and self-report the difference through [`Stepper::quality_gap`].
     fn step(
         &mut self,
         reps: &[f64],
@@ -49,6 +55,20 @@ pub trait Stepper {
         centroids: &[f64],
         counter: &DistanceCounter,
     ) -> StepOut;
+
+    /// The approximate regime's self-report hook (DESIGN.md §2.9):
+    /// measured E-vs-exact of this stepper's current approximation, as
+    /// uncounted instrumentation (§2.4). Exact steppers — every stepper
+    /// by default — return `None`.
+    fn quality_gap(
+        &mut self,
+        _reps: &[f64],
+        _weights: &[f64],
+        _d: usize,
+        _centroids: &[f64],
+    ) -> Option<QualityGap> {
+        None
+    }
 }
 
 /// A [`Stepper`] over any assignment-engine backend (DESIGN.md §2.2): one
@@ -112,6 +132,280 @@ impl<B: Assigner> Stepper for EngineStepper<B> {
             centroids,
             counter,
         )
+    }
+
+    /// Forward to the engine: an approximate backend (the closure
+    /// assigner, or auto in the approximate regime) reports through the
+    /// stepper it is wrapped in.
+    fn quality_gap(
+        &mut self,
+        reps: &[f64],
+        weights: &[f64],
+        d: usize,
+        centroids: &[f64],
+    ) -> Option<QualityGap> {
+        self.engine.quality_gap(reps, Some(weights), d, centroids)
+    }
+}
+
+/// What the [`SampledStepper`] charged on its most recent call — the
+/// backend's own exact account of its `DistanceCounter` activity, pinned
+/// by the conformance suite with `counter delta == pairs` (sampling has
+/// no bookkeeping distances: the index draw is distance-free).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SampleStats {
+    /// Point–centroid pairs evaluated through the engine (`rows·k`).
+    pub pairs: u64,
+    /// The full `m·k` an exact step would have paid.
+    pub bill: u64,
+    /// Rows assigned this call (`m` exact, `s` sampled).
+    pub rows: u64,
+    /// Whether this call ran the exact full-set path.
+    pub exact: bool,
+    /// Cumulative exact calls over the stepper's lifetime (cold primes
+    /// and `sample_rows ≥ m` calls included).
+    pub fallbacks: u64,
+}
+
+/// The Big-means-style **approximate** stepper (DESIGN.md §2.9, after
+/// "How to Use K-means for Big Data Clustering?", PAPERS.md): each
+/// weighted-Lloyd step runs on a deterministic seeded subsample of
+/// `sample_rows` representatives, with the sampled weights rescaled by
+/// `W_total / W_sample` so cluster masses stay calibrated.
+///
+/// The [`Stepper`] contract wants per-row `assign`/`d1`/`d2` for *all* m
+/// rows (BWKM's ε machinery reads them), so the first call on a new
+/// representative set is a full **exact** step that primes the per-row
+/// state; warm sampled calls refresh the `s` drawn rows and retain the
+/// previous values everywhere else. `sample_rows ≥ m` (or a sampled
+/// weight mass of zero) also routes through the exact step — which is
+/// what makes the `sample_rows = n == exact` conformance pin hold by
+/// construction. The index stream is a **private** [`Rng`] seeded from
+/// `AssignCfg::sample_seed`, so the caller's draw sequence is identical
+/// across `assign=` modes.
+#[derive(Clone, Debug)]
+pub struct SampledStepper {
+    sample_rows: usize,
+    rng: Rng,
+    engine: SerialAssigner,
+    scratch: StepScratch,
+    // Cached inputs + retained per-row state (the warmth check is by
+    // value, like the bounded/closure backends).
+    points: Vec<f64>,
+    d: usize,
+    k: usize,
+    assign: Vec<u32>,
+    d1: Vec<f64>,
+    d2: Vec<f64>,
+    // Sampled-accumulation scratch (StepScratch's fields are private to
+    // the assign module, so the sampled path owns its own).
+    sums: Vec<f64>,
+    counts: Vec<f64>,
+    stats: SampleStats,
+}
+
+impl SampledStepper {
+    pub fn new(sample_rows: usize, seed: u64) -> Self {
+        SampledStepper {
+            sample_rows,
+            rng: Rng::new(seed),
+            engine: SerialAssigner,
+            scratch: StepScratch::default(),
+            points: Vec::new(),
+            d: 0,
+            k: 0,
+            assign: Vec::new(),
+            d1: Vec::new(),
+            d2: Vec::new(),
+            sums: Vec::new(),
+            counts: Vec::new(),
+            stats: SampleStats::default(),
+        }
+    }
+
+    pub fn sample_rows(&self) -> usize {
+        self.sample_rows
+    }
+
+    /// Exact account of the most recent call (DESIGN.md §2.4/§2.9).
+    pub fn last_stats(&self) -> SampleStats {
+        self.stats
+    }
+
+    /// Would a call with these inputs run the sampled path?
+    pub fn is_warm_for(&self, reps: &[f64], d: usize, k: usize) -> bool {
+        self.d == d && self.k == k && self.points == reps
+    }
+
+    /// The exact full-set step: bit-identical to [`NativeStepper`] (same
+    /// engine, same serial accumulation), priming the retained per-row
+    /// state and paying exactly `m·k`.
+    fn exact_step(
+        &mut self,
+        reps: &[f64],
+        weights: &[f64],
+        d: usize,
+        centroids: &[f64],
+        counter: &DistanceCounter,
+    ) -> StepOut {
+        let m = weights.len();
+        let k = centroids.len() / d;
+        let out =
+            weighted_step_with(&mut self.engine, &mut self.scratch, reps, weights, d, centroids, counter);
+        self.points.clear();
+        self.points.extend_from_slice(reps);
+        self.d = d;
+        self.k = k;
+        self.assign.clone_from(&out.assign);
+        self.d1.clone_from(&out.d1);
+        self.d2.clone_from(&out.d2);
+        self.stats = SampleStats {
+            pairs: (m as u64) * (k as u64),
+            bill: (m as u64) * (k as u64),
+            rows: m as u64,
+            exact: true,
+            fallbacks: self.stats.fallbacks + 1,
+        };
+        out
+    }
+}
+
+impl Stepper for SampledStepper {
+    fn step(
+        &mut self,
+        reps: &[f64],
+        weights: &[f64],
+        d: usize,
+        centroids: &[f64],
+        counter: &DistanceCounter,
+    ) -> StepOut {
+        let m = weights.len();
+        let k = centroids.len() / d;
+        let s = self.sample_rows;
+        if !self.is_warm_for(reps, d, k) || s == 0 || s >= m {
+            return self.exact_step(reps, weights, d, centroids, counter);
+        }
+        // Deterministic distinct sample, sorted ascending so the sampled
+        // accumulation visits rows in global row order.
+        let mut idx = self.rng.sample_indices(m, s);
+        idx.sort_unstable();
+        let w_total: f64 = weights.iter().sum();
+        let w_sample: f64 = idx.iter().map(|&i| weights[i]).sum();
+        if !(w_sample > 0.0) {
+            // Degenerate draw (all-zero weights): nothing to rescale by.
+            return self.exact_step(reps, weights, d, centroids, counter);
+        }
+        let scale = w_total / w_sample;
+
+        let mut srows = Vec::with_capacity(s * d);
+        for &i in &idx {
+            srows.extend_from_slice(&reps[i * d..(i + 1) * d]);
+        }
+        // Engine assignment over the sample: counts exactly s·k.
+        let top2 = self.engine.assign_top2(&srows, d, centroids, counter);
+
+        self.sums.clear();
+        self.sums.resize(k * d, 0.0);
+        self.counts.clear();
+        self.counts.resize(k, 0.0);
+        let mut werr = 0.0f64;
+        for (j, &i) in idx.iter().enumerate() {
+            let w = weights[i] * scale;
+            werr += w * top2.d1[j];
+            let c = top2.assign[j] as usize;
+            let p = &srows[j * d..(j + 1) * d];
+            let sum = &mut self.sums[c * d..(c + 1) * d];
+            for t in 0..d {
+                sum[t] += w * p[t];
+            }
+            self.counts[c] += w;
+            // Refresh the retained per-row state at the sampled rows; the
+            // unsampled rows keep their last known values.
+            self.assign[i] = top2.assign[j];
+            self.d1[i] = top2.d1[j];
+            self.d2[i] = top2.d2[j];
+        }
+        let mut cents = centroids.to_vec();
+        for c in 0..k {
+            if self.counts[c] > 0.0 {
+                let inv = 1.0 / self.counts[c];
+                for t in 0..d {
+                    cents[c * d + t] = self.sums[c * d + t] * inv;
+                }
+            }
+        }
+        self.stats = SampleStats {
+            pairs: (s as u64) * (k as u64),
+            bill: (m as u64) * (k as u64),
+            rows: s as u64,
+            exact: false,
+            fallbacks: self.stats.fallbacks,
+        };
+        StepOut {
+            centroids: cents,
+            assign: self.assign.clone(),
+            d1: self.d1.clone(),
+            d2: self.d2.clone(),
+            werr,
+        }
+    }
+
+    /// Measured E-vs-exact of the retained (possibly stale) per-row
+    /// assignment against the given centroids, on private counters
+    /// (uncounted instrumentation). Scoring a fixed assignment can only
+    /// overestimate: `approx_err ≥ exact_err` holds exactly (same kernel
+    /// values, row-order monotone summation). `hit_rate` reports the
+    /// fraction of rows the last call refreshed.
+    fn quality_gap(
+        &mut self,
+        reps: &[f64],
+        weights: &[f64],
+        d: usize,
+        centroids: &[f64],
+    ) -> Option<QualityGap> {
+        let m = weights.len();
+        let k = centroids.len() / d;
+        let probe = DistanceCounter::new();
+        let exact = SerialAssigner.assign_top2(reps, d, centroids, &probe);
+        let mut exact_err = 0.0f64;
+        for i in 0..m {
+            exact_err += weights[i] * exact.d1[i];
+        }
+        let approx_err = if self.is_warm_for(reps, d, k) {
+            let mut e = 0.0f64;
+            for i in 0..m {
+                let c = self.assign[i] as usize;
+                e += weights[i]
+                    * sq_dist_kernel(&reps[i * d..(i + 1) * d], &centroids[c * d..(c + 1) * d]);
+            }
+            e
+        } else {
+            // The next call would run the exact step.
+            exact_err
+        };
+        let coverage = if m == 0 { 1.0 } else { (self.stats.rows as f64 / m as f64).min(1.0) };
+        Some(QualityGap {
+            backend: "sampled",
+            approx_err,
+            exact_err,
+            hit_rate: coverage,
+            fallbacks: self.stats.fallbacks,
+        })
+    }
+}
+
+/// Build the weighted-Lloyd stepper an [`AssignCfg`] asks for
+/// (DESIGN.md §2.9): the shared dispatch behind `bwkm::run`, the grid
+/// RPKM baseline, the out-of-core coordinator and the CLI's `assign=`
+/// key. Exact mode returns the plain [`NativeStepper`]; the approximate
+/// modes wrap their backend with a serial inner engine.
+pub fn stepper_for(assign: &AssignCfg) -> Box<dyn Stepper> {
+    match assign.mode {
+        AssignMode::Exact => Box::new(NativeStepper::new()),
+        AssignMode::Closure => {
+            Box::new(EngineStepper::with_engine(ClosureAssigner::new(assign.closure_expand)))
+        }
+        AssignMode::Sampled => Box::new(SampledStepper::new(assign.sample_rows, assign.sample_seed)),
     }
 }
 
@@ -327,5 +621,112 @@ mod tests {
         let a = [0.0, 0.0, 1.0, 1.0];
         let b = [3.0, 4.0, 1.0, 1.0];
         assert!((max_shift(&a, &b, 2, 2) - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sampled_full_sample_is_exactly_the_exact_step() {
+        // sample_rows ≥ m routes through the exact path: bit-identical
+        // to NativeStepper at the identical m·k count, every call.
+        let mut g = prop::Gen { rng: crate::util::Rng::new(41), case: 0 };
+        let (m, d, k) = (80, 3, 4);
+        let reps = g.cloud(m, d, 2.0);
+        let weights: Vec<f64> = (0..m).map(|_| g.int(1, 5) as f64).collect();
+        let mut cents = g.cloud(k, d, 2.0);
+        let mut native = NativeStepper::new();
+        let mut sampled = SampledStepper::new(m, 0xB16D);
+        for step in 0..4 {
+            let c1 = counter();
+            let a = native.step(&reps, &weights, d, &cents, &c1);
+            let c2 = counter();
+            let b = sampled.step(&reps, &weights, d, &cents, &c2);
+            assert_eq!(a.assign, b.assign, "step {step}");
+            assert_eq!(a.d1, b.d1);
+            assert_eq!(a.d2, b.d2);
+            assert_eq!(a.centroids, b.centroids);
+            assert_eq!(a.werr.to_bits(), b.werr.to_bits());
+            assert_eq!(c1.get(), c2.get());
+            assert!(sampled.last_stats().exact);
+            cents = a.centroids;
+        }
+    }
+
+    #[test]
+    fn sampled_warm_step_pays_exactly_its_own_account() {
+        let mut g = prop::Gen { rng: crate::util::Rng::new(42), case: 0 };
+        let (m, d, k, s) = (120, 3, 4, 30);
+        let reps = g.cloud(m, d, 2.0);
+        let weights: Vec<f64> = (0..m).map(|_| g.int(1, 5) as f64).collect();
+        let cents = g.cloud(k, d, 2.0);
+        let mut sampled = SampledStepper::new(s, 0xB16D);
+        let c = counter();
+        let _ = sampled.step(&reps, &weights, d, &cents, &c);
+        // Cold prime: the exact step at m·k.
+        assert!(sampled.last_stats().exact);
+        assert_eq!(c.get(), (m * k) as u64);
+        let before = c.get();
+        let out = sampled.step(&reps, &weights, d, &cents, &c);
+        let stats = sampled.last_stats();
+        assert!(!stats.exact);
+        assert_eq!(stats.pairs, (s * k) as u64);
+        assert_eq!(stats.bill, (m * k) as u64);
+        assert_eq!(c.get() - before, stats.pairs, "counter delta == own account");
+        assert_eq!(out.assign.len(), m, "full per-row state retained");
+        assert_eq!(out.d1.len(), m);
+        // Gap self-report: present, ordered, uncounted.
+        let after = c.get();
+        let gap = Stepper::quality_gap(&mut sampled, &reps, &weights, d, &cents)
+            .expect("sampled stepper always reports");
+        assert_eq!(gap.backend, "sampled");
+        assert!(gap.approx_err >= gap.exact_err);
+        assert!((gap.hit_rate - s as f64 / m as f64).abs() < 1e-15);
+        assert_eq!(c.get(), after);
+    }
+
+    #[test]
+    fn sampled_reruns_are_deterministic() {
+        // Same seed ⇒ identical draw sequence ⇒ identical outputs, bills
+        // and fallback tallies across reruns.
+        let mut g = prop::Gen { rng: crate::util::Rng::new(43), case: 0 };
+        let (m, d, k, s) = (100, 2, 3, 25);
+        let reps = g.cloud(m, d, 2.0);
+        let weights = vec![1.0; m];
+        let cents = g.cloud(k, d, 2.0);
+        let run = |seed: u64| {
+            let mut st = SampledStepper::new(s, seed);
+            let c = counter();
+            let mut cur = cents.clone();
+            let mut outs = Vec::new();
+            for _ in 0..4 {
+                let o = st.step(&reps, &weights, d, &cur, &c);
+                cur = o.centroids.clone();
+                outs.push(o);
+            }
+            (outs, c.get(), st.last_stats().fallbacks)
+        };
+        let (a, ca, fa) = run(7);
+        let (b, cb, fb) = run(7);
+        assert_eq!(ca, cb);
+        assert_eq!(fa, fb);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.assign, y.assign);
+            assert_eq!(x.centroids, y.centroids);
+            assert_eq!(x.werr.to_bits(), y.werr.to_bits());
+        }
+        let (c3, _, _) = run(8);
+        assert!(
+            a.iter().zip(&c3).any(|(x, y)| x.centroids != y.centroids),
+            "a different seed should draw a different sample"
+        );
+    }
+
+    #[test]
+    fn stepper_for_dispatches_on_mode() {
+        let mut cfg = AssignCfg::default();
+        assert!(stepper_for(&cfg).quality_gap(&[0.0], &[1.0], 1, &[0.0]).is_none());
+        cfg.mode = AssignMode::Closure;
+        assert!(stepper_for(&cfg).quality_gap(&[0.0], &[1.0], 1, &[0.0]).is_some());
+        cfg.mode = AssignMode::Sampled;
+        cfg.sample_rows = 1;
+        assert!(stepper_for(&cfg).quality_gap(&[0.0], &[1.0], 1, &[0.0]).is_some());
     }
 }

@@ -1,8 +1,11 @@
 //! Measurement substrate: exact distance-computation accounting (the
-//! paper's cost metric) and the error functions of Eq. 1 / Eq. 6.
+//! paper's cost metric), the error functions of Eq. 1 / Eq. 6, and the
+//! approximate regime's measured quality record (DESIGN.md §2.9).
 
 pub mod counter;
 pub mod error;
+pub mod quality;
 
 pub use counter::{Budget, DistanceCounter};
 pub use error::{kmeans_error, nearest, nearest2, relative_error, weighted_error};
+pub use quality::QualityGap;

@@ -1,0 +1,99 @@
+//! The approximate regime's quality record (DESIGN.md §2.9).
+//!
+//! A [`QualityGap`] is what an approximate backend (the closure assigner
+//! or the sampled stepper — `kmeans::assign` / `kmeans::weighted_lloyd`)
+//! returns from its `quality_gap` hook: the measured weighted error of
+//! its current approximation next to an exact pass over the same inputs,
+//! plus the backend's own health signals. It is a pure data record —
+//! measurement lives with the backends (they own the state being
+//! measured), and the measurement itself is *uncounted* instrumentation
+//! (§2.4: private counters, nothing charged to the run's account).
+//!
+//! Every approximate run surfaces its final gap as a counter note (the
+//! `"gap[...]"` prefix, pinned by the conformance suite), so the
+//! accounting report shows not just what was paid but what the discount
+//! cost in solution quality.
+
+/// Measured E-vs-exact of one approximate backend on one input set.
+#[derive(Clone, Copy, Debug)]
+pub struct QualityGap {
+    /// Which approximation produced this record: `"closure"` or
+    /// `"sampled"`.
+    pub backend: &'static str,
+    /// Weighted error of the approximate assignment. Both errors are
+    /// accumulated in row order through the canonical kernel, so
+    /// `approx_err ≥ exact_err` holds exactly, not just approximately.
+    pub approx_err: f64,
+    /// Weighted error of the exact assignment on the same inputs.
+    pub exact_err: f64,
+    /// Backend health: the closure backend's candidate-hit rate, or the
+    /// sampled stepper's row coverage of its last call. In [0, 1].
+    pub hit_rate: f64,
+    /// Cumulative exact fallbacks the backend took (cold primes
+    /// included).
+    pub fallbacks: u64,
+}
+
+impl QualityGap {
+    /// Relative gap `(approx − exact) / exact`, clamped to ≥ 0 and
+    /// defined as 0 when the exact error is not positive (a perfect fit
+    /// has nothing to degrade).
+    pub fn rel_gap(&self) -> f64 {
+        if self.exact_err > 0.0 {
+            ((self.approx_err - self.exact_err) / self.exact_err).max(0.0)
+        } else {
+            0.0
+        }
+    }
+
+    /// The counter-note form. The `"gap["` prefix is part of the §2.9
+    /// contract (tests and the CLI's report filter key on it).
+    pub fn note(&self) -> String {
+        format!(
+            "gap[{}]: E_approx={:.6e} E_exact={:.6e} rel={:.3e} hit={:.1}% fallbacks={}",
+            self.backend,
+            self.approx_err,
+            self.exact_err,
+            self.rel_gap(),
+            self.hit_rate * 100.0,
+            self.fallbacks
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rel_gap_clamps_and_handles_zero_exact() {
+        let g = QualityGap {
+            backend: "closure",
+            approx_err: 12.0,
+            exact_err: 10.0,
+            hit_rate: 0.9,
+            fallbacks: 1,
+        };
+        assert!((g.rel_gap() - 0.2).abs() < 1e-15);
+        let zero = QualityGap { exact_err: 0.0, approx_err: 0.0, ..g };
+        assert_eq!(zero.rel_gap(), 0.0);
+        let below = QualityGap { approx_err: 9.0, ..g };
+        assert_eq!(below.rel_gap(), 0.0, "clamped: gaps never report negative");
+    }
+
+    #[test]
+    fn note_carries_the_pinned_prefix_and_fields() {
+        let g = QualityGap {
+            backend: "sampled",
+            approx_err: 2.0,
+            exact_err: 1.0,
+            hit_rate: 0.25,
+            fallbacks: 3,
+        };
+        let n = g.note();
+        assert!(n.starts_with("gap[sampled]: "), "{n}");
+        assert!(n.contains("rel=1.000e0"), "{n}");
+        assert!(n.contains("hit=25.0%"), "{n}");
+        assert!(n.contains("fallbacks=3"), "{n}");
+    }
+}

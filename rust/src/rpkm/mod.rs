@@ -12,7 +12,7 @@ use std::collections::HashMap;
 use crate::data::Dataset;
 use crate::geometry::BBox;
 use crate::kmeans::init::{SeedMethod, SeedPolicy, Seeder as _};
-use crate::kmeans::{weighted_lloyd, WLloydCfg};
+use crate::kmeans::{stepper_for, weighted_lloyd_with, AssignCfg, WLloydCfg};
 use crate::metrics::{kmeans_error, Budget, DistanceCounter};
 use crate::util::Rng;
 
@@ -66,6 +66,11 @@ pub struct RpkmCfg {
     pub seed: SeedPolicy,
     /// Trace E^D after every level (uncounted instrumentation).
     pub eval_full_error: bool,
+    /// Assignment regime for the per-level weighted Lloyd runs
+    /// (DESIGN.md §2.9). `Exact` (the default) is bit-identical to the
+    /// pre-regime behavior; the approximate modes self-report their bill
+    /// and final quality gap through the counter.
+    pub assign: AssignCfg,
 }
 
 impl Default for RpkmCfg {
@@ -76,6 +81,7 @@ impl Default for RpkmCfg {
             budget: Budget::unlimited(),
             seed: SeedPolicy::of(SeedMethod::Forgy),
             eval_full_error: false,
+            assign: AssignCfg::default(),
         }
     }
 }
@@ -108,6 +114,10 @@ pub fn grid_rpkm(
     let bbox = BBox::of(&data.data, data.d, None).expect("non-empty dataset");
     let mut centroids: Option<Vec<f64>> = None;
     let mut trace = Vec::new();
+    // One stepper for the whole run: approximate backends carry warm
+    // state (closures, retained assignments) across levels.
+    let mut stepper = stepper_for(&cfg.assign);
+    let mut last_rw: Option<(Vec<f64>, Vec<f64>)> = None;
 
     for level in 1..=cfg.max_levels {
         if cfg.budget.exceeded(counter) {
@@ -123,7 +133,8 @@ pub fn grid_rpkm(
         };
         let mut wl_cfg = cfg.wl;
         wl_cfg.budget = cfg.budget;
-        let out = weighted_lloyd(&reps, &weights, data.d, &init, &wl_cfg, counter);
+        let out =
+            weighted_lloyd_with(stepper.as_mut(), &reps, &weights, data.d, &init, &wl_cfg, counter);
         let full_error = cfg.eval_full_error.then(|| {
             let eval = DistanceCounter::new();
             kmeans_error(&data.data, data.d, &out.centroids, &eval)
@@ -136,12 +147,21 @@ pub fn grid_rpkm(
             full_error,
         });
         centroids = Some(out.centroids);
+        last_rw = Some((reps, weights));
         // No reduction left: the partition is as fine as the dataset.
         if m == data.n {
             break;
         }
     }
-    RpkmOutcome { centroids: centroids.expect("at least one level"), trace }
+    let centroids = centroids.expect("at least one level");
+    // Approximate regimes self-report their final measured gap (§2.9);
+    // exact steppers return None and nothing is emitted.
+    if let Some((reps, weights)) = &last_rw {
+        if let Some(gap) = stepper.quality_gap(reps, weights, data.d, &centroids) {
+            counter.note(gap.note());
+        }
+    }
+    RpkmOutcome { centroids, trace }
 }
 
 #[cfg(test)]

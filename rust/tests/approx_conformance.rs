@@ -1,0 +1,389 @@
+//! Approximate-regime conformance suite (DESIGN.md §2.9): the closure
+//! assigner and the sampled stepper trade bit-identity for a smaller
+//! bill, but three things stay pinned with `==`, no tolerances:
+//!
+//! 1. **Degenerate-to-exact**: a *total* closure (`expand ≥ k−1`, k = 1,
+//!    or a build that would not amortize) and a *full* sample
+//!    (`sample_rows ≥ m`, or an all-zero sampled weight mass) must route
+//!    through the exact engine — bit-identical to [`SerialAssigner`] /
+//!    `NativeStepper` at the identical `m·k` count.
+//! 2. **Accounting**: every call's counter delta equals the backend's own
+//!    self-reported account (`pairs + bookkeeping`), and an approximate
+//!    bill is *never* larger than the exact `m·k` bill.
+//! 3. **Self-report**: every approximate end-to-end run (BWKM, grid RPKM,
+//!    the out-of-core coordinator) leaves exactly one `"gap["` note on
+//!    its counter; exact runs leave none. The measured gap obeys
+//!    `approx_err ≥ exact_err` *bit-exactly* (each approximate term is a
+//!    min over a subset of the same kernel values; row-order rounded
+//!    summation is monotone) — and stays within the declared bound on
+//!    clustered data.
+//!
+//! Like `engine_conformance`, the fuzz covers the Table-1 dimensions,
+//! k = 1, duplicate points, exact-tie centroids and multi-step drift
+//! sequences that only a stateful backend can get wrong.
+
+use anyhow::Result;
+use bwkm::bwkm::BwkmCfg;
+use bwkm::coordinator::StreamingBwkm;
+use bwkm::data::Dataset;
+use bwkm::kmeans::assign::{Assigner, ClosureAssigner, SerialAssigner};
+use bwkm::kmeans::{
+    weighted_lloyd_with, AssignCfg, AssignMode, NativeStepper, SampledStepper, Stepper, WLloydCfg,
+};
+use bwkm::metrics::DistanceCounter;
+use bwkm::rpkm::{grid_rpkm, RpkmCfg};
+use bwkm::util::{prop, Rng};
+
+/// The engine-conformance dimension grid (monomorphized kernels + odd
+/// dyn-path extras).
+const DIMS: [usize; 10] = [2, 3, 4, 5, 17, 19, 20, 1, 7, 23];
+
+fn counter() -> DistanceCounter {
+    DistanceCounter::new()
+}
+
+fn gap_notes(c: &DistanceCounter) -> usize {
+    c.notes().iter().filter(|n| n.starts_with("gap[")).count()
+}
+
+/// Adversarial features per the §2.1 contract: duplicate points, exact
+/// zero rows, duplicated and reflected (tie) centroids.
+fn corpus(g: &mut prop::Gen, m: usize, d: usize, k: usize) -> (Vec<f64>, Vec<f64>) {
+    let mut reps = g.cloud(m, d, 2.0);
+    for _ in 0..g.int(0, (m / 2).max(1)) {
+        let (src, dst) = (g.int(0, m - 1), g.int(0, m - 1));
+        let row: Vec<f64> = reps[src * d..(src + 1) * d].to_vec();
+        reps[dst * d..(dst + 1) * d].copy_from_slice(&row);
+    }
+    for _ in 0..g.int(0, 3) {
+        let dst = g.int(0, m - 1);
+        reps[dst * d..(dst + 1) * d].fill(0.0);
+    }
+    let mut cents = g.cloud(k, d, 2.0);
+    if k >= 2 {
+        let (src, dst) = (g.int(0, k - 1), g.int(0, k - 1));
+        let row: Vec<f64> = cents[src * d..(src + 1) * d].to_vec();
+        cents[dst * d..(dst + 1) * d].copy_from_slice(&row);
+        let (src, dst) = (g.int(0, k - 1), g.int(0, k - 1));
+        let row: Vec<f64> = cents[src * d..(src + 1) * d].iter().map(|x| -x).collect();
+        cents[dst * d..(dst + 1) * d].copy_from_slice(&row);
+    }
+    (reps, cents)
+}
+
+fn vec_opener(
+    data: Vec<f64>,
+    d: usize,
+    chunk_rows: usize,
+) -> impl FnMut() -> Result<Vec<Result<Vec<f64>>>> {
+    let chunk_rows = chunk_rows.max(1);
+    move || Ok(data.chunks(chunk_rows * d).map(|c| Ok(c.to_vec())).collect())
+}
+
+#[test]
+fn prop_total_closure_is_bit_identical_to_serial() {
+    // `expand ≥ k−1` makes every closure total — the degenerate "empty
+    // closure complement". Every call (cold *and* would-be warm) must be
+    // the serial fallback: `==` output, exactly m·k on the counter, and a
+    // deterministic fallback tally.
+    prop::check("approx-total-closure", 25, |g| {
+        let d = DIMS[g.int(0, DIMS.len() - 1)];
+        let m = g.int(1, 150);
+        let k = g.int(1, 8);
+        let (reps, mut cents) = corpus(g, m, d, k);
+        let mut cl = ClosureAssigner::new(k); // candidates = min(k+1, k) = k
+        let c = counter();
+        let mut last = 0u64;
+        for step in 0..3u64 {
+            let serial = SerialAssigner.assign_top2(&reps, d, &cents, &counter());
+            let out = cl.assign_top2(&reps, d, &cents, &c);
+            assert_eq!(serial, out, "step {step} (m={m} k={k} d={d})");
+            let delta = c.get() - last;
+            last = c.get();
+            assert_eq!(delta, (m * k) as u64, "fallback pays the serial bill");
+            let stats = cl.last_stats();
+            assert!(!stats.warm);
+            assert_eq!(stats.pairs, (m * k) as u64);
+            assert_eq!(stats.bookkeeping, 0);
+            assert_eq!(delta, stats.pairs + stats.bookkeeping, "self-account");
+            assert_eq!(stats.fallbacks, step + 1);
+            assert_eq!(stats.hit_rate(), 1.0, "exact always hits");
+            if k == 1 {
+                assert!(out.d2.iter().all(|x| x.is_infinite()), "d2 = ∞ at k = 1 (§2.1)");
+            }
+            for v in cents.iter_mut() {
+                *v += g.rng.normal() * 0.08;
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_warm_closure_bill_pinned_and_never_above_exact() {
+    // The §2.9 accounting pin on genuinely approximate (warm, viable)
+    // calls: counter delta == pairs + bookkeeping == m·(expand+1) +
+    // k·(k−1)/2, always ≤ the exact bill m·k; per-row d1 dominates the
+    // serial d1 (a min over a candidate subset of the same kernel
+    // values), and the measured gap is ordered and uncounted.
+    prop::check("approx-closure-bill", 20, |g| {
+        let d = g.int(1, 6);
+        let m = g.int(150, 300);
+        let k = g.int(4, 10);
+        let expand = g.int(1, 2); // candidates ≤ 3 < k: viable at this m
+        let reps = g.cloud(m, d, 2.0);
+        let mut cents = g.cloud(k, d, 2.0);
+        let mut cl = ClosureAssigner::new(expand);
+        let c = counter();
+        let mut last = 0u64;
+        for step in 0..4 {
+            let out = cl.assign_top2(&reps, d, &cents, &c);
+            let delta = c.get() - last;
+            last = c.get();
+            let stats = cl.last_stats();
+            assert_eq!(delta, stats.pairs + stats.bookkeeping, "step {step}: self-account");
+            assert_eq!(stats.bill, (m * k) as u64);
+            assert!(delta <= (m * k) as u64, "approximate bill must never exceed exact");
+            if step == 0 {
+                assert!(!stats.warm, "cold call is the exact prime");
+                assert_eq!(stats.pairs, (m * k) as u64);
+            } else {
+                assert!(stats.warm, "step {step} (m={m} k={k} expand={expand})");
+                assert_eq!(stats.candidates, expand + 1);
+                assert_eq!(stats.pairs, (m * (expand + 1)) as u64);
+                assert_eq!(stats.bookkeeping, (k * (k - 1) / 2) as u64);
+                assert!(stats.hit_rate() >= 0.0 && stats.hit_rate() <= 1.0);
+                let serial = SerialAssigner.assign_top2(&reps, d, &cents, &counter());
+                for i in 0..m {
+                    assert!(
+                        out.d1[i] >= serial.d1[i],
+                        "row {i}: candidate-subset min below the exact min"
+                    );
+                }
+                // Gap self-report: ordered bit-exactly, uncounted.
+                let before = c.get();
+                let gap = cl
+                    .quality_gap(&reps, None, d, &cents)
+                    .expect("closure backend always reports");
+                assert_eq!(gap.backend, "closure");
+                assert!(gap.approx_err >= gap.exact_err, "monotone rounding ordering");
+                assert_eq!(c.get(), before, "measurement is uncounted (§2.4)");
+            }
+            for v in cents.iter_mut() {
+                *v += g.rng.normal() * 0.05;
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_sampled_full_sample_equals_exact_lloyd_outcome() {
+    // `sample_rows ≥ m` routes every step through the exact path: the
+    // whole weighted-Lloyd outcome — centroids, assignment, top-2
+    // distances, werr bits, iteration count, counter total — is `==` the
+    // native stepper's, for any seed.
+    prop::check("approx-sampled-full", 20, |g| {
+        let d = DIMS[g.int(0, DIMS.len() - 1)];
+        let m = g.int(2, 120);
+        let k = g.int(1, 6).min(m);
+        let reps = g.cloud(m, d, 2.0);
+        let weights: Vec<f64> = (0..m).map(|_| g.int(1, 9) as f64).collect();
+        let init: Vec<f64> = reps[..k * d].to_vec();
+        let cfg = WLloydCfg { max_iters: 6, ..Default::default() };
+        let c1 = counter();
+        let exact =
+            weighted_lloyd_with(&mut NativeStepper::new(), &reps, &weights, d, &init, &cfg, &c1);
+        let c2 = counter();
+        let mut st = SampledStepper::new(m + g.int(0, 5), g.int(0, 10_000) as u64);
+        let full = weighted_lloyd_with(&mut st, &reps, &weights, d, &init, &cfg, &c2);
+        assert_eq!(exact.centroids, full.centroids);
+        assert_eq!(exact.assign, full.assign);
+        assert_eq!(exact.d1, full.d1);
+        assert_eq!(exact.d2, full.d2);
+        assert_eq!(exact.werr.to_bits(), full.werr.to_bits());
+        assert_eq!(exact.iters, full.iters);
+        assert_eq!(c1.get(), c2.get(), "identical m·k bill per step");
+    });
+}
+
+#[test]
+fn prop_sampled_bill_pinned_and_reruns_deterministic() {
+    // Warm sampled steps: counter delta == s·k (the self-reported pairs),
+    // strictly below the m·k bill; and the whole trajectory — outputs,
+    // bills, fallback tally — replays identically under the same private
+    // seed (satellite: fallback-to-exact determinism).
+    prop::check("approx-sampled-bill", 20, |g| {
+        let d = g.int(1, 5);
+        let m = g.int(40, 160);
+        let k = g.int(2, 6);
+        let s = g.int(1, m - 1);
+        let seed = g.int(0, 10_000) as u64;
+        let reps = g.cloud(m, d, 2.0);
+        let weights: Vec<f64> = (0..m).map(|_| g.int(1, 5) as f64).collect();
+        let cents0 = g.cloud(k, d, 2.0);
+        let run = |seed: u64| {
+            let mut st = SampledStepper::new(s, seed);
+            let c = counter();
+            let mut cents = cents0.clone();
+            let mut deltas = Vec::new();
+            let mut last = 0u64;
+            let mut werrs = Vec::new();
+            for _ in 0..3 {
+                let o = st.step(&reps, &weights, d, &cents, &c);
+                deltas.push(c.get() - last);
+                last = c.get();
+                werrs.push(o.werr.to_bits());
+                cents = o.centroids;
+            }
+            (deltas, werrs, cents, st.last_stats().fallbacks)
+        };
+        let (deltas, werrs, cents, fallbacks) = run(seed);
+        assert_eq!(deltas[0], (m * k) as u64, "cold prime pays the exact bill");
+        for (step, &delta) in deltas.iter().enumerate().skip(1) {
+            assert_eq!(delta, (s * k) as u64, "step {step}: delta == own account");
+            assert!(delta < (m * k) as u64, "sampled bill strictly below exact");
+        }
+        let (d2, w2, c2, f2) = run(seed);
+        assert_eq!(deltas, d2, "same seed: same bills");
+        assert_eq!(werrs, w2, "same seed: same trajectory, bit for bit");
+        assert_eq!(cents, c2);
+        assert_eq!(fallbacks, f2, "same seed: same fallback tally");
+    });
+}
+
+#[test]
+fn closure_quality_gap_within_declared_bound_on_clustered_data() {
+    // GS-style workload: well-separated Gaussian blobs with centroids
+    // drifting near the blob means — the regime the closure heuristic is
+    // built for. Declared bound for this suite: relative gap ≤ 25%.
+    let mut g = prop::Gen { rng: Rng::new(0xA991), case: 0 };
+    let (m, d, k) = (600, 5, 6);
+    let reps = g.blobs(m, d, k, 0.4);
+    let weights = vec![1.0; m];
+    let mut cl = ClosureAssigner::new(2);
+    let c = counter();
+    let mut cents: Vec<f64> = reps[..k * d].to_vec();
+    let _ = cl.assign_top2(&reps, d, &cents, &c); // prime anchors
+    for step in 0..4 {
+        for v in cents.iter_mut() {
+            *v += g.rng.normal() * 0.02;
+        }
+        let _ = cl.assign_top2(&reps, d, &cents, &c);
+        assert!(cl.last_stats().warm, "step {step}");
+        let gap = cl
+            .quality_gap(&reps, Some(&weights), d, &cents)
+            .expect("closure backend always reports");
+        assert!(gap.approx_err >= gap.exact_err, "step {step}: bit-exact ordering");
+        assert!(
+            gap.rel_gap() <= 0.25,
+            "step {step}: rel gap {} above the declared bound",
+            gap.rel_gap()
+        );
+        assert!((0.0..=1.0).contains(&gap.hit_rate));
+        assert!(gap.note().starts_with("gap[closure]: "), "pinned note prefix");
+    }
+}
+
+#[test]
+fn degenerate_cases_fall_back_to_exact() {
+    // k = 1: the closure would be total; every call is the serial
+    // fallback (full bill, d2 = ∞, tallied).
+    let reps = [0.0, 1.0, 2.0, 3.0];
+    let mut cl = ClosureAssigner::new(3);
+    for step in 0..2u64 {
+        let c = counter();
+        let out = cl.assign_top2(&reps, 1, &[1.5], &c);
+        assert_eq!(c.get(), 4);
+        assert!(out.d2.iter().all(|x| x.is_infinite()));
+        assert!(!cl.last_stats().warm);
+        assert_eq!(cl.last_stats().fallbacks, step + 1);
+    }
+
+    // Duplicate points + exact-tie centroids inside a *warm* closure: the
+    // candidate scan inherits the serial lowest-index tie-breaking on the
+    // subset, and a coincident runner-up gives d2 == d1.
+    let reps: Vec<f64> = vec![10.0; 8];
+    let cents = [0.0, 10.0, 10.0, 50.0];
+    let mut cl = ClosureAssigner::new(1);
+    let c = counter();
+    let cold = cl.assign_top2(&reps, 1, &cents, &c);
+    assert_eq!(cold.assign, vec![1; 8], "serial tie-breaking on the cold prime");
+    let warm = cl.assign_top2(&reps, 1, &cents, &c);
+    assert!(cl.last_stats().warm);
+    assert_eq!(warm.assign, vec![1; 8], "lowest index wins among coincident candidates");
+    for i in 0..8 {
+        assert_eq!(warm.d1[i], 0.0);
+        assert_eq!(warm.d2[i], 0.0, "coincident runner-up inside the closure: d2 == d1");
+    }
+
+    // All-zero weights: the sampled stepper has nothing to rescale by and
+    // must route through the exact step, every call.
+    let mut st = SampledStepper::new(2, 9);
+    let reps = [0.0, 1.0, 2.0, 3.0, 4.0, 5.0];
+    let weights = [0.0; 6];
+    let cents = [0.5, 4.5];
+    let c = counter();
+    let _ = st.step(&reps, &weights, 1, &cents, &c);
+    let _ = st.step(&reps, &weights, 1, &cents, &c);
+    assert!(st.last_stats().exact);
+    assert_eq!(st.last_stats().fallbacks, 2);
+    assert_eq!(c.get(), 2 * 6 * 2, "both calls pay the exact bill");
+}
+
+#[test]
+fn end_to_end_runs_self_report_exactly_one_gap_note() {
+    let mut g = prop::Gen { rng: Rng::new(0xE2E0), case: 0 };
+    let (n, d, k) = (400, 3, 4);
+    let ds = Dataset::new(g.blobs(n, d, k, 0.6), d);
+
+    // BWKM, all three modes.
+    let run_mode = |assign: AssignCfg| {
+        let mut cfg = BwkmCfg::for_dataset(n, d, k);
+        cfg.max_outer = 4;
+        cfg.assign = assign;
+        let c = DistanceCounter::new();
+        let out = bwkm::bwkm::run(&ds, k, &cfg, &mut Rng::new(3), &c);
+        let gaps = gap_notes(&c);
+        (out, c.get(), gaps)
+    };
+    let exact = run_mode(AssignCfg::default());
+    assert_eq!(exact.2, 0, "exact runs report no gap");
+    let closure = run_mode(AssignCfg { mode: AssignMode::Closure, ..Default::default() });
+    assert_eq!(closure.2, 1, "one gap note per approximate run");
+    assert!(!closure.0.trace.is_empty());
+    // A full sample makes every sampled step the exact step: the whole
+    // run is bit-identical to the exact run — only the self-report
+    // (uncounted) differs.
+    let sampled = run_mode(AssignCfg {
+        mode: AssignMode::Sampled,
+        sample_rows: usize::MAX,
+        ..Default::default()
+    });
+    assert_eq!(sampled.2, 1);
+    assert_eq!(sampled.0.centroids, exact.0.centroids, "full sample == exact, bit for bit");
+    assert_eq!(sampled.0.stop, exact.0.stop);
+    assert_eq!(sampled.1, exact.1, "identical distance totals");
+
+    // Grid RPKM.
+    let rcfg = RpkmCfg {
+        max_levels: 4,
+        assign: AssignCfg { mode: AssignMode::Sampled, sample_rows: 32, ..Default::default() },
+        ..Default::default()
+    };
+    let c = DistanceCounter::new();
+    let out = grid_rpkm(&ds, k, &rcfg, &mut Rng::new(5), &c);
+    assert!(!out.centroids.is_empty());
+    assert_eq!(gap_notes(&c), 1);
+    let c2 = DistanceCounter::new();
+    let _ = grid_rpkm(&ds, k, &RpkmCfg { max_levels: 3, ..Default::default() }, &mut Rng::new(5), &c2);
+    assert_eq!(gap_notes(&c2), 0, "exact RPKM reports no gap");
+
+    // Out-of-core coordinator (run_source emits the note for both paths).
+    let mut cfg = BwkmCfg::for_dataset(n, d, k);
+    cfg.max_outer = 3;
+    cfg.assign = AssignCfg { mode: AssignMode::Closure, ..Default::default() };
+    let c3 = DistanceCounter::new();
+    let mut sb = StreamingBwkm::new(vec_opener(ds.data.clone(), d, 97), d);
+    let out = sb.run(k, &cfg, &mut Rng::new(3), &c3).expect("streaming run");
+    assert!(!out.centroids.is_empty());
+    assert_eq!(gap_notes(&c3), 1, "streamed approximate run self-reports once");
+}

@@ -12,8 +12,8 @@
 use bwkm::bwkm::{boundary, epsilons, initial_partition, theorem2_bound, InitCfg};
 use bwkm::data::{simulate, Dataset};
 use bwkm::kmeans::assign::{
-    weighted_step, weighted_step_with, Assigner, AssignOut, AutoAssigner, BoundedAssigner,
-    NormPrunedAssigner, SerialAssigner, Sharded, StepScratch,
+    weighted_step, weighted_step_with, Assigner, AssignOut, AutoAssigner, AutoChoice,
+    BoundedAssigner, NormPrunedAssigner, SerialAssigner, Sharded, StepScratch,
 };
 use bwkm::kmeans::init::weighted_kmeanspp;
 use bwkm::metrics::DistanceCounter;
@@ -304,6 +304,58 @@ fn epsilon_machinery_charges_zero_over_multi_iteration_bwkm_run() {
             ids = rw.2;
         }
     }
+}
+
+#[test]
+fn auto_choice_counts_and_note_formats_are_pinned() {
+    // The auto-selector's observables are part of the §2.7/§2.9 contract:
+    // the per-step note string (exact format, pinned verbatim on the
+    // deterministic cold step), and the per-`AutoChoice` tally map with
+    // its bench-column `summary()` form.
+    let mut g = prop::Gen { rng: Rng::new(0xC0DE), case: 0 };
+    let (m, d, k) = (300usize, 3usize, 6usize);
+    let reps = g.cloud(m, d, 2.0);
+    let mut cents = g.cloud(k, d, 2.0);
+
+    // Exact auto: a cold call on an amortizable problem (k ≥ 4, m ≥ 64)
+    // primes the bounded backend; the warm follow-up keeps it (the cold
+    // prime reports rate 1.0).
+    let mut auto = AutoAssigner::new();
+    let c = counter();
+    let _ = auto.assign_top2(&reps, d, &cents, &c);
+    assert_eq!(
+        c.notes(),
+        vec![format!("auto[1]: bounded (m={m} k={k} d={d} warm=false prune=100%)")],
+        "pinned note format"
+    );
+    for v in cents.iter_mut() {
+        *v += g.rng.normal() * 0.05;
+    }
+    let _ = auto.assign_top2(&reps, d, &cents, &c);
+    assert!(c.notes()[1].starts_with("auto[2]: bounded ("), "{:?}", c.notes()[1]);
+    let counts = auto.choice_counts();
+    assert_eq!(counts.total(), 2);
+    assert_eq!(counts.get(AutoChoice::Bounded), 2);
+    assert_eq!(counts.get(AutoChoice::Closure), 0, "exact auto never picks closure");
+    assert_eq!(counts.summary(), "serial:0 normpruned:0 bounded:2 closure:0");
+    assert_eq!(counts.iter().map(|(_, n)| n).sum::<u64>(), counts.total());
+
+    // Approximate regime (§2.9, opt-in): the cold call routes through the
+    // closure backend's own exact fallback — bit-identical to serial —
+    // and the note carries the hit-rate field instead of the prune rate.
+    let mut auto = AutoAssigner::with_closure(2);
+    let c = counter();
+    let cold = auto.assign_top2(&reps, d, &cents, &c);
+    let serial = SerialAssigner.assign_top2(&reps, d, &cents, &counter());
+    assert_eq!(cold, serial, "closure cold call is the exact fallback");
+    assert_eq!(
+        c.notes(),
+        vec![format!("auto[1]: closure (m={m} k={k} d={d} warm=false hit=100%)")],
+        "pinned note format (approximate regime)"
+    );
+    let _ = auto.assign_top2(&reps, d, &cents, &c);
+    assert!(c.notes()[1].starts_with("auto[2]: closure ("), "{:?}", c.notes()[1]);
+    assert_eq!(auto.choice_counts().get(AutoChoice::Closure), 2);
 }
 
 #[test]

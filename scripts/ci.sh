@@ -7,6 +7,8 @@
 #                              # (includes the generated multi-chunk-file run)
 #   scripts/ci.sh --init       # the seeding conformance + counter-pin suite
 #                              # (Seeder backends, K-means|| grids, closed forms)
+#   scripts/ci.sh --approx     # the approximate-regime gap-conformance suite
+#                              # (closures, sampled steps, pinned bills, gaps)
 #
 # The build is hermetic (vendored path deps, no crates.io), so the script
 # forces cargo offline and never touches the network.
@@ -32,6 +34,12 @@ fi
 if [[ "${1:-}" == "--init" ]]; then
     echo "== seeding conformance + counter-pin suite =="
     cargo test -q --test init_conformance
+    exit 0
+fi
+
+if [[ "${1:-}" == "--approx" ]]; then
+    echo "== approximate-regime gap-conformance suite =="
+    cargo test -q --test approx_conformance
     exit 0
 fi
 
