@@ -8,7 +8,7 @@
 //! prune rate, and the per-step engine choices `AutoAssigner` logged on
 //! its counter (DESIGN.md §2.7).
 
-use bwkm::bench::{env_f64, write_bench_json, write_csv};
+use bwkm::bench::{env_f64, write_bench_json, write_csv, Cell};
 use bwkm::bwkm::{initial_partition, InitCfg};
 use bwkm::data::simulate;
 use bwkm::kmeans::assign::AutoAssigner;
@@ -238,10 +238,10 @@ fn main() {
     // bit-identity contract just asserted above.
     let jrow = |variant: &str, dists: u64, iters: usize, gap: f64| {
         vec![
-            ("variant".to_string(), variant.to_string()),
-            ("distances".to_string(), dists.to_string()),
-            ("iters".to_string(), iters.to_string()),
-            ("rel_gap".to_string(), format!("{gap:.6}")),
+            ("variant".to_string(), Cell::from(variant)),
+            ("distances".to_string(), Cell::from(dists)),
+            ("iters".to_string(), Cell::from(iters)),
+            ("rel_gap".to_string(), Cell::from(gap)),
         ]
     };
     write_bench_json(

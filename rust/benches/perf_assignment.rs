@@ -11,10 +11,13 @@
 //! harder), and the backend `AutoAssigner` settled on. Feeds
 //! EXPERIMENTS.md §Perf.
 
-use bwkm::bench::{bench_secs, env_f64, write_bench_json, write_csv};
+use bwkm::bench::{bench_secs, env_f64, write_bench_json, write_csv, Cell};
 use bwkm::coordinator::sharded_weighted_step;
 use bwkm::kmeans::assign::{weighted_step, Assigner, AutoAssigner, BoundedAssigner, ClosureAssigner};
-use bwkm::kmeans::{NativeStepper, NormPrunedAssigner, SampledStepper, Stepper};
+use bwkm::kmeans::{
+    KernelKind, NativeStepper, NormPrunedAssigner, Precision, SampledStepper, Stepper,
+    VectorAssigner,
+};
 use bwkm::metrics::DistanceCounter;
 use bwkm::runtime::Runtime;
 use bwkm::util::{fmt_count, Rng};
@@ -66,10 +69,13 @@ fn main() {
         "auto_choice".into(),
         "pjrt_rows_s".into(),
         "pruned_rows_s".into(),
+        "simd_rows_s".into(),
+        "f32_rows_s".into(),
+        "f32_rel_gap".into(),
     ]];
-    // Machine-readable exact/closure/sampled rows (BENCH_assignment.json
-    // at the repo root).
-    let mut jrows: Vec<Vec<(String, String)>> = Vec::new();
+    // Machine-readable rows (BENCH_assignment.json at the repo root),
+    // each tagged with the §2.10 kernel/precision the measurement ran on.
+    let mut jrows: Vec<Vec<(String, Cell)>> = Vec::new();
     for (m, k, d) in sweeps {
         let mut rng = Rng::new(3);
         let reps: Vec<f64> = (0..m * d).map(|_| rng.normal() * 3.0).collect();
@@ -158,6 +164,23 @@ fn main() {
             .map(|gp| gp.rel_gap())
             .unwrap_or(0.0);
 
+        // Vectorized engine (DESIGN.md §2.10): the explicit-lane f64
+        // kernel (pinned bit-identical to native — this is a pure
+        // throughput column) and the mixed-precision f32 mode, whose
+        // relative werr gap against the exact step is reported alongside.
+        let mut vec_simd = VectorAssigner::new(KernelKind::Simd, Precision::F64);
+        let t_simd = bench_secs(3, || {
+            std::hint::black_box(weighted_step(&mut vec_simd, &reps, &weights, d, &cents, &c));
+        });
+        let mut vec_f32 = VectorAssigner::new(KernelKind::Simd, Precision::F32);
+        let t_f32 = bench_secs(3, || {
+            std::hint::black_box(weighted_step(&mut vec_f32, &reps, &weights, d, &cents, &c));
+        });
+        let werr_exact =
+            weighted_step(&mut bwkm::kmeans::SerialAssigner, &reps, &weights, d, &cents, &c).werr;
+        let werr_f32 = weighted_step(&mut vec_f32, &reps, &weights, d, &cents, &c).werr;
+        let f32_gap = (werr_f32 - werr_exact).abs() / werr_exact.max(f64::MIN_POSITIVE);
+
         // Auto: what the selector settles on for this shape after a short
         // warm sequence (choices also land in the counter's note log).
         let mut auto = AutoAssigner::new();
@@ -197,6 +220,10 @@ fn main() {
             fmt_count(rps(t_pruned) as u64),
             fmt_count((rps(t_native) * k as f64) as u64),
         );
+        println!(
+            "{:<18} vector: simd-f64 {} rows/s, simd-f32 {} rows/s (f32 rel gap {:.1e})",
+            "", fmt_count(rps(t_simd) as u64), fmt_count(rps(t_f32) as u64), f32_gap
+        );
         rows.push(vec![
             m.to_string(),
             k.to_string(),
@@ -216,21 +243,32 @@ fn main() {
             auto_choice.to_string(),
             t_pjrt.map(|t| format!("{:.0}", rps(t))).unwrap_or_default(),
             format!("{:.0}", rps(t_pruned)),
+            format!("{:.0}", rps(t_simd)),
+            format!("{:.0}", rps(t_f32)),
+            format!("{:.4e}", f32_gap),
         ]);
-        let jrow = |backend: &str, rows_s: f64, frac: f64, gap: f64| {
+        // Typed cells (explicit per-cell JSON types — see bench::Cell):
+        // backend/kernel/precision are strings, the sweep shape integers,
+        // the measurements floats.
+        let jrow = |backend: &str, kernel: KernelKind, precision: Precision, secs: f64,
+                    frac: f64, gap: f64| {
             vec![
-                ("backend".to_string(), backend.to_string()),
-                ("m".to_string(), m.to_string()),
-                ("k".to_string(), k.to_string()),
-                ("d".to_string(), d.to_string()),
-                ("rows_per_s".to_string(), format!("{rows_s:.0}")),
-                ("bill_frac".to_string(), format!("{frac:.6}")),
-                ("rel_gap".to_string(), format!("{gap:.6}")),
+                ("backend".to_string(), Cell::from(backend)),
+                ("kernel".to_string(), Cell::from(kernel.name())),
+                ("precision".to_string(), Cell::from(precision.name())),
+                ("m".to_string(), Cell::from(m)),
+                ("k".to_string(), Cell::from(k)),
+                ("d".to_string(), Cell::from(d)),
+                ("rows_per_s".to_string(), Cell::from(rps(secs))),
+                ("bill_frac".to_string(), Cell::from(frac)),
+                ("rel_gap".to_string(), Cell::from(gap)),
             ]
         };
-        jrows.push(jrow("exact", rps(t_native), 1.0, 0.0));
-        jrows.push(jrow("closure", rps(t_closure), cl_bill_frac, cl_gap));
-        jrows.push(jrow("sampled", rps(t_sampled), sp_bill_frac, sp_gap));
+        jrows.push(jrow("exact", KernelKind::Scalar, Precision::F64, t_native, 1.0, 0.0));
+        jrows.push(jrow("exact", KernelKind::Simd, Precision::F64, t_simd, 1.0, 0.0));
+        jrows.push(jrow("exact", KernelKind::Simd, Precision::F32, t_f32, 1.0, f32_gap));
+        jrows.push(jrow("closure", KernelKind::Scalar, Precision::F64, t_closure, cl_bill_frac, cl_gap));
+        jrows.push(jrow("sampled", KernelKind::Scalar, Precision::F64, t_sampled, sp_bill_frac, sp_gap));
     }
     write_csv("perf_assignment", &rows);
     write_bench_json("assignment", &jrows);

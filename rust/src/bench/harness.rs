@@ -35,17 +35,61 @@ pub fn write_csv(name: &str, rows: &[Vec<String>]) {
     eprintln!("wrote {}", path.display());
 }
 
-/// Write rows of `(key, value)` string pairs as a machine-readable JSON
-/// array of objects to `BENCH_<name>.json` at the **repo root** (the
-/// drivers' pickup location; the human-facing CSVs stay in `bench_out/`).
-/// Values are typed conservatively: anything that parses as a `u64` or a
-/// finite `f64` is emitted as a JSON number in Rust's canonical shortest
-/// round-trip form (so `"007"` becomes `7`, never invalid-JSON
-/// passthrough); everything else is an escaped string. Hand-rolled
-/// because serde is unavailable offline (DESIGN.md §4).
-pub fn write_bench_json(name: &str, rows: &[Vec<(String, String)>]) {
-    let path =
-        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join(format!("../BENCH_{name}.json"));
+/// One typed cell of a bench JSON row: the producing bench decides the
+/// JSON type **explicitly** — nothing is inferred from string shape, so a
+/// leading-zero id or a `1e5`-looking label can never silently turn into
+/// a number, and a numeric column can never flip to a string mid-series.
+/// A non-finite [`Cell::F64`] is emitted as JSON `null` (JSON has no
+/// NaN/inf; `null` in a numeric column is the unambiguous "no value").
+#[derive(Clone, Debug, PartialEq)]
+pub enum Cell {
+    Str(String),
+    U64(u64),
+    F64(f64),
+}
+
+impl From<&str> for Cell {
+    fn from(v: &str) -> Cell {
+        Cell::Str(v.to_string())
+    }
+}
+
+impl From<String> for Cell {
+    fn from(v: String) -> Cell {
+        Cell::Str(v)
+    }
+}
+
+impl From<u64> for Cell {
+    fn from(v: u64) -> Cell {
+        Cell::U64(v)
+    }
+}
+
+impl From<usize> for Cell {
+    fn from(v: usize) -> Cell {
+        Cell::U64(v as u64)
+    }
+}
+
+impl From<f64> for Cell {
+    fn from(v: f64) -> Cell {
+        Cell::F64(v)
+    }
+}
+
+/// Write rows of `(key, cell)` pairs as a machine-readable JSON array of
+/// objects to `BENCH_<name>.json` at the **repo root** (the drivers'
+/// pickup location; the human-facing CSVs stay in `bench_out/`). Each
+/// value's JSON type is declared by its [`Cell`] variant. The write is
+/// **atomic**: the document goes to a same-directory temp file first and
+/// is `rename`d into place, so a reader (or a crash) can never observe a
+/// truncated `BENCH_*.json`. Hand-rolled because serde is unavailable
+/// offline (DESIGN.md §4).
+pub fn write_bench_json(name: &str, rows: &[Vec<(String, Cell)>]) {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("..");
+    let path = root.join(format!("BENCH_{name}.json"));
+    let tmp = root.join(format!("BENCH_{name}.json.tmp.{}", std::process::id()));
     let mut s = String::from("[\n");
     for (i, row) in rows.iter().enumerate() {
         s.push_str("  {");
@@ -65,21 +109,24 @@ pub fn write_bench_json(name: &str, rows: &[Vec<(String, String)>]) {
         s.push('\n');
     }
     s.push_str("]\n");
-    std::fs::write(&path, s).expect("write bench json");
+    std::fs::write(&tmp, s).expect("write bench json temp file");
+    if let Err(e) = std::fs::rename(&tmp, &path) {
+        std::fs::remove_file(&tmp).ok();
+        panic!("rename bench json into place: {e}");
+    }
     eprintln!("wrote {}", path.display());
 }
 
-/// One JSON value from a bench cell (see [`write_bench_json`]).
-fn json_value(v: &str) -> String {
-    if let Ok(u) = v.parse::<u64>() {
-        return u.to_string();
+/// One JSON value from a typed bench cell (see [`write_bench_json`]).
+/// Finite floats use Rust's `{:?}` — the shortest representation that
+/// round-trips — so the emitted trajectory is stable across runs.
+fn json_value(v: &Cell) -> String {
+    match v {
+        Cell::Str(s) => format!("\"{}\"", json_escape(s)),
+        Cell::U64(u) => u.to_string(),
+        Cell::F64(x) if x.is_finite() => format!("{x:?}"),
+        Cell::F64(_) => "null".to_string(),
     }
-    if let Ok(x) = v.parse::<f64>() {
-        if x.is_finite() {
-            return x.to_string();
-        }
-    }
-    format!("\"{}\"", json_escape(v))
 }
 
 fn json_escape(v: &str) -> String {
@@ -124,33 +171,49 @@ mod tests {
     }
 
     #[test]
-    fn json_values_are_typed_conservatively() {
-        assert_eq!(json_value("42"), "42");
-        assert_eq!(json_value("007"), "7", "canonical form, never invalid passthrough");
-        assert_eq!(json_value("0.25"), "0.25");
-        assert_eq!(json_value("0.2500"), "0.25");
-        assert_eq!(json_value("NaN"), "\"NaN\"", "non-finite floats stay strings");
-        assert_eq!(json_value("inf"), "\"inf\"");
-        assert_eq!(json_value("exact"), "\"exact\"");
-        assert_eq!(json_value(""), "\"\"");
-        assert_eq!(json_value("a\"b\\c"), "\"a\\\"b\\\\c\"");
+    fn json_values_follow_the_declared_cell_type() {
+        // Emission is per-cell explicit: the declared variant wins, never
+        // the string's shape.
+        assert_eq!(json_value(&Cell::U64(42)), "42");
+        assert_eq!(json_value(&Cell::F64(0.25)), "0.25");
+        assert_eq!(json_value(&Cell::F64(1e300)), "1e300");
+        // Numeric-looking *strings* stay strings — leading-zero ids and
+        // exponent-shaped labels no longer coerce (the satellite bug).
+        assert_eq!(json_value(&Cell::Str("007".into())), "\"007\"");
+        assert_eq!(json_value(&Cell::Str("1e5".into())), "\"1e5\"");
+        // Non-finite floats stay in the numeric column as null, instead
+        // of flipping the column to strings.
+        assert_eq!(json_value(&Cell::F64(f64::NAN)), "null");
+        assert_eq!(json_value(&Cell::F64(f64::INFINITY)), "null");
+        assert_eq!(json_value(&Cell::Str("exact".into())), "\"exact\"");
+        assert_eq!(json_value(&Cell::Str("".into())), "\"\"");
+        assert_eq!(json_value(&Cell::Str("a\"b\\c".into())), "\"a\\\"b\\\\c\"");
+        // Floats round-trip in shortest form, stable across runs.
+        assert_eq!(json_value(&Cell::F64(0.1)), "0.1");
     }
 
     #[test]
-    fn bench_json_lands_at_the_repo_root() {
+    fn bench_json_lands_at_the_repo_root_atomically() {
         let name = format!("harness_selftest_{}", std::process::id());
         write_bench_json(
             &name,
             &[vec![
-                ("backend".to_string(), "exact".to_string()),
-                ("pairs".to_string(), "123".to_string()),
-                ("frac".to_string(), "0.5".to_string()),
+                ("backend".to_string(), Cell::from("exact")),
+                ("pairs".to_string(), Cell::from(123u64)),
+                ("frac".to_string(), Cell::from(0.5)),
+                ("gap".to_string(), Cell::F64(f64::NAN)),
             ]],
         );
-        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
-            .join(format!("../BENCH_{name}.json"));
+        let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("..");
+        let path = root.join(format!("BENCH_{name}.json"));
         let text = std::fs::read_to_string(&path).expect("bench json written");
-        assert_eq!(text, "[\n  {\"backend\": \"exact\", \"pairs\": 123, \"frac\": 0.5}\n]\n");
+        assert_eq!(
+            text,
+            "[\n  {\"backend\": \"exact\", \"pairs\": 123, \"frac\": 0.5, \"gap\": null}\n]\n"
+        );
+        // The temp file was renamed away, not left behind.
+        let tmp = root.join(format!("BENCH_{name}.json.tmp.{}", std::process::id()));
+        assert!(!tmp.exists(), "temp file left behind at {}", tmp.display());
         std::fs::remove_file(&path).ok();
     }
 

@@ -7,4 +7,4 @@ pub mod figures;
 pub mod harness;
 
 pub use figures::{run_figure, FigureCfg, FigureResult};
-pub use harness::{bench_secs, env_f64, env_u64, out_dir, write_bench_json, write_csv};
+pub use harness::{bench_secs, env_f64, env_u64, out_dir, write_bench_json, write_csv, Cell};

@@ -33,12 +33,18 @@ RUN KEYS: dataset scale seed k method budget threads use_pjrt eval_full_error
           chunk_rows m m_prime s r max_outer
           init oversample_l init_rounds chain_length
           assign closure_expand sample_rows sample_seed
+          kernel precision
           (method: bwkm fkm kmpp kmpp_init kmc2 mbN rpkm)
           (assign: exact closure sampled — the §2.9 assignment regime for
            bwkm/rpkm; closure scans closure_expand+1 candidate centroids
            per point, sampled runs each step on sample_rows rows seeded
            by sample_seed; approximate runs print their measured gap[..]
            note and still pay an exactly-accounted bill)
+          (kernel: scalar simd auto / precision: f64 f32 — the §2.10 exact
+           engine selection for bwkm/rpkm, assign=exact only; f64 output is
+           bit-identical for every kernel, f32 is the opt-in mixed-precision
+           mode — f32 storage, f64 accumulate — with a documented tolerance
+           contract; the distance bill is identical either way)
           (init: forgy pp kmc2 par — the BWKM/RPKM seeding policy over
            partition representatives, DESIGN.md §2.8; par is K-means||
            with init_rounds rounds and oversampling l = oversample_l,
@@ -240,6 +246,14 @@ fn run(args: &[String]) -> Result<()> {
             if cfg.use_pjrt && approx {
                 bail!("use_pjrt supports assign=exact only (the device step is exact)");
             }
+            if cfg.use_pjrt
+                && (bcfg.assign.kernel != crate::kmeans::KernelKind::Scalar
+                    || bcfg.assign.precision != crate::kmeans::Precision::F64)
+            {
+                // Never silently ignore a §2.10 selection: the device step
+                // has its own kernel (DESIGN.md §8), not the native one.
+                bail!("use_pjrt supports the default kernel/precision only (drop the keys)");
+            }
             let out = if approx {
                 // Approximate regimes run their own (serial) stepper —
                 // closures / sampled steps carry state across steps.
@@ -255,8 +269,10 @@ fn run(args: &[String]) -> Result<()> {
                 );
                 o
             } else if cfg.threads > 1 {
-                let mut stepper = crate::coordinator::ShardedStepper { threads: cfg.threads };
-                crate::bwkm::run_with(&mut stepper, &ds, cfg.k, &bcfg, &mut rng, &counter)
+                // Honors the §2.10 kernel/precision selection per worker.
+                let mut stepper =
+                    crate::coordinator::sharded_stepper_for(&bcfg.assign, cfg.threads);
+                crate::bwkm::run_with(stepper.as_mut(), &ds, cfg.k, &bcfg, &mut rng, &counter)
             } else {
                 crate::bwkm::run(&ds, cfg.k, &bcfg, &mut rng, &counter)
             };
@@ -439,6 +455,61 @@ mod tests {
             "method=bwkm".into(),
             "assign=closure".into(),
             "use_pjrt=on".into(), // exact-only path
+        ])
+        .is_err());
+    }
+
+    #[test]
+    fn run_kernel_precision_keys() {
+        // BWKM through the explicit-lane f64 kernel (pinned bit-identical
+        // to the scalar default — §2.10), single- and multi-threaded.
+        for threads in ["1", "2"] {
+            run(&[
+                "dataset=3RN".into(),
+                "scale=0.002".into(),
+                "k=3".into(),
+                "method=bwkm".into(),
+                "kernel=simd".into(),
+                format!("threads={threads}"),
+                "max_outer=3".into(),
+                "seed=1".into(),
+                "eval_full_error=off".into(),
+            ])
+            .unwrap();
+        }
+        // RPKM in the mixed-precision mode.
+        run(&[
+            "dataset=3RN".into(),
+            "scale=0.002".into(),
+            "k=3".into(),
+            "method=rpkm".into(),
+            "kernel=auto".into(),
+            "precision=f32".into(),
+            "seed=1".into(),
+        ])
+        .unwrap();
+        // Bad values and contradictory combinations are clean errors.
+        assert!(run(&[
+            "dataset=3RN".into(),
+            "scale=0.002".into(),
+            "method=bwkm".into(),
+            "kernel=avx512".into(),
+        ])
+        .is_err());
+        assert!(run(&[
+            "dataset=3RN".into(),
+            "scale=0.002".into(),
+            "method=bwkm".into(),
+            "assign=closure".into(),
+            "precision=f32".into(), // exact-engine key under the approximate regime
+        ])
+        .is_err());
+        assert!(run(&[
+            "dataset=3RN".into(),
+            "scale=0.002".into(),
+            "method=bwkm".into(),
+            "use_pjrt=on".into(),
+            "kernel=simd".into(), // the device step has its own kernel
         ])
         .is_err());
     }

@@ -9,7 +9,7 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::bwkm::BwkmCfg;
 use crate::kmeans::init::{SeedMethod, SeedPolicy};
-use crate::kmeans::{AssignCfg, AssignMode};
+use crate::kmeans::{AssignCfg, AssignMode, KernelKind, Precision};
 use crate::metrics::Budget;
 
 /// Which clustering method a run executes.
@@ -202,9 +202,12 @@ impl RunConfig {
     }
 
     /// Assignment-regime configuration (DESIGN.md §2.9) from the
-    /// `assign`, `closure_expand`, `sample_rows` and `sample_seed` keys.
+    /// `assign`, `closure_expand`, `sample_rows` and `sample_seed` keys,
+    /// plus the exact engine's `kernel` / `precision` selection (§2.10).
     /// No keys → the exact default (bit-identical to the pre-regime
-    /// behavior).
+    /// behavior). Bad values are rejected *here*, at parse time, with the
+    /// valid alternatives spelled out — never defaulted silently or left
+    /// to surface deep inside a run.
     pub fn assign_cfg(&self) -> Result<AssignCfg> {
         let mut cfg = AssignCfg::default();
         if let Some(v) = self.extra.get("assign") {
@@ -223,12 +226,41 @@ impl RunConfig {
         }
         if let Some(v) = self.extra.get("sample_rows") {
             cfg.sample_rows = v.parse().context("sample_rows")?;
+            if cfg.sample_rows == 0 {
+                bail!(
+                    "sample_rows must be ≥ 1 (it is the per-step row budget; \
+                     omit the key entirely to run without sampling)"
+                );
+            }
         }
         if let Some(v) = self.extra.get("sample_seed") {
             cfg.sample_seed = v.parse().context("sample_seed")?;
         }
+        if let Some(v) = self.extra.get("kernel") {
+            cfg.kernel = match KernelKind::parse(v) {
+                Some(k) => k,
+                None => bail!("unknown kernel `{v}` (scalar|simd|auto)"),
+            };
+        }
+        if let Some(v) = self.extra.get("precision") {
+            cfg.precision = match Precision::parse(v) {
+                Some(p) => p,
+                None => bail!("unknown precision `{v}` (f64|f32)"),
+            };
+        }
         if cfg.mode == AssignMode::Sampled && cfg.sample_rows == 0 {
             bail!("assign = sampled requires sample_rows ≥ 1");
+        }
+        if cfg.mode != AssignMode::Exact
+            && (cfg.kernel != KernelKind::Scalar || cfg.precision != Precision::F64)
+        {
+            bail!(
+                "kernel=/precision= select the exact engine's kernel (DESIGN.md §2.10) and \
+                 require assign = exact; the approximate regime (assign = {}) always runs \
+                 the canonical scalar f64 kernel — drop the kernel/precision keys or use \
+                 assign = exact",
+                cfg.mode.name()
+            );
         }
         Ok(cfg)
     }
@@ -354,6 +386,44 @@ mod tests {
         cfg.set("assign", "exact").unwrap();
         cfg.set("closure_expand", "0").unwrap();
         assert!(cfg.assign_cfg().is_err());
+        cfg.set("closure_expand", "2").unwrap();
+        // An explicit sample_rows = 0 is a contradiction, not a disable
+        // switch — rejected at parse time even outside sampled mode.
+        cfg.set("sample_rows", "0").unwrap();
+        assert!(cfg.assign_cfg().is_err());
+    }
+
+    #[test]
+    fn kernel_precision_keys_parse_and_validate() {
+        let mut cfg = RunConfig::default();
+        cfg.set("kernel", "simd").unwrap();
+        cfg.set("precision", "f32").unwrap();
+        let a = cfg.assign_cfg().unwrap();
+        assert_eq!(a.kernel, KernelKind::Simd);
+        assert_eq!(a.precision, Precision::F32);
+        // Flows into the BWKM config like every other assign key.
+        assert_eq!(cfg.bwkm_cfg(1000, 3).unwrap().assign, a);
+        // Case-insensitive, like the other enum keys.
+        cfg.set("kernel", "AUTO").unwrap();
+        assert_eq!(cfg.assign_cfg().unwrap().kernel, KernelKind::Auto);
+        // Invalid values fail at parse time with the alternatives named.
+        cfg.set("kernel", "avx512").unwrap();
+        let err = format!("{:#}", cfg.assign_cfg().unwrap_err());
+        assert!(err.contains("scalar|simd|auto"), "unhelpful error: {err}");
+        cfg.set("kernel", "simd").unwrap();
+        cfg.set("precision", "f16").unwrap();
+        let err = format!("{:#}", cfg.assign_cfg().unwrap_err());
+        assert!(err.contains("f64|f32"), "unhelpful error: {err}");
+        // kernel/precision contradict the approximate regime: rejected,
+        // never silently ignored.
+        cfg.set("precision", "f32").unwrap();
+        cfg.set("assign", "closure").unwrap();
+        let err = format!("{:#}", cfg.assign_cfg().unwrap_err());
+        assert!(err.contains("assign = exact"), "unhelpful error: {err}");
+        // Explicit defaults are compatible with any mode.
+        cfg.set("kernel", "scalar").unwrap();
+        cfg.set("precision", "f64").unwrap();
+        assert_eq!(cfg.assign_cfg().unwrap().mode, AssignMode::Closure);
     }
 
     #[test]

@@ -17,7 +17,7 @@
 pub mod parallel;
 pub mod streaming;
 
-pub use parallel::{sharded_assign_err, sharded_weighted_step, ShardedStepper};
+pub use parallel::{sharded_assign_err, sharded_stepper_for, sharded_weighted_step, ShardedStepper};
 pub use streaming::{
     stream_assign_err, stream_assign_err_with, stream_partition_stats,
     stream_partition_stats_with, ChunkCrew, StreamBwkmOutcome, StreamSeedOutcome, StreamSeeder,

@@ -17,8 +17,8 @@
 //! weighted-Lloyd iterations, DESIGN.md §2.7).
 
 use crate::data::Dataset;
-use crate::kmeans::assign::{self, ShardedAssigner};
-use crate::kmeans::{StepOut, Stepper};
+use crate::kmeans::assign::{self, AssignCfg, KernelKind, Precision, Sharded, ShardedAssigner, VectorAssigner};
+use crate::kmeans::{EngineStepper, StepOut, Stepper};
 use crate::metrics::DistanceCounter;
 
 /// Full-dataset assignment + SSE fanned out over `threads` workers.
@@ -77,6 +77,25 @@ impl Stepper for ShardedStepper {
         counter: &DistanceCounter,
     ) -> StepOut {
         sharded_weighted_step(reps, weights, d, centroids, self.threads, counter)
+    }
+}
+
+/// The sharded stepper for an exact-mode [`AssignCfg`], honoring its
+/// §2.10 `kernel`/`precision` selection: the default scalar/f64 pair is
+/// the classic [`ShardedStepper`]; anything else mounts the sharding
+/// combinator over per-worker [`VectorAssigner`]s. f64 selections stay
+/// bit-identical to the serial and classic sharded paths (pinned —
+/// DESIGN.md §2.10); f32 follows the documented relaxed contract, but is
+/// still bit-identical to the *serial* f32 run for every thread count
+/// (§2.5 holds per precision).
+pub fn sharded_stepper_for(assign: &AssignCfg, threads: usize) -> Box<dyn Stepper> {
+    if assign.kernel == KernelKind::Scalar && assign.precision == Precision::F64 {
+        Box::new(ShardedStepper { threads })
+    } else {
+        Box::new(EngineStepper::with_engine(Sharded::with_backend(
+            threads,
+            VectorAssigner::from_cfg(assign),
+        )))
     }
 }
 

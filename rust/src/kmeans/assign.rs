@@ -330,6 +330,560 @@ fn top2_dispatch(
 }
 
 // ---------------------------------------------------------------------------
+// Vectorized kernels & mixed precision (DESIGN.md §2.10).
+// ---------------------------------------------------------------------------
+
+/// Lanes of the explicit-lane f64 kernel (f64x4: one AVX2 register, two
+/// NEON registers). This is also the split width of the *scalar* canonical
+/// kernel, which is why the two are bit-identical (DESIGN.md §2.10).
+pub const F64_LANES: usize = 4;
+
+/// Lanes of the explicit-lane f32 kernel (f32x8). The mixed-precision
+/// scalar reference [`sq_dist_kernel_f32`] uses the same 8-way split so
+/// scalar-f32 and simd-f32 are bit-identical to each other.
+pub const F32_LANES: usize = 8;
+
+/// Storage/arithmetic precision of the assignment kernel (DESIGN.md
+/// §2.10). `F64` is the canonical engine; `F32` is the opt-in
+/// mixed-precision mode — **f32 storage and subtraction, f64
+/// accumulation** — built for ~2× memory bandwidth on the streaming
+/// paths. `F32` is *relaxed*: its outputs are tolerance-bounded against
+/// the f64 engine, never bit-identical (§2.10's error model).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Precision {
+    F64,
+    F32,
+}
+
+impl Precision {
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::F64 => "f64",
+            Precision::F32 => "f32",
+        }
+    }
+
+    /// Parse a `precision=` config/CLI value. `None` for anything but
+    /// `f64`/`f32` (the config layer turns that into an actionable error).
+    pub fn parse(v: &str) -> Option<Precision> {
+        match v.to_ascii_lowercase().as_str() {
+            "f64" => Some(Precision::F64),
+            "f32" => Some(Precision::F32),
+            _ => None,
+        }
+    }
+}
+
+impl Default for Precision {
+    fn default() -> Self {
+        Precision::F64
+    }
+}
+
+/// Which kernel implementation the engine runs (DESIGN.md §2.10).
+/// `Scalar` is the canonical split-accumulator loop; `Simd` the
+/// explicit-lane variant (portable lane arrays — no `unsafe`, no ISA
+/// gate); `Auto` resolves deterministically per call via [`resolve`].
+/// Within a precision the choice is **unobservable in output**: both
+/// kernels perform the identical FP operations in the identical order, so
+/// they are bit-identical (pinned by `engine_conformance.rs`) and the
+/// distance bill is the same exact n·k either way.
+///
+/// [`resolve`]: KernelKind::resolve
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelKind {
+    Scalar,
+    Simd,
+    Auto,
+}
+
+impl KernelKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelKind::Scalar => "scalar",
+            KernelKind::Simd => "simd",
+            KernelKind::Auto => "auto",
+        }
+    }
+
+    /// Parse a `kernel=` config/CLI value. `None` for anything but
+    /// `scalar`/`simd`/`auto`.
+    pub fn parse(v: &str) -> Option<KernelKind> {
+        match v.to_ascii_lowercase().as_str() {
+            "scalar" => Some(KernelKind::Scalar),
+            "simd" => Some(KernelKind::Simd),
+            "auto" => Some(KernelKind::Auto),
+            _ => None,
+        }
+    }
+
+    /// Deterministic `Auto` resolution: lanes pay off once a full lane
+    /// group fits in the row, so `Auto` is `Simd` for d ≥ [`F64_LANES`]
+    /// and `Scalar` below (where the lane main loop would never run).
+    /// Depends on nothing but `d` — no runtime feature detection — so a
+    /// run's kernel choice is reproducible from its config alone. (When
+    /// the crate is built without the `simd` feature, `Simd` additionally
+    /// falls back to the scalar *implementation* at the dispatch site;
+    /// that too is unobservable, by the bit-identity above.)
+    pub fn resolve(self, d: usize) -> KernelKind {
+        match self {
+            KernelKind::Auto => {
+                if d >= F64_LANES {
+                    KernelKind::Simd
+                } else {
+                    KernelKind::Scalar
+                }
+            }
+            k => k,
+        }
+    }
+}
+
+impl Default for KernelKind {
+    fn default() -> Self {
+        KernelKind::Scalar
+    }
+}
+
+/// The canonical **mixed-precision** squared-distance kernel (DESIGN.md
+/// §2.10): subtraction in f32 on f32-stored rows, then each difference is
+/// widened to f64 and squared there — the 24-bit×24-bit product is exact
+/// in f64 — and accumulated over an **8-way split** ([`F32_LANES`])
+/// matching the f32x8 lane order, tail into lane 0, folded
+/// `((a0+a1)+(a2+a3)) + ((a4+a5)+(a6+a7))`. Every f32-mode code path
+/// (scalar and lane variants alike) computes exactly this value, so
+/// within f32 the kernels are bit-identical; f32 vs f64 is
+/// tolerance-bounded only (the storage/subtraction rounding model of
+/// §2.10).
+#[inline]
+pub fn sq_dist_kernel_f32(p: &[f32], q: &[f32]) -> f64 {
+    debug_assert_eq!(p.len(), q.len());
+    let d = p.len();
+    let mut acc = [0.0f64; F32_LANES];
+    let mut j = 0;
+    while j + F32_LANES <= d {
+        let t0 = p[j] - q[j];
+        let t1 = p[j + 1] - q[j + 1];
+        let t2 = p[j + 2] - q[j + 2];
+        let t3 = p[j + 3] - q[j + 3];
+        let t4 = p[j + 4] - q[j + 4];
+        let t5 = p[j + 5] - q[j + 5];
+        let t6 = p[j + 6] - q[j + 6];
+        let t7 = p[j + 7] - q[j + 7];
+        acc[0] += (t0 as f64) * (t0 as f64);
+        acc[1] += (t1 as f64) * (t1 as f64);
+        acc[2] += (t2 as f64) * (t2 as f64);
+        acc[3] += (t3 as f64) * (t3 as f64);
+        acc[4] += (t4 as f64) * (t4 as f64);
+        acc[5] += (t5 as f64) * (t5 as f64);
+        acc[6] += (t6 as f64) * (t6 as f64);
+        acc[7] += (t7 as f64) * (t7 as f64);
+        j += F32_LANES;
+    }
+    while j < d {
+        let t = p[j] - q[j];
+        acc[0] += (t as f64) * (t as f64);
+        j += 1;
+    }
+    ((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7]))
+}
+
+/// Explicit-lane f64 pair kernel (f64x4 as portable lane arrays): the
+/// main loop subtracts and multiply-accumulates a whole lane group per
+/// trip — the shape LLVM maps straight onto vector sub/FMA — while
+/// performing the **identical FP operations in the identical order** as
+/// [`sq_dist_kernel`] (lane l accumulates dims j ≡ l mod 4, tail into
+/// lane 0, fold `(a0+a1)+(a2+a3)`). Bit-identity with the scalar kernel
+/// is therefore *pinned*, not approximate.
+#[cfg(feature = "simd")]
+#[inline(always)]
+fn sq_dist_lanes_f64(p: &[f64], q: &[f64]) -> f64 {
+    debug_assert_eq!(p.len(), q.len());
+    let d = p.len();
+    let mut acc = [0.0f64; F64_LANES];
+    let mut j = 0;
+    while j + F64_LANES <= d {
+        let mut t = [0.0f64; F64_LANES];
+        for l in 0..F64_LANES {
+            t[l] = p[j + l] - q[j + l];
+        }
+        for l in 0..F64_LANES {
+            acc[l] += t[l] * t[l];
+        }
+        j += F64_LANES;
+    }
+    while j < d {
+        let t = p[j] - q[j];
+        acc[0] += t * t;
+        j += 1;
+    }
+    (acc[0] + acc[1]) + (acc[2] + acc[3])
+}
+
+/// Explicit-lane f32 pair kernel (f32x8 lane arrays, f64 lane
+/// accumulators). Same operation order as [`sq_dist_kernel_f32`], so
+/// scalar-f32 and lane-f32 are pinned bit-identical to each other.
+#[cfg(feature = "simd")]
+#[inline(always)]
+fn sq_dist_lanes_f32(p: &[f32], q: &[f32]) -> f64 {
+    debug_assert_eq!(p.len(), q.len());
+    let d = p.len();
+    let mut acc = [0.0f64; F32_LANES];
+    let mut j = 0;
+    while j + F32_LANES <= d {
+        let mut t = [0.0f32; F32_LANES];
+        for l in 0..F32_LANES {
+            t[l] = p[j + l] - q[j + l];
+        }
+        for l in 0..F32_LANES {
+            acc[l] += (t[l] as f64) * (t[l] as f64);
+        }
+        j += F32_LANES;
+    }
+    while j < d {
+        let t = p[j] - q[j];
+        acc[0] += (t as f64) * (t as f64);
+        j += 1;
+    }
+    ((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7]))
+}
+
+/// Lane-kernel monomorphized blocked top-2 scan: same
+/// [`POINT_BLOCK`]×[`CENT_TILE`] tiling, same strict-`<` register-blocked
+/// top-2 reduction, same per-block accounting as [`top2_blocked`] — only
+/// the pair kernel is the explicit-lane form.
+#[cfg(feature = "simd")]
+fn top2_blocked_simd<const D: usize>(
+    points: &[f64],
+    centroids: &[f64],
+    assign: &mut [u32],
+    d1: &mut [f64],
+    d2: &mut [f64],
+    counter: &DistanceCounter,
+) {
+    let m = assign.len();
+    let k = centroids.len() / D;
+    debug_assert_eq!(points.len(), m * D);
+    let mut base = 0usize;
+    while base < m {
+        let len = (m - base).min(POINT_BLOCK);
+        let mut bi = [0u32; POINT_BLOCK];
+        let mut b1 = [f64::INFINITY; POINT_BLOCK];
+        let mut b2 = [f64::INFINITY; POINT_BLOCK];
+        let mut tile = 0usize;
+        while tile < k {
+            let tlen = (k - tile).min(CENT_TILE);
+            for r in 0..len {
+                let i = base + r;
+                let p: &[f64; D] = points[i * D..i * D + D].try_into().unwrap();
+                for c in tile..tile + tlen {
+                    let q: &[f64; D] = centroids[c * D..c * D + D].try_into().unwrap();
+                    let acc = sq_dist_lanes_f64(p, q);
+                    if acc < b1[r] {
+                        b2[r] = b1[r];
+                        b1[r] = acc;
+                        bi[r] = c as u32;
+                    } else if acc < b2[r] {
+                        b2[r] = acc;
+                    }
+                }
+            }
+            tile += tlen;
+        }
+        for r in 0..len {
+            assign[base + r] = bi[r];
+            d1[base + r] = b1[r];
+            d2[base + r] = b2[r];
+        }
+        counter.add((len * k) as u64);
+        base += len;
+    }
+}
+
+/// Dynamic-dimension lane-kernel scan (mirrors [`top2_blocked_dyn`]).
+#[cfg(feature = "simd")]
+fn top2_blocked_dyn_simd(
+    points: &[f64],
+    d: usize,
+    centroids: &[f64],
+    assign: &mut [u32],
+    d1: &mut [f64],
+    d2: &mut [f64],
+    counter: &DistanceCounter,
+) {
+    let m = assign.len();
+    let k = centroids.len() / d;
+    debug_assert_eq!(points.len(), m * d);
+    let mut base = 0usize;
+    while base < m {
+        let len = (m - base).min(POINT_BLOCK);
+        let mut bi = [0u32; POINT_BLOCK];
+        let mut b1 = [f64::INFINITY; POINT_BLOCK];
+        let mut b2 = [f64::INFINITY; POINT_BLOCK];
+        let mut tile = 0usize;
+        while tile < k {
+            let tlen = (k - tile).min(CENT_TILE);
+            for r in 0..len {
+                let i = base + r;
+                let p = &points[i * d..i * d + d];
+                for c in tile..tile + tlen {
+                    let acc = sq_dist_lanes_f64(p, &centroids[c * d..c * d + d]);
+                    if acc < b1[r] {
+                        b2[r] = b1[r];
+                        b1[r] = acc;
+                        bi[r] = c as u32;
+                    } else if acc < b2[r] {
+                        b2[r] = acc;
+                    }
+                }
+            }
+            tile += tlen;
+        }
+        for r in 0..len {
+            assign[base + r] = bi[r];
+            d1[base + r] = b1[r];
+            d2[base + r] = b2[r];
+        }
+        counter.add((len * k) as u64);
+        base += len;
+    }
+}
+
+/// Lane-kernel dispatch over the same monomorphized dimension set as
+/// [`top2_dispatch`].
+#[cfg(feature = "simd")]
+fn top2_simd_dispatch(
+    points: &[f64],
+    d: usize,
+    centroids: &[f64],
+    assign: &mut [u32],
+    d1: &mut [f64],
+    d2: &mut [f64],
+    counter: &DistanceCounter,
+) {
+    match d {
+        2 => top2_blocked_simd::<2>(points, centroids, assign, d1, d2, counter),
+        3 => top2_blocked_simd::<3>(points, centroids, assign, d1, d2, counter),
+        4 => top2_blocked_simd::<4>(points, centroids, assign, d1, d2, counter),
+        5 => top2_blocked_simd::<5>(points, centroids, assign, d1, d2, counter),
+        17 => top2_blocked_simd::<17>(points, centroids, assign, d1, d2, counter),
+        19 => top2_blocked_simd::<19>(points, centroids, assign, d1, d2, counter),
+        20 => top2_blocked_simd::<20>(points, centroids, assign, d1, d2, counter),
+        _ => top2_blocked_dyn_simd(points, d, centroids, assign, d1, d2, counter),
+    }
+}
+
+/// Blocked top-2 scan over **f32 mirrors** through a chosen pair kernel
+/// (scalar [`sq_dist_kernel_f32`] or the lane form — bit-identical by
+/// construction). Tiling, tie-breaking and per-block accounting are the
+/// §2.1 contract unchanged: the bill is precision-independent, exactly
+/// n·k.
+macro_rules! top2_blocked_f32_body {
+    ($pair:path, $points:expr, $d:expr, $centroids:expr,
+     $assign:expr, $d1:expr, $d2:expr, $counter:expr) => {{
+        let (points, d, centroids) = ($points, $d, $centroids);
+        let (assign, d1, d2, counter) = ($assign, $d1, $d2, $counter);
+        let m = assign.len();
+        let k = centroids.len() / d;
+        debug_assert_eq!(points.len(), m * d);
+        let mut base = 0usize;
+        while base < m {
+            let len = (m - base).min(POINT_BLOCK);
+            let mut bi = [0u32; POINT_BLOCK];
+            let mut b1 = [f64::INFINITY; POINT_BLOCK];
+            let mut b2 = [f64::INFINITY; POINT_BLOCK];
+            let mut tile = 0usize;
+            while tile < k {
+                let tlen = (k - tile).min(CENT_TILE);
+                for r in 0..len {
+                    let i = base + r;
+                    let p = &points[i * d..i * d + d];
+                    for c in tile..tile + tlen {
+                        let acc = $pair(p, &centroids[c * d..c * d + d]);
+                        if acc < b1[r] {
+                            b2[r] = b1[r];
+                            b1[r] = acc;
+                            bi[r] = c as u32;
+                        } else if acc < b2[r] {
+                            b2[r] = acc;
+                        }
+                    }
+                }
+                tile += tlen;
+            }
+            for r in 0..len {
+                assign[base + r] = bi[r];
+                d1[base + r] = b1[r];
+                d2[base + r] = b2[r];
+            }
+            counter.add((len * k) as u64);
+            base += len;
+        }
+    }};
+}
+
+/// Scalar-kernel f32 blocked scan.
+fn top2_blocked_f32(
+    points: &[f32],
+    d: usize,
+    centroids: &[f32],
+    assign: &mut [u32],
+    d1: &mut [f64],
+    d2: &mut [f64],
+    counter: &DistanceCounter,
+) {
+    top2_blocked_f32_body!(sq_dist_kernel_f32, points, d, centroids, assign, d1, d2, counter)
+}
+
+/// Lane-kernel f32 blocked scan (bit-identical to [`top2_blocked_f32`]).
+#[cfg(feature = "simd")]
+fn top2_blocked_f32_simd(
+    points: &[f32],
+    d: usize,
+    centroids: &[f32],
+    assign: &mut [u32],
+    d1: &mut [f64],
+    d2: &mut [f64],
+    counter: &DistanceCounter,
+) {
+    top2_blocked_f32_body!(sq_dist_lanes_f32, points, d, centroids, assign, d1, d2, counter)
+}
+
+/// f64 kernel-kind dispatch: resolve `Auto`, run the lane variant when
+/// selected *and* compiled in, otherwise the canonical scalar path.
+/// Either way the output and the count are identical (§2.10).
+fn top2_f64_dispatch(
+    kernel: KernelKind,
+    points: &[f64],
+    d: usize,
+    centroids: &[f64],
+    assign: &mut [u32],
+    d1: &mut [f64],
+    d2: &mut [f64],
+    counter: &DistanceCounter,
+) {
+    #[cfg(feature = "simd")]
+    if kernel.resolve(d) == KernelKind::Simd {
+        return top2_simd_dispatch(points, d, centroids, assign, d1, d2, counter);
+    }
+    #[cfg(not(feature = "simd"))]
+    let _ = kernel;
+    top2_dispatch(points, d, centroids, assign, d1, d2, counter)
+}
+
+/// f32 kernel-kind dispatch (mirror of [`top2_f64_dispatch`]).
+fn top2_f32_dispatch(
+    kernel: KernelKind,
+    points: &[f32],
+    d: usize,
+    centroids: &[f32],
+    assign: &mut [u32],
+    d1: &mut [f64],
+    d2: &mut [f64],
+    counter: &DistanceCounter,
+) {
+    #[cfg(feature = "simd")]
+    if kernel.resolve(d) == KernelKind::Simd {
+        return top2_blocked_f32_simd(points, d, centroids, assign, d1, d2, counter);
+    }
+    #[cfg(not(feature = "simd"))]
+    let _ = kernel;
+    top2_blocked_f32(points, d, centroids, assign, d1, d2, counter)
+}
+
+/// The vectorized / mixed-precision backend (DESIGN.md §2.10): the same
+/// blocked cache-tiled top-2 scan as [`SerialAssigner`], through the
+/// explicit-lane kernels and/or f32 storage mirrors, selected by
+/// [`KernelKind`]/[`Precision`]. Contract per mode:
+///
+/// * `precision = f64` (any kernel): **pinned bit-identical** to
+///   [`SerialAssigner`] — the lane kernel performs the identical FP
+///   operations in the identical order.
+/// * `precision = f32`: *relaxed* — tolerance-bounded against the f64
+///   engine per the §2.10 error model; scalar-f32 and simd-f32 remain
+///   bit-identical to *each other*.
+/// * Counting: exactly n·k per call in either precision (the f32 mirror
+///   conversion is storage traffic, not distance work, and charges
+///   nothing).
+///
+/// The f32 mirrors are rebuilt from the f64 inputs on every call (one
+/// rounding per value, O(m·d + k·d) — negligible next to the O(m·k·d)
+/// scan, and it keeps the backend stateless w.r.t. its inputs, so
+/// `Sharded<VectorAssigner>` works unchanged).
+#[derive(Clone, Debug, Default)]
+pub struct VectorAssigner {
+    kernel: KernelKind,
+    precision: Precision,
+    pf32: Vec<f32>,
+    cf32: Vec<f32>,
+}
+
+impl VectorAssigner {
+    pub fn new(kernel: KernelKind, precision: Precision) -> VectorAssigner {
+        VectorAssigner { kernel, precision, pf32: Vec::new(), cf32: Vec::new() }
+    }
+
+    /// The backend an [`AssignCfg`]'s `kernel`/`precision` pair selects.
+    pub fn from_cfg(cfg: &AssignCfg) -> VectorAssigner {
+        VectorAssigner::new(cfg.kernel, cfg.precision)
+    }
+
+    pub fn kernel(&self) -> KernelKind {
+        self.kernel
+    }
+
+    pub fn precision(&self) -> Precision {
+        self.precision
+    }
+}
+
+impl Assigner for VectorAssigner {
+    fn assign_top2(
+        &mut self,
+        points: &[f64],
+        d: usize,
+        centroids: &[f64],
+        counter: &DistanceCounter,
+    ) -> AssignOut {
+        let m = points.len() / d;
+        let mut out = AssignOut {
+            assign: vec![0u32; m],
+            d1: vec![0.0; m],
+            d2: vec![0.0; m],
+        };
+        match self.precision {
+            Precision::F64 => top2_f64_dispatch(
+                self.kernel,
+                points,
+                d,
+                centroids,
+                &mut out.assign,
+                &mut out.d1,
+                &mut out.d2,
+                counter,
+            ),
+            Precision::F32 => {
+                self.pf32.clear();
+                self.pf32.extend(points.iter().map(|&v| v as f32));
+                self.cf32.clear();
+                self.cf32.extend(centroids.iter().map(|&v| v as f32));
+                top2_f32_dispatch(
+                    self.kernel,
+                    &self.pf32,
+                    d,
+                    &self.cf32,
+                    &mut out.assign,
+                    &mut out.d1,
+                    &mut out.d2,
+                    counter,
+                );
+            }
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Backends.
 // ---------------------------------------------------------------------------
 
@@ -846,7 +1400,8 @@ impl AssignMode {
 
 /// Assignment-regime configuration carried by `BwkmCfg`/`RpkmCfg` and the
 /// CLI's `assign=exact|closure|sampled`, `closure_expand=`, `sample_rows=`
-/// and `sample_seed=` keys (DESIGN.md §2.9).
+/// and `sample_seed=` keys (DESIGN.md §2.9), plus the exact engine's
+/// `kernel=scalar|simd|auto` / `precision=f64|f32` selection (§2.10).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct AssignCfg {
     pub mode: AssignMode,
@@ -861,6 +1416,13 @@ pub struct AssignCfg {
     /// of the run's main `Rng` so switching `assign=` modes leaves every
     /// other random draw of the run identical.
     pub sample_seed: u64,
+    /// Exact-engine kernel selection (§2.10). Non-default values apply to
+    /// `mode = Exact` only — the approximate regime always runs the
+    /// canonical scalar kernel, and the config layer rejects the
+    /// combination rather than ignore it.
+    pub kernel: KernelKind,
+    /// Exact-engine precision (§2.10); same `Exact`-only rule as `kernel`.
+    pub precision: Precision,
 }
 
 impl Default for AssignCfg {
@@ -870,6 +1432,8 @@ impl Default for AssignCfg {
             closure_expand: 2,
             sample_rows: 0,
             sample_seed: 0xB16D_A7A5,
+            kernel: KernelKind::Scalar,
+            precision: Precision::F64,
         }
     }
 }
@@ -1693,6 +2257,122 @@ mod tests {
             assert_eq!(c_eng.get(), c_ref.get());
             assert_eq!(c_eng.get(), (m * k) as u64);
         });
+    }
+
+    #[test]
+    fn prop_vector_f64_pinned_bit_identical_to_serial() {
+        // §2.10 pinned contract: in f64, every kernel kind — scalar, the
+        // explicit-lane variant, and auto — is bit-identical to the
+        // canonical engine and bills exactly m·k, for every dimension
+        // class (sub-lane, lane-multiple, tail).
+        prop::check("vector-f64-pinned", 30, |g| {
+            let m = g.int(1, 250);
+            let d = g.int(1, 24);
+            let k = g.int(1, 16);
+            let reps = g.cloud(m, d, 3.0);
+            let cents = g.cloud(k, d, 3.0);
+
+            let c0 = counter();
+            let serial = SerialAssigner.assign_top2(&reps, d, &cents, &c0);
+            for kernel in [KernelKind::Scalar, KernelKind::Simd, KernelKind::Auto] {
+                let c = counter();
+                let out = VectorAssigner::new(kernel, Precision::F64)
+                    .assign_top2(&reps, d, &cents, &c);
+                assert_eq!(out, serial, "kernel={} diverged", kernel.name());
+                assert_eq!(c.get(), (m * k) as u64, "kernel={} bill", kernel.name());
+            }
+        });
+    }
+
+    #[test]
+    fn prop_vector_f32_kernels_bit_identical_within_precision() {
+        // §2.10: scalar-f32 and lane-f32 share one operation order, so
+        // within the f32 precision the kernel choice is unobservable —
+        // and the bill stays exactly m·k.
+        prop::check("vector-f32-within", 30, |g| {
+            let m = g.int(1, 250);
+            let d = g.int(1, 24);
+            let k = g.int(1, 16);
+            let reps = g.cloud(m, d, 3.0);
+            let cents = g.cloud(k, d, 3.0);
+
+            let c_s = counter();
+            let scalar = VectorAssigner::new(KernelKind::Scalar, Precision::F32)
+                .assign_top2(&reps, d, &cents, &c_s);
+            for kernel in [KernelKind::Simd, KernelKind::Auto] {
+                let c = counter();
+                let out = VectorAssigner::new(kernel, Precision::F32)
+                    .assign_top2(&reps, d, &cents, &c);
+                assert_eq!(out, scalar, "f32 kernel={} diverged", kernel.name());
+                assert_eq!(c.get(), (m * k) as u64);
+            }
+            assert_eq!(c_s.get(), (m * k) as u64);
+        });
+    }
+
+    #[test]
+    fn f32_kernel_widening_products_are_exact() {
+        // The mixed-precision design hinges on 24-bit×24-bit products
+        // being exact in f64: on values already representable in f32 the
+        // f32 kernel must equal the f64 kernel *exactly* whenever every
+        // difference is also f32-exact (here: small integers).
+        let p64 = [3.0, -7.0, 11.0, 0.5, -2.25, 9.0, 1.0, -4.0, 6.0];
+        let q64 = [1.0, 2.0, -3.0, 0.25, 0.75, -8.0, 2.0, 0.0, -5.0];
+        let p32: Vec<f32> = p64.iter().map(|&v| v as f32).collect();
+        let q32: Vec<f32> = q64.iter().map(|&v| v as f32).collect();
+        for d in 1..=p64.len() {
+            assert_eq!(
+                sq_dist_kernel_f32(&p32[..d], &q32[..d]),
+                sq_dist_kernel(&p64[..d], &q64[..d]),
+                "d={d}"
+            );
+        }
+    }
+
+    #[test]
+    fn kernel_kind_auto_resolution_is_deterministic() {
+        assert_eq!(KernelKind::Auto.resolve(F64_LANES - 1), KernelKind::Scalar);
+        assert_eq!(KernelKind::Auto.resolve(F64_LANES), KernelKind::Simd);
+        assert_eq!(KernelKind::Auto.resolve(64), KernelKind::Simd);
+        // Explicit kinds resolve to themselves regardless of d.
+        for d in [1, 4, 64] {
+            assert_eq!(KernelKind::Scalar.resolve(d), KernelKind::Scalar);
+            assert_eq!(KernelKind::Simd.resolve(d), KernelKind::Simd);
+        }
+    }
+
+    #[test]
+    fn precision_and_kernel_parse_round_trip() {
+        for p in [Precision::F64, Precision::F32] {
+            assert_eq!(Precision::parse(p.name()), Some(p));
+        }
+        for k in [KernelKind::Scalar, KernelKind::Simd, KernelKind::Auto] {
+            assert_eq!(KernelKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(Precision::parse("F32"), Some(Precision::F32), "case-insensitive");
+        assert_eq!(Precision::parse("f16"), None);
+        assert_eq!(KernelKind::parse("avx"), None);
+    }
+
+    #[test]
+    fn sharded_vector_assigner_matches_serial_vector() {
+        // The §2.5 combinator holds for the vectorized backend too: shard
+        // order == row order, per-worker f32 mirrors notwithstanding.
+        let mut rng = crate::util::Rng::new(11);
+        let (m, d, k) = (157, 7, 9);
+        let reps: Vec<f64> = (0..m * d).map(|_| rng.normal() * 2.0).collect();
+        let cents: Vec<f64> = (0..k * d).map(|_| rng.normal() * 2.0).collect();
+        for precision in [Precision::F64, Precision::F32] {
+            let c1 = counter();
+            let serial = VectorAssigner::new(KernelKind::Auto, precision)
+                .assign_top2(&reps, d, &cents, &c1);
+            let c2 = counter();
+            let sharded = Sharded::with_backend(4, VectorAssigner::new(KernelKind::Auto, precision))
+                .assign_top2(&reps, d, &cents, &c2);
+            assert_eq!(sharded, serial, "precision={}", precision.name());
+            assert_eq!(c1.get(), (m * k) as u64);
+            assert_eq!(c2.get(), (m * k) as u64);
+        }
     }
 
     #[test]

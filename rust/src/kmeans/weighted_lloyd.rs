@@ -23,7 +23,7 @@ use crate::util::Rng;
 
 use super::assign::{
     sq_dist_kernel, weighted_step_with, AssignCfg, AssignMode, Assigner, ClosureAssigner,
-    SerialAssigner, StepScratch,
+    KernelKind, Precision, SerialAssigner, StepScratch, VectorAssigner,
 };
 
 /// Result of one weighted-Lloyd iteration.
@@ -395,13 +395,25 @@ impl Stepper for SampledStepper {
 }
 
 /// Build the weighted-Lloyd stepper an [`AssignCfg`] asks for
-/// (DESIGN.md §2.9): the shared dispatch behind `bwkm::run`, the grid
-/// RPKM baseline, the out-of-core coordinator and the CLI's `assign=`
-/// key. Exact mode returns the plain [`NativeStepper`]; the approximate
-/// modes wrap their backend with a serial inner engine.
+/// (DESIGN.md §2.9/§2.10): the shared dispatch behind `bwkm::run`, the
+/// grid RPKM baseline, the out-of-core coordinator and the CLI's
+/// `assign=` key. Exact mode with the default scalar/f64 selection
+/// returns the plain [`NativeStepper`]; a non-default `kernel=` /
+/// `precision=` selection mounts the [`VectorAssigner`] (f64: pinned
+/// bit-identical, so this fork is unobservable in output; f32: the
+/// documented relaxed contract). The approximate modes wrap their
+/// backend with a serial inner engine and always run the canonical
+/// scalar kernel — the config layer rejects contradictory key
+/// combinations instead of ignoring them.
 pub fn stepper_for(assign: &AssignCfg) -> Box<dyn Stepper> {
     match assign.mode {
-        AssignMode::Exact => Box::new(NativeStepper::new()),
+        AssignMode::Exact => {
+            if assign.kernel == KernelKind::Scalar && assign.precision == Precision::F64 {
+                Box::new(NativeStepper::new())
+            } else {
+                Box::new(EngineStepper::with_engine(VectorAssigner::from_cfg(assign)))
+            }
+        }
         AssignMode::Closure => {
             Box::new(EngineStepper::with_engine(ClosureAssigner::new(assign.closure_expand)))
         }

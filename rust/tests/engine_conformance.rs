@@ -7,13 +7,18 @@
 //! §2.4 prescribes. The fuzz deliberately covers the Table-1 dimensions
 //! (2, 3, 4, 5, 17, 19, 20), k = 1, duplicate points and exact-tie
 //! centroids, plus multi-iteration drift sequences that only a stateful
-//! backend can get wrong.
+//! backend can get wrong. The §2.10 section at the bottom pins the
+//! vectorized/mixed-precision backend: scalar-vs-SIMD bit-identity where
+//! the contract pins it (within a precision), the bounded-tolerance
+//! harness where it is relaxed (f32 vs f64), and kernel/precision-
+//! independent distance bills.
 
 use bwkm::bwkm::{boundary, epsilons, initial_partition, theorem2_bound, InitCfg};
 use bwkm::data::{simulate, Dataset};
 use bwkm::kmeans::assign::{
-    weighted_step, weighted_step_with, Assigner, AssignOut, AutoAssigner, AutoChoice,
-    BoundedAssigner, NormPrunedAssigner, SerialAssigner, Sharded, StepScratch,
+    sq_dist_kernel, weighted_step, weighted_step_with, Assigner, AssignOut, AutoAssigner,
+    AutoChoice, BoundedAssigner, KernelKind, NormPrunedAssigner, Precision, SerialAssigner,
+    Sharded, StepScratch, VectorAssigner,
 };
 use bwkm::kmeans::init::weighted_kmeanspp;
 use bwkm::metrics::DistanceCounter;
@@ -356,6 +361,171 @@ fn auto_choice_counts_and_note_formats_are_pinned() {
     let _ = auto.assign_top2(&reps, d, &cents, &c);
     assert!(c.notes()[1].starts_with("auto[2]: closure ("), "{:?}", c.notes()[1]);
     assert_eq!(auto.choice_counts().get(AutoChoice::Closure), 2);
+}
+
+// ---------------------------------------------------------------------------
+// §2.10 — vectorization & precision conformance.
+// ---------------------------------------------------------------------------
+
+/// The §2.10 dimension sweep: sub-lane (1..3), exact f64-lane multiples
+/// (4, 8), f32-lane boundary (7..9), a Table-1 monomorphized dim (17) and
+/// a wide dyn-path dim (64).
+const SIMD_DIMS: [usize; 11] = [1, 2, 3, 4, 5, 6, 7, 8, 9, 17, 64];
+
+/// The documented f32-storage error bound (DESIGN.md §2.10): with every
+/// coordinate bounded by R, each dimension's squared-difference term
+/// carries at most ~16·R²·2⁻²⁴ of f32 storage/subtraction error (the
+/// widening f32→f64 products are exact), so a squared distance over d
+/// dims is within `C·d·R²·2⁻²⁴` of the f64 kernel's value, with C = 32
+/// a 2× safety factor.
+fn f32_tol(d: usize, scale: f64) -> f64 {
+    32.0 * d as f64 * scale * scale * (2f64).powi(-24)
+}
+
+fn max_abs(vals: &[f64]) -> f64 {
+    vals.iter().fold(0.0f64, |a, &v| a.max(v.abs()))
+}
+
+#[test]
+fn prop_vector_kernels_conform_over_simd_dims() {
+    // The §2.10 contract over the full dim sweep on adversarial corpora
+    // (duplicate rows, exact-tie centroids, k = 1):
+    //  * f64: every kernel kind is pinned bit-identical to the serial
+    //    engine (`==`, no tolerances);
+    //  * f32: every kernel kind is bit-identical to every other f32
+    //    kernel, and tolerance-bounded against f64 per the documented
+    //    error model (winner bound-plausible, d1 within tol of the f64
+    //    distance to the f32 winner);
+    //  * the bill is precision- and kernel-independent: exactly m·k.
+    prop::check("conformance-vector", 30, |g| {
+        let d = SIMD_DIMS[g.int(0, SIMD_DIMS.len() - 1)];
+        let m = g.int(1, 180);
+        let k = g.int(1, 12); // includes k = 1 (d2 = ∞ per §2.1)
+        let (reps, cents) = adversarial_corpus(g, m, d, k);
+
+        let c0 = counter();
+        let serial = SerialAssigner.assign_top2(&reps, d, &cents, &c0);
+        assert_eq!(c0.get(), (m * k) as u64);
+
+        // f64: pinned.
+        for kernel in [KernelKind::Scalar, KernelKind::Simd, KernelKind::Auto] {
+            let c = counter();
+            let out = VectorAssigner::new(kernel, Precision::F64).assign_top2(&reps, d, &cents, &c);
+            assert_eq!(out, serial, "f64 kernel={} diverged (m={m} k={k} d={d})", kernel.name());
+            assert_eq!(c.get(), (m * k) as u64, "f64 kernel={} bill", kernel.name());
+        }
+
+        // f32: bit-identical within the precision...
+        let c_f32 = counter();
+        let f32_scalar = VectorAssigner::new(KernelKind::Scalar, Precision::F32)
+            .assign_top2(&reps, d, &cents, &c_f32);
+        assert_eq!(c_f32.get(), (m * k) as u64, "the bill is precision-independent");
+        for kernel in [KernelKind::Simd, KernelKind::Auto] {
+            let c = counter();
+            let out = VectorAssigner::new(kernel, Precision::F32).assign_top2(&reps, d, &cents, &c);
+            assert_eq!(out, f32_scalar, "f32 kernel={} diverged", kernel.name());
+            assert_eq!(c.get(), (m * k) as u64);
+        }
+
+        // ...and tolerance-bounded against f64 (the relaxed contract):
+        // the f32 winner need not index-match under near-ties, but its
+        // *f64* distance must be within 2·tol of the true minimum, and
+        // the reported d1 within tol of that f64 distance.
+        let scale = max_abs(&reps).max(max_abs(&cents));
+        let tol = f32_tol(d, scale);
+        for i in 0..m {
+            let row = &reps[i * d..(i + 1) * d];
+            let w32 = f32_scalar.assign[i] as usize;
+            let d64_of_w32 = sq_dist_kernel(row, &cents[w32 * d..(w32 + 1) * d]);
+            assert!(
+                (f32_scalar.d1[i] - d64_of_w32).abs() <= tol,
+                "row {i}: f32 d1 {} vs f64 distance {} exceeds tol {tol} (d={d})",
+                f32_scalar.d1[i],
+                d64_of_w32
+            );
+            assert!(
+                d64_of_w32 <= serial.d1[i] + 2.0 * tol,
+                "row {i}: f32 winner {w32} is not bound-plausible: {} > {} + 2·{tol}",
+                d64_of_w32,
+                serial.d1[i]
+            );
+        }
+        if k == 1 {
+            assert!(f32_scalar.d2.iter().all(|x| x.is_infinite()), "d2 = ∞ at k = 1 in f32 too");
+        }
+    });
+}
+
+#[test]
+fn vector_backends_respect_tie_and_degenerate_rules() {
+    // The §2.1 degenerates on the vectorized backends, with f32-exact
+    // inputs (small integers) so even the relaxed mode must reproduce
+    // the serial output exactly: coincident centroids (lowest index
+    // wins, d2 == d1), duplicate rows, and k = 1.
+    let d = 2;
+    let cents = [9.0, 9.0, 1.0, 0.0, 1.0, 0.0, 1.0, 0.0];
+    let reps = [0.0, 0.0, 1.0, 0.0, 2.0, 0.0, 0.0, 0.0]; // duplicate rows too
+    let serial = SerialAssigner.assign_top2(&reps, d, &cents, &counter());
+    assert_eq!(serial.assign, vec![1, 1, 1, 1]);
+    for precision in [Precision::F64, Precision::F32] {
+        for kernel in [KernelKind::Scalar, KernelKind::Simd, KernelKind::Auto] {
+            let c = counter();
+            let out =
+                VectorAssigner::new(kernel, precision).assign_top2(&reps, d, &cents, &c);
+            assert_eq!(
+                out,
+                serial,
+                "kernel={} precision={} on f32-exact tie corpus",
+                kernel.name(),
+                precision.name()
+            );
+            assert_eq!(c.get(), (reps.len() / d * (cents.len() / d)) as u64);
+        }
+    }
+    // k = 1: d2 = ∞ in every kernel × precision combination.
+    let one = [3.0, 4.0];
+    for precision in [Precision::F64, Precision::F32] {
+        let out = VectorAssigner::new(KernelKind::Auto, precision)
+            .assign_top2(&reps, d, &one, &counter());
+        assert!(out.d2.iter().all(|x| x.is_infinite()), "precision={}", precision.name());
+        assert_eq!(out.assign, vec![0, 0, 0, 0]);
+    }
+}
+
+#[test]
+fn prop_vector_counter_totals_equal_across_kernels_in_full_lloyd_steps() {
+    // Counter-total equality end to end: a short weighted-Lloyd drift
+    // sequence through every kernel × precision charges *exactly* the
+    // same total — steps × m·k — because exact accounting is algorithmic,
+    // not backend- or precision-dependent (§2.4/§2.10).
+    prop::check("conformance-vector-bills", 10, |g| {
+        let d = SIMD_DIMS[g.int(0, SIMD_DIMS.len() - 1)];
+        let m = g.int(2, 120);
+        let k = g.int(1, 8);
+        let (reps, cents) = adversarial_corpus(g, m, d, k);
+        let weights: Vec<f64> = (0..m).map(|_| 1.0 + g.int(0, 5) as f64).collect();
+        let steps = 3usize;
+        let mut bills = Vec::new();
+        for (kernel, precision) in [
+            (KernelKind::Scalar, Precision::F64),
+            (KernelKind::Simd, Precision::F64),
+            (KernelKind::Scalar, Precision::F32),
+            (KernelKind::Simd, Precision::F32),
+        ] {
+            let mut engine = VectorAssigner::new(kernel, precision);
+            let c = counter();
+            let mut cur = cents.clone();
+            for _ in 0..steps {
+                cur = weighted_step(&mut engine, &reps, &weights, d, &cur, &c).centroids;
+            }
+            bills.push(c.get());
+        }
+        assert!(
+            bills.iter().all(|&b| b == (steps * m * k) as u64),
+            "bills diverged across kernel×precision: {bills:?} (expected {})",
+            steps * m * k
+        );
+    });
 }
 
 #[test]

@@ -9,6 +9,9 @@
 #                              # (Seeder backends, K-means|| grids, closed forms)
 #   scripts/ci.sh --approx     # the approximate-regime gap-conformance suite
 #                              # (closures, sampled steps, pinned bills, gaps)
+#   scripts/ci.sh --simd       # build + engine conformance with AND without
+#                              # the `simd` feature (the scalar fallback must
+#                              # stay green on targets without the lane paths)
 #
 # The build is hermetic (vendored path deps, no crates.io), so the script
 # forces cargo offline and never touches the network.
@@ -40,6 +43,18 @@ fi
 if [[ "${1:-}" == "--approx" ]]; then
     echo "== approximate-regime gap-conformance suite =="
     cargo test -q --test approx_conformance
+    exit 0
+fi
+
+if [[ "${1:-}" == "--simd" ]]; then
+    echo "== simd feature ON: build + engine conformance =="
+    cargo build --release
+    cargo test -q --test engine_conformance
+    cargo test -q --lib kmeans::assign
+    echo "== simd feature OFF (scalar fallback): build + engine conformance =="
+    cargo build --release --no-default-features
+    cargo test -q --no-default-features --test engine_conformance
+    cargo test -q --no-default-features --lib kmeans::assign
     exit 0
 fi
 
