@@ -122,6 +122,14 @@ pub struct BwkmOutcome {
     pub trace: Vec<TracePoint>,
     /// Final partition (for inspection / reuse as a coreset).
     pub partition: Partition,
+    /// Stored top-2 squared distances per non-empty block (index-aligned
+    /// with `partition.reps_weights()`), as produced by the **last inner
+    /// weighted-Lloyd step against its pre-update centroids**. Not
+    /// recomputable from `centroids` — the model store (DESIGN.md §5.2)
+    /// persists them verbatim so a resumed run replays the deferred
+    /// split step bit for bit.
+    pub d1: Vec<f64>,
+    pub d2: Vec<f64>,
 }
 
 /// Run BWKM with the stepper `cfg.assign` asks for: the native
@@ -190,6 +198,8 @@ pub fn run_with(
         stop: out.stop,
         trace: out.trace,
         partition: src.into_partition(),
+        d1: out.d1,
+        d2: out.d2,
     }
 }
 
@@ -204,6 +214,178 @@ pub struct SourceOutcome {
     pub d: usize,
     pub stop: StopReason,
     pub trace: Vec<TracePoint>,
+    /// Last inner step's top-2 squared distances per non-empty block
+    /// (against that step's pre-update centroids) — see
+    /// [`BwkmOutcome::d1`].
+    pub d1: Vec<f64>,
+    pub d2: Vec<f64>,
+}
+
+/// Mutable Alg. 5 loop state, shared by [`run_source`] (fresh runs) and
+/// [`resume_source`] (runs continued from a persisted model).
+struct RefineState {
+    reps: Vec<f64>,
+    weights: Vec<f64>,
+    ids: Vec<usize>,
+    centroids: Vec<f64>,
+    trace: Vec<TracePoint>,
+    stop: StopReason,
+    d1: Vec<f64>,
+    d2: Vec<f64>,
+}
+
+/// Step 3 of Alg. 5: sample |F| blocks with replacement ∝ ε, split the
+/// hit (weight > 1) blocks, refresh the source and reload the
+/// representative set. Returns `Ok(false)` when ε carries no sampling
+/// mass (empty boundary) — the caller stops.
+fn split_step<S: RefineSource>(
+    src: &mut S,
+    eps: &[f64],
+    f_len: usize,
+    st: &mut RefineState,
+    rng: &mut Rng,
+) -> Result<bool> {
+    let cdf = match Cdf::new(eps) {
+        Some(c) => c,
+        None => return Ok(false),
+    };
+    let mut hit = vec![false; st.ids.len()];
+    for _ in 0..f_len {
+        hit[cdf.sample(rng)] = true;
+    }
+    let mut any_split = false;
+    for row in 0..st.ids.len() {
+        if hit[row] && src.weight(st.ids[row]) > 1 {
+            src.split(st.ids[row]);
+            any_split = true;
+        }
+    }
+    if any_split {
+        src.refresh()?;
+    }
+    let rw = src.reps_weights();
+    st.reps = rw.0;
+    st.weights = rw.1;
+    st.ids = rw.2;
+    Ok(true)
+}
+
+/// The Alg. 5 iteration body, parameterized on the starting outer index so
+/// fresh and resumed runs share one loop — outer indices are absolute, so
+/// outer-index-sensitive criteria (the `outer > 0` guard on the shift
+/// tolerance) behave identically on both paths.
+fn refine_loop<S: RefineSource>(
+    stepper: &mut dyn Stepper,
+    src: &mut S,
+    k: usize,
+    cfg: &BwkmCfg,
+    rng: &mut Rng,
+    counter: &DistanceCounter,
+    st: &mut RefineState,
+    start_outer: usize,
+) -> Result<()> {
+    let d = src.d();
+    for outer in start_outer..cfg.max_outer {
+        // ---- Step 2 / Step 4: weighted Lloyd (warm start).
+        let mut wl_cfg = cfg.wl;
+        wl_cfg.budget = cfg.budget;
+        let out = weighted_lloyd_with(
+            stepper, &st.reps, &st.weights, d, &st.centroids, &wl_cfg, counter,
+        );
+        let shift = crate::kmeans::weighted_lloyd::max_shift(
+            &st.centroids,
+            &out.centroids,
+            d,
+            k,
+        );
+        st.centroids = out.centroids.clone();
+
+        // ---- Step 3 preamble: ε per block from the stored top-2 distances
+        // ("we store ... the two closest centroids to the representative").
+        let diags: Vec<f64> = st.ids.iter().map(|&b| src.diagonal(b)).collect();
+        let eps = epsilons_from_diags(&diags, &out.d1, &out.d2);
+        let f = boundary(&eps);
+        let bound = theorem2_bound_from_diags(&diags, &st.weights, &out.d1, &eps);
+        st.d1 = out.d1;
+        st.d2 = out.d2;
+
+        let full_error = if cfg.eval_full_error {
+            Some(src.full_error(&st.centroids)?) // uncounted instrumentation
+        } else {
+            None
+        };
+        st.trace.push(TracePoint {
+            outer_iter: outer,
+            distances: counter.get(),
+            blocks: src.partition().len(),
+            occupied: src.occupied(),
+            boundary: f.len(),
+            weighted_error: out.werr,
+            bound,
+            full_error,
+            lloyd_iters: out.iters,
+        });
+
+        // ---- Stopping criteria (§2.4.2).
+        if f.is_empty() {
+            st.stop = StopReason::EmptyBoundary;
+            break;
+        }
+        if cfg.budget.exceeded(counter) {
+            st.stop = StopReason::Budget;
+            break;
+        }
+        if let Some(tol) = cfg.shift_tol {
+            if shift <= tol && outer > 0 {
+                st.stop = StopReason::CentroidShift;
+                break;
+            }
+        }
+        if let Some(tol) = cfg.bound_tol {
+            if bound <= tol {
+                st.stop = StopReason::AccuracyBound;
+                break;
+            }
+        }
+        if outer + 1 == cfg.max_outer {
+            break; // stop = MaxIters
+        }
+
+        // ---- Step 3: sample |F| blocks with replacement ∝ ε and split.
+        if !split_step(src, &eps, f.len(), st, rng)? {
+            st.stop = StopReason::EmptyBoundary;
+            break;
+        }
+    }
+    Ok(())
+}
+
+/// Shared tail of fresh and resumed runs: emit the §2.9 quality-gap
+/// summary (pinned — a capped per-step log cannot drop it) and package
+/// the outcome.
+fn finish(
+    stepper: &mut dyn Stepper,
+    st: RefineState,
+    k: usize,
+    d: usize,
+    counter: &DistanceCounter,
+) -> Result<SourceOutcome> {
+    // §2.9: every approximate run self-reports its measured quality gap
+    // on the final representatives/centroids as a counter note (uncounted
+    // instrumentation); exact steppers return None and add nothing, so
+    // exact trajectories and note logs are untouched.
+    if let Some(gap) = stepper.quality_gap(&st.reps, &st.weights, d, &st.centroids) {
+        counter.note_pinned(gap.note());
+    }
+    Ok(SourceOutcome {
+        centroids: st.centroids,
+        k,
+        d,
+        stop: st.stop,
+        trace: st.trace,
+        d1: st.d1,
+        d2: st.d2,
+    })
 }
 
 /// The Alg. 5 main loop over any [`RefineSource`] (DESIGN.md §5.1) — the
@@ -229,113 +411,95 @@ pub fn run_source<S: RefineSource>(
     // K-means++). Seeding always runs in memory — the representative set
     // is tiny — so in-memory and streamed runs draw identically.
     initial_partition_source(src, k, &cfg.init, rng, counter)?;
-    let (mut reps, mut weights, mut ids) = src.reps_weights();
-    let mut centroids = cfg.seed.seeder().seed(&reps, &weights, d, k, rng, counter);
+    let (reps, weights, ids) = src.reps_weights();
+    let centroids = cfg.seed.seeder().seed(&reps, &weights, d, k, rng, counter);
 
-    let mut trace = Vec::new();
-    let mut stop = StopReason::MaxIters;
+    let mut st = RefineState {
+        reps,
+        weights,
+        ids,
+        centroids,
+        trace: Vec::new(),
+        stop: StopReason::MaxIters,
+        d1: Vec::new(),
+        d2: Vec::new(),
+    };
+    refine_loop(stepper, src, k, cfg, rng, counter, &mut st, 0)?;
+    finish(stepper, st, k, d, counter)
+}
 
-    for outer in 0..cfg.max_outer {
-        // ---- Step 2 / Step 4: weighted Lloyd (warm start).
-        let mut wl_cfg = cfg.wl;
-        wl_cfg.budget = cfg.budget;
-        let out = weighted_lloyd_with(
-            stepper, &reps, &weights, d, &centroids, &wl_cfg, counter,
+/// A persisted mid-run snapshot (model store, DESIGN.md §5.2) from which
+/// [`resume_source`] continues the Alg. 5 loop.
+#[derive(Clone, Debug)]
+pub struct ResumePoint {
+    pub centroids: Vec<f64>,
+    pub trace: Vec<TracePoint>,
+    pub stop: StopReason,
+    /// Stored top-2 squared distances per non-empty block — the last inner
+    /// step's values against its *pre-update* centroids, persisted
+    /// verbatim because they cannot be recomputed from the final
+    /// centroids (see [`BwkmOutcome::d1`]).
+    pub d1: Vec<f64>,
+    pub d2: Vec<f64>,
+}
+
+/// Continue an Alg. 5 run from a persisted snapshot over a rebuilt
+/// [`RefineSource`], bit-identical to the uninterrupted run.
+///
+/// An interrupted run (`stop == MaxIters`) broke at
+/// `outer + 1 == max_outer` — *after* pushing its last trace point but
+/// *before* the Step-3 split. Resuming with a larger `cfg.max_outer`
+/// therefore first replays that deferred split (ε from the stored top-2
+/// distances plus the rebuilt diagonals; the restored RNG supplies the
+/// same draws the uninterrupted run would have made), then re-enters the
+/// shared loop at absolute outer index `trace.len()`. Snapshots that
+/// stopped for any other reason — or whose cap the caller did not raise —
+/// return unchanged: every other criterion is terminal (re-running Lloyd
+/// would also charge distances the uninterrupted run never billed).
+pub fn resume_source<S: RefineSource>(
+    stepper: &mut dyn Stepper,
+    src: &mut S,
+    k: usize,
+    cfg: &BwkmCfg,
+    point: ResumePoint,
+    rng: &mut Rng,
+    counter: &DistanceCounter,
+) -> Result<SourceOutcome> {
+    assert!(k >= 1, "k must be ≥ 1");
+    let d = src.d();
+    let (reps, weights, ids) = src.reps_weights();
+    let mut st = RefineState {
+        reps,
+        weights,
+        ids,
+        centroids: point.centroids,
+        trace: point.trace,
+        stop: point.stop,
+        d1: point.d1,
+        d2: point.d2,
+    };
+    if st.stop != StopReason::MaxIters || st.trace.len() >= cfg.max_outer {
+        return finish(stepper, st, k, d, counter);
+    }
+    if !st.trace.is_empty() {
+        anyhow::ensure!(
+            st.d1.len() == st.ids.len() && st.d2.len() == st.ids.len(),
+            "resume point stores top-2 distances for {} blocks, partition has {} non-empty",
+            st.d1.len(),
+            st.ids.len()
         );
-        let shift = crate::kmeans::weighted_lloyd::max_shift(
-            &centroids,
-            &out.centroids,
-            d,
-            k,
-        );
-        centroids = out.centroids.clone();
-
-        // ---- Step 3 preamble: ε per block from the stored top-2 distances
-        // ("we store ... the two closest centroids to the representative").
-        let diags: Vec<f64> = ids.iter().map(|&b| src.diagonal(b)).collect();
-        let eps = epsilons_from_diags(&diags, &out.d1, &out.d2);
+        // Replay the deferred Step-3 split the interrupted run skipped.
+        let diags: Vec<f64> = st.ids.iter().map(|&b| src.diagonal(b)).collect();
+        let eps = epsilons_from_diags(&diags, &st.d1, &st.d2);
         let f = boundary(&eps);
-        let bound = theorem2_bound_from_diags(&diags, &weights, &out.d1, &eps);
-
-        let full_error = if cfg.eval_full_error {
-            Some(src.full_error(&centroids)?) // uncounted instrumentation
-        } else {
-            None
-        };
-        trace.push(TracePoint {
-            outer_iter: outer,
-            distances: counter.get(),
-            blocks: src.partition().len(),
-            occupied: src.occupied(),
-            boundary: f.len(),
-            weighted_error: out.werr,
-            bound,
-            full_error,
-            lloyd_iters: out.iters,
-        });
-
-        // ---- Stopping criteria (§2.4.2).
-        if f.is_empty() {
-            stop = StopReason::EmptyBoundary;
-            break;
+        if !split_step(src, &eps, f.len(), &mut st, rng)? {
+            st.stop = StopReason::EmptyBoundary;
+            return finish(stepper, st, k, d, counter);
         }
-        if cfg.budget.exceeded(counter) {
-            stop = StopReason::Budget;
-            break;
-        }
-        if let Some(tol) = cfg.shift_tol {
-            if shift <= tol && outer > 0 {
-                stop = StopReason::CentroidShift;
-                break;
-            }
-        }
-        if let Some(tol) = cfg.bound_tol {
-            if bound <= tol {
-                stop = StopReason::AccuracyBound;
-                break;
-            }
-        }
-        if outer + 1 == cfg.max_outer {
-            break; // stop = MaxIters
-        }
-
-        // ---- Step 3: sample |F| blocks with replacement ∝ ε and split.
-        let cdf = match Cdf::new(&eps) {
-            Some(c) => c,
-            None => {
-                stop = StopReason::EmptyBoundary;
-                break;
-            }
-        };
-        let mut hit = vec![false; ids.len()];
-        for _ in 0..f.len() {
-            hit[cdf.sample(rng)] = true;
-        }
-        let mut any_split = false;
-        for row in 0..ids.len() {
-            if hit[row] && src.weight(ids[row]) > 1 {
-                src.split(ids[row]);
-                any_split = true;
-            }
-        }
-        if any_split {
-            src.refresh()?;
-        }
-        let rw = src.reps_weights();
-        reps = rw.0;
-        weights = rw.1;
-        ids = rw.2;
     }
-
-    // §2.9: every approximate run self-reports its measured quality gap
-    // on the final representatives/centroids as a counter note (uncounted
-    // instrumentation); exact steppers return None and add nothing, so
-    // exact trajectories and note logs are untouched.
-    if let Some(gap) = stepper.quality_gap(&reps, &weights, d, &centroids) {
-        counter.note(gap.note());
-    }
-
-    Ok(SourceOutcome { centroids, k, d, stop, trace })
+    let start = st.trace.len();
+    refine_loop(stepper, src, k, cfg, rng, counter, &mut st, start)?;
+    finish(stepper, st, k, d, counter)
 }
 
 #[cfg(test)]

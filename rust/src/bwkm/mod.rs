@@ -17,8 +17,8 @@ pub mod misassignment;
 pub mod source;
 
 pub use algorithm::{
-    run, run_auto, run_source, run_with, BwkmCfg, BwkmOutcome, SourceOutcome, StopReason,
-    TracePoint,
+    resume_source, run, run_auto, run_source, run_with, BwkmCfg, BwkmOutcome, ResumePoint,
+    SourceOutcome, StopReason, TracePoint,
 };
 pub use init_partition::{
     cutting_masses, cutting_masses_source, initial_partition, initial_partition_source,

@@ -123,6 +123,16 @@ impl<'a> MemSource<'a> {
     pub fn into_partition(self) -> Partition {
         self.partition
     }
+
+    /// Wrap an existing partition (warm start / resume, DESIGN.md §5.2).
+    /// The partition must carry **member-exact** statistics over `data` —
+    /// a tree rebuilt from a persisted model must run
+    /// `Partition::assign_members(data)` first, which is pinned
+    /// bit-identical to incrementally maintained stats.
+    pub fn with_partition(data: &'a Dataset, partition: Partition) -> MemSource<'a> {
+        assert_eq!(partition.d, data.d, "partition/dataset dimension mismatch");
+        MemSource { data, partition }
+    }
 }
 
 /// Read-only in-memory source over a *borrowed* partition — the shape

@@ -34,6 +34,7 @@ RUN KEYS: dataset scale seed k method budget threads use_pjrt eval_full_error
           init oversample_l init_rounds chain_length
           assign closure_expand sample_rows sample_seed
           kernel precision
+          save resume ingest jobs
           (method: bwkm fkm kmpp kmpp_init kmc2 mbN rpkm)
           (assign: exact closure sampled — the §2.9 assignment regime for
            bwkm/rpkm; closure scans closure_expand+1 candidate centroids
@@ -54,6 +55,23 @@ RUN KEYS: dataset scale seed k method budget threads use_pjrt eval_full_error
            bit-identical to the in-memory run on the same data/seed;
            the per-iteration E^D trace costs one pass per iteration out
            of core, so it is opt-in there: eval_full_error=on)
+          (save=FILE / resume=FILE — the DESIGN.md §5.2 model store,
+           method=bwkm only: save persists the fitted model — centroids,
+           partition cells, RNG stream, cumulative distance bill; resume
+           continues an iteration-capped run over its original dataset,
+           bit-identical to the uninterrupted run. Resume under the
+           saving run's settings: only max_outer and budget may change —
+           size-derived defaults like m must be passed explicitly if the
+           dataset scale differs)
+          (ingest=FILE resume=MODEL — warm-start ingestion: fold a
+           mini-batch (.bin or CSV) into a saved model *without* the
+           original dataset; re-refinement runs only when a cell's
+           misassignment bound moved, the bill is exact, and the updated
+           model is written to save= — or back over resume= if absent)
+          (jobs=N — multiplex N independent bwkm jobs over the threads=
+           worker pool; each job gets a private distance counter and a
+           deterministic RNG stream forked from seed, so results are
+           worker-count independent)
 ";
 
 /// Entry point used by `src/main.rs`.
@@ -215,12 +233,120 @@ fn run_streaming(cfg: &RunConfig, path: &str) -> Result<()> {
     Ok(())
 }
 
+/// Warm-start ingestion (DESIGN.md §5.2): fold a mini-batch into a saved
+/// model without its original dataset. `resume=` names the store,
+/// `ingest=` the batch file; the updated model goes to `save=` (or back
+/// over the input store when absent).
+fn run_ingest(cfg: &RunConfig, batch_path: &str) -> Result<()> {
+    let model_path = cfg
+        .resume
+        .as_deref()
+        .context("ingest= needs resume=FILE naming the model store to ingest into")?;
+    if cfg.jobs > 1 {
+        bail!("ingest= is a single job (drop jobs=)");
+    }
+    if cfg.method != Method::Bwkm {
+        bail!("ingest= operates on BWKM model stores (method=bwkm only)");
+    }
+    let p = Path::new(batch_path);
+    let batch = if batch_path.ends_with(".bin") {
+        crate::data::loader::load_bin(p)?
+    } else {
+        crate::data::loader::load_csv(p, None)?
+    };
+    let mut model = crate::store::load(model_path)?;
+    // Rebuild the saving run's configuration. model.rows equals the
+    // original n until the first ingest grows it; after that, pass the
+    // size-derived keys (m, m_prime, s) explicitly — the digest check
+    // rejects a drifted configuration rather than guessing.
+    let bcfg = cfg.bwkm_cfg(model.rows as usize, model.d)?;
+    let counter = DistanceCounter::new();
+    let t0 = std::time::Instant::now();
+    let report = crate::store::ingest(&mut model, &batch, &bcfg, &counter)?;
+    let out_path = cfg.save.as_deref().unwrap_or(model_path);
+    crate::store::save(&model, out_path)?;
+    println!(
+        "ingest: rows={} touched={} moved={} refine_iters={} batch_err={:.6e}",
+        report.rows, report.touched, report.moved, report.refine_iters, report.batch_err
+    );
+    println!(
+        "result: model={} rows={} distances=+{} wall={:.2?}",
+        out_path,
+        model.rows,
+        fmt_count(report.bill),
+        t0.elapsed()
+    );
+    Ok(())
+}
+
+/// Multiplex `jobs=N` independent BWKM runs over the shared worker pool
+/// (DESIGN.md §5.2): one dataset, N seed streams, isolated bills.
+fn run_multi(cfg: &RunConfig) -> Result<()> {
+    if cfg.method != Method::Bwkm {
+        bail!("jobs= supports method=bwkm only (got {})", cfg.method.name());
+    }
+    if cfg.save.is_some() || cfg.resume.is_some() {
+        bail!("jobs= cannot be combined with save=/resume= (a store file holds one model; run jobs separately)");
+    }
+    if cfg.use_pjrt {
+        bail!("jobs= does not support use_pjrt (the device runtime is single-tenant)");
+    }
+    if cfg.dataset.starts_with("stream:") {
+        bail!("jobs= needs an in-memory dataset (stream: sources are single-job)");
+    }
+    let ds = load_dataset(cfg)?;
+    if !ds.is_finite() {
+        bail!("dataset contains non-finite values");
+    }
+    let bcfg = cfg.bwkm_cfg(ds.n, ds.d)?;
+    println!(
+        "run: dataset={} n={} d={} k={} method=BWKM jobs={} workers={}",
+        cfg.dataset,
+        ds.n,
+        ds.d,
+        cfg.k,
+        cfg.jobs,
+        cfg.threads.max(1).min(cfg.jobs)
+    );
+    let t0 = std::time::Instant::now();
+    let results = crate::coordinator::run_jobs(cfg.jobs, cfg.threads, cfg.seed, |_job, rng, counter| {
+        crate::bwkm::run(&ds, cfg.k, &bcfg, rng, counter)
+    });
+    for r in &results {
+        let eval = DistanceCounter::new();
+        let err = kmeans_error(&ds.data, ds.d, &r.out.centroids, &eval);
+        println!(
+            "  job={:<3} E^D={err:.6e} distances={:>14} (stop={:?})",
+            r.job,
+            fmt_count(r.distances),
+            r.out.stop
+        );
+        for n in r.notes.iter().filter(|n| n.starts_with("gap[")) {
+            println!("    {n}");
+        }
+    }
+    println!("result: {} jobs wall={:.2?} (init={})", results.len(), t0.elapsed(), bcfg.seed.method.name());
+    Ok(())
+}
+
 fn run(args: &[String]) -> Result<()> {
     let mut cfg = RunConfig::default();
     parse_overrides(&mut cfg, args)?;
+    if let Some(batch) = cfg.ingest.clone() {
+        return run_ingest(&cfg, &batch);
+    }
+    if cfg.jobs > 1 {
+        return run_multi(&cfg);
+    }
     if let Some(path) = cfg.dataset.strip_prefix("stream:") {
+        if cfg.save.is_some() || cfg.resume.is_some() {
+            bail!("save=/resume= need the in-memory path (the streaming outcome holds no store state yet)");
+        }
         let path = path.to_string();
         return run_streaming(&cfg, &path);
+    }
+    if (cfg.save.is_some() || cfg.resume.is_some()) && cfg.method != Method::Bwkm {
+        bail!("save=/resume= operate on BWKM model stores (method=bwkm only)");
     }
     let ds = load_dataset(&cfg)?;
     if !ds.is_finite() {
@@ -254,7 +380,26 @@ fn run(args: &[String]) -> Result<()> {
                 // has its own kernel (DESIGN.md §8), not the native one.
                 bail!("use_pjrt supports the default kernel/precision only (drop the keys)");
             }
-            let out = if approx {
+            let out = if let Some(mp) = &cfg.resume {
+                if cfg.use_pjrt {
+                    bail!("resume= does not support use_pjrt (the device stepper holds no store state)");
+                }
+                let model = crate::store::load(mp)?;
+                if cfg.threads > 1 && !approx {
+                    let mut stepper =
+                        crate::coordinator::sharded_stepper_for(&bcfg.assign, cfg.threads);
+                    crate::store::resume_with(
+                        stepper.as_mut(),
+                        &model,
+                        &ds,
+                        &bcfg,
+                        &mut rng,
+                        &counter,
+                    )?
+                } else {
+                    crate::store::resume(&model, &ds, &bcfg, &mut rng, &counter)?
+                }
+            } else if approx {
                 // Approximate regimes run their own (serial) stepper —
                 // closures / sampled steps carry state across steps.
                 let mut stepper = crate::kmeans::stepper_for(&bcfg.assign);
@@ -277,6 +422,18 @@ fn run(args: &[String]) -> Result<()> {
                 crate::bwkm::run(&ds, cfg.k, &bcfg, &mut rng, &counter)
             };
             print_trace(&out.trace);
+            if let Some(sp) = &cfg.save {
+                // The advanced rng/counter go into the snapshot so a
+                // later resume continues the exact same trajectory.
+                let model = crate::store::Model::from_run(&out, &bcfg, &rng, &counter);
+                crate::store::save(&model, sp)?;
+                println!(
+                    "saved: {sp} ({} cells, {} rows, {} trace points)",
+                    model.cells.len(),
+                    model.rows,
+                    model.trace.len()
+                );
+            }
             let stop = out.stop;
             (out.centroids, format!("stop={stop:?} init={}", bcfg.seed.method.name()))
         }
@@ -510,6 +667,82 @@ mod tests {
             "method=bwkm".into(),
             "use_pjrt=on".into(),
             "kernel=simd".into(), // the device step has its own kernel
+        ])
+        .is_err());
+    }
+
+    #[test]
+    fn run_service_verbs_end_to_end() {
+        let ds = crate::data::simulate("3RN", 0.002, 5).unwrap();
+        let data = std::env::temp_dir().join(format!("bwkm_cli_svc_{}.bin", std::process::id()));
+        crate::data::loader::save_bin(&ds, &data).unwrap();
+        let model = std::env::temp_dir().join(format!("bwkm_cli_svc_{}.mdl", std::process::id()));
+        let common = [
+            format!("dataset=path:{}", data.display()),
+            "k=3".into(),
+            "seed=1".into(),
+            "eval_full_error=off".into(),
+        ];
+        // Fit an iteration-capped model and save it.
+        let mut args: Vec<String> = common.to_vec();
+        args.push("max_outer=2".into());
+        args.push(format!("save={}", model.display()));
+        run(&args).unwrap();
+        // Resume it over the same dataset with a raised cap.
+        let mut args: Vec<String> = common.to_vec();
+        args.push("max_outer=4".into());
+        args.push(format!("resume={}", model.display()));
+        args.push(format!("save={}", model.display()));
+        run(&args).unwrap();
+        // Ingest a mini-batch without the original dataset in play.
+        let batch = Dataset::new(ds.data[..ds.d * 16].to_vec(), ds.d);
+        let bpath = std::env::temp_dir().join(format!("bwkm_cli_svc_{}.batch.bin", std::process::id()));
+        crate::data::loader::save_bin(&batch, &bpath).unwrap();
+        // The resumed model covers n rows; size-derived defaults still
+        // match because the batch does not change the cfg inputs here.
+        let mut args: Vec<String> = common.to_vec();
+        args.push("max_outer=4".into());
+        args.push(format!("ingest={}", bpath.display()));
+        args.push(format!("resume={}", model.display()));
+        run(&args).unwrap();
+        let grown = crate::store::load(model.to_str().unwrap()).unwrap();
+        assert_eq!(grown.rows, ds.n as u64 + 16);
+        for p in [&data, &model, &bpath] {
+            std::fs::remove_file(p).ok();
+        }
+    }
+
+    #[test]
+    fn run_jobs_multiplexing_and_bad_combos() {
+        run(&[
+            "dataset=3RN".into(),
+            "scale=0.002".into(),
+            "k=3".into(),
+            "method=bwkm".into(),
+            "jobs=3".into(),
+            "threads=2".into(),
+            "max_outer=2".into(),
+            "seed=1".into(),
+            "eval_full_error=off".into(),
+        ])
+        .unwrap();
+        // jobs= is bwkm-only and excludes the store verbs.
+        assert!(run(&["dataset=3RN".into(), "scale=0.002".into(), "method=fkm".into(), "jobs=2".into()]).is_err());
+        assert!(run(&[
+            "dataset=3RN".into(),
+            "scale=0.002".into(),
+            "jobs=2".into(),
+            "save=x.mdl".into(),
+        ])
+        .is_err());
+        // ingest= without a model store to anchor on is a clean error.
+        assert!(run(&["dataset=3RN".into(), "scale=0.002".into(), "ingest=b.bin".into()]).is_err());
+        // save= is meaningless for methods without a model store.
+        assert!(run(&[
+            "dataset=3RN".into(),
+            "scale=0.002".into(),
+            "method=fkm".into(),
+            "save=x.mdl".into(),
         ])
         .is_err());
     }

@@ -91,6 +91,16 @@ pub struct RunConfig {
     /// Rows per chunk for `stream:` datasets (the out-of-core working
     /// set; results are chunk-size independent, bit for bit).
     pub chunk_rows: usize,
+    /// Save the fitted model to this store file (DESIGN.md §5.2).
+    pub save: Option<String>,
+    /// Resume a run (or anchor an ingest) from this store file.
+    pub resume: Option<String>,
+    /// Ingest this dataset file as a warm-start mini-batch into the
+    /// `resume=` model instead of running a clustering method.
+    pub ingest: Option<String>,
+    /// Independent jobs to multiplex over the worker pool (seed streams
+    /// fork per job; results are worker-count independent).
+    pub jobs: usize,
     /// Raw key/values for method-specific extras (m, m_prime, s, r, ...).
     pub extra: BTreeMap<String, String>,
 }
@@ -109,17 +119,27 @@ impl Default for RunConfig {
             eval_full_error: true,
             eval_full_error_explicit: false,
             chunk_rows: 4096,
+            save: None,
+            resume: None,
+            ingest: None,
+            jobs: 1,
             extra: BTreeMap::new(),
         }
     }
 }
 
 impl RunConfig {
-    /// Parse a config file (lines of `key = value`, `#` comments).
+    /// Parse a config file (lines of `key = value`, `#` comments). A key
+    /// appearing twice in one file is a hard error, not a silent
+    /// last-wins overwrite: in-file duplicates are always a typo or a
+    /// stale edit, and the value that "won" used to depend on line order.
+    /// (CLI overrides still layer *on top of* the file — that is the
+    /// intended precedence, applied by the caller after parsing.)
     pub fn from_file(path: &Path) -> Result<RunConfig> {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading {}", path.display()))?;
         let mut cfg = RunConfig::default();
+        let mut seen: BTreeMap<String, usize> = BTreeMap::new();
         for (no, line) in text.lines().enumerate() {
             let t = line.trim();
             if t.is_empty() || t.starts_with('#') {
@@ -128,7 +148,17 @@ impl RunConfig {
             let (k, v) = t
                 .split_once('=')
                 .ok_or_else(|| anyhow!("{}:{}: expected key = value", path.display(), no + 1))?;
-            cfg.set(k.trim(), v.trim())?;
+            let k = k.trim();
+            if let Some(first) = seen.insert(k.to_string(), no + 1) {
+                bail!(
+                    "{}:{}: duplicate key `{k}` (first set at line {first}); \
+                     keep one line per key — to override a file value, pass {k}=... \
+                     on the command line instead",
+                    path.display(),
+                    no + 1
+                );
+            }
+            cfg.set(k, v.trim())?;
         }
         Ok(cfg)
     }
@@ -153,6 +183,15 @@ impl RunConfig {
                 self.chunk_rows = value.parse().context("chunk_rows")?;
                 if self.chunk_rows == 0 {
                     bail!("chunk_rows must be ≥ 1");
+                }
+            }
+            "save" => self.save = Some(value.to_string()),
+            "resume" => self.resume = Some(value.to_string()),
+            "ingest" => self.ingest = Some(value.to_string()),
+            "jobs" => {
+                self.jobs = value.parse().context("jobs")?;
+                if self.jobs == 0 {
+                    bail!("jobs must be ≥ 1");
                 }
             }
             _ => {
@@ -333,6 +372,43 @@ mod tests {
         assert_eq!(cfg.k, 3);
         assert!(cfg.set("scale", "abc").is_err());
         std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn duplicate_file_keys_are_a_parse_error() {
+        let p = std::env::temp_dir().join(format!("bwkm_cfg_dup_{}.conf", std::process::id()));
+        std::fs::write(&p, "k = 9\ndataset = 3RN\n# comment\nk = 27\n").unwrap();
+        let err = RunConfig::from_file(&p).unwrap_err().to_string();
+        assert!(err.contains("duplicate key `k`"), "{err}");
+        assert!(err.contains(":4:"), "should cite the duplicate line: {err}");
+        assert!(err.contains("line 1"), "should cite the first line: {err}");
+        // Extra keys get the same protection as typed ones.
+        std::fs::write(&p, "m = 80\nm = 90\n").unwrap();
+        let err = RunConfig::from_file(&p).unwrap_err().to_string();
+        assert!(err.contains("duplicate key `m`"), "{err}");
+        // CLI-style overrides on top of a clean file remain legal.
+        std::fs::write(&p, "k = 9\n").unwrap();
+        let mut cfg = RunConfig::from_file(&p).unwrap();
+        cfg.set("k", "3").unwrap();
+        assert_eq!(cfg.k, 3);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn service_keys_parse_and_validate() {
+        let mut cfg = RunConfig::default();
+        assert_eq!(cfg.jobs, 1);
+        assert!(cfg.save.is_none() && cfg.resume.is_none() && cfg.ingest.is_none());
+        cfg.set("save", "model.bin").unwrap();
+        cfg.set("resume", "old.bin").unwrap();
+        cfg.set("ingest", "batch.bin").unwrap();
+        cfg.set("jobs", "4").unwrap();
+        assert_eq!(cfg.save.as_deref(), Some("model.bin"));
+        assert_eq!(cfg.resume.as_deref(), Some("old.bin"));
+        assert_eq!(cfg.ingest.as_deref(), Some("batch.bin"));
+        assert_eq!(cfg.jobs, 4);
+        assert!(cfg.set("jobs", "0").is_err());
+        assert!(cfg.set("jobs", "many").is_err());
     }
 
     #[test]

@@ -12,11 +12,15 @@
 //! to the in-memory path. Shards come from the one canonical
 //! `shard_ranges` rule and reductions are performed in shard order, so
 //! results are bit-identical to the serial path — asserted by the
-//! equivalence tests.
+//! equivalence tests. [`jobs`] adds the orthogonal axis (DESIGN.md §5.2):
+//! whole independent jobs multiplexed over one worker pool, each with a
+//! private counter and a deterministic per-job RNG stream.
 
+pub mod jobs;
 pub mod parallel;
 pub mod streaming;
 
+pub use jobs::{run_jobs, JobResult};
 pub use parallel::{sharded_assign_err, sharded_stepper_for, sharded_weighted_step, ShardedStepper};
 pub use streaming::{
     stream_assign_err, stream_assign_err_with, stream_partition_stats,

@@ -580,6 +580,11 @@ pub struct StreamBwkmOutcome {
     /// Streaming passes over the source (extent + sample fetches +
     /// statistics refreshes + any `eval_full_error` evaluations).
     pub passes: usize,
+    /// Last inner step's top-2 squared distances per non-empty block
+    /// (pre-update centroids) — see `bwkm::BwkmOutcome::d1`; the model
+    /// store persists them verbatim.
+    pub d1: Vec<f64>,
+    pub d2: Vec<f64>,
 }
 
 /// The out-of-core BWKM coordinator: the full Alg. 5 loop (initial
@@ -682,6 +687,8 @@ where
             weights,
             ids,
             passes,
+            d1: out.d1,
+            d2: out.d2,
             partition: src.into_partition(),
         })
     }

@@ -48,6 +48,7 @@ pub mod metrics;
 pub mod partition;
 pub mod rpkm;
 pub mod runtime;
+pub mod store;
 pub mod util;
 
 /// Convenience re-exports for examples and downstream users.

@@ -21,6 +21,7 @@ pub const NOTE_CAP: usize = 8192;
 pub struct DistanceCounter {
     count: AtomicU64,
     notes: Mutex<Vec<String>>,
+    pinned: Mutex<Vec<String>>,
 }
 
 impl DistanceCounter {
@@ -58,15 +59,35 @@ impl DistanceCounter {
         }
     }
 
-    /// All annotations recorded so far, in order.
-    pub fn notes(&self) -> Vec<String> {
-        self.notes.lock().expect("counter note lock poisoned").clone()
+    /// Attach a **pinned** annotation: once-per-run summaries (the
+    /// end-of-run `gap[backend]` quality report) that conformance suites
+    /// assert appear exactly once. Pinned notes live in a reserved slot
+    /// outside the [`NOTE_CAP`] budget, so a run whose per-step log
+    /// overflows the cap cannot drop them.
+    pub fn note_pinned(&self, note: String) {
+        self.pinned.lock().expect("counter note lock poisoned").push(note);
     }
 
-    /// Reset count *and* notes to empty (between repetitions).
+    /// Pinned annotations only (reserved-slot summaries).
+    pub fn pinned_notes(&self) -> Vec<String> {
+        self.pinned.lock().expect("counter note lock poisoned").clone()
+    }
+
+    /// All annotations recorded so far: the capped per-step log in order,
+    /// then pinned summaries (which are emitted at end-of-run, so this
+    /// preserves the report's chronological reading).
+    pub fn notes(&self) -> Vec<String> {
+        let mut out = self.notes.lock().expect("counter note lock poisoned").clone();
+        out.extend(self.pinned.lock().expect("counter note lock poisoned").iter().cloned());
+        out
+    }
+
+    /// Reset count *and* notes (capped and pinned) to empty (between
+    /// repetitions).
     pub fn reset(&self) {
         self.count.store(0, Ordering::Relaxed);
         self.notes.lock().expect("counter note lock poisoned").clear();
+        self.pinned.lock().expect("counter note lock poisoned").clear();
     }
 }
 
@@ -134,6 +155,44 @@ mod tests {
         c.reset();
         c.note("fresh".into());
         assert_eq!(c.notes(), vec!["fresh"]);
+    }
+
+    #[test]
+    fn pinned_notes_survive_cap_flood() {
+        // Regression: the end-of-run `gap[...]` summary used to go through
+        // the capped log, so a run with > NOTE_CAP per-step notes dropped
+        // exactly the note the conformance suites pin as once-per-run.
+        let c = DistanceCounter::new();
+        for i in 0..(NOTE_CAP + 100) {
+            c.note(format!("auto[{i}]: serial"));
+        }
+        c.note_pinned("gap[closure]: rel_gap=1.25e-3".into());
+        let notes = c.notes();
+        assert_eq!(notes.len(), NOTE_CAP + 2, "cap + marker + pinned");
+        assert_eq!(notes.last().unwrap(), "gap[closure]: rel_gap=1.25e-3");
+        assert_eq!(c.pinned_notes(), vec!["gap[closure]: rel_gap=1.25e-3"]);
+        assert_eq!(
+            notes.iter().filter(|n| n.starts_with("gap[")).count(),
+            1,
+            "pinned summary appears exactly once"
+        );
+        c.reset();
+        assert!(c.notes().is_empty());
+        assert!(c.pinned_notes().is_empty());
+    }
+
+    #[test]
+    fn pinned_notes_append_after_capped_log() {
+        let c = DistanceCounter::new();
+        c.note("auto[1]: bounded".into());
+        c.note_pinned("gap[sampled]: rel_gap=0e0".into());
+        c.note("auto[2]: serial".into());
+        // Pinned entries read last regardless of interleaving: they are
+        // end-of-run summaries.
+        assert_eq!(
+            c.notes(),
+            vec!["auto[1]: bounded", "auto[2]: serial", "gap[sampled]: rel_gap=0e0"]
+        );
     }
 
     #[test]

@@ -28,6 +28,15 @@ enum Node {
     Leaf { block: u32 },
 }
 
+/// Serializable view of one tree node — the model store (DESIGN.md §5.2)
+/// persists the split tree as a flat array of these and rebuilds it with
+/// [`Partition::from_flat`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FlatNode {
+    Internal { axis: u32, thr: f64, left: u32, right: u32 },
+    Leaf { block: u32 },
+}
+
 /// One block (hyperrectangular cell) of the spatial partition together
 /// with its induced dataset subset.
 #[derive(Clone, Debug)]
@@ -255,6 +264,94 @@ impl Partition {
         (reps, weights, ids)
     }
 
+    /// Flat serializable view of the split tree, index-for-index with the
+    /// internal node array (node 0 is the root).
+    pub fn flat_nodes(&self) -> Vec<FlatNode> {
+        self.nodes
+            .iter()
+            .map(|n| match n {
+                Node::Leaf { block } => FlatNode::Leaf { block: *block },
+                Node::Internal { axis, thr, left, right } => FlatNode::Internal {
+                    axis: *axis as u32,
+                    thr: *thr,
+                    left: *left,
+                    right: *right,
+                },
+            })
+            .collect()
+    }
+
+    /// Rebuild a partition from a persisted flat tree plus per-block cells.
+    /// Blocks come back with **empty member bookkeeping** (no members, zero
+    /// sums, stored tight boxes) — callers that need the induced dataset
+    /// partition must run [`Partition::assign_members`] over the original
+    /// dataset, which is pinned bit-identical to the incrementally
+    /// maintained stats. Structural invariants (every block referenced by
+    /// exactly one leaf, child/axis indices in range, bbox dims matching
+    /// `d`) are validated so a corrupted store fails here, not downstream.
+    pub fn from_flat(
+        d: usize,
+        nodes: &[FlatNode],
+        cells: Vec<(BBox, Option<BBox>)>,
+    ) -> anyhow::Result<Partition> {
+        use anyhow::{bail, ensure};
+        ensure!(d > 0, "partition dimension must be positive");
+        ensure!(!nodes.is_empty(), "partition tree has no nodes");
+        let nb = cells.len();
+        let mut leaf_of = vec![None::<u32>; nb];
+        let mut built = Vec::with_capacity(nodes.len());
+        for (i, fnode) in nodes.iter().enumerate() {
+            match *fnode {
+                FlatNode::Leaf { block } => {
+                    let b = block as usize;
+                    ensure!(b < nb, "node {i}: leaf references block {b} of {nb}");
+                    if let Some(prev) = leaf_of[b] {
+                        bail!("block {b} referenced by two leaves (nodes {prev} and {i})");
+                    }
+                    leaf_of[b] = Some(i as u32);
+                    built.push(Node::Leaf { block });
+                }
+                FlatNode::Internal { axis, thr, left, right } => {
+                    let (l, r) = (left as usize, right as usize);
+                    ensure!(
+                        l < nodes.len() && r < nodes.len(),
+                        "node {i}: child index out of range ({l}, {r} of {})",
+                        nodes.len()
+                    );
+                    ensure!(l != i && r != i, "node {i}: self-referential child");
+                    ensure!((axis as usize) < d, "node {i}: split axis {axis} ≥ d={d}");
+                    ensure!(thr.is_finite(), "node {i}: non-finite split threshold");
+                    built.push(Node::Internal { axis: axis as usize, thr, left, right });
+                }
+            }
+        }
+        let mut blocks = Vec::with_capacity(nb);
+        for (b, (cell, tight)) in cells.into_iter().enumerate() {
+            let node = match leaf_of[b] {
+                Some(n) => n,
+                None => bail!("block {b} is not referenced by any leaf"),
+            };
+            ensure!(
+                cell.lo.len() == d && cell.hi.len() == d,
+                "block {b}: cell bbox dimension mismatch"
+            );
+            if let Some(t) = &tight {
+                ensure!(
+                    t.lo.len() == d && t.hi.len() == d,
+                    "block {b}: tight bbox dimension mismatch"
+                );
+            }
+            blocks.push(Block {
+                cell,
+                tight,
+                members: Vec::new(),
+                sum: vec![0.0; d],
+                node,
+            });
+        }
+        Ok(Partition { d, nodes: built, blocks })
+    }
+
     /// Tree depth (diagnostics).
     pub fn depth(&self) -> usize {
         fn go(nodes: &[Node], i: usize) -> usize {
@@ -437,6 +534,69 @@ mod tests {
                 );
             }
         });
+    }
+
+    #[test]
+    fn flat_roundtrip_rebuilds_identical_tree() {
+        let mut rng = Rng::new(21);
+        let data: Vec<f64> = (0..900).map(|_| rng.normal() * 3.0).collect();
+        let ds = dataset(data, 3);
+        let mut p = Partition::root(&ds);
+        for _ in 0..20 {
+            let b = rng.usize(p.len());
+            if p.blocks[b].weight() > 1 {
+                p.split(b, &ds);
+            }
+        }
+        let flat = p.flat_nodes();
+        let cells: Vec<(BBox, Option<BBox>)> =
+            p.blocks.iter().map(|b| (b.cell.clone(), b.tight.clone())).collect();
+        let mut q = Partition::from_flat(3, &flat, cells).unwrap();
+        assert_eq!(q.flat_nodes(), flat, "flat view survives the roundtrip");
+        // Rebuilt partition locates every row in the same block, and
+        // assign_members restores member-exact stats bit for bit.
+        q.assign_members(&ds);
+        for i in 0..ds.n {
+            assert_eq!(p.locate(ds.row(i)), q.locate(ds.row(i)));
+        }
+        for (a, b) in p.blocks.iter().zip(&q.blocks) {
+            let (mut ma, mut mb) = (a.members.clone(), b.members.clone());
+            ma.sort();
+            mb.sort();
+            assert_eq!(ma, mb);
+            assert_eq!(a.sum, b.sum, "sums fold in row order on both paths");
+        }
+    }
+
+    #[test]
+    fn from_flat_rejects_structural_corruption() {
+        let ds = dataset(vec![0.0, 0.0, 4.0, 4.0], 2);
+        let mut p = Partition::root(&ds);
+        p.split(0, &ds);
+        let flat = p.flat_nodes();
+        let cells = || -> Vec<(BBox, Option<BBox>)> {
+            p.blocks.iter().map(|b| (b.cell.clone(), b.tight.clone())).collect()
+        };
+        // Dangling block reference.
+        let mut bad = flat.clone();
+        if let FlatNode::Leaf { block } = &mut bad[1] {
+            *block = 99;
+        }
+        assert!(Partition::from_flat(2, &bad, cells()).is_err());
+        // Axis out of range.
+        let mut bad = flat.clone();
+        if let FlatNode::Internal { axis, .. } = &mut bad[0] {
+            *axis = 7;
+        }
+        assert!(Partition::from_flat(2, &bad, cells()).is_err());
+        // A block with no leaf (duplicate reference to another).
+        let mut bad = flat.clone();
+        if let FlatNode::Leaf { block } = &mut bad[2] {
+            *block = 0;
+        }
+        assert!(Partition::from_flat(2, &bad, cells()).is_err());
+        // The untampered tree still loads.
+        assert!(Partition::from_flat(2, &flat, cells()).is_ok());
     }
 
     #[test]

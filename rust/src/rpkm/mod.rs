@@ -155,10 +155,11 @@ pub fn grid_rpkm(
     }
     let centroids = centroids.expect("at least one level");
     // Approximate regimes self-report their final measured gap (§2.9);
-    // exact steppers return None and nothing is emitted.
+    // exact steppers return None and nothing is emitted. The summary is
+    // pinned: a per-step note log past its cap cannot drop it.
     if let Some((reps, weights)) = &last_rw {
         if let Some(gap) = stepper.quality_gap(reps, weights, data.d, &centroids) {
-            counter.note(gap.note());
+            counter.note_pinned(gap.note());
         }
     }
     RpkmOutcome { centroids, trace }

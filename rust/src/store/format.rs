@@ -1,0 +1,255 @@
+//! The model store's binary wire format (DESIGN.md §5.2): hand-rolled,
+//! serde-less little-endian encoding with a magic tag, an explicit format
+//! version, and a trailing FNV-1a checksum over every preceding byte.
+//!
+//! The same [`Writer`]/[`Reader`] cursor pair serves serialization and
+//! deserialization; the reader bails loudly on truncation, trailing
+//! garbage, bad magic, checksum mismatch, and — forward compatibility —
+//! any format version newer than this build understands.
+
+use anyhow::{bail, ensure, Result};
+
+/// File magic: identifies a BWKM model store.
+pub const MAGIC: [u8; 8] = *b"BWKMMDL\0";
+
+/// Current format version. Readers reject anything newer; older versions
+/// gain explicit migration arms if the layout ever changes.
+pub const VERSION: u32 = 1;
+
+/// FNV-1a 64-bit hash — also the whole-file checksum and the config
+/// fingerprint hash (`store::config_digest`). Chosen for being trivially
+/// hand-rolled and byte-order independent; this is corruption detection,
+/// not cryptography.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// Append-only little-endian encoder.
+#[derive(Default)]
+pub struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    pub fn new() -> Writer {
+        Writer { buf: Vec::new() }
+    }
+
+    pub fn bytes(&mut self, v: &[u8]) {
+        self.buf.extend_from_slice(v);
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn f64s(&mut self, vs: &[f64]) {
+        for &v in vs {
+            self.f64(v);
+        }
+    }
+
+    /// Seal the buffer: append the FNV-1a checksum of everything written
+    /// so far and return the finished byte stream.
+    pub fn finish(mut self) -> Vec<u8> {
+        let sum = fnv1a(&self.buf);
+        self.buf.extend_from_slice(&sum.to_le_bytes());
+        self.buf
+    }
+}
+
+/// Checked little-endian decoder over a sealed byte stream.
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    /// Open a sealed stream: verifies the trailing checksum before any
+    /// field is decoded, so every downstream parse error means "layout
+    /// bug or version skew", never silent bit rot.
+    pub fn open(bytes: &'a [u8]) -> Result<Reader<'a>> {
+        ensure!(
+            bytes.len() >= MAGIC.len() + 4 + 8,
+            "store file truncated: {} bytes is smaller than any valid model",
+            bytes.len()
+        );
+        let (body, tail) = bytes.split_at(bytes.len() - 8);
+        let stored = u64::from_le_bytes(tail.try_into().expect("8-byte tail"));
+        let actual = fnv1a(body);
+        ensure!(
+            stored == actual,
+            "store file checksum mismatch (stored {stored:#018x}, computed {actual:#018x}): \
+             the file is corrupted or was truncated/extended"
+        );
+        Ok(Reader { buf: body, pos: 0 })
+    }
+
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            bail!(
+                "store file truncated while reading {what}: need {n} bytes at offset {}, {} remain",
+                self.pos,
+                self.buf.len() - self.pos
+            );
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self, what: &str) -> Result<u8> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    pub fn u32(&mut self, what: &str) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4, what)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self, what: &str) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8, what)?.try_into().unwrap()))
+    }
+
+    pub fn f64(&mut self, what: &str) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8, what)?.try_into().unwrap()))
+    }
+
+    /// A length already read from the stream, about to size an allocation:
+    /// cap it by what the remaining bytes could possibly hold so a
+    /// corrupted count cannot force an absurd allocation.
+    pub fn len_of(&self, count: u64, elem_bytes: usize, what: &str) -> Result<usize> {
+        let remaining = (self.buf.len() - self.pos) as u64;
+        let need = count.checked_mul(elem_bytes as u64);
+        match need {
+            Some(n) if n <= remaining => Ok(count as usize),
+            _ => bail!(
+                "store file corrupt: {what} count {count} needs more bytes than the {remaining} remaining"
+            ),
+        }
+    }
+
+    pub fn f64s(&mut self, n: usize, what: &str) -> Result<Vec<f64>> {
+        let raw = self.take(n * 8, what)?;
+        Ok(raw.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    /// Assert the stream is fully consumed (catches trailing garbage and
+    /// writer/reader layout skew).
+    pub fn done(&self) -> Result<()> {
+        ensure!(
+            self.pos == self.buf.len(),
+            "store file has {} trailing bytes after the last field — \
+             writer/reader layout mismatch or corruption",
+            self.buf.len() - self.pos
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_all_field_kinds() {
+        let mut w = Writer::new();
+        w.bytes(&MAGIC);
+        w.u32(VERSION);
+        w.u8(7);
+        w.u64(u64::MAX - 3);
+        w.f64(-0.0);
+        w.f64s(&[1.5, f64::INFINITY, 2.25e-300]);
+        let bytes = w.finish();
+
+        let mut r = Reader::open(&bytes).unwrap();
+        let mut magic = [0u8; 8];
+        magic.copy_from_slice(r.take(8, "magic").unwrap());
+        assert_eq!(magic, MAGIC);
+        assert_eq!(r.u32("version").unwrap(), VERSION);
+        assert_eq!(r.u8("tag").unwrap(), 7);
+        assert_eq!(r.u64("big").unwrap(), u64::MAX - 3);
+        assert_eq!(r.f64("negzero").unwrap().to_bits(), (-0.0f64).to_bits());
+        let v = r.f64s(3, "vec").unwrap();
+        assert_eq!(v[0], 1.5);
+        assert!(v[1].is_infinite());
+        assert_eq!(v[2], 2.25e-300);
+        r.done().unwrap();
+    }
+
+    #[test]
+    fn open_rejects_corruption_and_truncation() {
+        let mut w = Writer::new();
+        w.u64(42);
+        let good = w.finish();
+        assert!(Reader::open(&good).is_err(), "below minimum size still rejected");
+
+        let mut w = Writer::new();
+        w.bytes(&MAGIC);
+        w.u32(VERSION);
+        w.u64(42);
+        let good = w.finish();
+        assert!(Reader::open(&good).is_ok());
+
+        // Flip one payload bit.
+        let mut bad = good.clone();
+        bad[9] ^= 0x10;
+        let err = Reader::open(&bad).unwrap_err().to_string();
+        assert!(err.contains("checksum"), "{err}");
+
+        // Truncate.
+        let err = Reader::open(&good[..good.len() - 3]).unwrap_err().to_string();
+        assert!(err.contains("checksum") || err.contains("truncated"), "{err}");
+
+        // Trailing garbage breaks the checksum too.
+        let mut long = good.clone();
+        long.push(0);
+        assert!(Reader::open(&long).is_err());
+    }
+
+    #[test]
+    fn reader_reports_which_field_was_truncated() {
+        let mut w = Writer::new();
+        w.bytes(&MAGIC);
+        w.u32(VERSION);
+        w.u32(5);
+        let bytes = w.finish();
+        let mut r = Reader::open(&bytes).unwrap();
+        let _ = r.take(8, "magic").unwrap();
+        let _ = r.u32("version").unwrap();
+        let _ = r.u32("half").unwrap();
+        let err = r.u64("centroid count").unwrap_err().to_string();
+        assert!(err.contains("centroid count"), "{err}");
+    }
+
+    #[test]
+    fn len_of_rejects_absurd_counts() {
+        let mut w = Writer::new();
+        w.bytes(&MAGIC);
+        w.u32(VERSION);
+        w.u64(u64::MAX / 2); // a "count" the remaining bytes cannot hold
+        let bytes = w.finish();
+        let mut r = Reader::open(&bytes).unwrap();
+        let _ = r.take(8, "magic").unwrap();
+        let _ = r.u32("version").unwrap();
+        let count = r.u64("count").unwrap();
+        assert!(r.len_of(count, 8, "cells").is_err());
+        assert!(r.len_of(0, 8, "cells").is_ok());
+    }
+}

@@ -1,0 +1,223 @@
+//! Warm-start incremental ingestion (DESIGN.md §5.2): route a mini-batch
+//! of new rows into a loaded [`Model`]'s existing BWKM partition instead
+//! of re-running from scratch.
+//!
+//! The pass has three parts, each with an exact distance bill:
+//!
+//! 1. **Routing** — every batch row descends the spatial tree to its cell
+//!    (distance-free, like every partition operation) and folds into the
+//!    cell's count/sum/tight-box statistics in batch row order; the batch
+//!    is also assigned through the unified engine
+//!    ([`SerialAssigner`], `batch_rows · k` distances) so the report can
+//!    state where the new mass landed and what it costs the current
+//!    centroids.
+//! 2. **Diagnostics** — each *touched* cell's representative is re-scored
+//!    against the centroids (`touched · k` distances) and its
+//!    misassignment ε (paper Def. 3) recomputed from the updated tight
+//!    box. Cells whose ε did not move — and no cell went from empty to
+//!    occupied — need no further work.
+//! 3. **Bounded re-refinement** — only when some ε moved: a weighted
+//!    Lloyd pass over the updated representative set, warm-started from
+//!    the model's centroids and capped at [`INGEST_REFINE_ITERS`]
+//!    iterations (`iters · occupied · k` distances in the exact regime).
+//!
+//! An empty batch is a no-op with a **zero** distance bill. Ingestion
+//! never splits cells — splitting redistributes raw rows the model does
+//! not hold; growing the partition itself is `store::resume`'s job, which
+//! has the original dataset in hand.
+
+use anyhow::{bail, ensure, Result};
+
+use crate::bwkm::{epsilon, BwkmCfg};
+use crate::data::Dataset;
+use crate::geometry::BBox;
+use crate::kmeans::{stepper_for, weighted_lloyd_with, Assigner, SerialAssigner, WLloydCfg};
+use crate::metrics::DistanceCounter;
+
+use super::{config_digest, Model};
+
+/// Iteration cap for the post-ingest weighted-Lloyd touch-up. Small by
+/// design: ingest is the fast path; a full re-refinement (with splits) is
+/// a `resume` over the grown dataset.
+pub const INGEST_REFINE_ITERS: usize = 4;
+
+/// What an [`ingest`] pass did, with its exact distance bill.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct IngestReport {
+    /// Batch rows folded into the model.
+    pub rows: usize,
+    /// Distinct cells that received at least one new row.
+    pub touched: usize,
+    /// Touched cells whose misassignment ε moved (including cells that
+    /// went from empty to occupied) — what forced re-refinement.
+    pub moved: usize,
+    /// Weighted-Lloyd iterations spent re-refining (0 when no ε moved).
+    pub refine_iters: usize,
+    /// SSE of the batch against the pre-ingest centroids (diagnostic,
+    /// folded in batch row order).
+    pub batch_err: f64,
+    /// Exact distances charged by the whole pass:
+    /// `rows·k + touched·k + refine_iters·occupied·k` in the exact regime.
+    pub bill: u64,
+}
+
+/// Fold `batch` into `model`. See the module docs for the exact pass
+/// structure and billing. The model's trace, stop reason, and RNG state
+/// are untouched — ingestion draws no randomness.
+pub fn ingest(
+    model: &mut Model,
+    batch: &Dataset,
+    cfg: &BwkmCfg,
+    counter: &DistanceCounter,
+) -> Result<IngestReport> {
+    model.validate()?;
+    ensure!(
+        batch.d == model.d,
+        "batch dimension {} does not match the model's {}",
+        batch.d,
+        model.d
+    );
+    let expect = config_digest(model.d, model.k, cfg);
+    ensure!(
+        expect == model.digest,
+        "configuration digest mismatch ({expect:#018x} vs stored {:#018x}): ingest must run \
+         under the configuration the model was saved with",
+        model.digest
+    );
+    if batch.n == 0 {
+        return Ok(IngestReport::default());
+    }
+    for i in 0..batch.n {
+        if batch.row(i).iter().any(|v| !v.is_finite()) {
+            bail!("batch row {i} contains a non-finite value");
+        }
+    }
+
+    let d = model.d;
+    let before = counter.get();
+    let partition = model.partition()?; // tree descent only — cells stay in the model
+
+    // Pre-ingest per-cell state the diagnostics need: diagonals and the
+    // rank of each occupied cell in the stored top-2 arrays.
+    let old_diag: Vec<f64> = model
+        .cells
+        .iter()
+        .map(|c| c.tight.as_ref().unwrap_or(&c.cell).diagonal())
+        .collect();
+    let mut old_rank = vec![None::<usize>; model.cells.len()];
+    let mut rank = 0usize;
+    for (b, c) in model.cells.iter().enumerate() {
+        if c.count > 0 {
+            old_rank[b] = Some(rank);
+            rank += 1;
+        }
+    }
+    let has_top2 = model.d1.len() == rank;
+
+    // ---- 1. Route the batch: tree descent + stats fold, in row order.
+    let mut touched_flag = vec![false; model.cells.len()];
+    for i in 0..batch.n {
+        let row = batch.row(i);
+        let b = partition.locate(row);
+        let cell = &mut model.cells[b];
+        cell.count += 1;
+        for j in 0..d {
+            cell.sum[j] += row[j];
+        }
+        match &mut cell.tight {
+            Some(bb) => bb.expand(row),
+            None => cell.tight = Some(BBox::at(row)),
+        }
+        touched_flag[b] = true;
+    }
+    let touched: Vec<usize> =
+        (0..model.cells.len()).filter(|&b| touched_flag[b]).collect();
+
+    // Engine assignment of the raw batch (rows·k): where the new mass
+    // lands and what it costs the current centroids.
+    let mut assigner = SerialAssigner;
+    let batch_out = assigner.assign_top2(&batch.data, d, &model.centroids, counter);
+    let batch_err: f64 = batch_out.d1.iter().sum();
+
+    // ---- 2. Re-score the touched representatives (touched·k).
+    let mut treps = Vec::with_capacity(touched.len() * d);
+    for &b in &touched {
+        let c = &model.cells[b];
+        let inv = 1.0 / c.count as f64;
+        treps.extend(c.sum.iter().map(|s| s * inv));
+    }
+    let tout = assigner.assign_top2(&treps, d, &model.centroids, counter);
+
+    let mut moved = 0usize;
+    let mut patches = Vec::with_capacity(touched.len());
+    for (row, &b) in touched.iter().enumerate() {
+        let new_diag = model.cells[b]
+            .tight
+            .as_ref()
+            .expect("touched cells are occupied")
+            .diagonal();
+        let new_eps = epsilon(new_diag, tout.d1[row], tout.d2[row]);
+        let cell_moved = match old_rank[b] {
+            None => true, // empty → occupied: no prior bound at all
+            Some(r) if has_top2 => {
+                let old_eps = epsilon(old_diag[b], model.d1[r], model.d2[r]);
+                patches.push((r, tout.d1[row], tout.d2[row]));
+                new_eps != old_eps
+            }
+            Some(_) => true, // model predates any inner step: no baseline
+        };
+        if cell_moved {
+            moved += 1;
+        }
+    }
+
+    // ---- 3. Bounded re-refinement, only when a bound moved.
+    let mut refine_iters = 0usize;
+    if moved > 0 {
+        let mut reps = Vec::new();
+        let mut weights = Vec::new();
+        for c in model.cells.iter().filter(|c| c.count > 0) {
+            let inv = 1.0 / c.count as f64;
+            reps.extend(c.sum.iter().map(|s| s * inv));
+            weights.push(c.count as f64);
+        }
+        let wcfg = WLloydCfg {
+            max_iters: INGEST_REFINE_ITERS.min(cfg.wl.max_iters),
+            tol: cfg.wl.tol,
+            budget: cfg.budget,
+        };
+        let mut stepper = stepper_for(&cfg.assign);
+        let out = weighted_lloyd_with(
+            stepper.as_mut(),
+            &reps,
+            &weights,
+            d,
+            &model.centroids,
+            &wcfg,
+            counter,
+        );
+        refine_iters = out.iters;
+        model.centroids = out.centroids;
+        model.d1 = out.d1;
+        model.d2 = out.d2;
+    } else {
+        // Bounds are unchanged, but the stored top-2 distances of touched
+        // cells still track the (marginally shifted) representatives.
+        for (r, nd1, nd2) in patches {
+            model.d1[r] = nd1;
+            model.d2[r] = nd2;
+        }
+    }
+
+    model.rows += batch.n as u64;
+    let bill = counter.get() - before;
+    model.distances += bill;
+    Ok(IngestReport {
+        rows: batch.n,
+        touched: touched.len(),
+        moved,
+        refine_iters,
+        batch_err,
+        bill,
+    })
+}

@@ -1,0 +1,629 @@
+//! The versioned model store — the resident-service persistence layer
+//! (DESIGN.md §5.2).
+//!
+//! A [`Model`] is everything a BWKM run needs to continue exactly where
+//! it stopped: the final centroids, the spatial split tree with per-cell
+//! statistics, the last inner step's stored top-2 distances (which are
+//! **not** recomputable from the final centroids — they were measured
+//! against the last step's *pre-update* centroids), the seeding policy,
+//! the raw RNG stream state, the cumulative distance bill, and the full
+//! trace. `save → load → resume` over the original dataset is pinned
+//! **bit-identical** (`==`, no tolerances) to the uninterrupted run —
+//! centroids, trace, and counter totals — by
+//! `tests/service_conformance.rs`.
+//!
+//! The on-disk format is the hand-rolled little-endian layout of
+//! [`format`]: magic, format version (unknown versions are rejected, not
+//! guessed at), a config digest binding the model to the configuration
+//! that produced it, the payload sections, and a trailing whole-file
+//! checksum. Warm-start ingestion of new rows lives in [`ingest`].
+
+pub mod format;
+pub mod ingest;
+
+pub use ingest::{ingest, IngestReport, INGEST_REFINE_ITERS};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::bwkm::{
+    resume_source, BwkmCfg, BwkmOutcome, MemSource, ResumePoint, StopReason, TracePoint,
+};
+use crate::data::Dataset;
+use crate::geometry::BBox;
+use crate::kmeans::init::{SeedMethod, SeedPolicy};
+use crate::kmeans::{stepper_for, Stepper};
+use crate::metrics::DistanceCounter;
+use crate::partition::{FlatNode, Partition};
+use crate::util::Rng;
+
+use format::{fnv1a, Reader, Writer, MAGIC, VERSION};
+
+/// One spatial cell's persisted statistics: the leaf's cell box, the
+/// tight member box, and the member count/coordinate-sum (folded in
+/// dataset row order — the §5.1 determinism contract).
+#[derive(Clone, Debug)]
+pub struct CellState {
+    pub cell: BBox,
+    pub tight: Option<BBox>,
+    pub count: u64,
+    pub sum: Vec<f64>,
+}
+
+/// A persisted clustering model (DESIGN.md §5.2).
+#[derive(Clone, Debug)]
+pub struct Model {
+    pub d: usize,
+    pub k: usize,
+    /// [`config_digest`] of the configuration that produced the model;
+    /// `resume`/`ingest` refuse to run under a different one.
+    pub digest: u64,
+    /// Rows the model covers (original dataset plus every ingested batch).
+    pub rows: u64,
+    pub centroids: Vec<f64>,
+    /// Spatial split tree (flat, index-aligned with `cells`).
+    pub tree: Vec<FlatNode>,
+    pub cells: Vec<CellState>,
+    /// Stored top-2 squared distances per non-empty cell, in cell-id
+    /// order — the last inner step's values against its pre-update
+    /// centroids (`bwkm::BwkmOutcome::d1`), persisted verbatim.
+    pub d1: Vec<f64>,
+    pub d2: Vec<f64>,
+    pub trace: Vec<TracePoint>,
+    pub stop: StopReason,
+    /// Raw xoshiro256** state at save time — resuming restores the
+    /// stream bit for bit.
+    pub rng: [u64; 4],
+    /// Cumulative `DistanceCounter` total at save time.
+    pub distances: u64,
+    pub seed: SeedPolicy,
+}
+
+fn stop_tag(s: StopReason) -> u8 {
+    match s {
+        StopReason::EmptyBoundary => 0,
+        StopReason::Budget => 1,
+        StopReason::MaxIters => 2,
+        StopReason::CentroidShift => 3,
+        StopReason::AccuracyBound => 4,
+    }
+}
+
+fn stop_from(tag: u8) -> Result<StopReason> {
+    Ok(match tag {
+        0 => StopReason::EmptyBoundary,
+        1 => StopReason::Budget,
+        2 => StopReason::MaxIters,
+        3 => StopReason::CentroidShift,
+        4 => StopReason::AccuracyBound,
+        other => bail!("store file corrupt: unknown stop-reason tag {other}"),
+    })
+}
+
+fn seed_tag(m: SeedMethod) -> u8 {
+    match m {
+        SeedMethod::Forgy => 0,
+        SeedMethod::Kmpp => 1,
+        SeedMethod::Kmc2 => 2,
+        SeedMethod::Par => 3,
+    }
+}
+
+fn seed_from(tag: u8) -> Result<SeedMethod> {
+    Ok(match tag {
+        0 => SeedMethod::Forgy,
+        1 => SeedMethod::Kmpp,
+        2 => SeedMethod::Kmc2,
+        3 => SeedMethod::Par,
+        other => bail!("store file corrupt: unknown seed-method tag {other}"),
+    })
+}
+
+/// Fingerprint of every configuration knob that shapes the trajectory a
+/// model encodes: dims/k, the Alg. 2–4 initial-partition sizes, the
+/// seeding policy, the inner-Lloyd knobs, the assignment regime, and the
+/// shift/bound stopping tolerances. Floats enter through their exact bit
+/// patterns. Deliberately **excluded**: `max_outer` and `budget` —
+/// raising a cap is precisely what `resume=` is for — and
+/// `eval_full_error`, which is uncounted instrumentation.
+pub fn config_digest(d: usize, k: usize, cfg: &BwkmCfg) -> u64 {
+    let opt_bits = |o: Option<f64>| match o {
+        Some(v) => format!("{:016x}", v.to_bits()),
+        None => "none".to_string(),
+    };
+    let s = format!(
+        "v{VERSION};d={d};k={k};init={},{},{},{};seed={},{:016x},{},{};wl={},{:016x};\
+         assign={},{},{},{:016x},{},{};shift={};bound={}",
+        cfg.init.m_prime,
+        cfg.init.m,
+        cfg.init.s,
+        cfg.init.r,
+        cfg.seed.method.name(),
+        cfg.seed.oversample_l.to_bits(),
+        cfg.seed.init_rounds,
+        cfg.seed.chain_length,
+        cfg.wl.max_iters,
+        cfg.wl.tol.to_bits(),
+        cfg.assign.mode.name(),
+        cfg.assign.closure_expand,
+        cfg.assign.sample_rows,
+        cfg.assign.sample_seed,
+        cfg.assign.kernel.name(),
+        cfg.assign.precision.name(),
+        opt_bits(cfg.shift_tol),
+        opt_bits(cfg.bound_tol),
+    );
+    fnv1a(s.as_bytes())
+}
+
+impl Model {
+    /// Capture a finished (or iteration-capped) in-memory run as a model.
+    pub fn from_run(
+        out: &BwkmOutcome,
+        cfg: &BwkmCfg,
+        rng: &Rng,
+        counter: &DistanceCounter,
+    ) -> Model {
+        let cells: Vec<CellState> = out
+            .partition
+            .blocks
+            .iter()
+            .map(|b| CellState {
+                cell: b.cell.clone(),
+                tight: b.tight.clone(),
+                count: b.weight() as u64,
+                sum: b.sum.clone(),
+            })
+            .collect();
+        let rows = cells.iter().map(|c| c.count).sum();
+        Model {
+            d: out.d,
+            k: out.k,
+            digest: config_digest(out.d, out.k, cfg),
+            rows,
+            centroids: out.centroids.clone(),
+            tree: out.partition.flat_nodes(),
+            cells,
+            d1: out.d1.clone(),
+            d2: out.d2.clone(),
+            trace: out.trace.clone(),
+            stop: out.stop,
+            rng: rng.state(),
+            distances: counter.get(),
+            seed: cfg.seed,
+        }
+    }
+
+    /// Structural validation: every internal consistency rule a correct
+    /// writer upholds. Violations mean corruption (that slipped past the
+    /// checksum) or a buggy producer — never user error.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.d > 0, "model dimension must be positive");
+        ensure!(self.k > 0, "model k must be positive");
+        ensure!(
+            self.centroids.len() == self.k * self.d,
+            "model stores {} centroid values, k·d = {}",
+            self.centroids.len(),
+            self.k * self.d
+        );
+        ensure!(
+            self.centroids.iter().all(|v| v.is_finite()),
+            "model centroids contain non-finite values"
+        );
+        ensure!(
+            self.d1.len() == self.d2.len(),
+            "top-2 arrays disagree in length ({} vs {})",
+            self.d1.len(),
+            self.d2.len()
+        );
+        ensure!(
+            self.rng.iter().any(|&x| x != 0),
+            "all-zero RNG state (unreachable from any seed — corrupted model)"
+        );
+        let occupied = self.cells.iter().filter(|c| c.count > 0).count();
+        ensure!(
+            self.d1.is_empty() || self.d1.len() == occupied,
+            "model stores top-2 distances for {} cells, {} are occupied",
+            self.d1.len(),
+            occupied
+        );
+        let total: u64 = self.cells.iter().map(|c| c.count).sum();
+        ensure!(
+            total == self.rows,
+            "cell counts sum to {total}, model claims {} rows",
+            self.rows
+        );
+        for (i, c) in self.cells.iter().enumerate() {
+            ensure!(
+                c.sum.len() == self.d,
+                "cell {i}: coordinate sum has {} entries, d = {}",
+                c.sum.len(),
+                self.d
+            );
+            ensure!(
+                (c.count > 0) == c.tight.is_some(),
+                "cell {i}: occupancy ({} rows) disagrees with tight-box presence",
+                c.count
+            );
+        }
+        // The tree's own invariants (leaf/block bijection, index ranges).
+        self.partition()?;
+        Ok(())
+    }
+
+    /// Rebuild the spatial partition (member bookkeeping empty — run
+    /// `assign_members` over the original dataset to populate it).
+    pub fn partition(&self) -> Result<Partition> {
+        let cells: Vec<(BBox, Option<BBox>)> =
+            self.cells.iter().map(|c| (c.cell.clone(), c.tight.clone())).collect();
+        Partition::from_flat(self.d, &self.tree, cells)
+    }
+
+    /// Serialize to the sealed §5.2 byte layout.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        w.bytes(&MAGIC);
+        w.u32(VERSION);
+        w.u64(self.d as u64);
+        w.u64(self.k as u64);
+        w.u64(self.digest);
+        w.u64(self.rows);
+        w.u64(self.distances);
+        for &s in &self.rng {
+            w.u64(s);
+        }
+        w.u8(seed_tag(self.seed.method));
+        w.f64(self.seed.oversample_l);
+        w.u64(self.seed.init_rounds as u64);
+        w.u64(self.seed.chain_length as u64);
+        w.u8(stop_tag(self.stop));
+        w.f64s(&self.centroids);
+        w.u64(self.d1.len() as u64);
+        w.f64s(&self.d1);
+        w.f64s(&self.d2);
+        w.u64(self.tree.len() as u64);
+        for n in &self.tree {
+            match *n {
+                FlatNode::Leaf { block } => {
+                    w.u8(0);
+                    w.u32(block);
+                }
+                FlatNode::Internal { axis, thr, left, right } => {
+                    w.u8(1);
+                    w.u32(axis);
+                    w.f64(thr);
+                    w.u32(left);
+                    w.u32(right);
+                }
+            }
+        }
+        w.u64(self.cells.len() as u64);
+        for c in &self.cells {
+            w.f64s(&c.cell.lo);
+            w.f64s(&c.cell.hi);
+            match &c.tight {
+                Some(t) => {
+                    w.u8(1);
+                    w.f64s(&t.lo);
+                    w.f64s(&t.hi);
+                }
+                None => w.u8(0),
+            }
+            w.u64(c.count);
+            w.f64s(&c.sum);
+        }
+        w.u64(self.trace.len() as u64);
+        for t in &self.trace {
+            w.u64(t.outer_iter as u64);
+            w.u64(t.distances);
+            w.u64(t.blocks as u64);
+            w.u64(t.occupied as u64);
+            w.u64(t.boundary as u64);
+            w.f64(t.weighted_error);
+            w.f64(t.bound);
+            match t.full_error {
+                Some(e) => {
+                    w.u8(1);
+                    w.f64(e);
+                }
+                None => w.u8(0),
+            }
+            w.u64(t.lloyd_iters as u64);
+        }
+        w.finish()
+    }
+
+    /// Decode and validate a sealed byte stream.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Model> {
+        let mut r = Reader::open(bytes)?;
+        let mut magic = [0u8; 8];
+        for b in magic.iter_mut() {
+            *b = r.u8("magic")?;
+        }
+        ensure!(
+            magic == MAGIC,
+            "not a BWKM model store (bad magic {magic:02x?})"
+        );
+        let version = r.u32("format version")?;
+        ensure!(
+            version == VERSION,
+            "store format version {version} is not supported by this build \
+             (it reads version {VERSION} only) — written by a newer release?"
+        );
+        let d = r.u64("d")? as usize;
+        let k = r.u64("k")? as usize;
+        ensure!(d > 0 && k > 0, "store file corrupt: d={d}, k={k}");
+        let digest = r.u64("config digest")?;
+        let rows = r.u64("row count")?;
+        let distances = r.u64("distance total")?;
+        let mut rng = [0u64; 4];
+        for s in rng.iter_mut() {
+            *s = r.u64("rng state")?;
+        }
+        let seed = SeedPolicy {
+            method: seed_from(r.u8("seed method")?)?,
+            oversample_l: r.f64("oversample_l")?,
+            init_rounds: r.u64("init_rounds")? as usize,
+            chain_length: r.u64("chain_length")? as usize,
+        };
+        let stop = stop_from(r.u8("stop reason")?)?;
+        let kd = (k as u64)
+            .checked_mul(d as u64)
+            .ok_or_else(|| anyhow::anyhow!("store file corrupt: k·d overflows (k={k}, d={d})"))?;
+        let nc = r.len_of(kd, 8, "centroids")?;
+        let centroids = r.f64s(nc, "centroids")?;
+        let top2 = r.u64("top-2 count")?;
+        let top2 = r.len_of(top2, 16, "top-2 distances")?;
+        let d1 = r.f64s(top2, "d1")?;
+        let d2 = r.f64s(top2, "d2")?;
+        let nn = r.u64("tree node count")?;
+        let nn = r.len_of(nn, 5, "tree nodes")?;
+        let mut tree = Vec::with_capacity(nn);
+        for i in 0..nn {
+            let tag = r.u8("node tag")?;
+            tree.push(match tag {
+                0 => FlatNode::Leaf { block: r.u32("leaf block")? },
+                1 => FlatNode::Internal {
+                    axis: r.u32("split axis")?,
+                    thr: r.f64("split threshold")?,
+                    left: r.u32("left child")?,
+                    right: r.u32("right child")?,
+                },
+                other => bail!("store file corrupt: node {i} has unknown tag {other}"),
+            });
+        }
+        let ncells = r.u64("cell count")?;
+        let ncells = r.len_of(ncells, 2 * d * 8 + 1, "cells")?;
+        let mut cells = Vec::with_capacity(ncells);
+        for _ in 0..ncells {
+            let cell = BBox { lo: r.f64s(d, "cell lo")?, hi: r.f64s(d, "cell hi")? };
+            let tight = match r.u8("tight flag")? {
+                0 => None,
+                1 => Some(BBox { lo: r.f64s(d, "tight lo")?, hi: r.f64s(d, "tight hi")? }),
+                other => bail!("store file corrupt: tight-box flag {other}"),
+            };
+            let count = r.u64("cell row count")?;
+            let sum = r.f64s(d, "cell sum")?;
+            cells.push(CellState { cell, tight, count, sum });
+        }
+        let nt = r.u64("trace length")?;
+        let nt = r.len_of(nt, 7 * 8 + 1, "trace")?;
+        let mut trace = Vec::with_capacity(nt);
+        for _ in 0..nt {
+            trace.push(TracePoint {
+                outer_iter: r.u64("trace outer")? as usize,
+                distances: r.u64("trace distances")?,
+                blocks: r.u64("trace blocks")? as usize,
+                occupied: r.u64("trace occupied")? as usize,
+                boundary: r.u64("trace boundary")? as usize,
+                weighted_error: r.f64("trace weighted error")?,
+                bound: r.f64("trace bound")?,
+                full_error: match r.u8("trace full-error flag")? {
+                    0 => None,
+                    1 => Some(r.f64("trace full error")?),
+                    other => bail!("store file corrupt: full-error flag {other}"),
+                },
+                lloyd_iters: r.u64("trace lloyd iters")? as usize,
+            });
+        }
+        r.done()?;
+        let model = Model {
+            d,
+            k,
+            digest,
+            rows,
+            centroids,
+            tree,
+            cells,
+            d1,
+            d2,
+            trace,
+            stop,
+            rng,
+            distances,
+            seed,
+        };
+        model.validate()?;
+        Ok(model)
+    }
+}
+
+/// Atomically persist a model (write-then-rename, the same durability
+/// idiom as the bench JSON emitter).
+pub fn save(model: &Model, path: &str) -> Result<()> {
+    let bytes = model.to_bytes();
+    let tmp = format!("{path}.tmp");
+    std::fs::write(&tmp, &bytes).with_context(|| format!("writing {tmp}"))?;
+    std::fs::rename(&tmp, path).with_context(|| format!("renaming {tmp} -> {path}"))?;
+    Ok(())
+}
+
+/// Load and validate a persisted model.
+pub fn load(path: &str) -> Result<Model> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading model store {path}"))?;
+    Model::from_bytes(&bytes).with_context(|| format!("decoding model store {path}"))
+}
+
+/// Continue a persisted run over its original dataset, bit-identical to
+/// the uninterrupted run (DESIGN.md §5.2): rebuild the partition and its
+/// member-exact statistics, restore the counter total and the RNG stream
+/// (the caller's `rng` is overwritten so a follow-up `save` captures the
+/// advanced state), and re-enter the Alg. 5 loop at the saved outer
+/// index. The stepper is the one `cfg.assign` selects — the same one
+/// `bwkm::run` would use.
+pub fn resume(
+    model: &Model,
+    data: &Dataset,
+    cfg: &BwkmCfg,
+    rng: &mut Rng,
+    counter: &DistanceCounter,
+) -> Result<BwkmOutcome> {
+    let mut stepper = stepper_for(&cfg.assign);
+    resume_with(stepper.as_mut(), model, data, cfg, rng, counter)
+}
+
+/// [`resume`] over an explicit stepper backend.
+pub fn resume_with(
+    stepper: &mut dyn Stepper,
+    model: &Model,
+    data: &Dataset,
+    cfg: &BwkmCfg,
+    rng: &mut Rng,
+    counter: &DistanceCounter,
+) -> Result<BwkmOutcome> {
+    model.validate()?;
+    ensure!(
+        data.d == model.d,
+        "dataset dimension {} does not match the model's {}",
+        data.d,
+        model.d
+    );
+    let expect = config_digest(model.d, model.k, cfg);
+    ensure!(
+        expect == model.digest,
+        "configuration digest mismatch ({expect:#018x} vs stored {:#018x}): the model was \
+         saved under a different configuration — resume with the saving run's settings \
+         (only max_outer and the distance budget may change)",
+        model.digest
+    );
+    ensure!(
+        data.n as u64 == model.rows,
+        "dataset has {} rows, the model covers {} — resume requires the dataset the model \
+         was built (and ingested) from",
+        data.n,
+        model.rows
+    );
+    let mut partition = model.partition()?;
+    partition.assign_members(data);
+    for (b, cell) in model.cells.iter().enumerate() {
+        ensure!(
+            partition.blocks[b].weight() as u64 == cell.count,
+            "dataset does not match the stored model: block {b} holds {} rows, the model \
+             recorded {}",
+            partition.blocks[b].weight(),
+            cell.count
+        );
+    }
+    counter.add(model.distances);
+    *rng = Rng::from_state(model.rng);
+    let mut src = MemSource::with_partition(data, partition);
+    let point = ResumePoint {
+        centroids: model.centroids.clone(),
+        trace: model.trace.clone(),
+        stop: model.stop,
+        d1: model.d1.clone(),
+        d2: model.d2.clone(),
+    };
+    let out = resume_source(stepper, &mut src, model.k, cfg, point, rng, counter)?;
+    Ok(BwkmOutcome {
+        centroids: out.centroids,
+        k: out.k,
+        d: out.d,
+        stop: out.stop,
+        trace: out.trace,
+        partition: src.into_partition(),
+        d1: out.d1,
+        d2: out.d2,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn small_model() -> Model {
+        let mut g = prop::Gen { rng: Rng::new(91), case: 0 };
+        let ds = Dataset::new(g.blobs(300, 2, 3, 0.6), 2);
+        let cfg = BwkmCfg::for_dataset(ds.n, ds.d, 3);
+        let c = DistanceCounter::new();
+        let mut rng = Rng::new(7);
+        let out = crate::bwkm::run(&ds, 3, &cfg, &mut rng, &c);
+        Model::from_run(&out, &cfg, &rng, &c)
+    }
+
+    #[test]
+    fn byte_roundtrip_is_exact() {
+        let m = small_model();
+        let bytes = m.to_bytes();
+        let back = Model::from_bytes(&bytes).unwrap();
+        // Re-encoding the decoded model reproduces the file byte for byte:
+        // every field survives exactly (floats via their bit patterns).
+        assert_eq!(back.to_bytes(), bytes);
+        assert_eq!(back.d, m.d);
+        assert_eq!(back.k, m.k);
+        assert_eq!(back.rows, m.rows);
+        assert_eq!(back.rng, m.rng);
+        assert_eq!(back.centroids, m.centroids);
+        assert_eq!(back.tree, m.tree);
+        assert_eq!(back.stop, m.stop);
+        assert_eq!(back.distances, m.distances);
+    }
+
+    #[test]
+    fn digest_tracks_trajectory_shaping_knobs_only() {
+        let base = BwkmCfg::for_dataset(1000, 4, 5);
+        let d0 = config_digest(4, 5, &base);
+        // Raising the caps leaves the digest alone (that is what resume is
+        // for) …
+        let mut c = base;
+        c.max_outer += 100;
+        c.budget = crate::metrics::Budget::of(123);
+        assert_eq!(config_digest(4, 5, &c), d0);
+        // … while every trajectory-shaping knob moves it.
+        let mut c = base;
+        c.wl.max_iters += 1;
+        assert_ne!(config_digest(4, 5, &c), d0);
+        let mut c = base;
+        c.seed.method = SeedMethod::Forgy;
+        assert_ne!(config_digest(4, 5, &c), d0);
+        let mut c = base;
+        c.shift_tol = Some(1e-6);
+        assert_ne!(config_digest(4, 5, &c), d0);
+        let mut c = base;
+        c.init.m += 1;
+        assert_ne!(config_digest(4, 5, &c), d0);
+        assert_ne!(config_digest(4, 6, &base), d0, "k is part of the identity");
+    }
+
+    #[test]
+    fn validate_rejects_internal_inconsistency() {
+        let good = small_model();
+        assert!(good.validate().is_ok());
+
+        let mut m = good.clone();
+        m.rows += 1;
+        assert!(m.validate().is_err(), "row total must match cell counts");
+
+        let mut m = good.clone();
+        m.rng = [0; 4];
+        assert!(m.validate().is_err(), "all-zero rng state rejected");
+
+        let mut m = good.clone();
+        m.centroids.pop();
+        assert!(m.validate().is_err(), "centroid shape mismatch rejected");
+
+        let mut m = good.clone();
+        m.d1.pop();
+        assert!(m.validate().is_err(), "top-2 arrays must stay aligned");
+    }
+}

@@ -39,6 +39,24 @@ impl Rng {
         Rng::new(self.next_u64() ^ stream.wrapping_mul(0xA24B_AED4_963E_E407))
     }
 
+    /// Snapshot of the raw generator state (the model store persists this,
+    /// DESIGN.md §5.2). Restoring it with [`Rng::from_state`] continues the
+    /// stream bit for bit.
+    pub fn state(&self) -> [u64; 4] {
+        self.s
+    }
+
+    /// Rebuild a generator from a [`Rng::state`] snapshot. The all-zero
+    /// state is xoshiro's fixed point and unreachable from any seed, so it
+    /// can only come from corrupted persisted state — rejected loudly.
+    pub fn from_state(s: [u64; 4]) -> Rng {
+        assert!(
+            s.iter().any(|&x| x != 0),
+            "all-zero xoshiro256** state (corrupted snapshot?)"
+        );
+        Rng { s }
+    }
+
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let s = &mut self.s;
@@ -286,6 +304,25 @@ mod tests {
             assert_eq!(set.len(), k);
             assert!(s.iter().all(|&i| i < n));
         }
+    }
+
+    #[test]
+    fn state_snapshot_continues_bit_for_bit() {
+        let mut a = Rng::new(99);
+        for _ in 0..37 {
+            a.next_u64();
+        }
+        let snap = a.state();
+        let tail: Vec<u64> = (0..64).map(|_| a.next_u64()).collect();
+        let mut b = Rng::from_state(snap);
+        let replay: Vec<u64> = (0..64).map(|_| b.next_u64()).collect();
+        assert_eq!(tail, replay, "restored stream must continue identically");
+    }
+
+    #[test]
+    #[should_panic(expected = "all-zero")]
+    fn from_state_rejects_zero_state() {
+        Rng::from_state([0; 4]);
     }
 
     #[test]

@@ -242,3 +242,153 @@ fn streaming_empty_stream_is_clean_err() {
     let out = sb.run(1, &stream_cfg(1, 4, 1), &mut Rng::new(3), &c);
     assert!(out.is_err());
 }
+
+// ---------------------------------------------------------------------------
+// Model-store failure injection (DESIGN.md §5.2 failure contract): broken
+// store files and mismatched resume/ingest inputs must be clean `Err`s with
+// the offending field named — never a panic, never a silently wrong model.
+// ---------------------------------------------------------------------------
+
+/// A small fitted model plus the dataset and configuration it came from.
+fn store_fixture() -> (Dataset, BwkmCfg, bwkm::store::Model) {
+    let ds = simulate("3RN", 0.002, 11).unwrap();
+    let mut cfg = BwkmCfg::for_dataset(ds.n, ds.d, 3);
+    cfg.max_outer = 2;
+    cfg.eval_full_error = false;
+    let c = DistanceCounter::new();
+    let mut rng = Rng::new(9);
+    let out = bwkm::bwkm::run(&ds, 3, &cfg, &mut rng, &c);
+    let model = bwkm::store::Model::from_run(&out, &cfg, &rng, &c);
+    (ds, cfg, model)
+}
+
+/// Recompute the trailing checksum after deliberately tampering with the
+/// payload, so the test exercises the *field* validation, not the checksum.
+fn reseal(mut bytes: Vec<u8>) -> Vec<u8> {
+    let n = bytes.len();
+    let sum = bwkm::store::format::fnv1a(&bytes[..n - 8]);
+    bytes[n - 8..].copy_from_slice(&sum.to_le_bytes());
+    bytes
+}
+
+#[test]
+fn store_truncated_file_is_clean_err() {
+    let (_, _, model) = store_fixture();
+    let bytes = model.to_bytes();
+    for cut in [0, 3, bytes.len() / 2, bytes.len() - 1] {
+        let err = bwkm::store::Model::from_bytes(&bytes[..cut]);
+        assert!(err.is_err(), "truncation at {cut} bytes must be a clean Err");
+    }
+}
+
+#[test]
+fn store_bit_corruption_is_a_checksum_err() {
+    let (_, _, model) = store_fixture();
+    let mut bytes = model.to_bytes();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x40;
+    let err = bwkm::store::Model::from_bytes(&bytes).unwrap_err().to_string();
+    assert!(err.contains("checksum"), "{err}");
+}
+
+#[test]
+fn store_bad_magic_is_clean_err() {
+    let (_, _, model) = store_fixture();
+    let mut bytes = model.to_bytes();
+    bytes[..8].copy_from_slice(b"NOTBWKM\0");
+    let err = bwkm::store::Model::from_bytes(&reseal(bytes)).unwrap_err().to_string();
+    assert!(err.contains("not a BWKM model store"), "{err}");
+}
+
+#[test]
+fn store_newer_format_version_is_rejected() {
+    let (_, _, model) = store_fixture();
+    let mut bytes = model.to_bytes();
+    let next = bwkm::store::format::VERSION + 1;
+    bytes[8..12].copy_from_slice(&next.to_le_bytes());
+    let err = bwkm::store::Model::from_bytes(&reseal(bytes)).unwrap_err().to_string();
+    assert!(err.contains("newer release"), "forward-compat refusal missing: {err}");
+}
+
+#[test]
+fn store_resume_rejects_config_drift() {
+    let (ds, cfg, model) = store_fixture();
+    let mut drifted = cfg.clone();
+    drifted.wl.max_iters += 1; // any digest-covered knob
+    let err = bwkm::store::resume(&model, &ds, &drifted, &mut Rng::new(1), &DistanceCounter::new())
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("digest"), "{err}");
+    // Raising only the caps is the sanctioned change and passes the gate.
+    let mut raised = cfg.clone();
+    raised.max_outer += 2;
+    raised.budget = Budget::of(u64::MAX);
+    assert!(bwkm::store::resume(&model, &ds, &raised, &mut Rng::new(1), &DistanceCounter::new())
+        .is_ok());
+}
+
+#[test]
+fn store_resume_rejects_a_mismatched_dataset() {
+    let (ds, cfg, model) = store_fixture();
+    // Wrong dimension: refused before any work.
+    let err = bwkm::store::resume(
+        &model,
+        &Dataset::new(vec![0.0; (ds.d + 1) * 4], ds.d + 1),
+        &cfg,
+        &mut Rng::new(1),
+        &DistanceCounter::new(),
+    )
+    .unwrap_err()
+    .to_string();
+    assert!(err.contains("dimension"), "{err}");
+    // Wrong row count: refused.
+    let short = Dataset::new(ds.data[..ds.d * (ds.n - 1)].to_vec(), ds.d);
+    let err = bwkm::store::resume(&model, &short, &cfg, &mut Rng::new(1), &DistanceCounter::new())
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("rows"), "{err}");
+    // Same shape, different data: the per-cell occupancy check trips.
+    let other = simulate("3RN", 0.002, 12).unwrap();
+    assert_eq!((other.n, other.d), (ds.n, ds.d));
+    let err = bwkm::store::resume(&model, &other, &cfg, &mut Rng::new(1), &DistanceCounter::new())
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("does not match the stored model"), "{err}");
+}
+
+#[test]
+fn store_ingest_rejects_mismatched_inputs() {
+    let (_, cfg, model) = store_fixture();
+    // Wrong batch dimension.
+    let mut m = model.clone();
+    let err = bwkm::store::ingest(
+        &mut m,
+        &Dataset::new(vec![0.0; (m.d + 1) * 2], m.d + 1),
+        &cfg,
+        &DistanceCounter::new(),
+    )
+    .unwrap_err()
+    .to_string();
+    assert!(err.contains("dimension"), "{err}");
+    // Non-finite batch rows.
+    let mut m = model.clone();
+    let mut row = vec![0.0; m.d];
+    row[0] = f64::NAN;
+    let err = bwkm::store::ingest(&mut m, &Dataset::new(row, m.d), &cfg, &DistanceCounter::new())
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("non-finite"), "{err}");
+    // Config drift is refused just like on resume.
+    let mut drifted = cfg.clone();
+    drifted.wl.max_iters += 1;
+    let mut m = model.clone();
+    let err = bwkm::store::ingest(
+        &mut m,
+        &Dataset::new(vec![0.0; m.d], m.d),
+        &drifted,
+        &DistanceCounter::new(),
+    )
+    .unwrap_err()
+    .to_string();
+    assert!(err.contains("digest"), "{err}");
+}

@@ -1,0 +1,227 @@
+//! Resident-service conformance (DESIGN.md §5.2): the model store's
+//! round-trip pin — save → load → resume is **bit-identical** (`==`, no
+//! tolerances) to the uninterrupted run, in centroids, trace, stop
+//! reason, top-2 distances, RNG stream and distance bill — plus the
+//! warm-start ingestion billing and determinism contracts and the job
+//! scheduler's worker-count independence.
+
+use bwkm::bwkm::{BwkmCfg, StopReason, TracePoint};
+use bwkm::coordinator::run_jobs;
+use bwkm::data::{simulate, Dataset};
+use bwkm::metrics::DistanceCounter;
+use bwkm::store::{self, ingest, IngestReport, Model};
+use bwkm::util::Rng;
+
+fn cfg_for(ds: &Dataset, k: usize, max_outer: usize) -> BwkmCfg {
+    let mut cfg = BwkmCfg::for_dataset(ds.n, ds.d, k);
+    // The early-stop tolerances default to None (disabled), so a low cap
+    // makes the cut run genuinely iteration-capped (stop = MaxIters) and
+    // leaves the resume real work.
+    cfg.max_outer = max_outer;
+    cfg.eval_full_error = false;
+    cfg
+}
+
+fn bits(v: &[f64]) -> Vec<u64> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn assert_trace_eq(a: &[TracePoint], b: &[TracePoint]) {
+    assert_eq!(a.len(), b.len(), "trace lengths differ");
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!(x.outer_iter, y.outer_iter);
+        assert_eq!(x.distances, y.distances, "bill drift at outer {}", x.outer_iter);
+        assert_eq!(x.blocks, y.blocks);
+        assert_eq!(x.occupied, y.occupied);
+        assert_eq!(x.boundary, y.boundary);
+        assert_eq!(x.weighted_error.to_bits(), y.weighted_error.to_bits());
+        assert_eq!(x.bound.to_bits(), y.bound.to_bits());
+        assert_eq!(
+            x.full_error.map(f64::to_bits),
+            y.full_error.map(f64::to_bits)
+        );
+        assert_eq!(x.lloyd_iters, y.lloyd_iters);
+    }
+}
+
+fn tmp(tag: &str) -> String {
+    std::env::temp_dir()
+        .join(format!("bwkm_svc_{tag}_{}.mdl", std::process::id()))
+        .to_str()
+        .unwrap()
+        .to_string()
+}
+
+#[test]
+fn save_load_resume_is_bit_identical_to_uninterrupted() {
+    let ds = simulate("3RN", 0.003, 7).unwrap();
+    let k = 3;
+
+    // Uninterrupted reference: 5 outer iterations in one sitting.
+    let full_cfg = cfg_for(&ds, k, 5);
+    let ca = DistanceCounter::new();
+    let mut ra = Rng::new(11);
+    let a = bwkm::bwkm::run(&ds, k, &full_cfg, &mut ra, &ca);
+
+    // The same run cut at 2, persisted through the file layer, resumed.
+    let cut_cfg = cfg_for(&ds, k, 2);
+    let cb = DistanceCounter::new();
+    let mut rb = Rng::new(11);
+    let b = bwkm::bwkm::run(&ds, k, &cut_cfg, &mut rb, &cb);
+    assert_eq!(b.stop, StopReason::MaxIters, "cut run must be iteration-capped");
+    let path = tmp("roundtrip");
+    store::save(&Model::from_run(&b, &cut_cfg, &rb, &cb), &path).unwrap();
+
+    let model = store::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    let cr = DistanceCounter::new();
+    let mut rr = Rng::new(999_999); // must be overwritten by the snapshot
+    let r = store::resume(&model, &ds, &full_cfg, &mut rr, &cr).unwrap();
+
+    // The pin: `==` everywhere, no tolerances.
+    assert_eq!(bits(&a.centroids), bits(&r.centroids), "centroids diverged");
+    assert_eq!(a.stop, r.stop);
+    assert_trace_eq(&a.trace, &r.trace);
+    assert_eq!(ca.get(), cr.get(), "distance bills must match to the unit");
+    assert_eq!(bits(&a.d1), bits(&r.d1));
+    assert_eq!(bits(&a.d2), bits(&r.d2));
+    // The RNG stream advanced identically: a follow-up save would match.
+    assert_eq!(ra.state(), rr.state(), "RNG streams diverged");
+}
+
+#[test]
+fn resume_of_a_terminal_snapshot_is_a_noop() {
+    let ds = simulate("3RN", 0.002, 9).unwrap();
+    let mut cfg = BwkmCfg::for_dataset(ds.n, ds.d, 3);
+    cfg.max_outer = 4;
+    cfg.eval_full_error = false;
+    let c = DistanceCounter::new();
+    let mut rng = Rng::new(5);
+    let out = bwkm::bwkm::run(&ds, 3, &cfg, &mut rng, &c);
+    let model = Model::from_run(&out, &cfg, &rng, &c);
+
+    // Same config back in: whether the run ended on a terminal criterion
+    // or at the cap, there is nothing left to do — and nothing billed.
+    let cr = DistanceCounter::new();
+    let mut rr = Rng::new(1);
+    let r = store::resume(&model, &ds, &cfg, &mut rr, &cr).unwrap();
+    assert_eq!(bits(&out.centroids), bits(&r.centroids));
+    assert_eq!(out.stop, r.stop);
+    assert_eq!(out.trace.len(), r.trace.len());
+    assert_eq!(cr.get(), model.distances, "a no-op resume bills nothing new");
+}
+
+#[test]
+fn save_load_through_disk_is_byte_exact() {
+    let ds = simulate("3RN", 0.002, 13).unwrap();
+    let cfg = cfg_for(&ds, 3, 2);
+    let c = DistanceCounter::new();
+    let mut rng = Rng::new(3);
+    let out = bwkm::bwkm::run(&ds, 3, &cfg, &mut rng, &c);
+    let model = Model::from_run(&out, &cfg, &rng, &c);
+    let path = tmp("bytes");
+    store::save(&model, &path).unwrap();
+    let back = store::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(model.to_bytes(), back.to_bytes(), "disk round-trip changed bytes");
+}
+
+#[test]
+fn empty_batch_ingest_is_a_zero_bill_noop() {
+    let ds = simulate("3RN", 0.002, 17).unwrap();
+    let cfg = cfg_for(&ds, 3, 2);
+    let c = DistanceCounter::new();
+    let mut rng = Rng::new(4);
+    let out = bwkm::bwkm::run(&ds, 3, &cfg, &mut rng, &c);
+    let mut model = Model::from_run(&out, &cfg, &rng, &c);
+
+    let before = model.to_bytes();
+    let bill = DistanceCounter::new();
+    let report = ingest(&mut model, &Dataset::new(vec![], ds.d), &cfg, &bill).unwrap();
+    assert_eq!(report, IngestReport::default(), "empty batch must report all zeros");
+    assert_eq!(bill.get(), 0, "empty batch must bill zero distances");
+    assert_eq!(model.to_bytes(), before, "empty batch must not perturb the model");
+}
+
+#[test]
+fn ingest_bill_is_exact_and_ingest_is_deterministic() {
+    let ds = simulate("3RN", 0.003, 21).unwrap();
+    let k = 3;
+    let cfg = cfg_for(&ds, k, 2);
+    let c = DistanceCounter::new();
+    let mut rng = Rng::new(6);
+    let out = bwkm::bwkm::run(&ds, k, &cfg, &mut rng, &c);
+    let mut model = Model::from_run(&out, &cfg, &rng, &c);
+    let snapshot = model.to_bytes();
+
+    // A batch drawn from a different part of the distribution, same d.
+    let other = simulate("3RN", 0.003, 22).unwrap();
+    let batch = Dataset::new(other.data[..other.d * 24].to_vec(), other.d);
+
+    let c1 = DistanceCounter::new();
+    let r1 = ingest(&mut model, &batch, &cfg, &c1).unwrap();
+    assert_eq!(r1.rows, 24);
+    assert!(r1.touched >= 1);
+    let occupied = model.cells.iter().filter(|c| c.count > 0).count();
+    let expect = ((batch.n + r1.touched) * k + r1.refine_iters * occupied * k) as u64;
+    assert_eq!(r1.bill, expect, "the §5.2 ingest billing identity");
+    assert_eq!(c1.get(), r1.bill, "counter delta must equal the reported bill");
+    assert_eq!(model.rows, ds.n as u64 + 24);
+
+    // Byte-for-byte determinism from the same snapshot.
+    let mut m2 = Model::from_bytes(&snapshot).unwrap();
+    let c2 = DistanceCounter::new();
+    let r2 = ingest(&mut m2, &batch, &cfg, &c2).unwrap();
+    assert_eq!(r1, r2, "ingest reports diverged");
+    assert_eq!(model.to_bytes(), m2.to_bytes(), "ingested models diverged");
+}
+
+#[test]
+fn ingested_model_still_resumes_over_the_grown_dataset() {
+    // Ingest, then hand resume the original rows + the batch rows: the
+    // stored cell counts must reconcile with a locate() re-assignment.
+    let ds = simulate("3RN", 0.003, 31).unwrap();
+    let cfg = cfg_for(&ds, 3, 2);
+    let c = DistanceCounter::new();
+    let mut rng = Rng::new(8);
+    let out = bwkm::bwkm::run(&ds, 3, &cfg, &mut rng, &c);
+    let mut model = Model::from_run(&out, &cfg, &rng, &c);
+
+    let other = simulate("3RN", 0.003, 32).unwrap();
+    let batch = Dataset::new(other.data[..other.d * 10].to_vec(), other.d);
+    ingest(&mut model, &batch, &cfg, &DistanceCounter::new()).unwrap();
+
+    let mut grown = ds.data.clone();
+    grown.extend_from_slice(&batch.data);
+    let grown = Dataset::new(grown, ds.d);
+    let mut full_cfg = cfg.clone();
+    full_cfg.max_outer = 4;
+    let cr = DistanceCounter::new();
+    let mut rr = Rng::new(2);
+    let r = store::resume(&model, &grown, &full_cfg, &mut rr, &cr).unwrap();
+    assert_eq!(r.centroids.len(), 3 * ds.d);
+    assert!(r.centroids.iter().all(|x| x.is_finite()));
+    assert!(r.trace.len() >= model.trace.len(), "resume lost trace history");
+}
+
+#[test]
+fn job_scheduler_is_worker_count_independent_on_real_runs() {
+    let ds = simulate("3RN", 0.002, 41).unwrap();
+    let cfg = cfg_for(&ds, 3, 2);
+    let run_one = |_job: usize, rng: &mut Rng, counter: &DistanceCounter| {
+        let out = bwkm::bwkm::run(&ds, 3, &cfg, rng, counter);
+        (bits(&out.centroids), out.stop)
+    };
+    let solo = run_jobs(4, 1, 77, run_one);
+    let pooled = run_jobs(4, 3, 77, run_one);
+    for (a, b) in solo.iter().zip(&pooled) {
+        assert_eq!(a.out, b.out, "job {} diverged across pool sizes", a.job);
+        assert_eq!(a.distances, b.distances, "job {} bill diverged", a.job);
+    }
+    // Distinct seed streams: the jobs are independent replicates, not
+    // four copies of the same run.
+    assert!(
+        solo.windows(2).any(|w| w[0].out.0 != w[1].out.0),
+        "all jobs produced identical centroids — streams not forked?"
+    );
+}

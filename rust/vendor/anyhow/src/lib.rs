@@ -1,8 +1,8 @@
 //! Minimal offline stand-in for the `anyhow` crate (DESIGN.md §4: the
 //! crates.io mirror is unavailable, so the one error-handling dependency
 //! is vendored as this shim). It implements exactly the surface the bwkm
-//! crate uses: [`Error`], [`Result`], `anyhow!`, `bail!`, and the
-//! [`Context`] extension for `Result` and `Option`.
+//! crate uses: [`Error`], [`Result`], `anyhow!`, `bail!`, `ensure!`, and
+//! the [`Context`] extension for `Result` and `Option`.
 //!
 //! Semantics are intentionally simplified relative to upstream: the error
 //! is a flattened message string (context is prepended as
@@ -113,6 +113,16 @@ macro_rules! bail {
     };
 }
 
+/// Bail unless a condition holds (stand-in for `ensure!`).
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -130,6 +140,16 @@ mod tests {
         assert_eq!(parse("7").unwrap(), 7);
         assert_eq!(parse("x").unwrap_err().to_string(), "not a number: invalid digit found in string");
         assert_eq!(parse("0").unwrap_err().to_string(), "zero is not allowed (got `0`)");
+    }
+
+    #[test]
+    fn ensure_bails_on_false_only() {
+        fn check(n: usize) -> Result<usize> {
+            ensure!(n % 2 == 0, "odd value {n}");
+            Ok(n)
+        }
+        assert_eq!(check(4).unwrap(), 4);
+        assert_eq!(check(3).unwrap_err().to_string(), "odd value 3");
     }
 
     #[test]

@@ -12,6 +12,9 @@
 #   scripts/ci.sh --simd       # build + engine conformance with AND without
 #                              # the `simd` feature (the scalar fallback must
 #                              # stay green on targets without the lane paths)
+#   scripts/ci.sh --service    # the resident-service suite: model-store
+#                              # round-trip/resume/ingest conformance plus
+#                              # the store failure-injection subset
 #
 # The build is hermetic (vendored path deps, no crates.io), so the script
 # forces cargo offline and never touches the network.
@@ -19,6 +22,15 @@
 set -euo pipefail
 cd "$(dirname "$0")/../rust"
 export CARGO_NET_OFFLINE=true
+
+# Fail loudly, not cryptically, when the toolchain itself is missing: every
+# path below needs cargo, and a bare `command not found` half-way through a
+# run has cost real debugging time.
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "ERROR: no cargo in PATH — tier-1 (cargo build --release && cargo test -q) cannot run." >&2
+    echo "Install a Rust toolchain (rustup or a distro package) and re-run scripts/ci.sh." >&2
+    exit 1
+fi
 
 if [[ "${1:-}" == "--quick" ]]; then
     echo "== quick: engine conformance suite =="
@@ -43,6 +55,14 @@ fi
 if [[ "${1:-}" == "--approx" ]]; then
     echo "== approximate-regime gap-conformance suite =="
     cargo test -q --test approx_conformance
+    exit 0
+fi
+
+if [[ "${1:-}" == "--service" ]]; then
+    echo "== model store + resume/ingest conformance suite =="
+    cargo test -q --test service_conformance
+    echo "== store failure-injection subset =="
+    cargo test -q --test failure_injection store_
     exit 0
 fi
 
