@@ -1,0 +1,112 @@
+//! Exp O1 — telemetry overhead (DESIGN.md §2.11): what does watching a
+//! run cost, and is the off path really free?
+//!
+//! Two measurements:
+//!
+//! 1. **Record path** — raw throughput of the `Recorder` hot calls
+//!    (counter/gauge/span) against each sink: off (no-op), null (sink
+//!    dispatch only), summary (mutex + BTreeMap fold), jsonl (buffered
+//!    append). The off path must be within noise of an empty loop — it
+//!    takes no clock reading and touches no allocation.
+//! 2. **Whole run** — the same seeded BWKM run under metrics off vs
+//!    jsonl, asserting the §2.11 non-perturbation contract (`==` on
+//!    centroids and the distance bill) while measuring the wall-clock
+//!    delta an instrumented run pays end to end.
+//!
+//! Emits `BENCH_obs_overhead.json` (typed cells).
+
+use bwkm::bench::{bench_secs, env_f64, write_bench_json, Cell};
+use bwkm::data::simulate;
+use bwkm::metrics::DistanceCounter;
+use bwkm::obs::Recorder;
+use bwkm::util::{fmt_count, Rng};
+
+const RECORDS: usize = 100_000;
+
+/// Seconds per `RECORDS` mixed counter/gauge/span records against `rec`.
+fn record_path_secs(rec: &Recorder) -> f64 {
+    bench_secs(3, || {
+        for i in 0..RECORDS as u64 {
+            match i % 3 {
+                0 => rec.counter("bench.counter", i),
+                1 => rec.gauge("bench.gauge", i as f64),
+                _ => drop(rec.span("bench.span")),
+            }
+        }
+        std::hint::black_box(rec);
+    })
+}
+
+fn main() {
+    let mult = env_f64("BWKM_SCALE", 1.0);
+    println!("=== O1: telemetry overhead ({} records/iter) ===", fmt_count(RECORDS as u64));
+
+    // ---- 1. Record-path throughput per sink.
+    let trace = std::env::temp_dir().join(format!("bwkm_bench_obs_{}.jsonl", std::process::id()));
+    let sinks: Vec<(&str, Recorder)> = vec![
+        ("off", Recorder::off()),
+        ("null", Recorder::null()),
+        ("summary", Recorder::summary()),
+        ("jsonl", Recorder::jsonl(&trace).expect("open trace")),
+    ];
+    let mut rows = Vec::new();
+    println!("{:<10} {:>14} {:>14}", "sink", "secs/iter", "records/s");
+    for (name, rec) in &sinks {
+        let secs = record_path_secs(rec);
+        let rate = if secs > 0.0 { RECORDS as f64 / secs } else { f64::INFINITY };
+        println!("{name:<10} {secs:>14.6} {:>14}", fmt_count(rate as u64));
+        rows.push(vec![
+            ("bench".to_string(), Cell::from("record_path")),
+            ("sink".to_string(), Cell::from(*name)),
+            ("secs".to_string(), Cell::F64(secs)),
+            ("records_per_s".to_string(), Cell::F64(rate)),
+        ]);
+    }
+    drop(sinks);
+    std::fs::remove_file(&trace).ok();
+
+    // ---- 2. Whole-run overhead: off vs jsonl on the same seeded run.
+    let ds = simulate("WUY", (0.002 * mult).min(1.0), 31).expect("simulator");
+    let k = 9;
+    let cfg = bwkm::bwkm::BwkmCfg::for_dataset(ds.n, ds.d, k);
+
+    let c_off = DistanceCounter::new();
+    let mut out_off = None;
+    let t_off = bench_secs(3, || {
+        c_off.reset();
+        out_off = Some(bwkm::bwkm::run(&ds, k, &cfg, &mut Rng::new(5), &c_off));
+    });
+    let out_off = out_off.expect("ran");
+
+    let c_rec = DistanceCounter::new();
+    let mut out_rec = None;
+    let t_rec = bench_secs(3, || {
+        c_rec.reset();
+        let rec = Recorder::jsonl(&trace).expect("open trace");
+        out_rec =
+            Some(bwkm::bwkm::run_rec(&ds, k, &cfg, &mut Rng::new(5), &c_rec, &rec));
+        rec.flush();
+    });
+    let out_rec = out_rec.expect("ran");
+    std::fs::remove_file(&trace).ok();
+
+    // §2.11 non-perturbation: the instrumented run is the same run.
+    assert_eq!(out_off.centroids, out_rec.centroids, "jsonl telemetry perturbed the centroids");
+    assert_eq!(c_off.get(), c_rec.get(), "jsonl telemetry perturbed the distance bill");
+
+    let overhead = if t_off > 0.0 { (t_rec - t_off) / t_off * 100.0 } else { 0.0 };
+    println!(
+        "bwkm run (n={} d={} k={k}): off={t_off:.4}s jsonl={t_rec:.4}s overhead={overhead:+.1}%",
+        ds.n, ds.d
+    );
+    rows.push(vec![
+        ("bench".to_string(), Cell::from("whole_run")),
+        ("n".to_string(), Cell::U64(ds.n as u64)),
+        ("off_secs".to_string(), Cell::F64(t_off)),
+        ("jsonl_secs".to_string(), Cell::F64(t_rec)),
+        ("overhead_pct".to_string(), Cell::F64(overhead)),
+        ("bit_identical".to_string(), Cell::from("true")),
+    ]);
+
+    write_bench_json("obs_overhead", &rows);
+}

@@ -1,17 +1,20 @@
 //! Small timing/IO helpers for the hand-rolled benches.
 
 use std::io::Write;
-use std::path::PathBuf;
-use std::time::Instant;
+use std::path::{Path, PathBuf};
+
+use crate::obs::Stopwatch;
 
 /// Median wall-clock seconds of `iters` runs of `f` (after one warmup).
+/// Timing runs on the [`Stopwatch`] monotonic clock (DESIGN.md §2.11) so
+/// bench columns and run-report span timings come from one abstraction.
 pub fn bench_secs<F: FnMut()>(iters: usize, mut f: F) -> f64 {
     f(); // warmup
     let mut times: Vec<f64> = (0..iters.max(1))
         .map(|_| {
-            let t = Instant::now();
+            let t = Stopwatch::start();
             f();
-            t.elapsed().as_secs_f64()
+            t.elapsed_s()
         })
         .collect();
     times.sort_by(|a, b| a.partial_cmp(b).unwrap());
@@ -88,8 +91,15 @@ impl From<f64> for Cell {
 /// offline (DESIGN.md §4).
 pub fn write_bench_json(name: &str, rows: &[Vec<(String, Cell)>]) {
     let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("..");
-    let path = root.join(format!("BENCH_{name}.json"));
-    let tmp = root.join(format!("BENCH_{name}.json.tmp.{}", std::process::id()));
+    write_bench_json_to(&root.join(format!("BENCH_{name}.json")), rows);
+}
+
+/// [`write_bench_json`] with an explicit destination: same typed-cell
+/// document, same atomic temp-then-rename write, caller-chosen path. The
+/// CLI run report (DESIGN.md §2.11) uses this to land its summary next to
+/// a `metrics_path=` trace instead of at the repo root.
+pub fn write_bench_json_to(path: &Path, rows: &[Vec<(String, Cell)>]) {
+    let tmp = path.with_extension(format!("tmp.{}", std::process::id()));
     let mut s = String::from("[\n");
     for (i, row) in rows.iter().enumerate() {
         s.push_str("  {");
@@ -120,7 +130,9 @@ pub fn write_bench_json(name: &str, rows: &[Vec<(String, Cell)>]) {
 /// One JSON value from a typed bench cell (see [`write_bench_json`]).
 /// Finite floats use Rust's `{:?}` — the shortest representation that
 /// round-trips — so the emitted trajectory is stable across runs.
-fn json_value(v: &Cell) -> String {
+/// `pub(crate)` so the JSONL trace sink (DESIGN.md §2.11) shares one
+/// escaping/typing implementation with the bench documents.
+pub(crate) fn json_value(v: &Cell) -> String {
     match v {
         Cell::Str(s) => format!("\"{}\"", json_escape(s)),
         Cell::U64(u) => u.to_string(),
@@ -129,7 +141,7 @@ fn json_value(v: &Cell) -> String {
     }
 }
 
-fn json_escape(v: &str) -> String {
+pub(crate) fn json_escape(v: &str) -> String {
     let mut out = String::with_capacity(v.len());
     for ch in v.chars() {
         match ch {
@@ -212,7 +224,7 @@ mod tests {
             "[\n  {\"backend\": \"exact\", \"pairs\": 123, \"frac\": 0.5, \"gap\": null}\n]\n"
         );
         // The temp file was renamed away, not left behind.
-        let tmp = root.join(format!("BENCH_{name}.json.tmp.{}", std::process::id()));
+        let tmp = path.with_extension(format!("tmp.{}", std::process::id()));
         assert!(!tmp.exists(), "temp file left behind at {}", tmp.display());
         std::fs::remove_file(&path).ok();
     }

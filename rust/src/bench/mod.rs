@@ -7,4 +7,6 @@ pub mod figures;
 pub mod harness;
 
 pub use figures::{run_figure, FigureCfg, FigureResult};
-pub use harness::{bench_secs, env_f64, env_u64, out_dir, write_bench_json, write_csv, Cell};
+pub use harness::{
+    bench_secs, env_f64, env_u64, out_dir, write_bench_json, write_bench_json_to, write_csv, Cell,
+};

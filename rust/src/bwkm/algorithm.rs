@@ -16,6 +16,7 @@ use crate::kmeans::{
     Stepper, WLloydCfg,
 };
 use crate::metrics::{Budget, DistanceCounter};
+use crate::obs::{BillBridge, Recorder};
 use crate::partition::Partition;
 use crate::util::{Cdf, Rng};
 
@@ -142,8 +143,22 @@ pub fn run(
     rng: &mut Rng,
     counter: &DistanceCounter,
 ) -> BwkmOutcome {
+    run_rec(data, k, cfg, rng, counter, &Recorder::off())
+}
+
+/// [`run`] with telemetry (DESIGN.md §2.11). `rec` observes spans, bill
+/// deltas and per-iteration gauges; it never participates in FP folds or
+/// RNG draws, so the outcome is bit-identical to [`run`]'s.
+pub fn run_rec(
+    data: &Dataset,
+    k: usize,
+    cfg: &BwkmCfg,
+    rng: &mut Rng,
+    counter: &DistanceCounter,
+    rec: &Recorder,
+) -> BwkmOutcome {
     let mut stepper = stepper_for(&cfg.assign);
-    run_with(stepper.as_mut(), data, k, cfg, rng, counter)
+    run_with_rec(stepper.as_mut(), data, k, cfg, rng, counter, rec)
 }
 
 /// Run BWKM with the auto-selecting engine (DESIGN.md §2.7): each inner
@@ -161,6 +176,20 @@ pub fn run_auto(
     rng: &mut Rng,
     counter: &DistanceCounter,
 ) -> BwkmOutcome {
+    run_auto_rec(data, k, cfg, rng, counter, &Recorder::off())
+}
+
+/// [`run_auto`] with telemetry (DESIGN.md §2.11): the auto engine's
+/// per-step choices additionally surface as typed `auto.choice.*` gauges
+/// and `auto.switch` events, alongside the unchanged `auto[…]` note log.
+pub fn run_auto_rec(
+    data: &Dataset,
+    k: usize,
+    cfg: &BwkmCfg,
+    rng: &mut Rng,
+    counter: &DistanceCounter,
+    rec: &Recorder,
+) -> BwkmOutcome {
     match cfg.assign.mode {
         // Approximate regime: closure joins auto's choice set (§2.9);
         // the sampled stepper replaces the engine loop outright (it owns
@@ -168,12 +197,12 @@ pub fn run_auto(
         AssignMode::Closure => {
             let mut stepper =
                 EngineStepper::with_engine(AutoAssigner::with_closure(cfg.assign.closure_expand));
-            run_with(&mut stepper, data, k, cfg, rng, counter)
+            run_with_rec(&mut stepper, data, k, cfg, rng, counter, rec)
         }
-        AssignMode::Sampled => run(data, k, cfg, rng, counter),
+        AssignMode::Sampled => run_rec(data, k, cfg, rng, counter, rec),
         AssignMode::Exact => {
             let mut stepper: EngineStepper<AutoAssigner> = EngineStepper::new();
-            run_with(&mut stepper, data, k, cfg, rng, counter)
+            run_with_rec(&mut stepper, data, k, cfg, rng, counter, rec)
         }
     }
 }
@@ -188,8 +217,21 @@ pub fn run_with(
     rng: &mut Rng,
     counter: &DistanceCounter,
 ) -> BwkmOutcome {
+    run_with_rec(stepper, data, k, cfg, rng, counter, &Recorder::off())
+}
+
+/// [`run_with`] with telemetry (DESIGN.md §2.11).
+pub fn run_with_rec(
+    stepper: &mut dyn Stepper,
+    data: &Dataset,
+    k: usize,
+    cfg: &BwkmCfg,
+    rng: &mut Rng,
+    counter: &DistanceCounter,
+    rec: &Recorder,
+) -> BwkmOutcome {
     let mut src = MemSource::new(data);
-    let out = run_source(stepper, &mut src, k, cfg, rng, counter)
+    let out = run_source_rec(stepper, &mut src, k, cfg, rng, counter, rec)
         .expect("the in-memory source is infallible");
     BwkmOutcome {
         centroids: out.centroids,
@@ -283,15 +325,22 @@ fn refine_loop<S: RefineSource>(
     counter: &DistanceCounter,
     st: &mut RefineState,
     start_outer: usize,
+    rec: &Recorder,
 ) -> Result<()> {
     let d = src.d();
+    // Telemetry bridge (DESIGN.md §2.11): per-iteration bill deltas by
+    // *reading* the shared counter — never writing it.
+    let mut bill = BillBridge::new(counter);
     for outer in start_outer..cfg.max_outer {
+        let _iter_span = rec.span("bwkm.iter");
         // ---- Step 2 / Step 4: weighted Lloyd (warm start).
         let mut wl_cfg = cfg.wl;
         wl_cfg.budget = cfg.budget;
-        let out = weighted_lloyd_with(
-            stepper, &st.reps, &st.weights, d, &st.centroids, &wl_cfg, counter,
-        );
+        let out = {
+            let _s = rec.span("bwkm.lloyd");
+            weighted_lloyd_with(stepper, &st.reps, &st.weights, d, &st.centroids, &wl_cfg, counter)
+        };
+        stepper.record_metrics(rec);
         let shift = crate::kmeans::weighted_lloyd::max_shift(
             &st.centroids,
             &out.centroids,
@@ -302,6 +351,7 @@ fn refine_loop<S: RefineSource>(
 
         // ---- Step 3 preamble: ε per block from the stored top-2 distances
         // ("we store ... the two closest centroids to the representative").
+        let eval_span = rec.span("bwkm.eval");
         let diags: Vec<f64> = st.ids.iter().map(|&b| src.diagonal(b)).collect();
         let eps = epsilons_from_diags(&diags, &out.d1, &out.d2);
         let f = boundary(&eps);
@@ -314,6 +364,7 @@ fn refine_loop<S: RefineSource>(
         } else {
             None
         };
+        drop(eval_span);
         st.trace.push(TracePoint {
             outer_iter: outer,
             distances: counter.get(),
@@ -325,6 +376,12 @@ fn refine_loop<S: RefineSource>(
             full_error,
             lloyd_iters: out.iters,
         });
+        bill.tick(rec, "bwkm.distances", counter);
+        rec.gauge("bwkm.weighted_error", out.werr);
+        rec.gauge("bwkm.bound", bound);
+        rec.gauge_u64("bwkm.boundary", f.len() as u64);
+        rec.gauge_u64("bwkm.blocks", src.partition().len() as u64);
+        rec.gauge_u64("bwkm.lloyd_iters", out.iters as u64);
 
         // ---- Stopping criteria (§2.4.2).
         if f.is_empty() {
@@ -352,6 +409,7 @@ fn refine_loop<S: RefineSource>(
         }
 
         // ---- Step 3: sample |F| blocks with replacement ∝ ε and split.
+        let _split_span = rec.span("bwkm.split");
         if !split_step(src, &eps, f.len(), st, rng)? {
             st.stop = StopReason::EmptyBoundary;
             break;
@@ -369,6 +427,7 @@ fn finish(
     k: usize,
     d: usize,
     counter: &DistanceCounter,
+    rec: &Recorder,
 ) -> Result<SourceOutcome> {
     // §2.9: every approximate run self-reports its measured quality gap
     // on the final representatives/centroids as a counter note (uncounted
@@ -376,6 +435,18 @@ fn finish(
     // exact trajectories and note logs are untouched.
     if let Some(gap) = stepper.quality_gap(&st.reps, &st.weights, d, &st.centroids) {
         counter.note_pinned(gap.note());
+        // The same values as typed gauges (DESIGN.md §2.11) — the pinned
+        // note string stays the compatibility surface, and the
+        // conformance suite rebuilds it `==` from these fields.
+        rec.gauge("gap.approx_err", gap.approx_err);
+        rec.gauge("gap.exact_err", gap.exact_err);
+        rec.gauge("gap.rel", gap.rel_gap());
+        rec.gauge("gap.hit_rate", gap.hit_rate);
+        rec.gauge_u64("gap.fallbacks", gap.fallbacks);
+        rec.event("gap.backend", gap.backend);
+    }
+    if rec.is_on() {
+        rec.event("bwkm.stop", &format!("{:?}", st.stop));
     }
     Ok(SourceOutcome {
         centroids: st.centroids,
@@ -402,6 +473,24 @@ pub fn run_source<S: RefineSource>(
     rng: &mut Rng,
     counter: &DistanceCounter,
 ) -> Result<SourceOutcome> {
+    run_source_rec(stepper, src, k, cfg, rng, counter, &Recorder::off())
+}
+
+/// [`run_source`] with telemetry (DESIGN.md §2.11): `bwkm.seed` spans the
+/// Step-1 partition build + seeding, each outer iteration nests
+/// `bwkm.lloyd` / `bwkm.eval` / `bwkm.split` under `bwkm.iter`, the bill
+/// is bridged per iteration as `bwkm.distances`, and the stop reason is
+/// emitted as a `bwkm.stop` event. Strictly observational: the outcome is
+/// bit-identical with `rec` on or off.
+pub fn run_source_rec<S: RefineSource>(
+    stepper: &mut dyn Stepper,
+    src: &mut S,
+    k: usize,
+    cfg: &BwkmCfg,
+    rng: &mut Rng,
+    counter: &DistanceCounter,
+    rec: &Recorder,
+) -> Result<SourceOutcome> {
     assert!(k >= 1, "k must be ≥ 1");
     assert!(src.n() >= k, "n must be ≥ k");
     let d = src.d();
@@ -410,9 +499,14 @@ pub fn run_source<S: RefineSource>(
     // (the configured §2.8 policy; default: the paper's weighted
     // K-means++). Seeding always runs in memory — the representative set
     // is tiny — so in-memory and streamed runs draw identically.
+    let seed_span = rec.span("bwkm.seed");
+    let mut seed_bill = BillBridge::new(counter);
     initial_partition_source(src, k, &cfg.init, rng, counter)?;
     let (reps, weights, ids) = src.reps_weights();
     let centroids = cfg.seed.seeder().seed(&reps, &weights, d, k, rng, counter);
+    seed_bill.tick(rec, "bwkm.seed_distances", counter);
+    rec.gauge_u64("bwkm.seed_reps", weights.len() as u64);
+    drop(seed_span);
 
     let mut st = RefineState {
         reps,
@@ -424,8 +518,8 @@ pub fn run_source<S: RefineSource>(
         d1: Vec::new(),
         d2: Vec::new(),
     };
-    refine_loop(stepper, src, k, cfg, rng, counter, &mut st, 0)?;
-    finish(stepper, st, k, d, counter)
+    refine_loop(stepper, src, k, cfg, rng, counter, &mut st, 0, rec)?;
+    finish(stepper, st, k, d, counter, rec)
 }
 
 /// A persisted mid-run snapshot (model store, DESIGN.md §5.2) from which
@@ -465,6 +559,23 @@ pub fn resume_source<S: RefineSource>(
     rng: &mut Rng,
     counter: &DistanceCounter,
 ) -> Result<SourceOutcome> {
+    resume_source_rec(stepper, src, k, cfg, point, rng, counter, &Recorder::off())
+}
+
+/// [`resume_source`] with telemetry (DESIGN.md §2.11): the deferred-split
+/// replay runs under a `bwkm.resume` span, then the shared loop records
+/// as in [`run_source_rec`].
+#[allow(clippy::too_many_arguments)]
+pub fn resume_source_rec<S: RefineSource>(
+    stepper: &mut dyn Stepper,
+    src: &mut S,
+    k: usize,
+    cfg: &BwkmCfg,
+    point: ResumePoint,
+    rng: &mut Rng,
+    counter: &DistanceCounter,
+    rec: &Recorder,
+) -> Result<SourceOutcome> {
     assert!(k >= 1, "k must be ≥ 1");
     let d = src.d();
     let (reps, weights, ids) = src.reps_weights();
@@ -478,8 +589,9 @@ pub fn resume_source<S: RefineSource>(
         d1: point.d1,
         d2: point.d2,
     };
+    rec.gauge_u64("bwkm.resume_outer", st.trace.len() as u64);
     if st.stop != StopReason::MaxIters || st.trace.len() >= cfg.max_outer {
-        return finish(stepper, st, k, d, counter);
+        return finish(stepper, st, k, d, counter, rec);
     }
     if !st.trace.is_empty() {
         anyhow::ensure!(
@@ -489,17 +601,18 @@ pub fn resume_source<S: RefineSource>(
             st.ids.len()
         );
         // Replay the deferred Step-3 split the interrupted run skipped.
+        let _resume_span = rec.span("bwkm.resume");
         let diags: Vec<f64> = st.ids.iter().map(|&b| src.diagonal(b)).collect();
         let eps = epsilons_from_diags(&diags, &st.d1, &st.d2);
         let f = boundary(&eps);
         if !split_step(src, &eps, f.len(), &mut st, rng)? {
             st.stop = StopReason::EmptyBoundary;
-            return finish(stepper, st, k, d, counter);
+            return finish(stepper, st, k, d, counter, rec);
         }
     }
     let start = st.trace.len();
-    refine_loop(stepper, src, k, cfg, rng, counter, &mut st, start)?;
-    finish(stepper, st, k, d, counter)
+    refine_loop(stepper, src, k, cfg, rng, counter, &mut st, start, rec)?;
+    finish(stepper, st, k, d, counter, rec)
 }
 
 #[cfg(test)]

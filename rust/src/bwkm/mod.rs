@@ -17,8 +17,9 @@ pub mod misassignment;
 pub mod source;
 
 pub use algorithm::{
-    resume_source, run, run_auto, run_source, run_with, BwkmCfg, BwkmOutcome, ResumePoint,
-    SourceOutcome, StopReason, TracePoint,
+    resume_source, resume_source_rec, run, run_auto, run_auto_rec, run_rec, run_source,
+    run_source_rec, run_with, run_with_rec, BwkmCfg, BwkmOutcome, ResumePoint, SourceOutcome,
+    StopReason, TracePoint,
 };
 pub use init_partition::{
     cutting_masses, cutting_masses_source, initial_partition, initial_partition_source,

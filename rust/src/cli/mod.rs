@@ -12,12 +12,14 @@ use std::path::Path;
 use anyhow::{bail, Context, Result};
 
 use crate::bench::figures::{emit, run_figure, FigureCfg};
+use crate::bench::{write_bench_json, write_bench_json_to};
 use crate::config::{Method, RunConfig};
 use crate::data::{simulate, Dataset, TABLE1};
 use crate::kmeans::init::{forgy, kmc2, kmeanspp, Kmc2Cfg};
 use crate::kmeans::{lloyd, minibatch_kmeans, LloydCfg, MiniBatchCfg};
 use crate::metrics::{kmeans_error, DistanceCounter};
-use crate::rpkm::{grid_rpkm, RpkmCfg};
+use crate::obs::Recorder;
+use crate::rpkm::{grid_rpkm_rec, RpkmCfg};
 use crate::util::{fmt_count, Rng};
 
 const USAGE: &str = "\
@@ -35,6 +37,7 @@ RUN KEYS: dataset scale seed k method budget threads use_pjrt eval_full_error
           assign closure_expand sample_rows sample_seed
           kernel precision
           save resume ingest jobs
+          metrics metrics_path
           (method: bwkm fkm kmpp kmpp_init kmc2 mbN rpkm)
           (assign: exact closure sampled — the §2.9 assignment regime for
            bwkm/rpkm; closure scans closure_expand+1 candidate centroids
@@ -72,6 +75,14 @@ RUN KEYS: dataset scale seed k method budget threads use_pjrt eval_full_error
            worker pool; each job gets a private distance counter and a
            deterministic RNG stream forked from seed, so results are
            worker-count independent)
+          (metrics=off|summary|jsonl — run telemetry, DESIGN.md §2.11.
+           summary prints an aggregated run report (phase spans, typed
+           counters/gauges, events) and writes it as BENCH_run_metrics.json;
+           jsonl additionally appends every record to metrics_path=FILE
+           (default bwkm_trace.jsonl) as one JSON object per line, with the
+           summary JSON landing at FILE.summary.json. Telemetry is strictly
+           observational: centroids, bills and notes are bit-identical with
+           metrics on or off)
 ";
 
 /// Entry point used by `src/main.rs`.
@@ -177,10 +188,42 @@ fn print_trace(trace: &[crate::bwkm::TracePoint]) {
     }
 }
 
+/// Print the telemetry run report and persist the typed summary JSON
+/// (DESIGN.md §2.11). No-op with `metrics=off`. In `jsonl` mode the
+/// summary lands beside the trace (`<trace>.summary.json`); in `summary`
+/// mode it is the repo-root `BENCH_run_metrics.json` (the bench-harness
+/// cell/row convention either way).
+fn emit_metrics(rec: &Recorder) -> Result<()> {
+    if !rec.is_on() {
+        return Ok(());
+    }
+    rec.flush();
+    let report = rec.report();
+    if !report.is_empty() {
+        println!("metrics:");
+        for line in &report {
+            println!("  {line}");
+        }
+    }
+    let rows = rec.summary_rows();
+    match rec.trace_path() {
+        Some(trace) => {
+            let summary = std::path::PathBuf::from(format!("{}.summary.json", trace.display()));
+            write_bench_json_to(&summary, &rows);
+            println!("metrics: trace={} summary={}", trace.display(), summary.display());
+        }
+        None => {
+            write_bench_json("run_metrics", &rows);
+            println!("metrics: summary=BENCH_run_metrics.json");
+        }
+    }
+    Ok(())
+}
+
 /// Out-of-core run: the full BWKM loop against a `stream:` binary file,
 /// never materializing the dataset (DESIGN.md §5.1). Bit-identical to
 /// `run` on the same data and seed.
-fn run_streaming(cfg: &RunConfig, path: &str) -> Result<()> {
+fn run_streaming(cfg: &RunConfig, path: &str, rec: &Recorder) -> Result<()> {
     use crate::coordinator::{stream_assign_err, StreamingBwkm};
     use crate::data::loader::BinChunks;
 
@@ -209,7 +252,7 @@ fn run_streaming(cfg: &RunConfig, path: &str) -> Result<()> {
     let t0 = std::time::Instant::now();
     let mut coordinator =
         StreamingBwkm::new(BinChunks::opener(p, cfg.chunk_rows), d).with_threads(cfg.threads);
-    let out = coordinator.run(cfg.k, &bcfg, &mut rng, &counter)?;
+    let out = coordinator.run_rec(cfg.k, &bcfg, &mut rng, &counter, rec)?;
     print_trace(&out.trace);
     // Final E^D by one more streamed scoring pass (its own counter).
     let eval = DistanceCounter::new();
@@ -230,14 +273,14 @@ fn run_streaming(cfg: &RunConfig, path: &str) -> Result<()> {
         out.stop,
         bcfg.seed.method.name()
     );
-    Ok(())
+    emit_metrics(rec)
 }
 
 /// Warm-start ingestion (DESIGN.md §5.2): fold a mini-batch into a saved
 /// model without its original dataset. `resume=` names the store,
 /// `ingest=` the batch file; the updated model goes to `save=` (or back
 /// over the input store when absent).
-fn run_ingest(cfg: &RunConfig, batch_path: &str) -> Result<()> {
+fn run_ingest(cfg: &RunConfig, batch_path: &str, rec: &Recorder) -> Result<()> {
     let model_path = cfg
         .resume
         .as_deref()
@@ -255,6 +298,12 @@ fn run_ingest(cfg: &RunConfig, batch_path: &str) -> Result<()> {
         crate::data::loader::load_csv(p, None)?
     };
     let mut model = crate::store::load(model_path)?;
+    if rec.is_on() {
+        rec.event(
+            "store.load",
+            &format!("path={model_path} k={} rows={}", model.k, model.rows),
+        );
+    }
     // Rebuild the saving run's configuration. model.rows equals the
     // original n until the first ingest grows it; after that, pass the
     // size-derived keys (m, m_prime, s) explicitly — the digest check
@@ -262,9 +311,15 @@ fn run_ingest(cfg: &RunConfig, batch_path: &str) -> Result<()> {
     let bcfg = cfg.bwkm_cfg(model.rows as usize, model.d)?;
     let counter = DistanceCounter::new();
     let t0 = std::time::Instant::now();
-    let report = crate::store::ingest(&mut model, &batch, &bcfg, &counter)?;
+    let report = crate::store::ingest_rec(&mut model, &batch, &bcfg, &counter, rec)?;
     let out_path = cfg.save.as_deref().unwrap_or(model_path);
     crate::store::save(&model, out_path)?;
+    if rec.is_on() {
+        rec.event(
+            "store.save",
+            &format!("path={out_path} cells={} rows={}", model.cells.len(), model.rows),
+        );
+    }
     println!(
         "ingest: rows={} touched={} moved={} refine_iters={} batch_err={:.6e}",
         report.rows, report.touched, report.moved, report.refine_iters, report.batch_err
@@ -276,12 +331,12 @@ fn run_ingest(cfg: &RunConfig, batch_path: &str) -> Result<()> {
         fmt_count(report.bill),
         t0.elapsed()
     );
-    Ok(())
+    emit_metrics(rec)
 }
 
 /// Multiplex `jobs=N` independent BWKM runs over the shared worker pool
 /// (DESIGN.md §5.2): one dataset, N seed streams, isolated bills.
-fn run_multi(cfg: &RunConfig) -> Result<()> {
+fn run_multi(cfg: &RunConfig, rec: &Recorder) -> Result<()> {
     if cfg.method != Method::Bwkm {
         bail!("jobs= supports method=bwkm only (got {})", cfg.method.name());
     }
@@ -309,16 +364,22 @@ fn run_multi(cfg: &RunConfig) -> Result<()> {
         cfg.threads.max(1).min(cfg.jobs)
     );
     let t0 = std::time::Instant::now();
-    let results = crate::coordinator::run_jobs(cfg.jobs, cfg.threads, cfg.seed, |_job, rng, counter| {
-        crate::bwkm::run(&ds, cfg.k, &bcfg, rng, counter)
-    });
+    let results = crate::coordinator::run_jobs_rec(
+        cfg.jobs,
+        cfg.threads,
+        cfg.seed,
+        rec,
+        |_job, rng, counter, jrec| crate::bwkm::run_rec(&ds, cfg.k, &bcfg, rng, counter, jrec),
+    );
     for r in &results {
         let eval = DistanceCounter::new();
         let err = kmeans_error(&ds.data, ds.d, &r.out.centroids, &eval);
         println!(
-            "  job={:<3} E^D={err:.6e} distances={:>14} (stop={:?})",
+            "  job={:<3} E^D={err:.6e} distances={:>14} wall={:.2}s wait={:.2}s (stop={:?})",
             r.job,
             fmt_count(r.distances),
+            r.elapsed_s,
+            r.queue_wait_s,
             r.out.stop
         );
         for n in r.notes.iter().filter(|n| n.starts_with("gap[")) {
@@ -326,24 +387,25 @@ fn run_multi(cfg: &RunConfig) -> Result<()> {
         }
     }
     println!("result: {} jobs wall={:.2?} (init={})", results.len(), t0.elapsed(), bcfg.seed.method.name());
-    Ok(())
+    emit_metrics(rec)
 }
 
 fn run(args: &[String]) -> Result<()> {
     let mut cfg = RunConfig::default();
     parse_overrides(&mut cfg, args)?;
+    let rec = cfg.recorder()?;
     if let Some(batch) = cfg.ingest.clone() {
-        return run_ingest(&cfg, &batch);
+        return run_ingest(&cfg, &batch, &rec);
     }
     if cfg.jobs > 1 {
-        return run_multi(&cfg);
+        return run_multi(&cfg, &rec);
     }
     if let Some(path) = cfg.dataset.strip_prefix("stream:") {
         if cfg.save.is_some() || cfg.resume.is_some() {
             bail!("save=/resume= need the in-memory path (the streaming outcome holds no store state yet)");
         }
         let path = path.to_string();
-        return run_streaming(&cfg, &path);
+        return run_streaming(&cfg, &path, &rec);
     }
     if (cfg.save.is_some() || cfg.resume.is_some()) && cfg.method != Method::Bwkm {
         bail!("save=/resume= operate on BWKM model stores (method=bwkm only)");
@@ -385,29 +447,52 @@ fn run(args: &[String]) -> Result<()> {
                     bail!("resume= does not support use_pjrt (the device stepper holds no store state)");
                 }
                 let model = crate::store::load(mp)?;
+                if rec.is_on() {
+                    rec.event(
+                        "store.load",
+                        &format!("path={mp} k={} rows={}", model.k, model.rows),
+                    );
+                }
                 if cfg.threads > 1 && !approx {
                     let mut stepper =
                         crate::coordinator::sharded_stepper_for(&bcfg.assign, cfg.threads);
-                    crate::store::resume_with(
+                    crate::store::resume_with_rec(
                         stepper.as_mut(),
                         &model,
                         &ds,
                         &bcfg,
                         &mut rng,
                         &counter,
+                        &rec,
                     )?
                 } else {
-                    crate::store::resume(&model, &ds, &bcfg, &mut rng, &counter)?
+                    crate::store::resume_rec(&model, &ds, &bcfg, &mut rng, &counter, &rec)?
                 }
             } else if approx {
                 // Approximate regimes run their own (serial) stepper —
                 // closures / sampled steps carry state across steps.
                 let mut stepper = crate::kmeans::stepper_for(&bcfg.assign);
-                crate::bwkm::run_with(stepper.as_mut(), &ds, cfg.k, &bcfg, &mut rng, &counter)
+                crate::bwkm::run_with_rec(
+                    stepper.as_mut(),
+                    &ds,
+                    cfg.k,
+                    &bcfg,
+                    &mut rng,
+                    &counter,
+                    &rec,
+                )
             } else if cfg.use_pjrt {
                 let rt = crate::runtime::Runtime::open_default()?;
                 let mut stepper = crate::runtime::PjrtStepper::new(rt);
-                let o = crate::bwkm::run_with(&mut stepper, &ds, cfg.k, &bcfg, &mut rng, &counter);
+                let o = crate::bwkm::run_with_rec(
+                    &mut stepper,
+                    &ds,
+                    cfg.k,
+                    &bcfg,
+                    &mut rng,
+                    &counter,
+                    &rec,
+                );
                 println!(
                     "pjrt: {} device steps, {} native-fallback steps",
                     stepper.device_steps, stepper.fallback_steps
@@ -417,9 +502,17 @@ fn run(args: &[String]) -> Result<()> {
                 // Honors the §2.10 kernel/precision selection per worker.
                 let mut stepper =
                     crate::coordinator::sharded_stepper_for(&bcfg.assign, cfg.threads);
-                crate::bwkm::run_with(stepper.as_mut(), &ds, cfg.k, &bcfg, &mut rng, &counter)
+                crate::bwkm::run_with_rec(
+                    stepper.as_mut(),
+                    &ds,
+                    cfg.k,
+                    &bcfg,
+                    &mut rng,
+                    &counter,
+                    &rec,
+                )
             } else {
-                crate::bwkm::run(&ds, cfg.k, &bcfg, &mut rng, &counter)
+                crate::bwkm::run_rec(&ds, cfg.k, &bcfg, &mut rng, &counter, &rec)
             };
             print_trace(&out.trace);
             if let Some(sp) = &cfg.save {
@@ -427,6 +520,12 @@ fn run(args: &[String]) -> Result<()> {
                 // later resume continues the exact same trajectory.
                 let model = crate::store::Model::from_run(&out, &bcfg, &rng, &counter);
                 crate::store::save(&model, sp)?;
+                if rec.is_on() {
+                    rec.event(
+                        "store.save",
+                        &format!("path={sp} cells={} rows={}", model.cells.len(), model.rows),
+                    );
+                }
                 println!(
                     "saved: {sp} ({} cells, {} rows, {} trace points)",
                     model.cells.len(),
@@ -468,7 +567,7 @@ fn run(args: &[String]) -> Result<()> {
                 assign: cfg.assign_cfg()?,
                 ..Default::default()
             };
-            let out = grid_rpkm(&ds, cfg.k, &rcfg, &mut rng, &counter);
+            let out = grid_rpkm_rec(&ds, cfg.k, &rcfg, &mut rng, &counter, &rec);
             (out.centroids, format!("levels={}", out.trace.len()))
         }
     };
@@ -486,7 +585,7 @@ fn run(args: &[String]) -> Result<()> {
         fmt_count(counter.get()),
         t0.elapsed()
     );
-    Ok(())
+    emit_metrics(&rec)
 }
 
 fn figure(args: &[String]) -> Result<()> {
@@ -745,6 +844,112 @@ mod tests {
             "save=x.mdl".into(),
         ])
         .is_err());
+    }
+
+    /// Every line of a JSONL trace is one record with the pinned field
+    /// order, and the typed summary JSON landed beside it (§2.11).
+    fn assert_trace_and_summary(trace: &Path) {
+        let body = std::fs::read_to_string(trace).unwrap();
+        assert!(!body.is_empty(), "trace {} is empty", trace.display());
+        for line in body.lines() {
+            assert!(line.starts_with("{\"ts\": "), "bad trace line: {line}");
+            assert!(line.ends_with('}'), "bad trace line: {line}");
+            assert!(line.contains("\"kind\": \""), "bad trace line: {line}");
+            assert!(line.contains("\"name\": \""), "bad trace line: {line}");
+            assert!(line.contains("\"value\": "), "bad trace line: {line}");
+        }
+        let summary = std::path::PathBuf::from(format!("{}.summary.json", trace.display()));
+        assert!(summary.is_file(), "missing {}", summary.display());
+        std::fs::remove_file(&summary).ok();
+    }
+
+    #[test]
+    fn run_metrics_summary_mode_writes_bench_json() {
+        run(&[
+            "dataset=3RN".into(),
+            "scale=0.002".into(),
+            "k=3".into(),
+            "method=bwkm".into(),
+            "max_outer=2".into(),
+            "seed=1".into(),
+            "eval_full_error=off".into(),
+            "metrics=summary".into(),
+        ])
+        .unwrap();
+        let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("BENCH_run_metrics.json");
+        assert!(p.is_file(), "missing {}", p.display());
+        let body = std::fs::read_to_string(&p).unwrap();
+        assert!(body.contains("bwkm.iter"), "summary JSON lacks the bwkm.iter span: {body}");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn run_metrics_jsonl_across_surfaces() {
+        let tmp = std::env::temp_dir();
+        let pid = std::process::id();
+
+        // 1. Plain in-memory BWKM run.
+        let trace = tmp.join(format!("bwkm_cli_obs_run_{pid}.jsonl"));
+        run(&[
+            "dataset=3RN".into(),
+            "scale=0.002".into(),
+            "k=3".into(),
+            "method=bwkm".into(),
+            "max_outer=2".into(),
+            "seed=1".into(),
+            "eval_full_error=off".into(),
+            "metrics=jsonl".into(),
+            format!("metrics_path={}", trace.display()),
+        ])
+        .unwrap();
+        assert_trace_and_summary(&trace);
+        std::fs::remove_file(&trace).ok();
+
+        // 2. Out-of-core stream: run.
+        let ds = crate::data::simulate("3RN", 0.002, 7).unwrap();
+        let bin = tmp.join(format!("bwkm_cli_obs_stream_{pid}.bin"));
+        crate::data::loader::save_bin(&ds, &bin).unwrap();
+        let trace = tmp.join(format!("bwkm_cli_obs_stream_{pid}.jsonl"));
+        run(&[
+            format!("dataset=stream:{}", bin.display()),
+            "k=3".into(),
+            "chunk_rows=256".into(),
+            "threads=2".into(),
+            "seed=1".into(),
+            "max_outer=2".into(),
+            "eval_full_error=off".into(),
+            "metrics=jsonl".into(),
+            format!("metrics_path={}", trace.display()),
+        ])
+        .unwrap();
+        assert_trace_and_summary(&trace);
+        let body = std::fs::read_to_string(&trace).unwrap();
+        assert!(body.contains("stream.read"), "stream trace lacks read timing");
+        assert!(body.contains("stream.compute"), "stream trace lacks compute timing");
+        std::fs::remove_file(&trace).ok();
+        std::fs::remove_file(&bin).ok();
+
+        // 3. jobs= multiplexing: per-job scoped names in one shared trace.
+        let trace = tmp.join(format!("bwkm_cli_obs_jobs_{pid}.jsonl"));
+        run(&[
+            "dataset=3RN".into(),
+            "scale=0.002".into(),
+            "k=3".into(),
+            "method=bwkm".into(),
+            "jobs=2".into(),
+            "threads=2".into(),
+            "max_outer=2".into(),
+            "seed=1".into(),
+            "eval_full_error=off".into(),
+            "metrics=jsonl".into(),
+            format!("metrics_path={}", trace.display()),
+        ])
+        .unwrap();
+        assert_trace_and_summary(&trace);
+        let body = std::fs::read_to_string(&trace).unwrap();
+        assert!(body.contains("job0."), "jobs trace lacks job0.-scoped records");
+        assert!(body.contains("job1."), "jobs trace lacks job1.-scoped records");
+        std::fs::remove_file(&trace).ok();
     }
 
     #[test]

@@ -11,6 +11,7 @@ use crate::bwkm::BwkmCfg;
 use crate::kmeans::init::{SeedMethod, SeedPolicy};
 use crate::kmeans::{AssignCfg, AssignMode, KernelKind, Precision};
 use crate::metrics::Budget;
+use crate::obs::{MetricsMode, Recorder};
 
 /// Which clustering method a run executes.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -101,6 +102,14 @@ pub struct RunConfig {
     /// Independent jobs to multiplex over the worker pool (seed streams
     /// fork per job; results are worker-count independent).
     pub jobs: usize,
+    /// Run telemetry (DESIGN.md §2.11): `off` (default, the
+    /// pre-observability byte sequence), `summary` (in-memory aggregation
+    /// + run report + typed summary JSON), or `jsonl` (summary plus an
+    /// append-only trace file). Strictly observational in every mode.
+    pub metrics: MetricsMode,
+    /// Where `metrics=jsonl` writes its trace (default
+    /// `bwkm_trace.jsonl`). The summary JSON lands next to it.
+    pub metrics_path: Option<String>,
     /// Raw key/values for method-specific extras (m, m_prime, s, r, ...).
     pub extra: BTreeMap<String, String>,
 }
@@ -123,6 +132,8 @@ impl Default for RunConfig {
             resume: None,
             ingest: None,
             jobs: 1,
+            metrics: MetricsMode::Off,
+            metrics_path: None,
             extra: BTreeMap::new(),
         }
     }
@@ -194,11 +205,26 @@ impl RunConfig {
                     bail!("jobs must be ≥ 1");
                 }
             }
+            "metrics" => self.metrics = MetricsMode::parse(value)?,
+            "metrics_path" => {
+                if value.is_empty() {
+                    bail!("metrics_path must name a file (omit the key for the default)");
+                }
+                self.metrics_path = Some(value.to_string());
+            }
             _ => {
                 self.extra.insert(key.to_string(), value.to_string());
             }
         }
         Ok(())
+    }
+
+    /// Build the run's telemetry recorder from the `metrics=` /
+    /// `metrics_path=` keys (DESIGN.md §2.11). `off` costs nothing;
+    /// `jsonl` creates (truncates) the trace file here, so an unwritable
+    /// path fails before the run starts, not after it.
+    pub fn recorder(&self) -> Result<Recorder> {
+        Recorder::for_mode(self.metrics, self.metrics_path.as_deref().map(Path::new))
     }
 
     /// Budget object (0 = unlimited).
@@ -409,6 +435,28 @@ mod tests {
         assert_eq!(cfg.jobs, 4);
         assert!(cfg.set("jobs", "0").is_err());
         assert!(cfg.set("jobs", "many").is_err());
+    }
+
+    #[test]
+    fn metrics_keys_parse_and_validate() {
+        let mut cfg = RunConfig::default();
+        assert_eq!(cfg.metrics, MetricsMode::Off);
+        assert!(cfg.metrics_path.is_none());
+        assert!(!cfg.recorder().unwrap().is_on(), "off must build the inert recorder");
+        cfg.set("metrics", "summary").unwrap();
+        assert_eq!(cfg.metrics, MetricsMode::Summary);
+        let rec = cfg.recorder().unwrap();
+        assert!(rec.is_on() && rec.trace_path().is_none());
+        let err = cfg.set("metrics", "verbose").unwrap_err().to_string();
+        assert!(err.contains("off|summary|jsonl"), "unhelpful error: {err}");
+        assert!(cfg.set("metrics_path", "").is_err());
+        let p = std::env::temp_dir().join(format!("bwkm_cfg_{}.trace.jsonl", std::process::id()));
+        cfg.set("metrics", "jsonl").unwrap();
+        cfg.set("metrics_path", p.to_str().unwrap()).unwrap();
+        let rec = cfg.recorder().unwrap();
+        assert_eq!(rec.trace_path(), Some(p.as_path()));
+        drop(rec);
+        std::fs::remove_file(&p).ok();
     }
 
     #[test]

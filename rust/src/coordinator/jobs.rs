@@ -13,6 +13,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 use crate::metrics::DistanceCounter;
+use crate::obs::{Recorder, Stopwatch};
 use crate::util::Rng;
 
 /// One job's outcome, with its isolated accounting.
@@ -24,6 +25,14 @@ pub struct JobResult<T> {
     pub distances: u64,
     /// This job's counter notes (capped log, pinned summaries last).
     pub notes: Vec<String>,
+    /// Wall-clock seconds the job closure ran for. Always measured (two
+    /// clock reads per job — the CLI's per-job summary line needs it even
+    /// with `metrics=off`); nondeterministic, so never compared by the
+    /// conformance suites.
+    pub elapsed_s: f64,
+    /// Seconds between pool start and this job being claimed by a worker
+    /// — the queue wait the shared pool imposed on it. Always measured.
+    pub queue_wait_s: f64,
     /// Whatever the job closure returned.
     pub out: T,
 }
@@ -38,6 +47,30 @@ pub fn run_jobs<T, F>(jobs: usize, workers: usize, base_seed: u64, run: F) -> Ve
 where
     T: Send,
     F: Fn(usize, &mut Rng, &DistanceCounter) -> T + Sync,
+{
+    run_jobs_rec(jobs, workers, base_seed, &Recorder::off(), |j, rng, counter, _rec| {
+        run(j, rng, counter)
+    })
+}
+
+/// [`run_jobs`] with telemetry (DESIGN.md §2.11): each job runs under its
+/// own [`Recorder::job_scope`] — a fresh summary aggregation (per-job
+/// metric isolation, mirroring the private `DistanceCounter`) sharing the
+/// parent's JSONL trace, every record name prefixed `job<j>.`. Per job:
+/// a `job.run` span, a `job.queue_wait_s` gauge and a `job.distances`
+/// counter, plus whatever the closure records through its scoped handle.
+/// Strictly observational: results are bit-identical with `rec` on or
+/// off, and worker-count independence is untouched.
+pub fn run_jobs_rec<T, F>(
+    jobs: usize,
+    workers: usize,
+    base_seed: u64,
+    rec: &Recorder,
+    run: F,
+) -> Vec<JobResult<T>>
+where
+    T: Send,
+    F: Fn(usize, &mut Rng, &DistanceCounter, &Recorder) -> T + Sync,
 {
     assert!(jobs > 0, "run_jobs needs at least one job");
     let workers = workers.max(1).min(jobs);
@@ -54,6 +87,7 @@ where
     let seeds = &seeds;
     let next = &next;
     let slots = &slots;
+    let pool_watch = Stopwatch::start();
 
     std::thread::scope(|scope| {
         for _ in 0..workers {
@@ -62,13 +96,24 @@ where
                 if job >= jobs {
                     break;
                 }
+                let queue_wait_s = pool_watch.elapsed_s();
                 let mut rng = seeds[job].clone();
                 let counter = DistanceCounter::new();
-                let out = run(job, &mut rng, &counter);
+                let jrec = rec.job_scope(job);
+                jrec.gauge("job.queue_wait_s", queue_wait_s);
+                let watch = Stopwatch::start();
+                let out = {
+                    let _job_span = jrec.span("job.run");
+                    run(job, &mut rng, &counter, &jrec)
+                };
+                let elapsed_s = watch.elapsed_s();
+                jrec.counter("job.distances", counter.get());
                 let result = JobResult {
                     job,
                     distances: counter.get(),
                     notes: counter.notes(),
+                    elapsed_s,
+                    queue_wait_s,
                     out,
                 };
                 *slots[job].lock().expect("job slot poisoned") = Some(result);
@@ -138,5 +183,39 @@ mod tests {
     #[should_panic(expected = "at least one job")]
     fn zero_jobs_is_a_caller_bug() {
         let _ = run_jobs(0, 2, 1, toy_job);
+    }
+
+    #[test]
+    fn job_timings_are_always_measured() {
+        let results = run_jobs(3, 2, 11, toy_job);
+        for r in &results {
+            assert!(r.elapsed_s >= 0.0);
+            assert!(r.queue_wait_s >= 0.0);
+        }
+    }
+
+    #[test]
+    fn scoped_recorder_isolates_jobs_and_matches_the_bills() {
+        // Telemetry must neither perturb results nor mix jobs: the scoped
+        // handle each closure receives aggregates only its own records,
+        // and the bridged per-job bill equals the isolated counter's.
+        let rec = Recorder::summary();
+        let plain = run_jobs(4, 2, 55, toy_job);
+        let scoped = run_jobs_rec(4, 2, 55, &rec, |j, rng, counter, jrec| {
+            let out = toy_job(j, rng, counter);
+            jrec.gauge_u64("mine", j as u64);
+            assert_eq!(jrec.gauge_last("mine"), Some(j as f64), "job scope bled");
+            out
+        });
+        for (a, b) in plain.iter().zip(&scoped) {
+            assert_eq!(a.out, b.out, "recorder perturbed job {}", a.job);
+            assert_eq!(a.distances, b.distances);
+            assert_eq!(a.notes, b.notes);
+        }
+        // The root recorder sees the jobs only under their `job<j>.`
+        // prefixes — an unscoped lookup finds nothing, so job metrics
+        // can never be mistaken for run-level ones.
+        assert_eq!(rec.counter_total("job.distances"), None);
+        assert_eq!(rec.counter_total("job0.job.distances"), scoped[0].distances.into());
     }
 }

@@ -20,7 +20,7 @@ pub mod jobs;
 pub mod parallel;
 pub mod streaming;
 
-pub use jobs::{run_jobs, JobResult};
+pub use jobs::{run_jobs, run_jobs_rec, JobResult};
 pub use parallel::{sharded_assign_err, sharded_stepper_for, sharded_weighted_step, ShardedStepper};
 pub use streaming::{
     stream_assign_err, stream_assign_err_with, stream_partition_stats,

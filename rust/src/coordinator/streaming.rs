@@ -40,13 +40,14 @@ use std::collections::HashMap;
 use anyhow::{anyhow, bail, Result};
 
 use crate::bwkm::source::RefineSource;
-use crate::bwkm::{run_source, BwkmCfg, StopReason, TracePoint};
+use crate::bwkm::{run_source_rec, BwkmCfg, StopReason, TracePoint};
 use crate::geometry::BBox;
 use crate::kmeans::assign::{nearest_in, shard_ranges};
 use crate::kmeans::init::kmeans_par::{kmeans_par_source, ParSource};
 use crate::kmeans::init::ParCfg;
 use crate::kmeans::{stepper_for, AssignMode, AutoAssigner, EngineStepper, Stepper};
 use crate::metrics::{nearest, DistanceCounter};
+use crate::obs::{Recorder, Stopwatch};
 use crate::partition::Partition;
 use crate::util::Rng;
 
@@ -113,11 +114,23 @@ const PAR_MIN_ROWS: usize = 64;
 #[derive(Clone, Debug)]
 pub struct ChunkCrew {
     threads: usize,
+    /// Telemetry handle (DESIGN.md §2.11), default off. When on, each
+    /// pass reports the leader's chunk-read time vs. its compute/fold
+    /// time as `stream.read` / `stream.compute` spans — the I/O-overlap
+    /// split the double-buffered pipeline exists to exploit. Strictly
+    /// observational: timing never reorders a fold.
+    rec: Recorder,
 }
 
 impl ChunkCrew {
     pub fn new(threads: usize) -> ChunkCrew {
-        ChunkCrew { threads: threads.max(1) }
+        ChunkCrew { threads: threads.max(1), rec: Recorder::off() }
+    }
+
+    /// Attach a telemetry recorder (builder-style).
+    pub fn with_recorder(mut self, rec: &Recorder) -> ChunkCrew {
+        self.rec = rec.clone();
+        self
     }
 
     pub fn threads(&self) -> usize {
@@ -145,13 +158,33 @@ impl ChunkCrew {
         if d == 0 {
             bail!("dimension must be positive");
         }
+        // Read-vs-compute timing is leader-side only and gated on the
+        // recorder: when off, the pass takes no clock readings at all.
+        let rec = &self.rec;
+        let timed = rec.is_on();
         if self.threads == 1 {
             let mut rows = 0usize;
-            for chunk in chunks {
-                let chunk = chunk?;
+            let mut read_s = 0.0f64;
+            let mut work_s = 0.0f64;
+            let mut iter = chunks.into_iter();
+            loop {
+                let t = timed.then(Stopwatch::start);
+                let next = iter.next().transpose()?;
+                if let Some(w) = t {
+                    read_s += w.elapsed_s();
+                }
+                let Some(chunk) = next else { break };
+                let t = timed.then(Stopwatch::start);
                 rows += chunk_row_count(&chunk, d)?;
                 let vals: Vec<T> = chunk.chunks_exact(d).map(&per_row).collect();
                 fold(&chunk, vals)?;
+                if let Some(w) = t {
+                    work_s += w.elapsed_s();
+                }
+            }
+            if timed {
+                rec.span_s("stream.read", read_s);
+                rec.span_s("stream.compute", work_s);
             }
             return Ok(rows);
         }
@@ -186,10 +219,17 @@ impl ChunkCrew {
             // — fold order is stream order, so the §5.1 determinism rule
             // is untouched; only the read latency hides behind compute.
             let mut rows = 0usize;
+            let mut read_s = 0.0f64;
+            let mut work_s = 0.0f64;
             let mut iter = chunks.into_iter();
             let mut in_flight: Option<(std::sync::Arc<Vec<f64>>, usize)> = None;
             loop {
+                let t = timed.then(Stopwatch::start);
                 let next = iter.next().transpose()?; // overlaps in-flight compute
+                if let Some(w) = t {
+                    read_s += w.elapsed_s();
+                }
+                let t = timed.then(Stopwatch::start);
                 if let Some((chunk, nranges)) = in_flight.take() {
                     // Ordered reduction: worker order == shard order ==
                     // row order.
@@ -201,7 +241,12 @@ impl ChunkCrew {
                 }
                 let chunk = match next {
                     Some(chunk) => chunk,
-                    None => break,
+                    None => {
+                        if let Some(w) = t {
+                            work_s += w.elapsed_s();
+                        }
+                        break;
+                    }
                 };
                 let n = chunk_row_count(&chunk, d)?;
                 rows += n;
@@ -218,6 +263,13 @@ impl ChunkCrew {
                     }
                     in_flight = Some((chunk, ranges.len()));
                 }
+                if let Some(w) = t {
+                    work_s += w.elapsed_s();
+                }
+            }
+            if timed {
+                rec.span_s("stream.read", read_s);
+                rec.span_s("stream.compute", work_s);
             }
             drop(task_tx); // team drains and exits; the scope joins it
             Ok(rows)
@@ -416,6 +468,8 @@ pub struct StreamSource<F> {
     passes: usize,
     /// Splits applied since the last committed statistics pass.
     dirty: bool,
+    /// Telemetry (DESIGN.md §2.11): pass-kind spans + a pass-count gauge.
+    rec: Recorder,
 }
 
 impl<F, I> StreamSource<F>
@@ -425,11 +479,28 @@ where
 {
     /// Open the source once (the extent pass) and stand up the root
     /// partition over the stream's bounding box.
-    pub fn new(mut open: F, d: usize, threads: usize) -> Result<StreamSource<F>> {
+    pub fn new(open: F, d: usize, threads: usize) -> Result<StreamSource<F>> {
+        StreamSource::new_rec(open, d, threads, &Recorder::off())
+    }
+
+    /// [`StreamSource::new`] with telemetry (DESIGN.md §2.11): the extent
+    /// pass is spanned as `stream.extent`, every later pass as
+    /// `stream.fetch` / `stream.refresh` / `stream.eval`, the crew splits
+    /// each pass into `stream.read` vs `stream.compute`, and the running
+    /// pass count is the `stream.passes` gauge. Strictly observational.
+    pub fn new_rec(
+        mut open: F,
+        d: usize,
+        threads: usize,
+        rec: &Recorder,
+    ) -> Result<StreamSource<F>> {
         if d == 0 {
             bail!("dimension must be positive");
         }
+        let extent_span = rec.span("stream.extent");
         let (rows, bbox, sum) = pass_extent(d, open()?)?;
+        drop(extent_span);
+        rec.gauge_u64("stream.rows", rows as u64);
         let bbox = bbox.ok_or_else(|| anyhow!("empty stream"))?;
         let partition = Partition::root_spatial(bbox.clone(), d);
         let stats = StreamStats {
@@ -444,9 +515,10 @@ where
             n: rows,
             partition,
             stats,
-            crew: ChunkCrew::new(threads),
+            crew: ChunkCrew::new(threads).with_recorder(rec),
             passes: 1,
             dirty: false,
+            rec: rec.clone(),
         })
     }
 
@@ -468,6 +540,7 @@ where
 
     fn open_pass(&mut self) -> Result<I> {
         self.passes += 1;
+        self.rec.gauge_u64("stream.passes", self.passes as u64);
         (self.open)()
     }
 }
@@ -486,6 +559,7 @@ where
     }
 
     fn fetch_rows(&mut self, idx: &[usize]) -> Result<Vec<f64>> {
+        let _fetch_span = self.rec.span("stream.fetch");
         let chunks = self.open_pass()?;
         let (rows, seen) = pass_fetch(self.d, chunks, idx)?;
         if seen != self.n {
@@ -538,6 +612,7 @@ where
         if !self.dirty {
             return Ok(()); // committed stats are already current
         }
+        let _refresh_span = self.rec.span("stream.refresh");
         let chunks = self.open_pass()?;
         let stats = stream_partition_stats_with(&self.partition, self.d, chunks, &self.crew)?;
         if stats.rows != self.n {
@@ -549,6 +624,7 @@ where
     }
 
     fn full_error(&mut self, centroids: &[f64]) -> Result<f64> {
+        let _eval_span = self.rec.span("stream.eval");
         let eval = DistanceCounter::new(); // uncounted instrumentation
         let chunks = self.open_pass()?;
         let crew = self.crew.clone();
@@ -627,8 +703,20 @@ where
         rng: &mut Rng,
         counter: &DistanceCounter,
     ) -> Result<StreamBwkmOutcome> {
+        self.run_rec(k, cfg, rng, counter, &Recorder::off())
+    }
+
+    /// [`StreamingBwkm::run`] with telemetry (DESIGN.md §2.11).
+    pub fn run_rec(
+        &mut self,
+        k: usize,
+        cfg: &BwkmCfg,
+        rng: &mut Rng,
+        counter: &DistanceCounter,
+        rec: &Recorder,
+    ) -> Result<StreamBwkmOutcome> {
         let mut stepper = stepper_for(&cfg.assign);
-        self.run_with(stepper.as_mut(), k, cfg, rng, counter)
+        self.run_with_rec(stepper.as_mut(), k, cfg, rng, counter, rec)
     }
 
     /// Run with the auto-selecting engine (serial / norm-pruned /
@@ -644,16 +732,28 @@ where
         rng: &mut Rng,
         counter: &DistanceCounter,
     ) -> Result<StreamBwkmOutcome> {
+        self.run_auto_rec(k, cfg, rng, counter, &Recorder::off())
+    }
+
+    /// [`StreamingBwkm::run_auto`] with telemetry (DESIGN.md §2.11).
+    pub fn run_auto_rec(
+        &mut self,
+        k: usize,
+        cfg: &BwkmCfg,
+        rng: &mut Rng,
+        counter: &DistanceCounter,
+        rec: &Recorder,
+    ) -> Result<StreamBwkmOutcome> {
         match cfg.assign.mode {
             AssignMode::Closure => {
                 let mut stepper =
                     EngineStepper::with_engine(AutoAssigner::with_closure(cfg.assign.closure_expand));
-                self.run_with(&mut stepper, k, cfg, rng, counter)
+                self.run_with_rec(&mut stepper, k, cfg, rng, counter, rec)
             }
-            AssignMode::Sampled => self.run(k, cfg, rng, counter),
+            AssignMode::Sampled => self.run_rec(k, cfg, rng, counter, rec),
             AssignMode::Exact => {
                 let mut stepper: EngineStepper<AutoAssigner> = EngineStepper::new();
-                self.run_with(&mut stepper, k, cfg, rng, counter)
+                self.run_with_rec(&mut stepper, k, cfg, rng, counter, rec)
             }
         }
     }
@@ -667,14 +767,31 @@ where
         rng: &mut Rng,
         counter: &DistanceCounter,
     ) -> Result<StreamBwkmOutcome> {
+        self.run_with_rec(stepper, k, cfg, rng, counter, &Recorder::off())
+    }
+
+    /// [`StreamingBwkm::run_with`] with telemetry (DESIGN.md §2.11):
+    /// Alg. 5 spans/gauges from [`run_source_rec`] plus the streaming
+    /// pass machinery's `stream.*` spans. Strictly observational — the
+    /// outcome is bit-identical with `rec` on or off
+    /// (`tests/obs_conformance.rs`).
+    pub fn run_with_rec(
+        &mut self,
+        stepper: &mut dyn Stepper,
+        k: usize,
+        cfg: &BwkmCfg,
+        rng: &mut Rng,
+        counter: &DistanceCounter,
+        rec: &Recorder,
+    ) -> Result<StreamBwkmOutcome> {
         if k < 1 {
             bail!("k must be ≥ 1");
         }
-        let mut src = StreamSource::new(&mut self.open, self.d, self.threads)?;
+        let mut src = StreamSource::new_rec(&mut self.open, self.d, self.threads, rec)?;
         if src.n() < k {
             bail!("n must be ≥ k (stream has {} rows, k={k})", src.n());
         }
-        let out = run_source(stepper, &mut src, k, cfg, rng, counter)?;
+        let out = run_source_rec(stepper, &mut src, k, cfg, rng, counter, rec)?;
         let (reps, weights, ids) = src.reps_weights();
         let passes = src.passes();
         Ok(StreamBwkmOutcome {
@@ -833,18 +950,36 @@ where
         rng: &mut Rng,
         counter: &DistanceCounter,
     ) -> Result<StreamSeedOutcome> {
+        self.kmeans_par_rec(k, cfg, rng, counter, &Recorder::off())
+    }
+
+    /// [`StreamSeeder::kmeans_par`] with telemetry (DESIGN.md §2.11): the
+    /// whole seeding run is the `seed.kmeans_par` span (the count pass is
+    /// `seed.count`), and round structure lands as `seed.rounds` /
+    /// `seed.candidates` / `seed.rows` / `seed.passes` gauges. Strictly
+    /// observational.
+    pub fn kmeans_par_rec(
+        &mut self,
+        k: usize,
+        cfg: &ParCfg,
+        rng: &mut Rng,
+        counter: &DistanceCounter,
+        rec: &Recorder,
+    ) -> Result<StreamSeedOutcome> {
         if self.d == 0 {
             bail!("dimension must be positive");
         }
         if k < 1 {
             bail!("k must be ≥ 1");
         }
+        let _seed_span = rec.span("seed.kmeans_par");
         // Count pass: row total + chunk-shape validation, plus the same
         // finite-data guard as `pass_extent`: a NaN/Inf value would
         // poison every min-distance fold (NaN fails every strict `<`, so
         // ψ saturates at ∞ and no round could ever sample a batch — the
         // seeder would silently return k copies of c₀), so it is a loud
         // error here instead.
+        let count_span = rec.span("seed.count");
         let mut rows = 0usize;
         for chunk in (self.open)()? {
             let chunk = chunk?;
@@ -856,6 +991,7 @@ where
                 rows += 1;
             }
         }
+        drop(count_span);
         if rows == 0 {
             bail!("empty stream");
         }
@@ -864,11 +1000,15 @@ where
             open: &mut self.open,
             d: self.d,
             n: rows,
-            crew: ChunkCrew::new(self.threads),
+            crew: ChunkCrew::new(self.threads).with_recorder(rec),
             passes: 1,
         };
         let (centroids, stats) = kmeans_par_source(&mut src, &weights, k, cfg, rng, counter)?;
         let passes = src.passes;
+        rec.gauge_u64("seed.rounds", stats.batches.len() as u64);
+        rec.gauge_u64("seed.candidates", stats.candidates as u64);
+        rec.gauge_u64("seed.rows", rows as u64);
+        rec.gauge_u64("seed.passes", passes as u64);
         Ok(StreamSeedOutcome { centroids, candidates: stats.candidates, rows, passes })
     }
 }
@@ -916,6 +1056,36 @@ mod tests {
         assert_eq!(out.weights, mweights);
         assert_eq!(out.ids, mids);
         assert!(out.passes >= 2, "at least the extent pass plus one fetch");
+    }
+
+    #[test]
+    fn recorder_does_not_perturb_the_streamed_run() {
+        // The §2.11 contract in miniature (the full grid lives in
+        // tests/obs_conformance.rs): metrics on vs off — same centroids,
+        // same passes, same bill, to the bit; and the recorder saw the
+        // pass machinery.
+        let mut g = prop::Gen { rng: crate::util::Rng::new(93), case: 0 };
+        let ds = Dataset::new(g.blobs(400, 2, 3, 0.5), 2);
+        let mut cfg = crate::bwkm::BwkmCfg::for_dataset(ds.n, ds.d, 3);
+        cfg.max_outer = 4;
+
+        let c_off = DistanceCounter::new();
+        let mut sb = StreamingBwkm::new(vec_opener(ds.data.clone(), 2, 61), 2).with_threads(2);
+        let off = sb.run(3, &cfg, &mut crate::util::Rng::new(5), &c_off).unwrap();
+
+        let rec = Recorder::summary();
+        let c_on = DistanceCounter::new();
+        let mut sb2 = StreamingBwkm::new(vec_opener(ds.data.clone(), 2, 61), 2).with_threads(2);
+        let on = sb2.run_rec(3, &cfg, &mut crate::util::Rng::new(5), &c_on, &rec).unwrap();
+
+        assert_eq!(on.centroids, off.centroids);
+        assert_eq!(on.stop, off.stop);
+        assert_eq!(on.passes, off.passes);
+        assert_eq!(c_on.get(), c_off.get());
+        assert_eq!(rec.gauge_last("stream.passes"), Some(on.passes as f64));
+        assert!(rec.span_stats("stream.extent").is_some(), "extent pass was spanned");
+        assert!(rec.span_stats("stream.read").is_some(), "read timing was recorded");
+        assert!(rec.span_stats("stream.compute").is_some(), "compute timing was recorded");
     }
 
     #[test]

@@ -57,6 +57,7 @@
 //! fast paths with a compile-time `D`.
 
 use crate::metrics::{DistanceCounter, QualityGap};
+use crate::obs::Recorder;
 
 use super::weighted_lloyd::StepOut;
 
@@ -117,6 +118,14 @@ pub trait Assigner {
     ) -> Option<QualityGap> {
         None
     }
+
+    /// Telemetry hook (DESIGN.md §2.11): publish this backend's current
+    /// diagnostic state — the stringly-typed note content, promoted to
+    /// typed gauges — on `rec`. Strictly observational: implementations
+    /// must not touch the [`DistanceCounter`], any RNG, or assignment
+    /// state, so output stays bit-identical whether or not the hook runs.
+    /// The default — every stateless exact backend — records nothing.
+    fn record_metrics(&mut self, _rec: &Recorder) {}
 }
 
 /// The canonical squared-distance kernel (DESIGN.md §2.1): 4-way split
@@ -1372,6 +1381,20 @@ impl Assigner for BoundedAssigner {
             self.prime(points, d, centroids, counter)
         }
     }
+
+    /// [`BoundedStats`] of the most recent call as typed gauges
+    /// (DESIGN.md §2.11): prune rate plus its ingredients.
+    fn record_metrics(&mut self, rec: &Recorder) {
+        if !rec.is_on() {
+            return;
+        }
+        let s = self.stats;
+        rec.gauge("bounded.prune_rate", s.prune_rate());
+        rec.gauge_u64("bounded.pairs", s.pairs);
+        rec.gauge_u64("bounded.bookkeeping", s.bookkeeping);
+        rec.gauge_u64("bounded.bill", s.bill);
+        rec.gauge_u64("bounded.warm", u64::from(s.warm));
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -1741,6 +1764,22 @@ impl Assigner for ClosureAssigner {
             fallbacks: self.fallbacks,
         })
     }
+
+    /// [`ClosureStats`] of the most recent call as typed gauges
+    /// (DESIGN.md §2.11). `closure.fallbacks` is cumulative, so its last
+    /// gauged value is the lifetime total.
+    fn record_metrics(&mut self, rec: &Recorder) {
+        if !rec.is_on() {
+            return;
+        }
+        let s = self.stats;
+        rec.gauge("closure.hit_rate", s.hit_rate());
+        rec.gauge_u64("closure.pairs", s.pairs);
+        rec.gauge_u64("closure.bookkeeping", s.bookkeeping);
+        rec.gauge_u64("closure.bill", s.bill);
+        rec.gauge_u64("closure.candidates", s.candidates as u64);
+        rec.gauge_u64("closure.fallbacks", s.fallbacks);
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -1867,6 +1906,10 @@ pub struct AutoAssigner {
     /// per-step note log, for reports that aggregate choices rather than
     /// replay them.
     choices: ChoiceCounts,
+    /// Metrics-only: the choice most recently published through
+    /// [`Assigner::record_metrics`], so engine-choice *switches* surface
+    /// as events (DESIGN.md §2.11). Never read by the selection policy.
+    reported_choice: Option<AutoChoice>,
 }
 
 impl Default for AutoAssigner {
@@ -1880,6 +1923,7 @@ impl Default for AutoAssigner {
             last_hit: 1.0,
             last_choice: None,
             choices: ChoiceCounts::default(),
+            reported_choice: None,
         }
     }
 }
@@ -2025,6 +2069,29 @@ impl Assigner for AutoAssigner {
         centroids: &[f64],
     ) -> Option<QualityGap> {
         self.closure.as_mut()?.quality_gap(points, weights, d, centroids)
+    }
+
+    /// The auto policy's per-step note content as typed metrics
+    /// (DESIGN.md §2.11): one gauge per [`AutoChoice`] tally (cumulative,
+    /// so last value == total — cross-checked `==` against
+    /// [`AutoAssigner::choice_counts`] and the `auto[…]` note log by the
+    /// conformance suite), the last observed prune/hit rates, and an
+    /// `auto.switch` event whenever the selected backend changed since
+    /// the previous publication.
+    fn record_metrics(&mut self, rec: &Recorder) {
+        if !rec.is_on() {
+            return;
+        }
+        for (choice, count) in self.choices.iter() {
+            rec.gauge_u64(&format!("auto.choice.{}", choice.name()), count);
+        }
+        rec.gauge_u64("auto.steps", self.step);
+        rec.gauge("auto.prune_rate", self.last_rate);
+        rec.gauge("auto.hit_rate", self.last_hit);
+        if self.last_choice != self.reported_choice {
+            rec.event("auto.switch", self.last_choice());
+            self.reported_choice = self.last_choice;
+        }
     }
 }
 

@@ -19,6 +19,7 @@
 //! the iteration/stopping logic.
 
 use crate::metrics::{Budget, DistanceCounter, QualityGap};
+use crate::obs::Recorder;
 use crate::util::Rng;
 
 use super::assign::{
@@ -69,6 +70,14 @@ pub trait Stepper {
     ) -> Option<QualityGap> {
         None
     }
+
+    /// Telemetry hook (DESIGN.md §2.11): publish this stepper's current
+    /// diagnostic state — prune/hit rates, sampled-step accounts, auto
+    /// choice tallies — as typed gauges on `rec`. Strictly observational
+    /// (never touches the counter, the RNG, or assignment state), so
+    /// results are bit-identical whether or not it is called. The default
+    /// — every exact stepper — records nothing.
+    fn record_metrics(&mut self, _rec: &Recorder) {}
 }
 
 /// A [`Stepper`] over any assignment-engine backend (DESIGN.md §2.2): one
@@ -145,6 +154,12 @@ impl<B: Assigner> Stepper for EngineStepper<B> {
         centroids: &[f64],
     ) -> Option<QualityGap> {
         self.engine.quality_gap(reps, Some(weights), d, centroids)
+    }
+
+    /// Forward to the engine: pruned/closure/auto backends publish their
+    /// own diagnostics (DESIGN.md §2.11).
+    fn record_metrics(&mut self, rec: &Recorder) {
+        self.engine.record_metrics(rec);
     }
 }
 
@@ -391,6 +406,20 @@ impl Stepper for SampledStepper {
             hit_rate: coverage,
             fallbacks: self.stats.fallbacks,
         })
+    }
+
+    /// The [`SampleStats`] account as typed gauges (DESIGN.md §2.11):
+    /// cumulative fields are re-gauged each step, so last-value == total.
+    fn record_metrics(&mut self, rec: &Recorder) {
+        if !rec.is_on() {
+            return;
+        }
+        let s = self.stats;
+        rec.gauge_u64("sampled.pairs", s.pairs);
+        rec.gauge_u64("sampled.bill", s.bill);
+        rec.gauge_u64("sampled.rows", s.rows);
+        rec.gauge_u64("sampled.exact", u64::from(s.exact));
+        rec.gauge_u64("sampled.fallbacks", s.fallbacks);
     }
 }
 

@@ -45,6 +45,7 @@ pub mod data;
 pub mod geometry;
 pub mod kmeans;
 pub mod metrics;
+pub mod obs;
 pub mod partition;
 pub mod rpkm;
 pub mod runtime;
@@ -57,5 +58,6 @@ pub mod prelude {
     pub use crate::data::Dataset;
     pub use crate::kmeans::{LloydCfg, MiniBatchCfg, WLloydCfg};
     pub use crate::metrics::{Budget, DistanceCounter};
+    pub use crate::obs::{MetricsMode, Recorder};
     pub use crate::util::Rng;
 }

@@ -1,0 +1,859 @@
+//! Structured run telemetry (DESIGN.md §2.11): phase **spans** on a
+//! monotonic clock, typed **counters/gauges**, and discrete **events**,
+//! fanned out to pluggable sinks.
+//!
+//! The repo's exact-accounting story (DESIGN.md §2.4) covers the distance
+//! axis of the paper's cost/quality trade-off; everything else — phase
+//! timings, prune rates, auto-engine choices, per-job service behavior —
+//! used to be smeared across free-form `note()` strings and stdout
+//! prints. This module promotes those to typed metrics behind one
+//! [`Recorder`] handle while the pinned note formats (`auto[…]`,
+//! `gap[…]`) stay untouched as a compatibility surface.
+//!
+//! ## The non-perturbation contract (DESIGN.md §2.11)
+//!
+//! Observability **observes** FP folds, RNG draws and distance bills; it
+//! never participates in them. A run with `metrics=off` and the same run
+//! with `metrics=jsonl` produce bit-identical centroids, traces, counter
+//! totals and notes — pinned by `tests/obs_conformance.rs` with `==`, no
+//! tolerances. Wall-clock timing values are the only nondeterministic
+//! fields, and they exist *only* in sink output, never in algorithm
+//! results. Concretely that means:
+//!
+//! - recorders never touch a [`DistanceCounter`] or an RNG — bill deltas
+//!   are bridged by *reading* the counter ([`BillBridge`]);
+//! - the off path is a no-op: [`Recorder::off`] holds no allocation and
+//!   [`Recorder::span`] takes no clock reading when off;
+//! - instrumented entry points are `_rec`-suffixed variants; the original
+//!   names delegate with [`Recorder::off`] and stay byte-for-byte on the
+//!   old code path.
+//!
+//! ## Sinks
+//!
+//! Three sinks implement the one [`Sink`] trait:
+//!
+//! - [`NullRecorder`] — discards every record (the explicit form of the
+//!   default-off stance; also the bench baseline for the record path);
+//! - [`SummaryRecorder`] — in-memory aggregation (spans: count/total;
+//!   counters: sum; gauges: last-value; events: count + capped tail),
+//!   printed by the CLI as a run report and emitted as `BENCH_`-style
+//!   typed JSON via the existing [`crate::bench::harness::Cell`] cells;
+//! - [`JsonlRecorder`] — an append-only trace file, one JSON object per
+//!   line: `{"ts":<µs-since-epoch>,"kind":"span|counter|gauge|event",
+//!   "name":"…","value":<typed>}`, sharing the bench harness's escaping
+//!   so value typing is identical across both documents.
+//!
+//! `metrics=jsonl` attaches **both** the summary and the trace sink, so a
+//! traced run still yields the typed-cell summary document.
+
+use std::collections::BTreeMap;
+use std::fs::File;
+use std::io::{BufWriter, Write as _};
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::bench::harness::{json_escape, json_value, Cell};
+use crate::metrics::DistanceCounter;
+
+/// How many distinct event payload strings a [`SummaryRecorder`] retains
+/// per event name (the count is always exact; only the stored tail is
+/// capped, mirroring the `NOTE_CAP` stance of DESIGN.md §2.4).
+pub const EVENT_TAIL_CAP: usize = 64;
+
+// ---------------------------------------------------------------------------
+// Modes, clock, records
+// ---------------------------------------------------------------------------
+
+/// The `metrics=` run key (DESIGN.md §2.11).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum MetricsMode {
+    /// No recorder: the hot path is the pre-observability byte sequence.
+    #[default]
+    Off,
+    /// In-memory aggregation + CLI run report + typed summary JSON.
+    Summary,
+    /// Everything `Summary` does, plus an append-only JSONL trace file.
+    Jsonl,
+}
+
+impl MetricsMode {
+    pub fn parse(v: &str) -> Result<MetricsMode> {
+        match v {
+            "off" => Ok(MetricsMode::Off),
+            "summary" => Ok(MetricsMode::Summary),
+            "jsonl" => Ok(MetricsMode::Jsonl),
+            _ => bail!("unknown metrics mode `{v}` (off|summary|jsonl)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            MetricsMode::Off => "off",
+            MetricsMode::Summary => "summary",
+            MetricsMode::Jsonl => "jsonl",
+        }
+    }
+}
+
+/// The one monotonic clock abstraction (DESIGN.md §2.11): span timing and
+/// bench wall-clock columns both read it, so "seconds" means the same
+/// thing in a run report and a `BENCH_*.json` row.
+#[derive(Clone, Copy, Debug)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Stopwatch {
+        Stopwatch { start: Instant::now() }
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+/// Record kind discriminant; `name()` is the JSONL `kind` field.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kind {
+    Span,
+    Counter,
+    Gauge,
+    Event,
+}
+
+impl Kind {
+    pub fn name(self) -> &'static str {
+        match self {
+            Kind::Span => "span",
+            Kind::Counter => "counter",
+            Kind::Gauge => "gauge",
+            Kind::Event => "event",
+        }
+    }
+}
+
+/// One telemetry record. `ts_us` is microseconds since the recorder's
+/// epoch (the only nondeterministic field besides span durations); the
+/// value reuses the bench harness's typed [`Cell`] so sink emission can
+/// never re-infer a type from string shape.
+#[derive(Clone, Debug)]
+pub struct Record {
+    pub ts_us: u64,
+    pub kind: Kind,
+    pub name: String,
+    pub value: Cell,
+}
+
+// ---------------------------------------------------------------------------
+// The sink trait and its three implementations
+// ---------------------------------------------------------------------------
+
+/// One telemetry sink. Implementations must be cheap and lock-scoped:
+/// `emit` is called from the leader thread of parallel sections and from
+/// per-job service workers concurrently.
+pub trait Sink: Send + Sync {
+    fn emit(&self, rec: &Record);
+}
+
+/// The no-op sink: every record is discarded. [`Recorder::off`] is the
+/// allocation-free form of the same stance; this type exists so the
+/// record path itself (timestamping + fan-out, no aggregation, no I/O)
+/// can be measured in `benches/obs_overhead.rs`.
+pub struct NullRecorder;
+
+impl Sink for NullRecorder {
+    fn emit(&self, _rec: &Record) {}
+}
+
+#[derive(Clone, Debug, Default)]
+struct SpanAgg {
+    count: u64,
+    total_s: f64,
+    max_s: f64,
+}
+
+#[derive(Clone, Debug, Default)]
+struct GaugeAgg {
+    count: u64,
+    last: f64,
+}
+
+#[derive(Clone, Debug, Default)]
+struct EventAgg {
+    count: u64,
+    tail: Vec<String>,
+}
+
+#[derive(Debug, Default)]
+struct Summary {
+    spans: BTreeMap<String, SpanAgg>,
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, GaugeAgg>,
+    events: BTreeMap<String, EventAgg>,
+}
+
+/// In-memory aggregation: spans fold to count/total/max seconds, counters
+/// sum, gauges keep their last value (cumulative quantities — e.g. auto
+/// choice counts — are re-gauged each step, so "last" is the total),
+/// events count with a capped payload tail.
+#[derive(Default)]
+pub struct SummaryRecorder {
+    agg: Mutex<Summary>,
+}
+
+impl SummaryRecorder {
+    pub fn new() -> SummaryRecorder {
+        SummaryRecorder::default()
+    }
+}
+
+impl Sink for SummaryRecorder {
+    fn emit(&self, rec: &Record) {
+        let mut agg = self.agg.lock().expect("summary lock");
+        match rec.kind {
+            Kind::Span => {
+                let secs = match rec.value {
+                    Cell::F64(x) => x,
+                    _ => return,
+                };
+                let e = agg.spans.entry(rec.name.clone()).or_default();
+                e.count += 1;
+                e.total_s += secs;
+                e.max_s = e.max_s.max(secs);
+            }
+            Kind::Counter => {
+                let delta = match rec.value {
+                    Cell::U64(u) => u,
+                    _ => return,
+                };
+                *agg.counters.entry(rec.name.clone()).or_default() += delta;
+            }
+            Kind::Gauge => {
+                let v = match rec.value {
+                    Cell::F64(x) => x,
+                    Cell::U64(u) => u as f64,
+                    _ => return,
+                };
+                let e = agg.gauges.entry(rec.name.clone()).or_default();
+                e.count += 1;
+                e.last = v;
+            }
+            Kind::Event => {
+                let s = match &rec.value {
+                    Cell::Str(s) => s.clone(),
+                    other => json_value(other),
+                };
+                let e = agg.events.entry(rec.name.clone()).or_default();
+                e.count += 1;
+                if e.tail.len() < EVENT_TAIL_CAP {
+                    e.tail.push(s);
+                }
+            }
+        }
+    }
+}
+
+/// Append-only per-record trace file. Lines are written through one
+/// buffered writer behind a mutex (jobs from many worker threads
+/// interleave whole lines, never bytes) and flushed on drop or via
+/// [`Recorder::flush`].
+pub struct JsonlRecorder {
+    path: PathBuf,
+    out: Mutex<BufWriter<File>>,
+}
+
+impl JsonlRecorder {
+    /// Create (truncate) the trace file at `path`.
+    pub fn create(path: &Path) -> Result<JsonlRecorder> {
+        let file = File::create(path)
+            .with_context(|| format!("create metrics trace `{}`", path.display()))?;
+        Ok(JsonlRecorder { path: path.to_path_buf(), out: Mutex::new(BufWriter::new(file)) })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    fn flush(&self) {
+        self.out.lock().expect("jsonl lock").flush().ok();
+    }
+}
+
+impl Sink for JsonlRecorder {
+    fn emit(&self, rec: &Record) {
+        let line = format!(
+            "{{\"ts\": {}, \"kind\": \"{}\", \"name\": \"{}\", \"value\": {}}}\n",
+            rec.ts_us,
+            rec.kind.name(),
+            json_escape(&rec.name),
+            json_value(&rec.value),
+        );
+        self.out.lock().expect("jsonl lock").write_all(line.as_bytes()).ok();
+    }
+}
+
+impl Drop for JsonlRecorder {
+    fn drop(&mut self) {
+        self.flush();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The Recorder handle
+// ---------------------------------------------------------------------------
+
+struct Inner {
+    epoch: Instant,
+    /// Name prefix, e.g. `"job3."` — per-job metric isolation mirrors the
+    /// per-job `DistanceCounter` of `coordinator::jobs` (DESIGN.md §5.2).
+    scope: String,
+    /// The aggregating sink, kept typed so reports/cells can be read back.
+    summary: Option<Arc<SummaryRecorder>>,
+    /// The trace sink, kept typed so scopes can share one file.
+    trace: Option<Arc<JsonlRecorder>>,
+    /// Fan-out list (the [`Sink`] trait objects actually emitted to).
+    sinks: Vec<Arc<dyn Sink>>,
+}
+
+/// Cheap cloneable telemetry handle (DESIGN.md §2.11). `Recorder::off()`
+/// is the default everywhere: no allocation, no clock reads, no-op
+/// methods — the instrumented hot paths cost a branch on a `None`.
+#[derive(Clone, Default)]
+pub struct Recorder {
+    inner: Option<Arc<Inner>>,
+}
+
+impl std::fmt::Debug for Recorder {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Recorder").field("on", &self.is_on()).finish()
+    }
+}
+
+impl Recorder {
+    /// The default: metrics disabled, zero allocation, zero clock reads.
+    pub fn off() -> Recorder {
+        Recorder { inner: None }
+    }
+
+    /// A live recorder that discards every record ([`NullRecorder`]):
+    /// timestamps are taken and fan-out runs, nothing is retained. Bench
+    /// baseline for the record path; not reachable from run keys.
+    pub fn null() -> Recorder {
+        Recorder {
+            inner: Some(Arc::new(Inner {
+                epoch: Instant::now(),
+                scope: String::new(),
+                summary: None,
+                trace: None,
+                sinks: vec![Arc::new(NullRecorder)],
+            })),
+        }
+    }
+
+    /// In-memory aggregation only (`metrics=summary`).
+    pub fn summary() -> Recorder {
+        let s = Arc::new(SummaryRecorder::new());
+        Recorder {
+            inner: Some(Arc::new(Inner {
+                epoch: Instant::now(),
+                scope: String::new(),
+                summary: Some(s.clone()),
+                trace: None,
+                sinks: vec![s],
+            })),
+        }
+    }
+
+    /// Aggregation **plus** an append-only JSONL trace (`metrics=jsonl`).
+    pub fn jsonl(path: &Path) -> Result<Recorder> {
+        let s = Arc::new(SummaryRecorder::new());
+        let j = Arc::new(JsonlRecorder::create(path)?);
+        Ok(Recorder {
+            inner: Some(Arc::new(Inner {
+                epoch: Instant::now(),
+                scope: String::new(),
+                summary: Some(s.clone()),
+                trace: Some(j.clone()),
+                sinks: vec![s, j],
+            })),
+        })
+    }
+
+    /// Build from the `metrics=` / `metrics_path=` run keys.
+    pub fn for_mode(mode: MetricsMode, path: Option<&Path>) -> Result<Recorder> {
+        match mode {
+            MetricsMode::Off => Ok(Recorder::off()),
+            MetricsMode::Summary => Ok(Recorder::summary()),
+            MetricsMode::Jsonl => {
+                let default = Path::new("bwkm_trace.jsonl");
+                Recorder::jsonl(path.unwrap_or(default))
+            }
+        }
+    }
+
+    pub fn is_on(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// Where the JSONL trace is being written, if this recorder has one.
+    pub fn trace_path(&self) -> Option<&Path> {
+        self.inner.as_ref()?.trace.as_ref().map(|j| j.path())
+    }
+
+    /// A scoped child for per-job isolation: fresh summary aggregation
+    /// (so this handle's accessors see only its own job, mirroring the
+    /// per-job `DistanceCounter`), the **shared** trace file, and every
+    /// record name prefixed `job<j>.`. The parent's summary also keeps
+    /// receiving the (prefixed) records, so the end-of-run report covers
+    /// all jobs — keyed apart by the prefix, never mixed.
+    pub fn job_scope(&self, job: usize) -> Recorder {
+        let Some(inner) = &self.inner else {
+            return Recorder::off();
+        };
+        let s = inner.summary.as_ref().map(|_| Arc::new(SummaryRecorder::new()));
+        let mut sinks: Vec<Arc<dyn Sink>> = Vec::new();
+        if let Some(s) = &s {
+            sinks.push(s.clone());
+        }
+        if let Some(parent) = &inner.summary {
+            sinks.push(parent.clone());
+        }
+        if let Some(j) = &inner.trace {
+            sinks.push(j.clone());
+        }
+        if sinks.is_empty() {
+            sinks.push(Arc::new(NullRecorder));
+        }
+        Recorder {
+            inner: Some(Arc::new(Inner {
+                epoch: inner.epoch,
+                scope: format!("{}job{}.", inner.scope, job),
+                summary: s,
+                trace: inner.trace.clone(),
+                sinks,
+            })),
+        }
+    }
+
+    fn record(&self, kind: Kind, name: &str, value: Cell, ts_us: u64) {
+        let Some(inner) = &self.inner else { return };
+        let name =
+            if inner.scope.is_empty() { name.to_string() } else { format!("{}{name}", inner.scope) };
+        let rec = Record { ts_us, kind, name, value };
+        for sink in &inner.sinks {
+            sink.emit(&rec);
+        }
+    }
+
+    fn now_us(&self) -> u64 {
+        match &self.inner {
+            Some(inner) => inner.epoch.elapsed().as_micros() as u64,
+            None => 0,
+        }
+    }
+
+    /// Open a phase span; the RAII guard records its wall-clock duration
+    /// on drop. When the recorder is off, no clock reading is taken.
+    /// Spans nest lexically (outer BWKM iteration → Lloyd step →
+    /// per-pass chunk I/O), and the trace keeps them apart by name.
+    pub fn span(&self, name: &'static str) -> Span {
+        if self.inner.is_none() {
+            return Span { rec: None };
+        }
+        Span { rec: Some((self.clone(), name, self.now_us(), Stopwatch::start())) }
+    }
+
+    /// Record an already-measured span duration. For sections that can't
+    /// use the RAII [`Recorder::span`] guard because the time is
+    /// *accumulated* across interleaved slices — e.g. the leader's
+    /// per-pass chunk-read vs. worker-compute split in
+    /// `coordinator::streaming::ChunkCrew`, where read and compute
+    /// alternate per chunk but report as two per-pass spans.
+    pub fn span_s(&self, name: &str, secs: f64) {
+        if self.inner.is_none() {
+            return;
+        }
+        self.record(Kind::Span, name, Cell::F64(secs), self.now_us());
+    }
+
+    /// Add `delta` to a monotone counter (summed in the summary).
+    pub fn counter(&self, name: &str, delta: u64) {
+        if self.inner.is_none() {
+            return;
+        }
+        self.record(Kind::Counter, name, Cell::U64(delta), self.now_us());
+    }
+
+    /// Set a gauge (last-value-wins in the summary).
+    pub fn gauge(&self, name: &str, value: f64) {
+        if self.inner.is_none() {
+            return;
+        }
+        self.record(Kind::Gauge, name, Cell::F64(value), self.now_us());
+    }
+
+    /// Integer-valued gauge: recorded as `Cell::U64` in the trace so the
+    /// JSON stays integral; aggregated as a gauge (last value wins).
+    pub fn gauge_u64(&self, name: &str, value: u64) {
+        if self.inner.is_none() {
+            return;
+        }
+        self.record(Kind::Gauge, name, Cell::U64(value), self.now_us());
+    }
+
+    /// Record a discrete event with a string payload.
+    pub fn event(&self, name: &str, detail: &str) {
+        if self.inner.is_none() {
+            return;
+        }
+        self.record(Kind::Event, name, Cell::Str(detail.to_string()), self.now_us());
+    }
+
+    /// Flush the JSONL sink (a no-op for the others).
+    pub fn flush(&self) {
+        if let Some(inner) = &self.inner {
+            if let Some(j) = &inner.trace {
+                j.flush();
+            }
+        }
+    }
+
+    fn with_agg<T>(&self, f: impl FnOnce(&Summary) -> T) -> Option<T> {
+        let summary = self.inner.as_ref()?.summary.as_ref()?;
+        let agg = summary.agg.lock().expect("summary lock");
+        Some(f(&agg))
+    }
+
+    /// The aggregation key `name` lands under in this recorder's own
+    /// summary: records are scoped *before* they reach any sink, so a
+    /// `job_scope` child's accessors must look up the prefixed name.
+    fn scoped(&self, name: &str) -> String {
+        match &self.inner {
+            Some(inner) if !inner.scope.is_empty() => format!("{}{name}", inner.scope),
+            _ => name.to_string(),
+        }
+    }
+
+    /// Summed total of a counter, by unscoped name within this recorder's
+    /// own scope (test/report accessor).
+    pub fn counter_total(&self, name: &str) -> Option<u64> {
+        let key = self.scoped(name);
+        self.with_agg(|a| a.counters.get(&key).copied()).flatten()
+    }
+
+    /// Last value of a gauge (test/report accessor).
+    pub fn gauge_last(&self, name: &str) -> Option<f64> {
+        let key = self.scoped(name);
+        self.with_agg(|a| a.gauges.get(&key).map(|g| g.last)).flatten()
+    }
+
+    /// `(count, total seconds)` of a span (test/report accessor).
+    pub fn span_stats(&self, name: &str) -> Option<(u64, f64)> {
+        let key = self.scoped(name);
+        self.with_agg(|a| a.spans.get(&key).map(|s| (s.count, s.total_s))).flatten()
+    }
+
+    /// `(count, retained payload tail)` of an event (test/report accessor).
+    pub fn event_stats(&self, name: &str) -> Option<(u64, Vec<String>)> {
+        let key = self.scoped(name);
+        self.with_agg(|a| a.events.get(&key).map(|e| (e.count, e.tail.clone()))).flatten()
+    }
+
+    /// Human-readable run report: one aligned line per metric, grouped
+    /// spans → counters → gauges → events. Span timings are wall-clock
+    /// and therefore nondeterministic; everything else is pinned by the
+    /// conformance suite.
+    pub fn report(&self) -> Vec<String> {
+        self.with_agg(|a| {
+            let mut out = Vec::new();
+            for (name, s) in &a.spans {
+                out.push(format!(
+                    "span    {name:<32} n={:<6} total={:.3}s max={:.3}s",
+                    s.count, s.total_s, s.max_s
+                ));
+            }
+            for (name, total) in &a.counters {
+                out.push(format!("counter {name:<32} total={total}"));
+            }
+            for (name, g) in &a.gauges {
+                out.push(format!("gauge   {name:<32} n={:<6} last={:.6}", g.count, g.last));
+            }
+            for (name, e) in &a.events {
+                let last = e.tail.last().map(String::as_str).unwrap_or("");
+                out.push(format!("event   {name:<32} n={:<6} last={last}", e.count));
+            }
+            out
+        })
+        .unwrap_or_default()
+    }
+
+    /// The summary as `BENCH_`-style typed rows (one row per metric) for
+    /// [`crate::bench::harness::write_bench_json_to`].
+    pub fn summary_rows(&self) -> Vec<Vec<(String, Cell)>> {
+        self.with_agg(|a| {
+            let mut rows = Vec::new();
+            let key = |k: &str| k.to_string();
+            for (name, s) in &a.spans {
+                rows.push(vec![
+                    (key("kind"), Cell::from("span")),
+                    (key("name"), Cell::from(name.clone())),
+                    (key("n"), Cell::from(s.count)),
+                    (key("total_s"), Cell::from(s.total_s)),
+                    (key("max_s"), Cell::from(s.max_s)),
+                ]);
+            }
+            for (name, total) in &a.counters {
+                rows.push(vec![
+                    (key("kind"), Cell::from("counter")),
+                    (key("name"), Cell::from(name.clone())),
+                    (key("total"), Cell::from(*total)),
+                ]);
+            }
+            for (name, g) in &a.gauges {
+                rows.push(vec![
+                    (key("kind"), Cell::from("gauge")),
+                    (key("name"), Cell::from(name.clone())),
+                    (key("n"), Cell::from(g.count)),
+                    (key("last"), Cell::from(g.last)),
+                ]);
+            }
+            for (name, e) in &a.events {
+                let last = e.tail.last().cloned().unwrap_or_default();
+                rows.push(vec![
+                    (key("kind"), Cell::from("event")),
+                    (key("name"), Cell::from(name.clone())),
+                    (key("n"), Cell::from(e.count)),
+                    (key("last"), Cell::from(last)),
+                ]);
+            }
+            rows
+        })
+        .unwrap_or_default()
+    }
+}
+
+/// RAII span guard from [`Recorder::span`]; records duration on drop.
+/// Inert (no clock reads, no drop work) when the recorder is off.
+pub struct Span {
+    rec: Option<(Recorder, &'static str, u64, Stopwatch)>,
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if let Some((rec, name, ts_us, watch)) = self.rec.take() {
+            rec.record(Kind::Span, name, Cell::F64(watch.elapsed_s()), ts_us);
+        }
+    }
+}
+
+/// Bridges exact distance bills (DESIGN.md §2.4) into counter deltas by
+/// **reading** the shared [`DistanceCounter`] — never writing it, so the
+/// bill a run reports is bit-identical with metrics on or off.
+pub struct BillBridge {
+    last: u64,
+}
+
+impl BillBridge {
+    pub fn new(counter: &DistanceCounter) -> BillBridge {
+        BillBridge { last: counter.get() }
+    }
+
+    /// Record the bill growth since the previous tick as `name`.
+    pub fn tick(&mut self, rec: &Recorder, name: &str, counter: &DistanceCounter) {
+        let now = counter.get();
+        rec.counter(name, now.saturating_sub(self.last));
+        self.last = now;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("bwkm_obs_{}_{name}", std::process::id()))
+    }
+
+    #[test]
+    fn off_recorder_is_inert_and_free() {
+        let rec = Recorder::off();
+        assert!(!rec.is_on());
+        let _s = rec.span("never");
+        rec.counter("c", 1);
+        rec.gauge("g", 1.0);
+        rec.event("e", "x");
+        rec.flush();
+        assert_eq!(rec.counter_total("c"), None);
+        assert_eq!(rec.report(), Vec::<String>::new());
+        assert!(rec.summary_rows().is_empty());
+        assert!(rec.trace_path().is_none());
+    }
+
+    #[test]
+    fn null_sink_discards_but_runs_the_record_path() {
+        let rec = Recorder::null();
+        assert!(rec.is_on());
+        {
+            let _s = rec.span("phase");
+        }
+        rec.counter("c", 3);
+        // NullRecorder aggregates nothing: accessors see no summary.
+        assert_eq!(rec.counter_total("c"), None);
+        assert!(rec.summary_rows().is_empty());
+    }
+
+    #[test]
+    fn summary_aggregates_by_kind() {
+        let rec = Recorder::summary();
+        {
+            let _s = rec.span("phase");
+        }
+        {
+            let _s = rec.span("phase");
+        }
+        rec.span_s("io", 1.5);
+        rec.span_s("io", 0.5);
+        rec.counter("bill", 10);
+        rec.counter("bill", 32);
+        rec.gauge("rate", 0.25);
+        rec.gauge("rate", 0.75);
+        rec.gauge_u64("rounds", 5);
+        rec.event("stop", "Budget");
+        rec.event("stop", "MaxIters");
+
+        assert_eq!(rec.counter_total("bill"), Some(42));
+        assert_eq!(rec.gauge_last("rate"), Some(0.75));
+        assert_eq!(rec.gauge_last("rounds"), Some(5.0));
+        let (n, total) = rec.span_stats("phase").unwrap();
+        assert_eq!(n, 2);
+        assert!(total >= 0.0);
+        let (n, total) = rec.span_stats("io").unwrap();
+        assert_eq!(n, 2);
+        assert_eq!(total, 2.0);
+        let (n, tail) = rec.event_stats("stop").unwrap();
+        assert_eq!(n, 2);
+        assert_eq!(tail, vec!["Budget".to_string(), "MaxIters".to_string()]);
+
+        // Report + typed rows cover every metric exactly once.
+        assert_eq!(rec.report().len(), 6);
+        let rows = rec.summary_rows();
+        assert_eq!(rows.len(), 6);
+        for row in &rows {
+            assert_eq!(row[0].0, "kind");
+            assert_eq!(row[1].0, "name");
+        }
+    }
+
+    #[test]
+    fn event_tail_caps_but_count_stays_exact() {
+        let rec = Recorder::summary();
+        for i in 0..(EVENT_TAIL_CAP + 9) {
+            rec.event("e", &format!("v{i}"));
+        }
+        let (n, tail) = rec.event_stats("e").unwrap();
+        assert_eq!(n, (EVENT_TAIL_CAP + 9) as u64);
+        assert_eq!(tail.len(), EVENT_TAIL_CAP);
+    }
+
+    #[test]
+    fn jsonl_lines_have_the_pinned_schema() {
+        let path = tmp("schema.jsonl");
+        {
+            let rec = Recorder::jsonl(&path).unwrap();
+            {
+                let _s = rec.span("bwkm.lloyd");
+            }
+            rec.counter("bwkm.distances", 7);
+            rec.gauge("auto.prune_rate", 0.5);
+            rec.gauge_u64("stream.pass", 3);
+            rec.event("bwkm.stop", "AccuracyBound");
+            rec.flush();
+            assert_eq!(rec.trace_path(), Some(path.as_path()));
+            // The jsonl recorder still aggregates: summary available too.
+            assert_eq!(rec.counter_total("bwkm.distances"), Some(7));
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 5);
+        for line in &lines {
+            assert!(line.starts_with("{\"ts\": "), "line {line}");
+            assert!(line.ends_with('}'), "line {line}");
+            for field in ["\"ts\": ", "\"kind\": \"", "\"name\": \"", "\"value\": "] {
+                assert!(line.contains(field), "missing {field} in {line}");
+            }
+        }
+        assert!(lines[1].contains("\"kind\": \"counter\""));
+        assert!(lines[1].contains("\"value\": 7"));
+        assert!(lines[2].contains("\"value\": 0.5"));
+        assert!(lines[3].contains("\"value\": 3"));
+        assert!(lines[4].contains("\"value\": \"AccuracyBound\""));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn job_scope_isolates_summaries_and_shares_the_trace() {
+        let path = tmp("scope.jsonl");
+        {
+            let rec = Recorder::jsonl(&path).unwrap();
+            let j0 = rec.job_scope(0);
+            let j1 = rec.job_scope(1);
+            j0.counter("bill", 10);
+            j1.counter("bill", 20);
+            // Isolation: each scope aggregates only its own records.
+            assert_eq!(j0.counter_total("bill"), Some(10));
+            assert_eq!(j1.counter_total("bill"), Some(20));
+            // The parent still sees everything, keyed apart by prefix —
+            // never under the unscoped name.
+            assert_eq!(rec.counter_total("bill"), None);
+            assert_eq!(rec.counter_total("job0.bill"), Some(10));
+            assert_eq!(rec.counter_total("job1.bill"), Some(20));
+            rec.flush();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        // Shared trace: both jobs' records land in one file, scoped names.
+        assert!(text.contains("\"name\": \"job0.bill\""));
+        assert!(text.contains("\"name\": \"job1.bill\""));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn bill_bridge_reads_the_counter_without_writing_it() {
+        let counter = DistanceCounter::new();
+        counter.add(100);
+        let rec = Recorder::summary();
+        let mut bridge = BillBridge::new(&counter);
+        counter.add(42);
+        bridge.tick(&rec, "bill", &counter);
+        counter.add(8);
+        bridge.tick(&rec, "bill", &counter);
+        assert_eq!(rec.counter_total("bill"), Some(50));
+        // Observation did not perturb the bill itself.
+        assert_eq!(counter.get(), 150);
+    }
+
+    #[test]
+    fn metrics_mode_parses_and_rejects() {
+        assert_eq!(MetricsMode::parse("off").unwrap(), MetricsMode::Off);
+        assert_eq!(MetricsMode::parse("summary").unwrap(), MetricsMode::Summary);
+        assert_eq!(MetricsMode::parse("jsonl").unwrap(), MetricsMode::Jsonl);
+        assert!(MetricsMode::parse("trace").is_err());
+        assert_eq!(MetricsMode::default(), MetricsMode::Off);
+        assert_eq!(MetricsMode::Jsonl.name(), "jsonl");
+    }
+
+    #[test]
+    fn for_mode_builds_the_right_recorder() {
+        assert!(!Recorder::for_mode(MetricsMode::Off, None).unwrap().is_on());
+        let s = Recorder::for_mode(MetricsMode::Summary, None).unwrap();
+        assert!(s.is_on() && s.trace_path().is_none());
+        let path = tmp("mode.jsonl");
+        let j = Recorder::for_mode(MetricsMode::Jsonl, Some(&path)).unwrap();
+        assert_eq!(j.trace_path(), Some(path.as_path()));
+        drop(j);
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -14,6 +14,7 @@ use crate::geometry::BBox;
 use crate::kmeans::init::{SeedMethod, SeedPolicy, Seeder as _};
 use crate::kmeans::{stepper_for, weighted_lloyd_with, AssignCfg, WLloydCfg};
 use crate::metrics::{kmeans_error, Budget, DistanceCounter};
+use crate::obs::{BillBridge, Recorder};
 use crate::util::Rng;
 
 /// Occupied-cell representatives of the level-`i` uniform grid:
@@ -111,6 +112,21 @@ pub fn grid_rpkm(
     rng: &mut Rng,
     counter: &DistanceCounter,
 ) -> RpkmOutcome {
+    grid_rpkm_rec(data, k, cfg, rng, counter, &Recorder::off())
+}
+
+/// [`grid_rpkm`] with telemetry (DESIGN.md §2.11): per-level
+/// `rpkm.partition` / `rpkm.lloyd` spans, a bridged `rpkm.distances`
+/// bill, and per-level gauges. Strictly observational — the outcome is
+/// bit-identical with `rec` on or off.
+pub fn grid_rpkm_rec(
+    data: &Dataset,
+    k: usize,
+    cfg: &RpkmCfg,
+    rng: &mut Rng,
+    counter: &DistanceCounter,
+    rec: &Recorder,
+) -> RpkmOutcome {
     let bbox = BBox::of(&data.data, data.d, None).expect("non-empty dataset");
     let mut centroids: Option<Vec<f64>> = None;
     let mut trace = Vec::new();
@@ -118,12 +134,16 @@ pub fn grid_rpkm(
     // state (closures, retained assignments) across levels.
     let mut stepper = stepper_for(&cfg.assign);
     let mut last_rw: Option<(Vec<f64>, Vec<f64>)> = None;
+    let mut bill = BillBridge::new(counter);
 
     for level in 1..=cfg.max_levels {
         if cfg.budget.exceeded(counter) {
             break;
         }
-        let (reps, weights) = grid_partition(data, &bbox, level);
+        let (reps, weights) = {
+            let _s = rec.span("rpkm.partition");
+            grid_partition(data, &bbox, level)
+        };
         let m = weights.len();
         let init = match centroids.take() {
             Some(c) => c,
@@ -133,8 +153,11 @@ pub fn grid_rpkm(
         };
         let mut wl_cfg = cfg.wl;
         wl_cfg.budget = cfg.budget;
-        let out =
-            weighted_lloyd_with(stepper.as_mut(), &reps, &weights, data.d, &init, &wl_cfg, counter);
+        let out = {
+            let _s = rec.span("rpkm.lloyd");
+            weighted_lloyd_with(stepper.as_mut(), &reps, &weights, data.d, &init, &wl_cfg, counter)
+        };
+        stepper.record_metrics(rec);
         let full_error = cfg.eval_full_error.then(|| {
             let eval = DistanceCounter::new();
             kmeans_error(&data.data, data.d, &out.centroids, &eval)
@@ -146,6 +169,10 @@ pub fn grid_rpkm(
             weighted_error: out.werr,
             full_error,
         });
+        bill.tick(rec, "rpkm.distances", counter);
+        rec.gauge_u64("rpkm.level", level as u64);
+        rec.gauge_u64("rpkm.representatives", m as u64);
+        rec.gauge("rpkm.weighted_error", out.werr);
         centroids = Some(out.centroids);
         last_rw = Some((reps, weights));
         // No reduction left: the partition is as fine as the dataset.
@@ -160,6 +187,12 @@ pub fn grid_rpkm(
     if let Some((reps, weights)) = &last_rw {
         if let Some(gap) = stepper.quality_gap(reps, weights, data.d, &centroids) {
             counter.note_pinned(gap.note());
+            rec.gauge("gap.approx_err", gap.approx_err);
+            rec.gauge("gap.exact_err", gap.exact_err);
+            rec.gauge("gap.rel", gap.rel_gap());
+            rec.gauge("gap.hit_rate", gap.hit_rate);
+            rec.gauge_u64("gap.fallbacks", gap.fallbacks);
+            rec.event("gap.backend", gap.backend);
         }
     }
     RpkmOutcome { centroids, trace }

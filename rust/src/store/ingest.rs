@@ -33,6 +33,7 @@ use crate::data::Dataset;
 use crate::geometry::BBox;
 use crate::kmeans::{stepper_for, weighted_lloyd_with, Assigner, SerialAssigner, WLloydCfg};
 use crate::metrics::DistanceCounter;
+use crate::obs::{BillBridge, Recorder};
 
 use super::{config_digest, Model};
 
@@ -69,6 +70,22 @@ pub fn ingest(
     batch: &Dataset,
     cfg: &BwkmCfg,
     counter: &DistanceCounter,
+) -> Result<IngestReport> {
+    ingest_rec(model, batch, cfg, counter, &Recorder::off())
+}
+
+/// [`ingest`] with telemetry (DESIGN.md §2.11): `ingest.route` /
+/// `ingest.diagnose` / `ingest.refine` phase spans, the report's counts
+/// as gauges, a bridged `ingest.distances` bill, and an
+/// `ingest.refine` event when diagnostics forced re-refinement.
+/// Strictly observational — the report and the model mutation are
+/// bit-identical with `rec` on or off.
+pub fn ingest_rec(
+    model: &mut Model,
+    batch: &Dataset,
+    cfg: &BwkmCfg,
+    counter: &DistanceCounter,
+    rec: &Recorder,
 ) -> Result<IngestReport> {
     model.validate()?;
     ensure!(
@@ -114,7 +131,10 @@ pub fn ingest(
     }
     let has_top2 = model.d1.len() == rank;
 
+    let mut bridge = BillBridge::new(counter);
+
     // ---- 1. Route the batch: tree descent + stats fold, in row order.
+    let route_span = rec.span("ingest.route");
     let mut touched_flag = vec![false; model.cells.len()];
     for i in 0..batch.n {
         let row = batch.row(i);
@@ -138,8 +158,10 @@ pub fn ingest(
     let mut assigner = SerialAssigner;
     let batch_out = assigner.assign_top2(&batch.data, d, &model.centroids, counter);
     let batch_err: f64 = batch_out.d1.iter().sum();
+    drop(route_span);
 
     // ---- 2. Re-score the touched representatives (touched·k).
+    let diagnose_span = rec.span("ingest.diagnose");
     let mut treps = Vec::with_capacity(touched.len() * d);
     for &b in &touched {
         let c = &model.cells[b];
@@ -171,9 +193,18 @@ pub fn ingest(
         }
     }
 
+    drop(diagnose_span);
+
     // ---- 3. Bounded re-refinement, only when a bound moved.
     let mut refine_iters = 0usize;
     if moved > 0 {
+        let _refine_span = rec.span("ingest.refine");
+        if rec.is_on() {
+            rec.event(
+                "ingest.refine",
+                &format!("moved={moved} touched={} rows={}", touched.len(), batch.n),
+            );
+        }
         let mut reps = Vec::new();
         let mut weights = Vec::new();
         for c in model.cells.iter().filter(|c| c.count > 0) {
@@ -210,6 +241,12 @@ pub fn ingest(
     }
 
     model.rows += batch.n as u64;
+    bridge.tick(rec, "ingest.distances", counter);
+    rec.gauge_u64("ingest.rows", batch.n as u64);
+    rec.gauge_u64("ingest.touched", touched.len() as u64);
+    rec.gauge_u64("ingest.moved", moved as u64);
+    rec.gauge_u64("ingest.refine_iters", refine_iters as u64);
+    rec.gauge("ingest.batch_err", batch_err);
     let bill = counter.get() - before;
     model.distances += bill;
     Ok(IngestReport {

@@ -21,18 +21,19 @@
 pub mod format;
 pub mod ingest;
 
-pub use ingest::{ingest, IngestReport, INGEST_REFINE_ITERS};
+pub use ingest::{ingest, ingest_rec, IngestReport, INGEST_REFINE_ITERS};
 
 use anyhow::{bail, ensure, Context, Result};
 
 use crate::bwkm::{
-    resume_source, BwkmCfg, BwkmOutcome, MemSource, ResumePoint, StopReason, TracePoint,
+    resume_source_rec, BwkmCfg, BwkmOutcome, MemSource, ResumePoint, StopReason, TracePoint,
 };
 use crate::data::Dataset;
 use crate::geometry::BBox;
 use crate::kmeans::init::{SeedMethod, SeedPolicy};
 use crate::kmeans::{stepper_for, Stepper};
 use crate::metrics::DistanceCounter;
+use crate::obs::Recorder;
 use crate::partition::{FlatNode, Partition};
 use crate::util::Rng;
 
@@ -477,8 +478,22 @@ pub fn resume(
     rng: &mut Rng,
     counter: &DistanceCounter,
 ) -> Result<BwkmOutcome> {
+    resume_rec(model, data, cfg, rng, counter, &Recorder::off())
+}
+
+/// [`resume`] with telemetry (DESIGN.md §2.11): a `store.resume` event
+/// recording the saved run's shape, then everything
+/// [`crate::bwkm::resume_source_rec`] emits. Strictly observational.
+pub fn resume_rec(
+    model: &Model,
+    data: &Dataset,
+    cfg: &BwkmCfg,
+    rng: &mut Rng,
+    counter: &DistanceCounter,
+    rec: &Recorder,
+) -> Result<BwkmOutcome> {
     let mut stepper = stepper_for(&cfg.assign);
-    resume_with(stepper.as_mut(), model, data, cfg, rng, counter)
+    resume_with_rec(stepper.as_mut(), model, data, cfg, rng, counter, rec)
 }
 
 /// [`resume`] over an explicit stepper backend.
@@ -489,6 +504,20 @@ pub fn resume_with(
     cfg: &BwkmCfg,
     rng: &mut Rng,
     counter: &DistanceCounter,
+) -> Result<BwkmOutcome> {
+    resume_with_rec(stepper, model, data, cfg, rng, counter, &Recorder::off())
+}
+
+/// [`resume_with`] with telemetry (DESIGN.md §2.11).
+#[allow(clippy::too_many_arguments)]
+pub fn resume_with_rec(
+    stepper: &mut dyn Stepper,
+    model: &Model,
+    data: &Dataset,
+    cfg: &BwkmCfg,
+    rng: &mut Rng,
+    counter: &DistanceCounter,
+    rec: &Recorder,
 ) -> Result<BwkmOutcome> {
     model.validate()?;
     ensure!(
@@ -525,6 +554,19 @@ pub fn resume_with(
     }
     counter.add(model.distances);
     *rng = Rng::from_state(model.rng);
+    if rec.is_on() {
+        rec.event(
+            "store.resume",
+            &format!(
+                "k={} d={} rows={} outer={} bill={}",
+                model.k,
+                model.d,
+                model.rows,
+                model.trace.len(),
+                model.distances
+            ),
+        );
+    }
     let mut src = MemSource::with_partition(data, partition);
     let point = ResumePoint {
         centroids: model.centroids.clone(),
@@ -533,7 +575,7 @@ pub fn resume_with(
         d1: model.d1.clone(),
         d2: model.d2.clone(),
     };
-    let out = resume_source(stepper, &mut src, model.k, cfg, point, rng, counter)?;
+    let out = resume_source_rec(stepper, &mut src, model.k, cfg, point, rng, counter, rec)?;
     Ok(BwkmOutcome {
         centroids: out.centroids,
         k: out.k,

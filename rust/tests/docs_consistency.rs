@@ -122,6 +122,32 @@ fn design_md_exists_with_contract_sections() {
 }
 
 #[test]
+fn obs_module_cites_the_observability_contract() {
+    // The telemetry subsystem (rust/src/obs/) was specified as DESIGN.md
+    // §2.11; both sides of that link must exist — the section header in
+    // the document and at least one citation in the module — so the
+    // observability contract can't silently detach from its code.
+    let root = repo_root();
+    let design = fs::read_to_string(root.join("DESIGN.md"))
+        .expect("DESIGN.md must exist at the repository root");
+    let (numeric, _) = anchors(&design);
+    assert!(
+        numeric.contains("2.11"),
+        "DESIGN.md is missing the §2.11 observability-contract header; found {numeric:?}"
+    );
+
+    let mut files = Vec::new();
+    source_files(&root.join("rust").join("src").join("obs"), &mut files);
+    assert!(!files.is_empty(), "rust/src/obs/ has no source files to scan");
+    let cites_contract = files.iter().any(|f| {
+        fs::read_to_string(f)
+            .map(|text| citations(&normalize(&text)).iter().any(|t| t == "2.11"))
+            .unwrap_or(false)
+    });
+    assert!(cites_contract, "rust/src/obs/ never cites DESIGN.md §2.11");
+}
+
+#[test]
 fn every_design_citation_resolves() {
     let root = repo_root();
     let design = fs::read_to_string(root.join("DESIGN.md"))

@@ -1,0 +1,304 @@
+//! Observability conformance (DESIGN.md §2.11): telemetry is strictly
+//! **observational**. Identical seeds with `metrics=off` vs a live
+//! `jsonl` recorder must produce **bit-identical** results — `==`, no
+//! tolerances — in centroids, traces, distance-counter totals, and note
+//! logs, across every instrumented surface: the in-memory BWKM loop, the
+//! grid-RPKM baseline, the out-of-core coordinator (over a chunk ×
+//! worker grid), and the model store's resume path. On top of the
+//! non-perturbation pin: the JSONL line schema is stable and parseable,
+//! the typed gap/auto metrics rebuild their legacy note strings `==`,
+//! and a NOTE_CAP flood that truncates the note log leaves the typed
+//! metrics complete.
+//!
+//! `scripts/ci.sh --obs` runs this suite; `--quick` runs the
+//! `non_perturb` subset.
+
+use std::path::PathBuf;
+
+use bwkm::bwkm::{BwkmCfg, TracePoint};
+use bwkm::coordinator::StreamingBwkm;
+use bwkm::data::loader::{save_bin, BinChunks};
+use bwkm::data::simulate;
+use bwkm::kmeans::{stepper_for, AssignCfg, AssignMode, AutoChoice};
+use bwkm::metrics::counter::NOTE_CAP;
+use bwkm::metrics::DistanceCounter;
+use bwkm::obs::{Recorder, EVENT_TAIL_CAP};
+use bwkm::rpkm::{grid_rpkm, grid_rpkm_rec, RpkmCfg};
+use bwkm::store::{self, Model};
+use bwkm::util::Rng;
+
+/// Named fixed seeds — quoted in every assertion context so a failure
+/// names its reproduction.
+const BWKM_SEED: u64 = 0x0B5_0001;
+const RPKM_SEED: u64 = 0x0B5_0002;
+const STREAM_SEED: u64 = 0x0B5_0003;
+const RESUME_SEED: u64 = 0x0B5_0004;
+const GAP_SEED: u64 = 0x0B5_0005;
+
+fn bits(v: &[f64]) -> Vec<u64> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn assert_trace_eq(ctx: &str, a: &[TracePoint], b: &[TracePoint]) {
+    assert_eq!(a.len(), b.len(), "{ctx}: trace lengths differ");
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!(x.outer_iter, y.outer_iter, "{ctx}");
+        assert_eq!(x.distances, y.distances, "{ctx}: bill at outer {}", x.outer_iter);
+        assert_eq!(x.blocks, y.blocks, "{ctx}");
+        assert_eq!(x.occupied, y.occupied, "{ctx}");
+        assert_eq!(x.boundary, y.boundary, "{ctx}");
+        assert_eq!(x.weighted_error.to_bits(), y.weighted_error.to_bits(), "{ctx}");
+        assert_eq!(x.bound.to_bits(), y.bound.to_bits(), "{ctx}");
+        assert_eq!(x.full_error.map(f64::to_bits), y.full_error.map(f64::to_bits), "{ctx}");
+        assert_eq!(x.lloyd_iters, y.lloyd_iters, "{ctx}");
+    }
+}
+
+fn tmp(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("bwkm_obs_{tag}_{}", std::process::id()))
+}
+
+/// Every trace line is one flat JSON object with the pinned field order
+/// `ts, kind, name, value` and a known `kind`.
+fn assert_jsonl_schema(path: &PathBuf) {
+    let text = std::fs::read_to_string(path).expect("read trace");
+    assert!(!text.is_empty(), "trace {} is empty", path.display());
+    for line in text.lines() {
+        assert!(line.starts_with("{\"ts\": "), "bad ts prefix: {line}");
+        assert!(line.ends_with('}'), "unterminated line: {line}");
+        let kind_at = line.find("\"kind\": \"").expect("kind field");
+        let rest = &line[kind_at + 9..];
+        let kind = &rest[..rest.find('"').expect("kind close")];
+        assert!(
+            matches!(kind, "span" | "counter" | "gauge" | "event"),
+            "unknown kind `{kind}` in: {line}"
+        );
+        assert!(line.contains("\"name\": \""), "missing name: {line}");
+        assert!(line.contains("\"value\": "), "missing value: {line}");
+        // Pinned field order: ts < kind < name < value.
+        let name_at = line.find("\"name\": \"").unwrap();
+        let value_at = line.find("\"value\": ").expect("value field");
+        assert!(kind_at < name_at && name_at < value_at, "field order drifted: {line}");
+    }
+}
+
+#[test]
+fn non_perturb_bwkm_off_vs_jsonl() {
+    let ds = simulate("3RN", 0.003, 7).unwrap();
+    let k = 3;
+    let mut cfg = BwkmCfg::for_dataset(ds.n, ds.d, k);
+    cfg.max_outer = 4;
+    cfg.eval_full_error = true;
+
+    let c_off = DistanceCounter::new();
+    let off = bwkm::bwkm::run(&ds, k, &cfg, &mut Rng::new(BWKM_SEED), &c_off);
+
+    let trace = tmp("bwkm.jsonl");
+    let c_on = DistanceCounter::new();
+    let rec = Recorder::jsonl(&trace).unwrap();
+    let on = bwkm::bwkm::run_rec(&ds, k, &cfg, &mut Rng::new(BWKM_SEED), &c_on, &rec);
+    rec.flush();
+
+    assert_eq!(bits(&off.centroids), bits(&on.centroids), "bwkm: centroids");
+    assert_eq!(off.stop, on.stop, "bwkm: stop reason");
+    assert_trace_eq("bwkm", &off.trace, &on.trace);
+    assert_eq!(c_off.get(), c_on.get(), "bwkm: counter totals");
+    assert_eq!(c_off.notes(), c_on.notes(), "bwkm: note logs");
+    assert_eq!(bits(&off.d1), bits(&on.d1), "bwkm: top-1 distances");
+    assert_eq!(bits(&off.d2), bits(&on.d2), "bwkm: top-2 distances");
+
+    // The same trace doubles as the schema fixture.
+    assert_jsonl_schema(&trace);
+    // The typed bill bridge saw exactly what the counter billed.
+    assert_eq!(rec.counter_total("bwkm.distances"), Some(c_on.get()), "bridged bill");
+    std::fs::remove_file(&trace).ok();
+}
+
+#[test]
+fn non_perturb_rpkm_off_vs_jsonl() {
+    let ds = simulate("3RN", 0.003, 9).unwrap();
+    let k = 3;
+    let cfg = RpkmCfg::default();
+
+    let c_off = DistanceCounter::new();
+    let off = grid_rpkm(&ds, k, &cfg, &mut Rng::new(RPKM_SEED), &c_off);
+
+    let trace = tmp("rpkm.jsonl");
+    let c_on = DistanceCounter::new();
+    let rec = Recorder::jsonl(&trace).unwrap();
+    let on = grid_rpkm_rec(&ds, k, &cfg, &mut Rng::new(RPKM_SEED), &c_on, &rec);
+    rec.flush();
+
+    assert_eq!(bits(&off.centroids), bits(&on.centroids), "rpkm: centroids");
+    assert_eq!(off.trace.len(), on.trace.len(), "rpkm: trace length");
+    for (a, b) in off.trace.iter().zip(&on.trace) {
+        assert_eq!(a.level, b.level, "rpkm: level");
+        assert_eq!(a.distances, b.distances, "rpkm: per-level bill");
+        assert_eq!(a.weighted_error.to_bits(), b.weighted_error.to_bits(), "rpkm: E^P");
+    }
+    assert_eq!(c_off.get(), c_on.get(), "rpkm: counter totals");
+    assert_eq!(c_off.notes(), c_on.notes(), "rpkm: note logs");
+    assert_jsonl_schema(&trace);
+    std::fs::remove_file(&trace).ok();
+}
+
+#[test]
+fn non_perturb_streaming_chunk_worker_grid() {
+    let ds = simulate("3RN", 0.003, 11).unwrap();
+    let (d, k) = (ds.d, 3);
+    let mut cfg = BwkmCfg::for_dataset(ds.n, d, k);
+    cfg.max_outer = 3;
+    cfg.eval_full_error = false;
+    let bin = tmp("grid.bin");
+    save_bin(&ds, &bin).unwrap();
+
+    for &chunk_rows in &[64usize, 311] {
+        for &threads in &[1usize, 2, 4] {
+            let ctx = format!("stream chunk={chunk_rows} threads={threads} seed={STREAM_SEED:#x}");
+            let c_off = DistanceCounter::new();
+            let mut sb =
+                StreamingBwkm::new(BinChunks::opener(&bin, chunk_rows), d).with_threads(threads);
+            let off = sb.run(k, &cfg, &mut Rng::new(STREAM_SEED), &c_off).unwrap();
+
+            let trace = tmp(&format!("grid_{chunk_rows}_{threads}.jsonl"));
+            let rec = Recorder::jsonl(&trace).unwrap();
+            let c_on = DistanceCounter::new();
+            let mut sb =
+                StreamingBwkm::new(BinChunks::opener(&bin, chunk_rows), d).with_threads(threads);
+            let on = sb.run_rec(k, &cfg, &mut Rng::new(STREAM_SEED), &c_on, &rec).unwrap();
+            rec.flush();
+
+            assert_eq!(bits(&off.centroids), bits(&on.centroids), "{ctx}: centroids");
+            assert_eq!(off.stop, on.stop, "{ctx}: stop reason");
+            assert_eq!(off.passes, on.passes, "{ctx}: pass count");
+            assert_trace_eq(&ctx, &off.trace, &on.trace);
+            assert_eq!(c_off.get(), c_on.get(), "{ctx}: counter totals");
+            assert_eq!(c_off.notes(), c_on.notes(), "{ctx}: note logs");
+            assert_jsonl_schema(&trace);
+            std::fs::remove_file(&trace).ok();
+        }
+    }
+    std::fs::remove_file(&bin).ok();
+}
+
+#[test]
+fn non_perturb_service_resume_off_vs_jsonl() {
+    let ds = simulate("3RN", 0.003, 13).unwrap();
+    let k = 3;
+    let mut cut_cfg = BwkmCfg::for_dataset(ds.n, ds.d, k);
+    cut_cfg.max_outer = 2;
+    cut_cfg.eval_full_error = false;
+    let mut full_cfg = cut_cfg.clone();
+    full_cfg.max_outer = 5;
+
+    // One iteration-capped snapshot both resumes start from.
+    let cb = DistanceCounter::new();
+    let mut rb = Rng::new(RESUME_SEED);
+    let b = bwkm::bwkm::run(&ds, k, &cut_cfg, &mut rb, &cb);
+    let model = Model::from_run(&b, &cut_cfg, &rb, &cb);
+
+    let c_off = DistanceCounter::new();
+    let mut r_off = Rng::new(1);
+    let off = store::resume(&model, &ds, &full_cfg, &mut r_off, &c_off).unwrap();
+
+    let trace = tmp("resume.jsonl");
+    let rec = Recorder::jsonl(&trace).unwrap();
+    let c_on = DistanceCounter::new();
+    let mut r_on = Rng::new(1);
+    let on = store::resume_rec(&model, &ds, &full_cfg, &mut r_on, &c_on, &rec).unwrap();
+    rec.flush();
+
+    assert_eq!(bits(&off.centroids), bits(&on.centroids), "resume: centroids");
+    assert_eq!(off.stop, on.stop, "resume: stop reason");
+    assert_trace_eq("resume", &off.trace, &on.trace);
+    assert_eq!(c_off.get(), c_on.get(), "resume: counter totals");
+    assert_eq!(c_off.notes(), c_on.notes(), "resume: note logs");
+    assert_eq!(r_off.state(), r_on.state(), "resume: RNG streams");
+
+    // The resume event made it to the trace with the snapshot's facts.
+    let text = std::fs::read_to_string(&trace).unwrap();
+    assert!(text.contains("\"name\": \"store.resume\""), "missing store.resume event");
+    assert_jsonl_schema(&trace);
+    std::fs::remove_file(&trace).ok();
+}
+
+#[test]
+fn typed_gap_metrics_rebuild_the_pinned_note() {
+    // An approximate (closure) run publishes its §2.9 quality gap twice:
+    // the pinned `gap[…]` note (compatibility surface) and §2.11 typed
+    // gauges. The gauges must rebuild the note string `==` — same
+    // values, same formatting — so neither surface can drift.
+    let ds = simulate("3RN", 0.003, 17).unwrap();
+    let k = 3;
+    let mut cfg = BwkmCfg::for_dataset(ds.n, ds.d, k);
+    cfg.max_outer = 3;
+    cfg.eval_full_error = false;
+    cfg.assign = AssignCfg { mode: AssignMode::Closure, ..AssignCfg::default() };
+
+    let rec = Recorder::summary();
+    let counter = DistanceCounter::new();
+    let mut stepper = stepper_for(&cfg.assign);
+    let _out = bwkm::bwkm::run_with_rec(
+        stepper.as_mut(),
+        &ds,
+        k,
+        &cfg,
+        &mut Rng::new(GAP_SEED),
+        &counter,
+        &rec,
+    );
+
+    let note = counter
+        .notes()
+        .into_iter()
+        .find(|n| n.starts_with("gap["))
+        .expect("closure run must publish a gap note");
+
+    let backend = rec.event_stats("gap.backend").expect("gap.backend event").1.pop().unwrap();
+    let approx_err = rec.gauge_last("gap.approx_err").expect("gap.approx_err");
+    let exact_err = rec.gauge_last("gap.exact_err").expect("gap.exact_err");
+    let rel = rec.gauge_last("gap.rel").expect("gap.rel");
+    let hit_rate = rec.gauge_last("gap.hit_rate").expect("gap.hit_rate");
+    let fallbacks = rec.gauge_last("gap.fallbacks").expect("gap.fallbacks") as u64;
+    let rebuilt = format!(
+        "gap[{backend}]: E_approx={approx_err:.6e} E_exact={exact_err:.6e} rel={rel:.3e} \
+         hit={:.1}% fallbacks={fallbacks}",
+        hit_rate * 100.0
+    );
+    assert_eq!(rebuilt, note, "typed gap metrics drifted from the pinned note");
+
+    // The auto engine's typed tallies agree with its note log: the
+    // cumulative per-choice gauges sum to the step count, which equals
+    // the number of `auto[…]` notes (one per engine step, uncapped here).
+    let steps = rec.gauge_last("auto.steps").expect("auto.steps") as u64;
+    let tallied: u64 = AutoChoice::ALL
+        .iter()
+        .filter_map(|c| rec.gauge_last(&format!("auto.choice.{}", c.name())))
+        .map(|v| v as u64)
+        .sum();
+    assert_eq!(tallied, steps, "per-choice tallies must sum to the step count");
+    let auto_notes = counter.notes().iter().filter(|n| n.starts_with("auto[")).count() as u64;
+    assert_eq!(steps, auto_notes, "typed step count drifted from the auto[…] note log");
+}
+
+#[test]
+fn note_cap_flood_keeps_typed_metrics_complete() {
+    // The legacy note log truncates at NOTE_CAP; the typed stream must
+    // not. Flood both: every typed record is still counted (events keep
+    // an exact count with a bounded tail; counters keep exact sums).
+    let flood = NOTE_CAP + 100;
+    let counter = DistanceCounter::new();
+    let rec = Recorder::summary();
+    for i in 0..flood {
+        counter.note(format!("auto[{i}]: serial"));
+        rec.event("auto.switch", "serial");
+        rec.counter("flood.records", 1);
+    }
+    let notes = counter.notes();
+    assert_eq!(notes.len(), NOTE_CAP + 1, "note log caps at NOTE_CAP plus the marker");
+
+    let (count, tail) = rec.event_stats("auto.switch").expect("flooded event");
+    assert_eq!(count as usize, flood, "event count must stay exact under flood");
+    assert_eq!(tail.len(), EVENT_TAIL_CAP, "tail is bounded, count is not");
+    assert_eq!(rec.counter_total("flood.records"), Some(flood as u64), "counter sums stay exact");
+}

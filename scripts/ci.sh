@@ -15,6 +15,10 @@
 #   scripts/ci.sh --service    # the resident-service suite: model-store
 #                              # round-trip/resume/ingest conformance plus
 #                              # the store failure-injection subset
+#   scripts/ci.sh --obs        # the observability suite: §2.11 telemetry
+#                              # non-perturbation pins (off vs jsonl, `==`),
+#                              # JSONL schema stability, typed-vs-note
+#                              # cross-checks, NOTE_CAP flood completeness
 #
 # The build is hermetic (vendored path deps, no crates.io), so the script
 # forces cargo offline and never touches the network.
@@ -37,6 +41,8 @@ if [[ "${1:-}" == "--quick" ]]; then
     cargo test -q --test engine_conformance
     echo "== quick: streaming degenerate subset =="
     cargo test -q --test streaming_conformance degenerate
+    echo "== quick: telemetry non-perturbation pins =="
+    cargo test -q --test obs_conformance non_perturb
     exit 0
 fi
 
@@ -63,6 +69,14 @@ if [[ "${1:-}" == "--service" ]]; then
     cargo test -q --test service_conformance
     echo "== store failure-injection subset =="
     cargo test -q --test failure_injection store_
+    exit 0
+fi
+
+if [[ "${1:-}" == "--obs" ]]; then
+    echo "== observability conformance suite (DESIGN.md 2.11) =="
+    cargo test -q --test obs_conformance
+    echo "== obs unit tests (recorder, sinks, scopes) =="
+    cargo test -q --lib obs::
     exit 0
 fi
 
