@@ -11,16 +11,48 @@
 //! harder), and the backend `AutoAssigner` settled on. Feeds
 //! EXPERIMENTS.md §Perf.
 
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
 use bwkm::bench::{bench_secs, env_f64, write_bench_json, write_csv, Cell};
-use bwkm::coordinator::sharded_weighted_step;
-use bwkm::kmeans::assign::{weighted_step, Assigner, AutoAssigner, BoundedAssigner, ClosureAssigner};
+use bwkm::coordinator::{sharded_weighted_step, ShardedStepper};
+use bwkm::kmeans::assign::{
+    weighted_step, Assigner, AutoAssigner, BoundedAssigner, ClosureAssigner,
+};
 use bwkm::kmeans::{
-    KernelKind, NativeStepper, NormPrunedAssigner, Precision, SampledStepper, Stepper,
+    KernelKind, NativeStepper, NormPrunedAssigner, Precision, SampledStepper, StepOut, Stepper,
     VectorAssigner,
 };
 use bwkm::metrics::DistanceCounter;
 use bwkm::runtime::Runtime;
 use bwkm::util::{fmt_count, Rng};
+
+/// Counting allocator (DESIGN.md §2.12): tallies every heap allocation so
+/// the warm-vs-cold rows can report allocs/step — the steady-state
+/// guarantee is warm exact steps at **zero**.
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static A: CountingAlloc = CountingAlloc;
+
+/// Allocations `f` performed (process-wide; run with other threads idle).
+fn allocs_in(f: impl FnOnce()) -> u64 {
+    let before = ALLOCS.load(Ordering::Relaxed);
+    f();
+    ALLOCS.load(Ordering::Relaxed) - before
+}
 
 fn main() {
     let mult = env_f64("BWKM_SCALE", 1.0);
@@ -72,6 +104,10 @@ fn main() {
         "simd_rows_s".into(),
         "f32_rows_s".into(),
         "f32_rel_gap".into(),
+        "warm_rows_s".into(),
+        "warm_sharded_rows_s".into(),
+        "allocs_cold_step".into(),
+        "allocs_warm_step".into(),
     ]];
     // Machine-readable rows (BENCH_assignment.json at the repo root),
     // each tagged with the §2.10 kernel/precision the measurement ran on.
@@ -90,9 +126,38 @@ fn main() {
         let t_shard = bench_secs(3, || {
             std::hint::black_box(sharded_weighted_step(&reps, &weights, d, &cents, 4, &c));
         });
+
+        // Warm vs cold steady state (DESIGN.md §2.12): cold pays a fresh
+        // stepper and a fresh output per step (t_native above); warm holds
+        // one stepper and one `StepOut` and refills them through
+        // `step_into`. The allocs/step column is the point — the warm
+        // exact serial step is pinned at zero by pool_conformance.rs.
+        let mut warm_stepper = NativeStepper::new();
+        let mut warm_out = StepOut::default();
+        warm_stepper.step_into(&reps, &weights, d, &cents, &c, &mut warm_out); // prime
+        let t_warm = bench_secs(3, || {
+            warm_stepper.step_into(&reps, &weights, d, &cents, &c, &mut warm_out);
+            std::hint::black_box(&warm_out);
+        });
+        let allocs_cold = allocs_in(|| {
+            let mut s = NativeStepper::new();
+            std::hint::black_box(s.step(&reps, &weights, d, &cents, &c));
+        });
+        let allocs_warm = allocs_in(|| {
+            warm_stepper.step_into(&reps, &weights, d, &cents, &c, &mut warm_out);
+        });
+        // The same warm step fanned over the shared pool (pool=on rows):
+        // persistent ShardedStepper, reused output arena.
+        let mut pool_stepper = ShardedStepper::new(4);
+        let mut pool_out = StepOut::default();
+        pool_stepper.step_into(&reps, &weights, d, &cents, &c, &mut pool_out); // prime
+        let t_pool_warm = bench_secs(3, || {
+            pool_stepper.step_into(&reps, &weights, d, &cents, &c, &mut pool_out);
+            std::hint::black_box(&pool_out);
+        });
         let t_normprune = bench_secs(3, || {
             std::hint::black_box(weighted_step(
-                &mut NormPrunedAssigner,
+                &mut NormPrunedAssigner::new(),
                 &reps,
                 &weights,
                 d,
@@ -106,7 +171,7 @@ fn main() {
         // norm pruning — real partitions with separated blocks prune much
         // harder).
         let c_np = DistanceCounter::new();
-        let _ = weighted_step(&mut NormPrunedAssigner, &reps, &weights, d, &cents, &c_np);
+        let _ = weighted_step(&mut NormPrunedAssigner::new(), &reps, &weights, d, &cents, &c_np);
         let pairs = c_np.get().saturating_sub((m + k) as u64);
         let bill_frac = pairs as f64 / (m as f64 * k as f64);
 
@@ -224,6 +289,15 @@ fn main() {
             "{:<18} vector: simd-f64 {} rows/s, simd-f32 {} rows/s (f32 rel gap {:.1e})",
             "", fmt_count(rps(t_simd) as u64), fmt_count(rps(t_f32) as u64), f32_gap
         );
+        println!(
+            "{:<18} steady state: cold {} rows/s ({} allocs/step), warm {} rows/s ({} allocs/step), warm sharded(4) {} rows/s",
+            "",
+            fmt_count(rps(t_native) as u64),
+            allocs_cold,
+            fmt_count(rps(t_warm) as u64),
+            allocs_warm,
+            fmt_count(rps(t_pool_warm) as u64),
+        );
         rows.push(vec![
             m.to_string(),
             k.to_string(),
@@ -246,16 +320,21 @@ fn main() {
             format!("{:.0}", rps(t_simd)),
             format!("{:.0}", rps(t_f32)),
             format!("{:.4e}", f32_gap),
+            format!("{:.0}", rps(t_warm)),
+            format!("{:.0}", rps(t_pool_warm)),
+            allocs_cold.to_string(),
+            allocs_warm.to_string(),
         ]);
         // Typed cells (explicit per-cell JSON types — see bench::Cell):
         // backend/kernel/precision are strings, the sweep shape integers,
         // the measurements floats.
         let jrow = |backend: &str, kernel: KernelKind, precision: Precision, secs: f64,
-                    frac: f64, gap: f64| {
+                    frac: f64, gap: f64, pool: &str| {
             vec![
                 ("backend".to_string(), Cell::from(backend)),
                 ("kernel".to_string(), Cell::from(kernel.name())),
                 ("precision".to_string(), Cell::from(precision.name())),
+                ("pool".to_string(), Cell::from(pool)),
                 ("m".to_string(), Cell::from(m)),
                 ("k".to_string(), Cell::from(k)),
                 ("d".to_string(), Cell::from(d)),
@@ -264,11 +343,47 @@ fn main() {
                 ("rel_gap".to_string(), Cell::from(gap)),
             ]
         };
-        jrows.push(jrow("exact", KernelKind::Scalar, Precision::F64, t_native, 1.0, 0.0));
-        jrows.push(jrow("exact", KernelKind::Simd, Precision::F64, t_simd, 1.0, 0.0));
-        jrows.push(jrow("exact", KernelKind::Simd, Precision::F32, t_f32, 1.0, f32_gap));
-        jrows.push(jrow("closure", KernelKind::Scalar, Precision::F64, t_closure, cl_bill_frac, cl_gap));
-        jrows.push(jrow("sampled", KernelKind::Scalar, Precision::F64, t_sampled, sp_bill_frac, sp_gap));
+        jrows.push(jrow("exact", KernelKind::Scalar, Precision::F64, t_native, 1.0, 0.0, "off"));
+        jrows.push(jrow("exact", KernelKind::Simd, Precision::F64, t_simd, 1.0, 0.0, "off"));
+        jrows.push(jrow("exact", KernelKind::Simd, Precision::F32, t_f32, 1.0, f32_gap, "off"));
+        jrows.push(jrow(
+            "closure",
+            KernelKind::Scalar,
+            Precision::F64,
+            t_closure,
+            cl_bill_frac,
+            cl_gap,
+            "off",
+        ));
+        jrows.push(jrow(
+            "sampled",
+            KernelKind::Scalar,
+            Precision::F64,
+            t_sampled,
+            sp_bill_frac,
+            sp_gap,
+            "off",
+        ));
+        jrows.push(jrow("sharded", KernelKind::Scalar, Precision::F64, t_shard, 1.0, 0.0, "on"));
+        // Steady-state rows (DESIGN.md §2.12): warm arena steps, with the
+        // measured allocations per step attached.
+        let mut warm_cold =
+            jrow("exact_cold", KernelKind::Scalar, Precision::F64, t_native, 1.0, 0.0, "off");
+        warm_cold.push(("allocs_per_step".to_string(), Cell::from(allocs_cold)));
+        jrows.push(warm_cold);
+        let mut warm_row =
+            jrow("exact_warm", KernelKind::Scalar, Precision::F64, t_warm, 1.0, 0.0, "off");
+        warm_row.push(("allocs_per_step".to_string(), Cell::from(allocs_warm)));
+        jrows.push(warm_row);
+        jrows.push(jrow(
+            "sharded_warm",
+            KernelKind::Scalar,
+            Precision::F64,
+            t_pool_warm,
+            1.0,
+            0.0,
+            "on",
+        ));
     }
     write_csv("perf_assignment", &rows);
     write_bench_json("assignment", &jrows);

@@ -71,10 +71,11 @@ RUN KEYS: dataset scale seed k method budget threads use_pjrt eval_full_error
            original dataset; re-refinement runs only when a cell's
            misassignment bound moved, the bill is exact, and the updated
            model is written to save= — or back over resume= if absent)
-          (jobs=N — multiplex N independent bwkm jobs over the threads=
-           worker pool; each job gets a private distance counter and a
-           deterministic RNG stream forked from seed, so results are
-           worker-count independent)
+          (jobs=N — multiplex N independent bwkm jobs over threads=
+           lanes of the shared persistent worker pool (DESIGN.md §2.12);
+           each job gets a private distance counter and a deterministic
+           RNG stream forked from seed, so results are worker-count
+           independent; per-job queue wait prints as wait=)
           (metrics=off|summary|jsonl — run telemetry, DESIGN.md §2.11.
            summary prints an aggregated run report (phase spans, typed
            counters/gauges, events) and writes it as BENCH_run_metrics.json;

@@ -1,19 +1,30 @@
 //! Concurrent job scheduler (DESIGN.md §5.2): multiplex independent
-//! clustering jobs over a shared worker pool.
+//! clustering jobs over the shared persistent worker pool
+//! ([`crate::util::pool`], DESIGN.md §2.12).
 //!
 //! Each job gets a **private** [`DistanceCounter`] and a deterministic RNG
 //! stream forked from the base seed *in job order*, so every job's results
 //! and bill are bit-identical no matter how many workers run or which
-//! worker happens to pick the job up. Workers pull job indices from a
+//! worker happens to pick the job up. Worker lanes pull job indices from a
 //! single atomic queue (work stealing degenerates to round-robin when jobs
 //! are uniform) and publish into per-job slots; the caller always receives
 //! results in job order.
+//!
+//! **Oversubscription rule (DESIGN.md §2.12).** The scheduler's lanes run
+//! as one pool job, so they and any sharded work *inside* a job no longer
+//! compete blindly for cores: while the lanes occupy the pool's single
+//! slot, a nested `Sharded<B>` assignment or streaming `ChunkCrew` pass
+//! finds the slot busy and degrades to leader-inline execution — same
+//! shard order, bit-identical outputs, no thread explosion. The wait each
+//! job spent queued behind earlier jobs is reported per job as
+//! [`JobResult::queue_wait_s`] (the CLI prints it as `wait=`).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 use crate::metrics::DistanceCounter;
 use crate::obs::{Recorder, Stopwatch};
+use crate::util::pool::{self, FnTask};
 use crate::util::Rng;
 
 /// One job's outcome, with its isolated accounting.
@@ -89,37 +100,42 @@ where
     let slots = &slots;
     let pool_watch = Stopwatch::start();
 
-    std::thread::scope(|scope| {
-        for _ in 0..workers {
-            scope.spawn(move || loop {
-                let job = next.fetch_add(1, Ordering::Relaxed);
-                if job >= jobs {
-                    break;
-                }
-                let queue_wait_s = pool_watch.elapsed_s();
-                let mut rng = seeds[job].clone();
-                let counter = DistanceCounter::new();
-                let jrec = rec.job_scope(job);
-                jrec.gauge("job.queue_wait_s", queue_wait_s);
-                let watch = Stopwatch::start();
-                let out = {
-                    let _job_span = jrec.span("job.run");
-                    run(job, &mut rng, &counter, &jrec)
-                };
-                let elapsed_s = watch.elapsed_s();
-                jrec.counter("job.distances", counter.get());
-                let result = JobResult {
-                    job,
-                    distances: counter.get(),
-                    notes: counter.notes(),
-                    elapsed_s,
-                    queue_wait_s,
-                    out,
-                };
-                *slots[job].lock().expect("job slot poisoned") = Some(result);
-            });
+    // Each pool shard is one puller lane over the atomic job queue. The
+    // lanes occupy the pool's single slot for the whole batch, so nested
+    // sharded work inside a job degrades inline (§2.12 — see module docs)
+    // instead of oversubscribing the machine. Inline fallback (busy pool,
+    // zero workers) means lane 0 drains the whole queue serially:
+    // bit-identical results either way, since job state depends only on
+    // the job index.
+    let lanes = FnTask(|_lane: usize| loop {
+        let job = next.fetch_add(1, Ordering::Relaxed);
+        if job >= jobs {
+            break;
         }
+        let queue_wait_s = pool_watch.elapsed_s();
+        let mut rng = seeds[job].clone();
+        let counter = DistanceCounter::new();
+        let jrec = rec.job_scope(job);
+        jrec.gauge("job.queue_wait_s", queue_wait_s);
+        let watch = Stopwatch::start();
+        let out = {
+            let _job_span = jrec.span("job.run");
+            run(job, &mut rng, &counter, &jrec)
+        };
+        let elapsed_s = watch.elapsed_s();
+        jrec.counter("job.distances", counter.get());
+        let result = JobResult {
+            job,
+            distances: counter.get(),
+            notes: counter.notes(),
+            elapsed_s,
+            queue_wait_s,
+            out,
+        };
+        *slots[job].lock().expect("job slot poisoned") = Some(result);
     });
+    pool::global().run(workers, &lanes);
+    pool::global().record_metrics(rec);
 
     slots
         .iter()

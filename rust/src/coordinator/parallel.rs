@@ -1,4 +1,5 @@
-//! Sharded data-parallel primitives over `std::thread::scope` workers.
+//! Sharded data-parallel primitives over the shared persistent worker
+//! pool ([`crate::util::pool`], DESIGN.md §2.12).
 //!
 //! Both fan-out shapes here are thin wrappers over the shared assignment
 //! engine's sharding **combinator**
@@ -17,7 +18,9 @@
 //! weighted-Lloyd iterations, DESIGN.md §2.7).
 
 use crate::data::Dataset;
-use crate::kmeans::assign::{self, AssignCfg, KernelKind, Precision, Sharded, ShardedAssigner, VectorAssigner};
+use crate::kmeans::assign::{
+    self, AssignCfg, KernelKind, Precision, Sharded, ShardedAssigner, VectorAssigner,
+};
 use crate::kmeans::{EngineStepper, StepOut, Stepper};
 use crate::metrics::DistanceCounter;
 
@@ -61,10 +64,28 @@ pub fn sharded_weighted_step(
     )
 }
 
-/// [`Stepper`] adapter running every iteration through
-/// [`sharded_weighted_step`] — plug-in parallelism for `bwkm::run_with`.
+/// [`Stepper`] adapter fanning every iteration's assignment phase out
+/// over `threads` shards — plug-in parallelism for `bwkm::run_with`.
+///
+/// Persistent (DESIGN.md §2.12): the inner [`ShardedAssigner`] and the
+/// accumulation scratch live across iterations, so warm steps reuse their
+/// buffers and run on the shared worker pool instead of standing up
+/// per-call state. Outputs stay bit-identical to [`NativeStepper`]
+/// (leader-side row-order folds, §2.5) for every thread count.
 pub struct ShardedStepper {
-    pub threads: usize,
+    inner: EngineStepper<ShardedAssigner>,
+}
+
+impl ShardedStepper {
+    pub fn new(threads: usize) -> Self {
+        ShardedStepper { inner: EngineStepper::with_engine(ShardedAssigner::new(threads)) }
+    }
+
+    /// The configured shard count (a determinism key, not a tolerance —
+    /// outputs are identical for every value).
+    pub fn threads(&self) -> usize {
+        self.inner.engine().threads()
+    }
 }
 
 impl Stepper for ShardedStepper {
@@ -76,7 +97,19 @@ impl Stepper for ShardedStepper {
         centroids: &[f64],
         counter: &DistanceCounter,
     ) -> StepOut {
-        sharded_weighted_step(reps, weights, d, centroids, self.threads, counter)
+        self.inner.step(reps, weights, d, centroids, counter)
+    }
+
+    fn step_into(
+        &mut self,
+        reps: &[f64],
+        weights: &[f64],
+        d: usize,
+        centroids: &[f64],
+        counter: &DistanceCounter,
+        out: &mut StepOut,
+    ) {
+        self.inner.step_into(reps, weights, d, centroids, counter, out);
     }
 }
 
@@ -90,7 +123,7 @@ impl Stepper for ShardedStepper {
 /// (§2.5 holds per precision).
 pub fn sharded_stepper_for(assign: &AssignCfg, threads: usize) -> Box<dyn Stepper> {
     if assign.kernel == KernelKind::Scalar && assign.precision == Precision::F64 {
-        Box::new(ShardedStepper { threads })
+        Box::new(ShardedStepper::new(threads))
     } else {
         Box::new(EngineStepper::with_engine(Sharded::with_backend(
             threads,
@@ -210,7 +243,7 @@ mod tests {
         let ds = Dataset::new(g.blobs(600, 2, 3, 0.5), 2);
         let cfg = crate::bwkm::BwkmCfg::for_dataset(ds.n, ds.d, 3);
         let c = DistanceCounter::new();
-        let mut stepper = ShardedStepper { threads: 3 };
+        let mut stepper = ShardedStepper::new(3);
         let out = crate::bwkm::run_with(
             &mut stepper,
             &ds,

@@ -42,7 +42,8 @@ use anyhow::{anyhow, bail, Result};
 use crate::bwkm::source::RefineSource;
 use crate::bwkm::{run_source_rec, BwkmCfg, StopReason, TracePoint};
 use crate::geometry::BBox;
-use crate::kmeans::assign::{nearest_in, shard_ranges};
+use crate::kmeans::assign::{nearest_in, shard_count, shard_range};
+use crate::util::pool::{self, PoolTask};
 use crate::kmeans::init::kmeans_par::{kmeans_par_source, ParSource};
 use crate::kmeans::init::ParCfg;
 use crate::kmeans::{stepper_for, AssignMode, AutoAssigner, EngineStepper, Stepper};
@@ -103,14 +104,18 @@ fn chunk_row_count(chunk: &[f64], d: usize) -> Result<usize> {
 const PAR_MIN_ROWS: usize = 64;
 
 /// The streamed-pass worker crew — the `Sharded<B>` idiom of
-/// `kmeans::assign` (DESIGN.md §2.5) applied to chunk passes: one team
-/// of **persistent** workers is stood up per pass (not per chunk) and
-/// fed over channels; for each chunk, rows are split with the one
-/// canonical [`shard_ranges`] rule, every worker computes a *per-row
-/// pure* function on its contiguous shard (no FP accumulation), and the
-/// partials are concatenated in shard order. The leader then folds in
-/// global row order, so results are bit-identical for every worker
-/// count (DESIGN.md §5.1).
+/// `kmeans::assign` (DESIGN.md §2.5) applied to chunk passes, executed
+/// on the shared persistent worker pool ([`crate::util::pool`],
+/// DESIGN.md §2.12) instead of per-pass threads: for each chunk, rows
+/// are split with the one canonical [`shard_range`] rule, every shard
+/// computes a *per-row pure* function on its contiguous row range (no
+/// FP accumulation), and the per-shard values are concatenated in shard
+/// order. The leader then folds in global row order, so results are
+/// bit-identical for every worker count (DESIGN.md §5.1). When the pool
+/// slot is busy — e.g. this pass runs inside a scheduler job that
+/// already occupies it — shards degrade to leader-inline execution in
+/// the same order (the §2.12 oversubscription rule): same bits, only
+/// timing changes.
 #[derive(Clone, Debug)]
 pub struct ChunkCrew {
     threads: usize,
@@ -189,91 +194,119 @@ impl ChunkCrew {
             return Ok(rows);
         }
         let per_row = &per_row;
-        let threads = self.threads;
-        std::thread::scope(move |scope| {
-            // Stand the team up once; each worker owns one task and one
-            // result channel and lives for the whole pass.
-            let mut task_tx = Vec::with_capacity(threads);
-            let mut result_rx = Vec::with_capacity(threads);
-            for _ in 0..threads {
-                let (ttx, trx) =
-                    std::sync::mpsc::channel::<(std::sync::Arc<Vec<f64>>, std::ops::Range<usize>)>();
-                let (rtx, rrx) = std::sync::mpsc::channel::<Vec<T>>();
-                scope.spawn(move || {
-                    for (chunk, r) in trx {
-                        let vals: Vec<T> = chunk[r.start * d..r.end * d]
-                            .chunks_exact(d)
-                            .map(per_row)
-                            .collect();
-                        if rtx.send(vals).is_err() {
-                            break; // leader bailed out mid-pass
-                        }
+        let pool = pool::global();
+        // Double-buffered pipeline on the shared pool: while the pool
+        // chews chunk N (published with `defer`, leader not
+        // participating), the leader reads chunk N+1 from the (possibly
+        // disk-bound) source, then joins N and folds its per-shard values
+        // — fold order is stream order, so the §5.1 determinism rule is
+        // untouched; only the read latency hides behind compute.
+        let mut rows = 0usize;
+        let mut read_s = 0.0f64;
+        let mut work_s = 0.0f64;
+        let mut iter = chunks.into_iter();
+        // The deferred job: the boxed task must stay alive and un-moved
+        // until the matching `wait` — that is `defer`'s safety contract
+        // (the box's heap allocation never moves). `pooled == false`
+        // means the slot was busy and the shards already ran inline.
+        let mut in_flight: Option<(Box<ChunkTask<'_, T, W>>, bool)> = None;
+        loop {
+            let t = timed.then(Stopwatch::start);
+            // Overlaps in-flight compute. A read error must NOT return
+            // yet: the deferred job still holds a pointer into the boxed
+            // task, so we join it below before `?` can drop the box.
+            let next = iter.next().transpose();
+            if let Some(w) = t {
+                read_s += w.elapsed_s();
+            }
+            let t = timed.then(Stopwatch::start);
+            if let Some((task, pooled)) = in_flight.take() {
+                if pooled {
+                    pool.wait();
+                }
+                // Ordered reduction: slot order == shard order == row
+                // order.
+                let mut vals: Vec<T> = Vec::with_capacity(task.chunk.len() / d);
+                for slot in &task.slots {
+                    vals.extend(
+                        slot.lock()
+                            .expect("chunk slot poisoned")
+                            .take()
+                            .expect("pool shard never ran"),
+                    );
+                }
+                fold(task.chunk.as_slice(), vals)?;
+            }
+            let chunk = match next? {
+                Some(chunk) => chunk,
+                None => {
+                    if let Some(w) = t {
+                        work_s += w.elapsed_s();
                     }
+                    break;
+                }
+            };
+            let n = chunk_row_count(&chunk, d)?;
+            rows += n;
+            if n < PAR_MIN_ROWS {
+                let vals: Vec<T> = chunk.chunks_exact(d).map(per_row).collect();
+                fold(&chunk, vals)?;
+            } else {
+                let shards = shard_count(n, self.threads);
+                let task = Box::new(ChunkTask {
+                    chunk,
+                    d,
+                    shards,
+                    per_row,
+                    slots: (0..shards).map(|_| std::sync::Mutex::new(None)).collect(),
                 });
-                task_tx.push(ttx);
-                result_rx.push(rrx);
-            }
-            // Double-buffered pipeline: while the workers compute chunk
-            // N, the leader reads chunk N+1 from the (possibly
-            // disk-bound) source, then drains N's results and folds them
-            // — fold order is stream order, so the §5.1 determinism rule
-            // is untouched; only the read latency hides behind compute.
-            let mut rows = 0usize;
-            let mut read_s = 0.0f64;
-            let mut work_s = 0.0f64;
-            let mut iter = chunks.into_iter();
-            let mut in_flight: Option<(std::sync::Arc<Vec<f64>>, usize)> = None;
-            loop {
-                let t = timed.then(Stopwatch::start);
-                let next = iter.next().transpose()?; // overlaps in-flight compute
-                if let Some(w) = t {
-                    read_s += w.elapsed_s();
-                }
-                let t = timed.then(Stopwatch::start);
-                if let Some((chunk, nranges)) = in_flight.take() {
-                    // Ordered reduction: worker order == shard order ==
-                    // row order.
-                    let mut vals: Vec<T> = Vec::with_capacity(chunk.len() / d);
-                    for rx in result_rx.iter().take(nranges) {
-                        vals.extend(rx.recv().expect("chunk worker died"));
+                // Safety: the box is parked in `in_flight` until the
+                // `wait` at the top of the next loop turn.
+                let pooled = unsafe { pool.defer(shards, &*task) };
+                if !pooled {
+                    // Busy slot (§2.12 oversubscription rule): run the
+                    // same shards inline in the same order — same bits.
+                    for s in 0..shards {
+                        task.run(s);
                     }
-                    fold(chunk.as_slice(), vals)?;
                 }
-                let chunk = match next {
-                    Some(chunk) => chunk,
-                    None => {
-                        if let Some(w) = t {
-                            work_s += w.elapsed_s();
-                        }
-                        break;
-                    }
-                };
-                let n = chunk_row_count(&chunk, d)?;
-                rows += n;
-                if n < PAR_MIN_ROWS {
-                    let vals: Vec<T> = chunk.chunks_exact(d).map(per_row).collect();
-                    fold(&chunk, vals)?;
-                } else {
-                    let ranges = shard_ranges(n, threads);
-                    let chunk = std::sync::Arc::new(chunk);
-                    for (w, r) in ranges.iter().enumerate() {
-                        task_tx[w]
-                            .send((chunk.clone(), r.clone()))
-                            .expect("chunk worker died");
-                    }
-                    in_flight = Some((chunk, ranges.len()));
-                }
-                if let Some(w) = t {
-                    work_s += w.elapsed_s();
-                }
+                in_flight = Some((task, pooled));
             }
-            if timed {
-                rec.span_s("stream.read", read_s);
-                rec.span_s("stream.compute", work_s);
+            if let Some(w) = t {
+                work_s += w.elapsed_s();
             }
-            drop(task_tx); // team drains and exits; the scope joins it
-            Ok(rows)
-        })
+        }
+        if timed {
+            rec.span_s("stream.read", read_s);
+            rec.span_s("stream.compute", work_s);
+            pool.record_metrics(rec);
+        }
+        Ok(rows)
+    }
+}
+
+/// One chunk's per-row map as a pool job (DESIGN.md §2.12): shard `s`
+/// maps the rows of its canonical [`shard_range`] and parks the values
+/// in its own slot, so writes are disjoint; the leader drains the slots
+/// in shard order (== row order) after joining, which keeps the §5.1
+/// merge rule byte-for-byte.
+struct ChunkTask<'a, T, W> {
+    chunk: Vec<f64>,
+    d: usize,
+    shards: usize,
+    per_row: &'a W,
+    slots: Vec<std::sync::Mutex<Option<Vec<T>>>>,
+}
+
+impl<T: Send, W: Fn(&[f64]) -> T + Sync> PoolTask for ChunkTask<'_, T, W> {
+    fn run(&self, s: usize) {
+        let n = self.chunk.len() / self.d;
+        let r = shard_range(n, self.shards, s);
+        let vals: Vec<T> = self.chunk[r.start * self.d..r.end * self.d]
+            .chunks_exact(self.d)
+            .map(self.per_row)
+            .collect();
+        *self.slots[s].lock().expect("chunk slot poisoned") = Some(vals);
     }
 }
 

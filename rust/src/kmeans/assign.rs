@@ -58,6 +58,7 @@
 
 use crate::metrics::{DistanceCounter, QualityGap};
 use crate::obs::Recorder;
+use crate::util::pool::{self, PoolTask, SendPtr};
 
 use super::weighted_lloyd::StepOut;
 
@@ -87,6 +88,19 @@ impl AssignOut {
             d2: Vec::with_capacity(m),
         }
     }
+
+    /// Size the buffers for `m` rows in place, keeping their capacity
+    /// (DESIGN.md §2.12): once a buffer has seen its steady-state `m`, a
+    /// reset allocates nothing. Every row is overwritten by the scan that
+    /// follows, so the zero fill is shape bookkeeping, not data.
+    pub fn reset(&mut self, m: usize) {
+        self.assign.clear();
+        self.assign.resize(m, 0);
+        self.d1.clear();
+        self.d1.resize(m, 0.0);
+        self.d2.clear();
+        self.d2.resize(m, 0.0);
+    }
 }
 
 /// A nearest/top-2 assignment backend (DESIGN.md §2.2). Implementations
@@ -102,6 +116,47 @@ pub trait Assigner {
         centroids: &[f64],
         counter: &DistanceCounter,
     ) -> AssignOut;
+
+    /// In-place form of [`assign_top2`](Self::assign_top2) (DESIGN.md
+    /// §2.12): write the pass into a caller-owned reusable buffer. The
+    /// default delegates to `assign_top2` and moves the result — the
+    /// pre-arena per-call path, kept callable so the conformance suite
+    /// can compare the two. Backends on the zero-allocation steady-state
+    /// path override it to fill `out` directly; values are pinned `==`
+    /// either way.
+    fn assign_top2_into(
+        &mut self,
+        points: &[f64],
+        d: usize,
+        centroids: &[f64],
+        counter: &DistanceCounter,
+        out: &mut AssignOut,
+    ) {
+        *out = self.assign_top2(points, d, centroids, counter);
+    }
+
+    /// Slice-window form of [`assign_top2`](Self::assign_top2) (DESIGN.md
+    /// §2.12): write the pass for these rows into caller-provided windows
+    /// (all of length `points.len() / d`). This is the shard primitive —
+    /// [`Sharded`] hands each worker its disjoint `split_at_mut`-style
+    /// window of the full output, so the shard-order fan-in is a layout
+    /// fact instead of a copy. The default routes through `assign_top2`
+    /// and copies once; zero-allocation backends override.
+    fn assign_top2_slices(
+        &mut self,
+        points: &[f64],
+        d: usize,
+        centroids: &[f64],
+        counter: &DistanceCounter,
+        assign: &mut [u32],
+        d1: &mut [f64],
+        d2: &mut [f64],
+    ) {
+        let out = self.assign_top2(points, d, centroids, counter);
+        assign.copy_from_slice(&out.assign);
+        d1.copy_from_slice(&out.d1);
+        d2.copy_from_slice(&out.d2);
+    }
 
     /// The approximate regime's self-report hook (DESIGN.md §2.9): the
     /// measured cost of this backend's current approximation on these
@@ -185,6 +240,24 @@ pub fn shard_ranges(n: usize, shards: usize) -> Vec<std::ops::Range<usize>> {
         start += len;
     }
     out
+}
+
+/// How many ranges [`shard_ranges`] returns for the same inputs.
+pub fn shard_count(n: usize, shards: usize) -> usize {
+    shards.max(1).min(n.max(1))
+}
+
+/// The closed form of one [`shard_ranges`] entry:
+/// `shard_range(n, shards, s) == shard_ranges(n, shards)[s]` for every
+/// `s < shard_count(n, shards)` (pinned by a unit test below), with no
+/// allocation — the warm sharded path's per-call form (DESIGN.md §2.12).
+pub fn shard_range(n: usize, shards: usize, s: usize) -> std::ops::Range<usize> {
+    let shards = shard_count(n, shards);
+    debug_assert!(s < shards);
+    let base = n / shards;
+    let extra = n % shards;
+    let start = s * base + s.min(extra);
+    start..start + base + usize::from(s < extra)
 }
 
 // ---------------------------------------------------------------------------
@@ -815,21 +888,27 @@ fn top2_f32_dispatch(
 ///   conversion is storage traffic, not distance work, and charges
 ///   nothing).
 ///
-/// The f32 mirrors are rebuilt from the f64 inputs on every call (one
-/// rounding per value, O(m·d + k·d) — negligible next to the O(m·k·d)
-/// scan, and it keeps the backend stateless w.r.t. its inputs, so
-/// `Sharded<VectorAssigner>` works unchanged).
+/// The f32 mirrors are owned buffers: the point mirror is refilled per
+/// call (clear + extend — capacity is kept, so the warm path allocates
+/// nothing), and the centroid mirror is **generation-cached** (DESIGN.md
+/// §2.12): a [`GenCache`] compares the f64 centroids by value and the
+/// O(k·d) mirror conversion runs only when they actually changed — e.g.
+/// repeated evaluations at a converged centroid set. Rounding is
+/// per-value and input-deterministic, so caching cannot change a single
+/// bit of any output; `Sharded<VectorAssigner>` works unchanged (each
+/// worker owns its mirrors and cache).
 #[derive(Clone, Debug, Default)]
 pub struct VectorAssigner {
     kernel: KernelKind,
     precision: Precision,
     pf32: Vec<f32>,
     cf32: Vec<f32>,
+    cgen: GenCache,
 }
 
 impl VectorAssigner {
     pub fn new(kernel: KernelKind, precision: Precision) -> VectorAssigner {
-        VectorAssigner { kernel, precision, pf32: Vec::new(), cf32: Vec::new() }
+        VectorAssigner { kernel, precision, ..VectorAssigner::default() }
     }
 
     /// The backend an [`AssignCfg`]'s `kernel`/`precision` pair selects.
@@ -854,47 +933,99 @@ impl Assigner for VectorAssigner {
         centroids: &[f64],
         counter: &DistanceCounter,
     ) -> AssignOut {
-        let m = points.len() / d;
-        let mut out = AssignOut {
-            assign: vec![0u32; m],
-            d1: vec![0.0; m],
-            d2: vec![0.0; m],
-        };
+        let mut out = AssignOut::default();
+        self.assign_top2_into(points, d, centroids, counter, &mut out);
+        out
+    }
+
+    fn assign_top2_into(
+        &mut self,
+        points: &[f64],
+        d: usize,
+        centroids: &[f64],
+        counter: &DistanceCounter,
+        out: &mut AssignOut,
+    ) {
+        out.reset(points.len() / d);
+        self.assign_top2_slices(
+            points,
+            d,
+            centroids,
+            counter,
+            &mut out.assign,
+            &mut out.d1,
+            &mut out.d2,
+        );
+    }
+
+    fn assign_top2_slices(
+        &mut self,
+        points: &[f64],
+        d: usize,
+        centroids: &[f64],
+        counter: &DistanceCounter,
+        assign: &mut [u32],
+        d1: &mut [f64],
+        d2: &mut [f64],
+    ) {
         match self.precision {
-            Precision::F64 => top2_f64_dispatch(
-                self.kernel,
-                points,
-                d,
-                centroids,
-                &mut out.assign,
-                &mut out.d1,
-                &mut out.d2,
-                counter,
-            ),
+            Precision::F64 => {
+                top2_f64_dispatch(self.kernel, points, d, centroids, assign, d1, d2, counter)
+            }
             Precision::F32 => {
                 self.pf32.clear();
                 self.pf32.extend(points.iter().map(|&v| v as f32));
-                self.cf32.clear();
-                self.cf32.extend(centroids.iter().map(|&v| v as f32));
-                top2_f32_dispatch(
-                    self.kernel,
-                    &self.pf32,
-                    d,
-                    &self.cf32,
-                    &mut out.assign,
-                    &mut out.d1,
-                    &mut out.d2,
-                    counter,
-                );
+                if self.cgen.refresh(centroids, d) {
+                    self.cf32.clear();
+                    self.cf32.extend(centroids.iter().map(|&v| v as f32));
+                }
+                top2_f32_dispatch(self.kernel, &self.pf32, d, &self.cf32, assign, d1, d2, counter);
             }
         }
-        out
     }
 }
 
 // ---------------------------------------------------------------------------
 // Backends.
 // ---------------------------------------------------------------------------
+
+/// Generation-keyed snapshot of a derived-state input (DESIGN.md §2.12):
+/// [`refresh`](Self::refresh) compares the new input by value (plus its
+/// row width, so a reshape of identical flat values can never alias)
+/// against the cached copy, bumps the generation and re-snapshots on
+/// change, and tells the caller whether its derived state must be
+/// rebuilt. The comparison is O(len) — centroid-sized, negligible next to
+/// the O(m·k·d) scan it guards — and the snapshot buffer is reused, so a
+/// warm refresh allocates nothing. Invalidation is *only* by this value
+/// comparison: there is no time-to-live and no external dirty bit, so a
+/// stale derived state is impossible by construction.
+#[derive(Clone, Debug, Default)]
+pub struct GenCache {
+    gen: u64,
+    width: usize,
+    data: Vec<f64>,
+}
+
+impl GenCache {
+    /// `true` when `input` (at row width `width`) differs from the cached
+    /// snapshot or the cache is cold: the caller must rebuild whatever it
+    /// derives from `input`, then rely on the cache until the next miss.
+    pub fn refresh(&mut self, input: &[f64], width: usize) -> bool {
+        if self.gen > 0 && self.width == width && self.data == input {
+            return false;
+        }
+        self.gen += 1;
+        self.width = width;
+        self.data.clear();
+        self.data.extend_from_slice(input);
+        true
+    }
+
+    /// Generation counter: bumped on every rebuild, 0 while cold.
+    pub fn gen(&self) -> u64 {
+        self.gen
+    }
+}
 
 /// The serial backend: the blocked, cache-tiled canonical kernel on the
 /// calling thread. This is the default engine behind
@@ -910,25 +1041,56 @@ impl Assigner for SerialAssigner {
         centroids: &[f64],
         counter: &DistanceCounter,
     ) -> AssignOut {
-        let m = points.len() / d;
-        let mut out = AssignOut {
-            assign: vec![0u32; m],
-            d1: vec![0.0; m],
-            d2: vec![0.0; m],
-        };
-        top2_dispatch(points, d, centroids, &mut out.assign, &mut out.d1, &mut out.d2, counter);
+        let mut out = AssignOut::default();
+        self.assign_top2_into(points, d, centroids, counter, &mut out);
         out
+    }
+
+    fn assign_top2_into(
+        &mut self,
+        points: &[f64],
+        d: usize,
+        centroids: &[f64],
+        counter: &DistanceCounter,
+        out: &mut AssignOut,
+    ) {
+        out.reset(points.len() / d);
+        top2_dispatch(points, d, centroids, &mut out.assign, &mut out.d1, &mut out.d2, counter);
+    }
+
+    fn assign_top2_slices(
+        &mut self,
+        points: &[f64],
+        d: usize,
+        centroids: &[f64],
+        counter: &DistanceCounter,
+        assign: &mut [u32],
+        d1: &mut [f64],
+        d2: &mut [f64],
+    ) {
+        top2_dispatch(points, d, centroids, assign, d1, d2, counter);
     }
 }
 
 /// The sharding **combinator** (DESIGN.md §2.5): rows fanned out over
-/// `threads` scoped workers via [`shard_ranges`], each worker running its
-/// own persistent copy of an arbitrary inner backend `B` on its contiguous
-/// shard, reduced in shard order. Because every backend is bit-identical
-/// to [`SerialAssigner`] on any row slice, `Sharded<B>` is bit-identical
-/// to [`SerialAssigner`] for every inner backend and every thread count —
-/// `Sharded<NormPrunedAssigner>` and `Sharded<BoundedAssigner>` exist for
-/// free and count whatever their inner backend counts, summed over shards.
+/// `threads` logical shards via the canonical shard split, each shard
+/// running its own persistent copy of an arbitrary inner backend `B` on
+/// its contiguous row range, reduced in shard order. Because every
+/// backend is bit-identical to [`SerialAssigner`] on any row slice,
+/// `Sharded<B>` is bit-identical to [`SerialAssigner`] for every inner
+/// backend and every thread count — `Sharded<NormPrunedAssigner>` and
+/// `Sharded<BoundedAssigner>` exist for free and count whatever their
+/// inner backend counts, summed over shards.
+///
+/// Execution is on the process-wide persistent pool (DESIGN.md §2.12) —
+/// no per-call thread spawns — and each shard writes its rows directly
+/// into its disjoint window of the caller's pre-sized output via
+/// [`Assigner::assign_top2_slices`], so there is no partials-then-extend
+/// double copy and a warm [`assign_top2_into`](Assigner::assign_top2_into)
+/// call allocates nothing. `threads` stays a pure determinism key: the
+/// shard split depends only on it, while physical concurrency is whatever
+/// the pool provides (inline serial when the pool is busy — same shards,
+/// same order, same bits).
 ///
 /// Worker state persists across calls: shard `s` always owns the rows of
 /// `shard_ranges(m, threads)[s]`, so a stateful inner backend (the
@@ -965,6 +1127,53 @@ impl<B: Assigner + Clone> Sharded<B> {
     }
 }
 
+/// One sharded top-2 pass as a pool task (DESIGN.md §2.12): shard `s`
+/// runs worker `s`'s inner backend on its canonical row range,
+/// [`shard_range`]`(m, shards, s)`, writing the rows in place through its
+/// disjoint output window. The pool claims each shard index exactly once,
+/// so the raw-pointer windows never overlap, worker `s` is exclusively
+/// shard `s`'s, and the shard-order reduction is implicit in the output
+/// layout (shard order == row order — no fan-in copy at all).
+struct ShardScanTask<'a, B> {
+    points: &'a [f64],
+    d: usize,
+    centroids: &'a [f64],
+    counter: &'a DistanceCounter,
+    m: usize,
+    shards: usize,
+    workers: SendPtr<B>,
+    assign: SendPtr<u32>,
+    d1: SendPtr<f64>,
+    d2: SendPtr<f64>,
+}
+
+impl<B: Assigner + Send> PoolTask for ShardScanTask<'_, B> {
+    fn run(&self, s: usize) {
+        let r = shard_range(self.m, self.shards, s);
+        let d = self.d;
+        // Safety: each shard index is claimed exactly once (pool
+        // contract); shard ranges are disjoint and in-bounds for the m
+        // output rows, and worker `s` is touched by shard `s` alone.
+        let worker = unsafe { &mut *self.workers.0.add(s) };
+        let (assign, d1, d2) = unsafe {
+            (
+                std::slice::from_raw_parts_mut(self.assign.0.add(r.start), r.len()),
+                std::slice::from_raw_parts_mut(self.d1.0.add(r.start), r.len()),
+                std::slice::from_raw_parts_mut(self.d2.0.add(r.start), r.len()),
+            )
+        };
+        worker.assign_top2_slices(
+            &self.points[r.start * d..r.end * d],
+            d,
+            self.centroids,
+            self.counter,
+            assign,
+            d1,
+            d2,
+        );
+    }
+}
+
 impl<B: Assigner + Send> Assigner for Sharded<B> {
     fn assign_top2(
         &mut self,
@@ -973,35 +1182,61 @@ impl<B: Assigner + Send> Assigner for Sharded<B> {
         centroids: &[f64],
         counter: &DistanceCounter,
     ) -> AssignOut {
-        let m = points.len() / d;
-        let ranges = shard_ranges(m, self.threads);
-        let mut partials: Vec<AssignOut> = Vec::with_capacity(ranges.len());
-        std::thread::scope(|scope| {
-            // `ranges.len() ≤ threads == workers.len()`, so the zip pairs
-            // every shard with its persistent worker, in shard order.
-            let handles: Vec<_> = self
-                .workers
-                .iter_mut()
-                .zip(&ranges)
-                .map(|(worker, r)| {
-                    let r = r.clone();
-                    scope.spawn(move || {
-                        worker.assign_top2(&points[r.start * d..r.end * d], d, centroids, counter)
-                    })
-                })
-                .collect();
-            for h in handles {
-                partials.push(h.join().expect("assignment worker panicked"));
-            }
-        });
-        // Ordered reduction: shard order == row order.
-        let mut out = AssignOut::with_capacity(m);
-        for p in partials {
-            out.assign.extend(p.assign);
-            out.d1.extend(p.d1);
-            out.d2.extend(p.d2);
-        }
+        let mut out = AssignOut::default();
+        self.assign_top2_into(points, d, centroids, counter, &mut out);
         out
+    }
+
+    fn assign_top2_into(
+        &mut self,
+        points: &[f64],
+        d: usize,
+        centroids: &[f64],
+        counter: &DistanceCounter,
+        out: &mut AssignOut,
+    ) {
+        out.reset(points.len() / d);
+        self.assign_top2_slices(
+            points,
+            d,
+            centroids,
+            counter,
+            &mut out.assign,
+            &mut out.d1,
+            &mut out.d2,
+        );
+    }
+
+    fn assign_top2_slices(
+        &mut self,
+        points: &[f64],
+        d: usize,
+        centroids: &[f64],
+        counter: &DistanceCounter,
+        assign: &mut [u32],
+        d1: &mut [f64],
+        d2: &mut [f64],
+    ) {
+        let m = points.len() / d;
+        let shards = shard_count(m, self.threads);
+        if shards <= 1 {
+            // One shard: the inner backend straight into the caller's
+            // windows, no pool round-trip.
+            return self.workers[0].assign_top2_slices(points, d, centroids, counter, assign, d1, d2);
+        }
+        let task = ShardScanTask {
+            points,
+            d,
+            centroids,
+            counter,
+            m,
+            shards,
+            workers: SendPtr(self.workers.as_mut_ptr()),
+            assign: SendPtr(assign.as_mut_ptr()),
+            d1: SendPtr(d1.as_mut_ptr()),
+            d2: SendPtr(d2.as_mut_ptr()),
+        };
+        pool::global().run(shards, &task);
     }
 }
 
@@ -1013,8 +1248,26 @@ impl<B: Assigner + Send> Assigner for Sharded<B> {
 /// only the distance *count* shrinks (DESIGN.md §2.4: pruned backends
 /// count k centroid norms + 1 point norm per row + one unit per pair
 /// actually evaluated).
-#[derive(Clone, Copy, Debug, Default)]
-pub struct NormPrunedAssigner;
+///
+/// The centroid norms are **generation-cached** (DESIGN.md §2.12): a
+/// [`GenCache`] keeps the norm buffer valid while the centroid values are
+/// unchanged, so repeated calls at the same centroid set rebuild — and
+/// charge — the `k` norm computations only once, on the generation that
+/// built them (§2.4: the account bills work actually performed). Any
+/// centroid change rebuilds and re-charges. Norm values are input-
+/// deterministic, so caching cannot change a single output bit.
+#[derive(Clone, Debug, Default)]
+pub struct NormPrunedAssigner {
+    /// Cached ‖c‖ per centroid, valid for the cached generation.
+    norms: Vec<f64>,
+    cgen: GenCache,
+}
+
+impl NormPrunedAssigner {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
 
 impl Assigner for NormPrunedAssigner {
     fn assign_top2(
@@ -1024,19 +1277,54 @@ impl Assigner for NormPrunedAssigner {
         centroids: &[f64],
         counter: &DistanceCounter,
     ) -> AssignOut {
+        let mut out = AssignOut::default();
+        self.assign_top2_into(points, d, centroids, counter, &mut out);
+        out
+    }
+
+    fn assign_top2_into(
+        &mut self,
+        points: &[f64],
+        d: usize,
+        centroids: &[f64],
+        counter: &DistanceCounter,
+        out: &mut AssignOut,
+    ) {
+        out.reset(points.len() / d);
+        self.assign_top2_slices(
+            points,
+            d,
+            centroids,
+            counter,
+            &mut out.assign,
+            &mut out.d1,
+            &mut out.d2,
+        );
+    }
+
+    fn assign_top2_slices(
+        &mut self,
+        points: &[f64],
+        d: usize,
+        centroids: &[f64],
+        counter: &DistanceCounter,
+        assign: &mut [u32],
+        d1: &mut [f64],
+        d2: &mut [f64],
+    ) {
         let m = points.len() / d;
         let k = centroids.len() / d;
-        let mut out = AssignOut {
-            assign: vec![0u32; m],
-            d1: vec![0.0; m],
-            d2: vec![0.0; m],
-        };
-        // Centroid norms, counted as k distance computations.
-        let mut cn = vec![0.0f64; k];
-        for c in 0..k {
-            cn[c] = norm_kernel(&centroids[c * d..(c + 1) * d]);
+        // Centroid norms, counted as k distance computations on the
+        // generation that computes them; cache hits charge nothing.
+        if self.cgen.refresh(centroids, d) {
+            self.norms.clear();
+            self.norms.resize(k, 0.0);
+            for c in 0..k {
+                self.norms[c] = norm_kernel(&centroids[c * d..(c + 1) * d]);
+            }
+            counter.add(k as u64);
         }
-        counter.add(k as u64);
+        let cn = &self.norms;
 
         let mut evaluated = 0u64;
         for i in 0..m {
@@ -1071,12 +1359,11 @@ impl Assigner for NormPrunedAssigner {
                     b2_rt = b2.sqrt();
                 }
             }
-            out.assign[i] = i1;
-            out.d1[i] = b1;
-            out.d2[i] = b2;
+            assign[i] = i1;
+            d1[i] = b1;
+            d2[i] = b2;
         }
         counter.add(evaluated);
-        out
     }
 }
 
@@ -1183,6 +1470,8 @@ pub struct BoundedAssigner {
     /// m×k metric lower bounds.
     lower: Vec<f64>,
     drift: Vec<f64>,
+    /// Reusable k-length distance row of the cold prime (§2.12).
+    row: Vec<f64>,
     stats: BoundedStats,
 }
 
@@ -1214,6 +1503,25 @@ impl BoundedAssigner {
         centroids: &[f64],
         counter: &DistanceCounter,
     ) -> AssignOut {
+        let mut out = AssignOut::default();
+        out.reset(points.len() / d);
+        self.prime_slices(points, d, centroids, counter, &mut out.assign, &mut out.d1, &mut out.d2);
+        out
+    }
+
+    /// [`prime`](Self::prime) into caller-provided windows (§2.12): all
+    /// scratch lives in reused fields, so a steady-state re-prime
+    /// allocates nothing.
+    fn prime_slices(
+        &mut self,
+        points: &[f64],
+        d: usize,
+        centroids: &[f64],
+        counter: &DistanceCounter,
+        assign: &mut [u32],
+        d1: &mut [f64],
+        d2: &mut [f64],
+    ) {
         let m = points.len() / d;
         let k = centroids.len() / d;
         self.points.clear();
@@ -1230,14 +1538,14 @@ impl BoundedAssigner {
         self.lower.resize(m * k, 0.0);
         self.drift.clear();
         self.drift.resize(k, 0.0);
+        self.row.clear();
+        self.row.resize(k, 0.0);
 
-        let mut out = AssignOut::with_capacity(m);
-        let mut row = vec![0.0f64; k];
         for i in 0..m {
             let p = &points[i * d..(i + 1) * d];
-            let (_, _) = sq_dist_row(p, centroids, d, &mut row, counter);
+            let (_, _) = sq_dist_row(p, centroids, d, &mut self.row, counter);
             let (mut i1, mut i2, mut b1, mut b2) = (0u32, 0u32, f64::INFINITY, f64::INFINITY);
-            for (c, &v) in row.iter().enumerate() {
+            for (c, &v) in self.row.iter().enumerate() {
                 self.lower[i * k + c] = v.sqrt();
                 if v < b1 {
                     b2 = b1;
@@ -1251,9 +1559,9 @@ impl BoundedAssigner {
             }
             self.assign[i] = i1;
             self.runner[i] = i2;
-            out.assign.push(i1);
-            out.d1.push(b1);
-            out.d2.push(b2);
+            assign[i] = i1;
+            d1[i] = b1;
+            d2[i] = b2;
         }
         self.stats = BoundedStats {
             pairs: (m as u64) * (k as u64),
@@ -1261,7 +1569,6 @@ impl BoundedAssigner {
             bill: (m as u64) * (k as u64),
             warm: false,
         };
-        out
     }
 
     /// Warm pass: drift-update the bounds, then the capped pruned scan.
@@ -1272,6 +1579,25 @@ impl BoundedAssigner {
         centroids: &[f64],
         counter: &DistanceCounter,
     ) -> AssignOut {
+        let mut out = AssignOut::default();
+        out.reset(points.len() / d);
+        self.step_slices(points, d, centroids, counter, &mut out.assign, &mut out.d1, &mut out.d2);
+        out
+    }
+
+    /// [`step`](Self::step) into caller-provided windows (§2.12): the
+    /// warm path of the zero-allocation steady state — bounds, drifts and
+    /// the output all live in reused buffers.
+    fn step_slices(
+        &mut self,
+        points: &[f64],
+        d: usize,
+        centroids: &[f64],
+        counter: &DistanceCounter,
+        assign: &mut [u32],
+        d1: &mut [f64],
+        d2: &mut [f64],
+    ) {
         let m = points.len() / d;
         let k = self.k;
         let defl = bound_defl(d);
@@ -1293,7 +1619,6 @@ impl BoundedAssigner {
         self.centroids.clear();
         self.centroids.extend_from_slice(centroids);
 
-        let mut out = AssignOut::with_capacity(m);
         let mut pairs = 0u64;
         for i in 0..m {
             let p = &points[i * d..(i + 1) * d];
@@ -1302,9 +1627,9 @@ impl BoundedAssigner {
             pairs += 1;
             if k == 1 {
                 self.lower[i] = d_cur.sqrt();
-                out.assign.push(0);
-                out.d1.push(d_cur);
-                out.d2.push(f64::INFINITY);
+                assign[i] = 0;
+                d1[i] = d_cur;
+                d2[i] = f64::INFINITY;
                 continue;
             }
             let run = self.runner[i] as usize;
@@ -1351,9 +1676,9 @@ impl BoundedAssigner {
             self.lower[i * k + run] = d_run.sqrt();
             self.assign[i] = i1;
             self.runner[i] = i2;
-            out.assign.push(i1);
-            out.d1.push(b1);
-            out.d2.push(b2);
+            assign[i] = i1;
+            d1[i] = b1;
+            d2[i] = b2;
         }
         counter.add(pairs);
         self.stats = BoundedStats {
@@ -1362,7 +1687,6 @@ impl BoundedAssigner {
             bill: (m as u64) * (k as u64),
             warm: true,
         };
-        out
     }
 }
 
@@ -1374,11 +1698,46 @@ impl Assigner for BoundedAssigner {
         centroids: &[f64],
         counter: &DistanceCounter,
     ) -> AssignOut {
+        let mut out = AssignOut::default();
+        self.assign_top2_into(points, d, centroids, counter, &mut out);
+        out
+    }
+
+    fn assign_top2_into(
+        &mut self,
+        points: &[f64],
+        d: usize,
+        centroids: &[f64],
+        counter: &DistanceCounter,
+        out: &mut AssignOut,
+    ) {
+        out.reset(points.len() / d);
+        self.assign_top2_slices(
+            points,
+            d,
+            centroids,
+            counter,
+            &mut out.assign,
+            &mut out.d1,
+            &mut out.d2,
+        );
+    }
+
+    fn assign_top2_slices(
+        &mut self,
+        points: &[f64],
+        d: usize,
+        centroids: &[f64],
+        counter: &DistanceCounter,
+        assign: &mut [u32],
+        d1: &mut [f64],
+        d2: &mut [f64],
+    ) {
         let k = centroids.len() / d;
         if self.is_warm_for(points, d, k) {
-            self.step(points, d, centroids, counter)
+            self.step_slices(points, d, centroids, counter, assign, d1, d2)
         } else {
-            self.prime(points, d, centroids, counter)
+            self.prime_slices(points, d, centroids, counter, assign, d1, d2)
         }
     }
 
@@ -1524,6 +1883,15 @@ impl ClosureStats {
 /// closure build that would not amortize) run [`SerialAssigner`]
 /// verbatim — bit-identical output at the full `m·k` bill — and re-prime
 /// the anchors; `fallbacks` tallies them.
+///
+/// The closure table is **generation-cached** (DESIGN.md §2.12): it is a
+/// pure function of (centroids, d, candidate width), so a [`GenCache`]
+/// keeps it valid while the centroids are unchanged and a warm call at
+/// the same centroid set charges `bookkeeping = 0` — the `k·(k−1)/2`
+/// build was billed on the generation that performed it, and the
+/// self-account `counter delta == pairs + bookkeeping` stays exact per
+/// call (§2.4). All build scratch lives in reused fields, so a
+/// steady-state rebuild allocates nothing.
 #[derive(Clone, Debug)]
 pub struct ClosureAssigner {
     expand: usize,
@@ -1532,6 +1900,15 @@ pub struct ClosureAssigner {
     k: usize,
     /// Previous winner per point — the closure anchor of the next call.
     assign: Vec<u32>,
+    /// Generation-cached closure table (k×`cached_c` row-major) and rims.
+    closures: Vec<u32>,
+    rims: Vec<u32>,
+    cached_c: usize,
+    cgen: GenCache,
+    /// Reused closure-build scratch: k×k inter-centroid distances and the
+    /// per-anchor sort order.
+    dist: Vec<f64>,
+    order: Vec<u32>,
     stats: ClosureStats,
     fallbacks: u64,
 }
@@ -1554,6 +1931,12 @@ impl ClosureAssigner {
             d: 0,
             k: 0,
             assign: Vec::new(),
+            closures: Vec::new(),
+            rims: Vec::new(),
+            cached_c: 0,
+            cgen: GenCache::default(),
+            dist: Vec::new(),
+            order: Vec::new(),
             stats: ClosureStats::default(),
             fallbacks: 0,
         }
@@ -1598,7 +1981,29 @@ impl ClosureAssigner {
 /// where `closures` is k×c row-major and `bookkeeping = k·(k−1)/2`
 /// kernel evaluations.
 fn build_closures(centroids: &[f64], d: usize, k: usize, c: usize) -> (Vec<u32>, Vec<u32>, u64) {
-    let mut dist = vec![0.0f64; k * k];
+    let (mut dist, mut order) = (Vec::new(), Vec::new());
+    let (mut closures, mut rims) = (Vec::new(), Vec::new());
+    let bookkeeping =
+        build_closures_into(centroids, d, k, c, &mut dist, &mut order, &mut closures, &mut rims);
+    (closures, rims, bookkeeping)
+}
+
+/// [`build_closures`] into caller-reused buffers (DESIGN.md §2.12): all
+/// four vectors are cleared and refilled in place, so a steady-state
+/// rebuild allocates nothing once they have seen their (k, c) shape.
+#[allow(clippy::too_many_arguments)]
+fn build_closures_into(
+    centroids: &[f64],
+    d: usize,
+    k: usize,
+    c: usize,
+    dist: &mut Vec<f64>,
+    order: &mut Vec<u32>,
+    closures: &mut Vec<u32>,
+    rims: &mut Vec<u32>,
+) -> u64 {
+    dist.clear();
+    dist.resize(k * k, 0.0);
     for a in 0..k {
         for b in (a + 1)..k {
             let v =
@@ -1608,9 +2013,10 @@ fn build_closures(centroids: &[f64], d: usize, k: usize, c: usize) -> (Vec<u32>,
         }
     }
     let bookkeeping = (k * (k - 1) / 2) as u64;
-    let mut closures = vec![0u32; k * c];
-    let mut rims = vec![0u32; k];
-    let mut order: Vec<u32> = Vec::with_capacity(k);
+    closures.clear();
+    closures.resize(k * c, 0);
+    rims.clear();
+    rims.resize(k, 0);
     for a in 0..k {
         order.clear();
         order.extend(0..k as u32);
@@ -1623,7 +2029,7 @@ fn build_closures(centroids: &[f64], d: usize, k: usize, c: usize) -> (Vec<u32>,
         rims[a] = sel[c - 1];
         sel.sort_unstable();
     }
-    (closures, rims, bookkeeping)
+    bookkeeping
 }
 
 /// One approximate pass: each point scanned against the closure of its
@@ -1638,8 +2044,38 @@ fn closure_scan(
     c: usize,
     rims: &[u32],
 ) -> (AssignOut, u64, u64) {
+    let mut out = AssignOut::default();
+    out.reset(points.len() / d);
+    let (pairs, hits) = closure_scan_slices(
+        points,
+        d,
+        centroids,
+        anchors,
+        closures,
+        c,
+        rims,
+        &mut out.assign,
+        &mut out.d1,
+        &mut out.d2,
+    );
+    (out, pairs, hits)
+}
+
+/// [`closure_scan`] into caller-provided windows (DESIGN.md §2.12).
+#[allow(clippy::too_many_arguments)]
+fn closure_scan_slices(
+    points: &[f64],
+    d: usize,
+    centroids: &[f64],
+    anchors: &[u32],
+    closures: &[u32],
+    c: usize,
+    rims: &[u32],
+    assign: &mut [u32],
+    d1: &mut [f64],
+    d2: &mut [f64],
+) -> (u64, u64) {
     let m = points.len() / d;
-    let mut out = AssignOut::with_capacity(m);
     let mut hits = 0u64;
     for i in 0..m {
         let p = &points[i * d..(i + 1) * d];
@@ -1659,11 +2095,11 @@ fn closure_scan(
         if i1 != rims[a] {
             hits += 1;
         }
-        out.assign.push(i1);
-        out.d1.push(b1);
-        out.d2.push(b2);
+        assign[i] = i1;
+        d1[i] = b1;
+        d2[i] = b2;
     }
-    (out, (m * c) as u64, hits)
+    ((m * c) as u64, hits)
 }
 
 impl Assigner for ClosureAssigner {
@@ -1674,20 +2110,56 @@ impl Assigner for ClosureAssigner {
         centroids: &[f64],
         counter: &DistanceCounter,
     ) -> AssignOut {
+        let mut out = AssignOut::default();
+        self.assign_top2_into(points, d, centroids, counter, &mut out);
+        out
+    }
+
+    fn assign_top2_into(
+        &mut self,
+        points: &[f64],
+        d: usize,
+        centroids: &[f64],
+        counter: &DistanceCounter,
+        out: &mut AssignOut,
+    ) {
+        out.reset(points.len() / d);
+        self.assign_top2_slices(
+            points,
+            d,
+            centroids,
+            counter,
+            &mut out.assign,
+            &mut out.d1,
+            &mut out.d2,
+        );
+    }
+
+    fn assign_top2_slices(
+        &mut self,
+        points: &[f64],
+        d: usize,
+        centroids: &[f64],
+        counter: &DistanceCounter,
+        assign: &mut [u32],
+        d1: &mut [f64],
+        d2: &mut [f64],
+    ) {
         let m = points.len() / d;
         let k = centroids.len() / d;
         if !self.is_warm_for(points, d, k) || !self.approx_viable(m, k) {
             // Exact fallback (cold anchors, shape change, or a closure
             // that would be total / would not amortize): the serial
             // engine at its full `m·k` bill, which also re-primes the
-            // anchors.
-            let out = SerialAssigner.assign_top2(points, d, centroids, counter);
+            // anchors. The closure-table cache is untouched — it depends
+            // only on (centroids, d, c), which a fallback does not change.
+            SerialAssigner.assign_top2_slices(points, d, centroids, counter, assign, d1, d2);
             self.points.clear();
             self.points.extend_from_slice(points);
             self.d = d;
             self.k = k;
             self.assign.clear();
-            self.assign.extend_from_slice(&out.assign);
+            self.assign.extend_from_slice(assign);
             self.fallbacks += 1;
             self.stats = ClosureStats {
                 pairs: (m as u64) * (k as u64),
@@ -1699,14 +2171,42 @@ impl Assigner for ClosureAssigner {
                 points: m as u64,
                 fallbacks: self.fallbacks,
             };
-            return out;
+            return;
         }
         let c = self.candidates(k);
-        let (closures, rims, bookkeeping) = build_closures(centroids, d, k, c);
-        let (out, pairs, hits) =
-            closure_scan(points, d, centroids, &self.assign, &closures, c, &rims);
+        // Rebuild — and charge — the closure table only when the
+        // centroid generation (or the candidate width) actually changed
+        // (§2.12); a cache hit reports `bookkeeping = 0`, keeping the
+        // per-call self-account exact (§2.4).
+        let bookkeeping = if self.cgen.refresh(centroids, d) || self.cached_c != c {
+            self.cached_c = c;
+            build_closures_into(
+                centroids,
+                d,
+                k,
+                c,
+                &mut self.dist,
+                &mut self.order,
+                &mut self.closures,
+                &mut self.rims,
+            )
+        } else {
+            0
+        };
+        let (pairs, hits) = closure_scan_slices(
+            points,
+            d,
+            centroids,
+            &self.assign,
+            &self.closures,
+            c,
+            &self.rims,
+            assign,
+            d1,
+            d2,
+        );
         counter.add(pairs + bookkeeping);
-        self.assign.copy_from_slice(&out.assign);
+        self.assign.copy_from_slice(assign);
         self.stats = ClosureStats {
             pairs,
             bookkeeping,
@@ -1717,7 +2217,6 @@ impl Assigner for ClosureAssigner {
             points: m as u64,
             fallbacks: self.fallbacks,
         };
-        out
     }
 
     /// Measured E-vs-exact of the state this backend is in *right now*:
@@ -1893,6 +2392,9 @@ impl ChoiceCounts {
 #[derive(Clone, Debug)]
 pub struct AutoAssigner {
     bounded: BoundedAssigner,
+    /// Persistent norm-pruned worker, so its generation-cached centroid
+    /// norms (§2.12) survive across demoted steps.
+    pruned: NormPrunedAssigner,
     /// The approximate fourth choice; `None` on the default exact engine.
     closure: Option<ClosureAssigner>,
     step: u64,
@@ -1916,6 +2418,7 @@ impl Default for AutoAssigner {
     fn default() -> Self {
         AutoAssigner {
             bounded: BoundedAssigner::new(),
+            pruned: NormPrunedAssigner::new(),
             closure: None,
             step: 0,
             warm_steps: 0,
@@ -1985,7 +2488,7 @@ impl AutoAssigner {
                 self.last_hit = cl.last_stats().hit_rate();
                 out
             }
-            _ => NormPrunedAssigner.assign_top2(points, d, centroids, counter),
+            _ => self.pruned.assign_top2(points, d, centroids, counter),
         };
         self.step += 1;
         self.last_choice = Some(choice);
@@ -2044,7 +2547,7 @@ impl Assigner for AutoAssigner {
             }
             AutoChoice::Serial => SerialAssigner.assign_top2(points, d, centroids, counter),
             AutoChoice::NormPruned | AutoChoice::Closure => {
-                NormPrunedAssigner.assign_top2(points, d, centroids, counter)
+                self.pruned.assign_top2(points, d, centroids, counter)
             }
         };
         self.step += 1;
@@ -2127,8 +2630,8 @@ pub fn weighted_step(
     weighted_step_with(engine, &mut StepScratch::default(), reps, weights, d, centroids, counter)
 }
 
-/// [`weighted_step`] with caller-owned accumulation scratch (the returned
-/// assign/d1/d2 buffers are part of [`StepOut`] and necessarily fresh).
+/// [`weighted_step`] with caller-owned accumulation scratch. One-shot
+/// form of [`weighted_step_into`] on a fresh [`StepOut`].
 pub fn weighted_step_with(
     engine: &mut dyn Assigner,
     scratch: &mut StepScratch,
@@ -2138,9 +2641,39 @@ pub fn weighted_step_with(
     centroids: &[f64],
     counter: &DistanceCounter,
 ) -> StepOut {
+    let mut out = StepOut::default();
+    weighted_step_into(engine, scratch, reps, weights, d, centroids, counter, &mut out);
+    out
+}
+
+/// One weighted-Lloyd iteration into a caller-owned reusable [`StepOut`]
+/// (DESIGN.md §2.12): the assignment pass lands in `out`'s assign/d1/d2
+/// buffers through [`Assigner::assign_top2_into`] and the centroid update
+/// is written in place, so a warm caller — pre-sized buffers, exact
+/// backend — performs **zero heap allocations per step** (pinned by
+/// `tests/pool_conformance.rs`). Accumulation stays serial in row order,
+/// so every value is bit-identical to [`weighted_step`]'s.
+#[allow(clippy::too_many_arguments)]
+pub fn weighted_step_into(
+    engine: &mut dyn Assigner,
+    scratch: &mut StepScratch,
+    reps: &[f64],
+    weights: &[f64],
+    d: usize,
+    centroids: &[f64],
+    counter: &DistanceCounter,
+    out: &mut StepOut,
+) {
     let m = weights.len();
     let k = centroids.len() / d;
-    let top2 = engine.assign_top2(reps, d, centroids, counter);
+    // Reuse out's buffers as the assignment arena (moved out and back, so
+    // the engine sees one coherent AssignOut).
+    let mut top2 = AssignOut {
+        assign: std::mem::take(&mut out.assign),
+        d1: std::mem::take(&mut out.d1),
+        d2: std::mem::take(&mut out.d2),
+    };
+    engine.assign_top2_into(reps, d, centroids, counter, &mut top2);
 
     scratch.sums.clear();
     scratch.sums.resize(k * d, 0.0);
@@ -2159,16 +2692,20 @@ pub fn weighted_step_with(
         scratch.counts[c] += w;
     }
 
-    let mut out = centroids.to_vec();
+    out.centroids.clear();
+    out.centroids.extend_from_slice(centroids);
     for c in 0..k {
         if scratch.counts[c] > 0.0 {
             let inv = 1.0 / scratch.counts[c];
             for j in 0..d {
-                out[c * d + j] = scratch.sums[c * d + j] * inv;
+                out.centroids[c * d + j] = scratch.sums[c * d + j] * inv;
             }
         }
     }
-    StepOut { centroids: out, assign: top2.assign, d1: top2.d1, d2: top2.d2, werr }
+    out.assign = top2.assign;
+    out.d1 = top2.d1;
+    out.d2 = top2.d2;
+    out.werr = werr;
 }
 
 /// Assignment + SSE on any [`Assigner`] backend — the E^D / E^P evaluator
@@ -2457,7 +2994,7 @@ mod tests {
             let c2 = counter();
             let sharded = ShardedAssigner::new(threads).assign_top2(&reps, d, &cents, &c2);
             let c3 = counter();
-            let pruned = NormPrunedAssigner.assign_top2(&reps, d, &cents, &c3);
+            let pruned = NormPrunedAssigner::new().assign_top2(&reps, d, &cents, &c3);
 
             // Sharded: identical output AND identical count.
             assert_eq!(serial, sharded);
@@ -2593,6 +3130,11 @@ mod tests {
                 let lens: Vec<usize> = ranges.iter().map(|r| r.len()).collect();
                 let (lo, hi) = (lens.iter().min().unwrap(), lens.iter().max().unwrap());
                 assert!(hi - lo <= 1);
+                // The closed form is the same split, entry for entry.
+                assert_eq!(ranges.len(), shard_count(n, shards));
+                for (s, r) in ranges.iter().enumerate() {
+                    assert_eq!(shard_range(n, shards, s), *r, "n={n} shards={shards} s={s}");
+                }
             }
         }
     }
@@ -2633,7 +3175,7 @@ mod tests {
         let c_exact = counter();
         let exact = SerialAssigner.assign_top2(&reps, d, &cents, &c_exact);
         let c_pruned = counter();
-        let pruned = NormPrunedAssigner.assign_top2(&reps, d, &cents, &c_pruned);
+        let pruned = NormPrunedAssigner::new().assign_top2(&reps, d, &cents, &c_pruned);
         assert_eq!(exact, pruned);
         assert!(
             c_pruned.get() < c_exact.get() / 2,

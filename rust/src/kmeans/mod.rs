@@ -22,8 +22,8 @@ pub mod weighted_lloyd;
 
 pub use assign::{
     AssignCfg, AssignMode, Assigner, AssignOut, AutoAssigner, AutoChoice, BoundedAssigner,
-    BoundedStats, ChoiceCounts, ClosureAssigner, ClosureStats, KernelKind, NormPrunedAssigner,
-    Precision, SerialAssigner, Sharded, ShardedAssigner, VectorAssigner,
+    BoundedStats, ChoiceCounts, ClosureAssigner, ClosureStats, GenCache, KernelKind,
+    NormPrunedAssigner, Precision, SerialAssigner, Sharded, ShardedAssigner, VectorAssigner,
 };
 pub use init::{KmeansParSeeder, ParCfg, SeedMethod, SeedPolicy, Seeder};
 pub use elkan::{elkan_weighted_lloyd, ElkanOutcome};

@@ -23,12 +23,15 @@ use crate::obs::Recorder;
 use crate::util::Rng;
 
 use super::assign::{
-    sq_dist_kernel, weighted_step_with, AssignCfg, AssignMode, Assigner, ClosureAssigner,
-    KernelKind, Precision, SerialAssigner, StepScratch, VectorAssigner,
+    sq_dist_kernel, weighted_step_into, weighted_step_with, AssignCfg, AssignMode, Assigner,
+    ClosureAssigner, KernelKind, Precision, SerialAssigner, StepScratch, VectorAssigner,
 };
 
-/// Result of one weighted-Lloyd iteration.
-#[derive(Clone, Debug)]
+/// Result of one weighted-Lloyd iteration. `Default` is the empty arena:
+/// callers that iterate hold one `StepOut` and refill it through
+/// [`Stepper::step_into`] so the warm loop reuses its buffers
+/// (DESIGN.md §2.12).
+#[derive(Clone, Debug, Default)]
 pub struct StepOut {
     /// Flat k×d updated centroids.
     pub centroids: Vec<f64>,
@@ -56,6 +59,24 @@ pub trait Stepper {
         centroids: &[f64],
         counter: &DistanceCounter,
     ) -> StepOut;
+
+    /// Arena form of [`Stepper::step`] (DESIGN.md §2.12): refill `out` in
+    /// place so a caller looping with one `StepOut` re-uses its buffers.
+    /// Must be observably identical to `step` — same outputs bit-for-bit,
+    /// same counter activity; the only difference is where the result
+    /// lands. The default simply overwrites `out` with a fresh `step`;
+    /// steppers with allocation-free paths override it.
+    fn step_into(
+        &mut self,
+        reps: &[f64],
+        weights: &[f64],
+        d: usize,
+        centroids: &[f64],
+        counter: &DistanceCounter,
+        out: &mut StepOut,
+    ) {
+        *out = self.step(reps, weights, d, centroids, counter);
+    }
 
     /// The approximate regime's self-report hook (DESIGN.md §2.9):
     /// measured E-vs-exact of this stepper's current approximation, as
@@ -141,6 +162,30 @@ impl<B: Assigner> Stepper for EngineStepper<B> {
             centroids,
             counter,
         )
+    }
+
+    /// The zero-allocation warm path (DESIGN.md §2.12): assignment writes
+    /// straight into `out`'s retained buffers through
+    /// [`weighted_step_into`], so a warm iteration allocates nothing.
+    fn step_into(
+        &mut self,
+        reps: &[f64],
+        weights: &[f64],
+        d: usize,
+        centroids: &[f64],
+        counter: &DistanceCounter,
+        out: &mut StepOut,
+    ) {
+        weighted_step_into(
+            &mut self.engine,
+            &mut self.scratch,
+            reps,
+            weights,
+            d,
+            centroids,
+            counter,
+            out,
+        );
     }
 
     /// Forward to the engine: an approximate backend (the closure
@@ -265,8 +310,15 @@ impl SampledStepper {
     ) -> StepOut {
         let m = weights.len();
         let k = centroids.len() / d;
-        let out =
-            weighted_step_with(&mut self.engine, &mut self.scratch, reps, weights, d, centroids, counter);
+        let out = weighted_step_with(
+            &mut self.engine,
+            &mut self.scratch,
+            reps,
+            weights,
+            d,
+            centroids,
+            counter,
+        );
         self.points.clear();
         self.points.extend_from_slice(reps);
         self.d = d;
@@ -509,34 +561,38 @@ pub fn weighted_lloyd_with(
     let k = init.len() / d;
     let mut centroids = init.to_vec();
     let mut prev_err = f64::INFINITY;
-    let mut last = None;
     let mut iters = 0;
     let mut last_shift = f64::INFINITY;
+    // One arena for the whole run: `step_into` refills these buffers in
+    // place each iteration, so the warm loop allocates nothing
+    // (DESIGN.md §2.12).
+    let mut step = StepOut::default();
+    let mut ran = false;
 
     while iters < cfg.max_iters && !cfg.budget.exceeded(counter) {
-        let step = stepper.step(reps, weights, d, &centroids, counter);
+        stepper.step_into(reps, weights, d, &centroids, counter, &mut step);
+        ran = true;
         iters += 1;
         last_shift = max_shift(&centroids, &step.centroids, d, k);
         let done = (prev_err - step.werr).abs() <= cfg.tol;
         prev_err = step.werr;
-        centroids = step.centroids.clone();
-        last = Some(step);
+        centroids.copy_from_slice(&step.centroids);
         if done {
             break;
         }
     }
 
-    let last = last.unwrap_or_else(|| {
+    if !ran {
         // Zero iterations (exhausted budget): still produce a consistent
         // assignment so callers can proceed.
-        stepper.step(reps, weights, d, &centroids, counter)
-    });
+        stepper.step_into(reps, weights, d, &centroids, counter, &mut step);
+    }
     WLloydOutcome {
         centroids,
-        assign: last.assign,
-        d1: last.d1,
-        d2: last.d2,
-        werr: last.werr,
+        assign: step.assign,
+        d1: step.d1,
+        d2: step.d2,
+        werr: step.werr,
         iters,
         last_shift,
     }
@@ -758,6 +814,34 @@ mod tests {
             a.iter().zip(&c3).any(|(x, y)| x.centroids != y.centroids),
             "a different seed should draw a different sample"
         );
+    }
+
+    #[test]
+    fn step_into_reuses_buffers_and_matches_step_bitwise() {
+        // The arena form is observably identical to `step` (DESIGN.md
+        // §2.12): same outputs by `==`, same counter activity — only the
+        // destination differs.
+        let mut g = prop::Gen { rng: crate::util::Rng::new(44), case: 0 };
+        let (m, d, k) = (60, 3, 4);
+        let reps = g.cloud(m, d, 2.0);
+        let weights: Vec<f64> = (0..m).map(|_| g.int(1, 5) as f64).collect();
+        let mut cents = g.cloud(k, d, 2.0);
+        let mut fresh = NativeStepper::new();
+        let mut arena = NativeStepper::new();
+        let mut out = StepOut::default();
+        for step in 0..4 {
+            let c1 = counter();
+            let a = fresh.step(&reps, &weights, d, &cents, &c1);
+            let c2 = counter();
+            arena.step_into(&reps, &weights, d, &cents, &c2, &mut out);
+            assert_eq!(a.assign, out.assign, "step {step}");
+            assert_eq!(a.d1, out.d1);
+            assert_eq!(a.d2, out.d2);
+            assert_eq!(a.centroids, out.centroids);
+            assert_eq!(a.werr.to_bits(), out.werr.to_bits());
+            assert_eq!(c1.get(), c2.get());
+            cents = a.centroids;
+        }
     }
 
     #[test]

@@ -1,6 +1,7 @@
 //! Shared substrates: deterministic PRNG, mini property-test harness,
 //! and small formatting helpers used by the CLI/bench output.
 
+pub mod pool;
 pub mod prop;
 pub mod rng;
 

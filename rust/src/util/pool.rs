@@ -1,0 +1,474 @@
+//! Process-wide persistent worker pool (DESIGN.md §2.12).
+//!
+//! Every parallel surface in the crate — [`Sharded`](crate::kmeans::Sharded),
+//! the CLI `threads>1` coordinator path, the job scheduler
+//! (`coordinator/jobs.rs`) and the streaming `ChunkCrew` — used to stand up
+//! its own scoped OS threads per call. On the warm Lloyd loop that means a
+//! spawn/join pair *per iteration*, which dominates wall-clock once the
+//! distance kernel itself is cheap. This module replaces all of that with
+//! one set of long-lived workers, parked on a condvar between jobs.
+//!
+//! ## Contract (DESIGN.md §2.12)
+//!
+//! * **Single published slot.** At most one job occupies the pool. A
+//!   [`WorkerPool::run`] that finds the slot busy — including every
+//!   re-entrant call from inside a pool task — executes all shards inline
+//!   on the caller. Inline execution is the *same code on the same shard
+//!   indices in the same order*, so results are bit-identical; only timing
+//!   changes. This rule is also the oversubscription policy: when a
+//!   sharded job runs under the job scheduler, the inner shards degrade to
+//!   inline instead of competing with the outer workers for cores.
+//! * **Shard indices are determinism keys, not threads.** A job publishes
+//!   `shards` logical shards; callers choose `shards` (e.g. the CLI
+//!   `threads=` value) and the split rule
+//!   ([`shard_ranges`](crate::kmeans::assign::shard_ranges)) depends only
+//!   on it.
+//!   Physical concurrency is capped by the machine-sized pool no matter
+//!   what `shards` is.
+//! * **Leader participates and joins.** [`WorkerPool::run`] claims shards
+//!   alongside the workers and returns only after every shard has
+//!   finished, so borrowing the task by reference is sound even though the
+//!   workers are `'static` threads (the task pointer is lifetime-erased
+//!   internally and never outlives the call).
+//! * **Panics propagate.** A panicking shard is caught on the worker, the
+//!   job drains, and the first payload is re-thrown on the leader — the
+//!   pool itself survives.
+//! * **No allocation on the leader path.** Publishing, claiming and
+//!   joining touch only the mutex/condvars and in-place state, so a warm
+//!   caller with pre-sized output buffers stays allocation-free
+//!   (pinned by `tests/pool_conformance.rs`).
+//!
+//! The [`WorkerPool::defer`]/[`WorkerPool::wait`] pair exposes the same
+//! slot without leader participation until `wait`, which is what the
+//! streaming crew's read-ahead overlap needs (read chunk N+1 while the
+//! pool chews chunk N).
+
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex, Once, OnceLock};
+use std::time::Instant;
+
+use crate::obs::Recorder;
+
+/// A unit of pool work: `run(shard)` is called exactly once for every
+/// shard index in `0..shards`, possibly concurrently and in any order.
+/// Implementations must make shard writes disjoint (each shard owns its
+/// slice of any shared output) — the pool guarantees each index is
+/// claimed exactly once.
+pub trait PoolTask: Sync {
+    fn run(&self, shard: usize);
+}
+
+/// Adapter: any `Fn(usize) + Sync` closure as a [`PoolTask`].
+pub struct FnTask<F: Fn(usize) + Sync>(pub F);
+
+impl<F: Fn(usize) + Sync> PoolTask for FnTask<F> {
+    fn run(&self, shard: usize) {
+        (self.0)(shard)
+    }
+}
+
+/// A raw pointer that may cross threads. Used by pool tasks to hand each
+/// shard a base pointer into a shared output buffer; soundness is the
+/// *caller's* obligation (disjoint per-shard regions — the pool claims
+/// each shard index exactly once, so indexing by shard is enough).
+#[derive(Clone, Copy)]
+pub struct SendPtr<T>(pub *mut T);
+
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+/// Lifetime-erased fat pointer to the published task. Only ever
+/// dereferenced between publish and the leader's join, which the borrow
+/// in [`WorkerPool::run`]/[`WorkerPool::wait`] outlives by construction.
+#[derive(Clone, Copy)]
+struct TaskPtr(*const (dyn PoolTask + 'static));
+
+unsafe impl Send for TaskPtr {}
+
+struct Job {
+    task: TaskPtr,
+    shards: usize,
+    /// Next shard index to claim.
+    next: usize,
+    /// Shards claimed but not yet finished.
+    active: usize,
+    published: Instant,
+    /// First panic payload from any shard, re-thrown by the leader.
+    panic: Option<Box<dyn std::any::Any + Send>>,
+}
+
+#[derive(Default)]
+struct State {
+    job: Option<Job>,
+}
+
+/// Cumulative pool telemetry (atomics — never on the result path).
+#[derive(Default)]
+struct Stats {
+    jobs: AtomicU64,
+    shards: AtomicU64,
+    inline_shards: AtomicU64,
+    busy_ns: AtomicU64,
+    queue_wait_ns: AtomicU64,
+}
+
+/// The persistent worker pool. One process-wide instance lives behind
+/// [`global`]; tests may `Box::leak` private instances.
+pub struct WorkerPool {
+    state: Mutex<State>,
+    /// Signalled when a job (or more claimable shards) appears.
+    work: Condvar,
+    /// Signalled when a job's last active shard finishes.
+    done: Condvar,
+    workers: usize,
+    spawn: Once,
+    stats: Stats,
+}
+
+impl WorkerPool {
+    /// A pool with `workers` background threads (not yet spawned — they
+    /// start lazily on first [`run`](Self::run)/[`defer`](Self::defer)).
+    /// `workers == 0` is valid: every job runs inline on its caller.
+    pub fn new(workers: usize) -> WorkerPool {
+        WorkerPool {
+            state: Mutex::new(State::default()),
+            work: Condvar::new(),
+            done: Condvar::new(),
+            workers,
+            spawn: Once::new(),
+            stats: Stats::default(),
+        }
+    }
+
+    /// Background worker count (the leader adds one more lane while it
+    /// participates in a job).
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    fn ensure_spawned(&'static self) {
+        self.spawn.call_once(|| {
+            for i in 0..self.workers {
+                std::thread::Builder::new()
+                    .name(format!("bwkm-pool-{i}"))
+                    .spawn(move || self.worker_loop())
+                    .expect("failed to spawn pool worker");
+            }
+        });
+    }
+
+    fn worker_loop(&'static self) {
+        let mut guard = self.state.lock().expect("pool state poisoned");
+        loop {
+            let claim = match guard.job.as_mut() {
+                Some(j) if j.next < j.shards => {
+                    let s = j.next;
+                    j.next += 1;
+                    j.active += 1;
+                    let wait_ns = j.published.elapsed().as_nanos() as u64;
+                    Some((j.task, s, wait_ns))
+                }
+                _ => None,
+            };
+            match claim {
+                Some((task, shard, wait_ns)) => {
+                    drop(guard);
+                    self.stats.queue_wait_ns.fetch_add(wait_ns, Ordering::Relaxed);
+                    let t0 = Instant::now();
+                    let r = catch_unwind(AssertUnwindSafe(|| unsafe { &*task.0 }.run(shard)));
+                    self.stats.busy_ns.fetch_add(
+                        t0.elapsed().as_nanos() as u64,
+                        Ordering::Relaxed,
+                    );
+                    self.stats.shards.fetch_add(1, Ordering::Relaxed);
+                    guard = self.state.lock().expect("pool state poisoned");
+                    let j = guard.job.as_mut().expect("job cleared while shards active");
+                    j.active -= 1;
+                    if let Err(p) = r {
+                        j.panic.get_or_insert(p);
+                    }
+                    if j.next >= j.shards && j.active == 0 {
+                        self.done.notify_all();
+                    }
+                }
+                None => {
+                    guard = self.work.wait(guard).expect("pool state poisoned");
+                }
+            }
+        }
+    }
+
+    fn run_inline(&self, shards: usize, task: &dyn PoolTask) {
+        for s in 0..shards {
+            task.run(s);
+        }
+        self.stats.inline_shards.fetch_add(shards as u64, Ordering::Relaxed);
+    }
+
+    fn publish(&'static self, shards: usize, task: &dyn PoolTask) -> bool {
+        self.ensure_spawned();
+        let mut guard = self.state.lock().expect("pool state poisoned");
+        if guard.job.is_some() {
+            return false; // busy (possibly re-entrant): caller degrades inline
+        }
+        // Erase the task's lifetime for the 'static workers. Sound: the
+        // slot is cleared (and all shards joined) before the publishing
+        // call returns, so the pointer never outlives the borrow.
+        let task: TaskPtr = unsafe {
+            TaskPtr(std::mem::transmute::<*const dyn PoolTask, *const (dyn PoolTask + 'static)>(
+                task as *const dyn PoolTask,
+            ))
+        };
+        guard.job = Some(Job {
+            task,
+            shards,
+            next: 0,
+            active: 0,
+            published: Instant::now(),
+            panic: None,
+        });
+        self.stats.jobs.fetch_add(1, Ordering::Relaxed);
+        self.work.notify_all();
+        true
+    }
+
+    /// Claim shards alongside the workers until none remain, then block
+    /// until the last active shard finishes, clear the slot and re-throw
+    /// any shard panic. Only the publisher calls this.
+    fn join_published(&self) {
+        let mut guard = self.state.lock().expect("pool state poisoned");
+        loop {
+            let claim = match guard.job.as_mut() {
+                Some(j) if j.next < j.shards => {
+                    let s = j.next;
+                    j.next += 1;
+                    j.active += 1;
+                    Some((j.task, s))
+                }
+                _ => None,
+            };
+            match claim {
+                Some((task, shard)) => {
+                    drop(guard);
+                    let t0 = Instant::now();
+                    let r = catch_unwind(AssertUnwindSafe(|| unsafe { &*task.0 }.run(shard)));
+                    self.stats.busy_ns.fetch_add(
+                        t0.elapsed().as_nanos() as u64,
+                        Ordering::Relaxed,
+                    );
+                    self.stats.shards.fetch_add(1, Ordering::Relaxed);
+                    guard = self.state.lock().expect("pool state poisoned");
+                    let j = guard.job.as_mut().expect("job cleared while shards active");
+                    j.active -= 1;
+                    if let Err(p) = r {
+                        j.panic.get_or_insert(p);
+                    }
+                }
+                None => {
+                    let j = guard.job.as_ref().expect("join without a published job");
+                    if j.active == 0 {
+                        break;
+                    }
+                    guard = self.done.wait(guard).expect("pool state poisoned");
+                }
+            }
+        }
+        let job = guard.job.take().expect("join without a published job");
+        drop(guard);
+        if let Some(p) = job.panic {
+            resume_unwind(p);
+        }
+    }
+
+    /// Run `task.run(s)` once for every `s in 0..shards`, concurrently
+    /// across the pool, and return when all shards are done. Falls back to
+    /// inline serial execution (identical results) when the pool is busy,
+    /// the call is re-entrant, `shards <= 1` or the pool has no workers.
+    pub fn run(&'static self, shards: usize, task: &dyn PoolTask) {
+        if shards == 0 {
+            return;
+        }
+        if shards == 1 || self.workers == 0 || !self.publish(shards, task) {
+            return self.run_inline(shards, task);
+        }
+        self.join_published();
+    }
+
+    /// Publish a job *without* participating, so the caller can overlap
+    /// its own work (the streaming crew's chunk read-ahead) with the
+    /// pool's. Returns `false` — and runs **nothing** — when the slot is
+    /// busy or the pool has no workers; the caller must then execute the
+    /// task itself (inline) instead of calling [`wait`](Self::wait).
+    ///
+    /// # Safety
+    ///
+    /// On `true`, the caller must keep `task` (and everything it borrows)
+    /// alive and un-moved until the matching [`wait`](Self::wait)
+    /// returns, and must call `wait` before publishing anything else.
+    pub unsafe fn defer(&'static self, shards: usize, task: &dyn PoolTask) -> bool {
+        if shards == 0 || self.workers == 0 {
+            return false;
+        }
+        self.publish(shards, task)
+    }
+
+    /// Join a job published with [`defer`](Self::defer): help claim any
+    /// unclaimed shards, block until the job drains, re-throw panics.
+    pub fn wait(&'static self) {
+        self.join_published();
+    }
+
+    /// Publish cumulative pool telemetry as `pool.*` gauges (DESIGN.md
+    /// §2.11: strictly observational, allocation-free when `rec` is off).
+    pub fn record_metrics(&self, rec: &Recorder) {
+        if !rec.is_on() {
+            return;
+        }
+        rec.gauge_u64("pool.workers", self.workers as u64);
+        rec.gauge_u64("pool.jobs", self.stats.jobs.load(Ordering::Relaxed));
+        rec.gauge_u64("pool.shards", self.stats.shards.load(Ordering::Relaxed));
+        rec.gauge_u64("pool.inline_shards", self.stats.inline_shards.load(Ordering::Relaxed));
+        rec.gauge("pool.busy_s", self.stats.busy_ns.load(Ordering::Relaxed) as f64 * 1e-9);
+        rec.gauge(
+            "pool.queue_wait_s",
+            self.stats.queue_wait_ns.load(Ordering::Relaxed) as f64 * 1e-9,
+        );
+        let depth = {
+            let guard = self.state.lock().expect("pool state poisoned");
+            guard.job.as_ref().map_or(0, |j| (j.shards - j.next) as u64)
+        };
+        rec.gauge_u64("pool.queue_depth", depth);
+    }
+}
+
+static POOL: OnceLock<WorkerPool> = OnceLock::new();
+
+/// The process-wide pool: `available_parallelism - 1` background workers
+/// (the leader of any job is the extra lane), spawned lazily on first use.
+pub fn global() -> &'static WorkerPool {
+    POOL.get_or_init(|| {
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        WorkerPool::new(cores.saturating_sub(1))
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    fn leaked(workers: usize) -> &'static WorkerPool {
+        Box::leak(Box::new(WorkerPool::new(workers)))
+    }
+
+    #[test]
+    fn every_shard_runs_exactly_once() {
+        let pool = leaked(3);
+        for shards in [1usize, 2, 5, 16, 33] {
+            let hits: Vec<AtomicUsize> = (0..shards).map(|_| AtomicUsize::new(0)).collect();
+            pool.run(
+                shards,
+                &FnTask(|s| {
+                    hits[s].fetch_add(1, Ordering::Relaxed);
+                }),
+            );
+            for (s, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::Relaxed), 1, "shard {s} of {shards}");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_worker_pool_runs_inline() {
+        let pool = leaked(0);
+        let hits = AtomicUsize::new(0);
+        pool.run(4, &FnTask(|_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        }));
+        assert_eq!(hits.load(Ordering::Relaxed), 4);
+        assert_eq!(pool.stats.inline_shards.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn reentrant_run_degrades_inline_and_completes() {
+        let pool = leaked(2);
+        let outer = AtomicUsize::new(0);
+        let inner = AtomicUsize::new(0);
+        pool.run(
+            4,
+            &FnTask(|_| {
+                outer.fetch_add(1, Ordering::Relaxed);
+                // Nested publish finds the slot busy: inline fallback.
+                pool.run(3, &FnTask(|_| {
+                    inner.fetch_add(1, Ordering::Relaxed);
+                }));
+            }),
+        );
+        assert_eq!(outer.load(Ordering::Relaxed), 4);
+        assert_eq!(inner.load(Ordering::Relaxed), 12);
+        assert!(pool.stats.inline_shards.load(Ordering::Relaxed) >= 12);
+    }
+
+    #[test]
+    fn shard_panic_propagates_and_pool_survives() {
+        let pool = leaked(2);
+        let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run(4, &FnTask(|s| {
+                if s == 2 {
+                    panic!("shard boom");
+                }
+            }));
+        }));
+        let payload = r.expect_err("shard panic must reach the leader");
+        let msg = payload.downcast_ref::<&str>().copied().unwrap_or_default();
+        assert_eq!(msg, "shard boom");
+        // The slot is clear and the workers are still alive.
+        let hits = AtomicUsize::new(0);
+        pool.run(8, &FnTask(|_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        }));
+        assert_eq!(hits.load(Ordering::Relaxed), 8);
+    }
+
+    #[test]
+    fn defer_then_wait_runs_everything() {
+        let pool = leaked(2);
+        let hits: Vec<AtomicUsize> = (0..6).map(|_| AtomicUsize::new(0)).collect();
+        let task = FnTask(|s: usize| {
+            hits[s].fetch_add(1, Ordering::Relaxed);
+        });
+        // Safety: `task` outlives the wait() below.
+        if unsafe { pool.defer(6, &task) } {
+            pool.wait();
+        } else {
+            pool.run_inline(6, &task);
+        }
+        for h in &hits {
+            assert_eq!(h.load(Ordering::Relaxed), 1);
+        }
+    }
+
+    #[test]
+    fn stats_accumulate_and_metrics_record() {
+        let pool = leaked(2);
+        pool.run(4, &FnTask(|_| {}));
+        assert_eq!(pool.stats.jobs.load(Ordering::Relaxed), 1);
+        assert_eq!(pool.stats.shards.load(Ordering::Relaxed), 4);
+        let rec = Recorder::summary();
+        pool.record_metrics(&rec);
+        assert_eq!(rec.gauge_last("pool.shards"), Some(4.0));
+        assert_eq!(rec.gauge_last("pool.queue_depth"), Some(0.0));
+        // Off recorder: no-op, no panic.
+        pool.record_metrics(&Recorder::off());
+    }
+
+    #[test]
+    fn global_pool_is_machine_sized_and_stable() {
+        let a = global() as *const WorkerPool;
+        let b = global() as *const WorkerPool;
+        assert_eq!(a, b);
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        assert_eq!(global().workers(), cores.saturating_sub(1));
+    }
+}

@@ -148,6 +148,29 @@ fn obs_module_cites_the_observability_contract() {
 }
 
 #[test]
+fn pool_module_cites_the_steady_state_contract() {
+    // The zero-allocation steady state (shared worker pool, arenas,
+    // generation caches) was specified as DESIGN.md §2.12; both sides of
+    // that link must exist — the section header in the document and at
+    // least one citation in the pool module — so the pool/arena contract
+    // can't silently detach from its code.
+    let root = repo_root();
+    let design = fs::read_to_string(root.join("DESIGN.md"))
+        .expect("DESIGN.md must exist at the repository root");
+    let (numeric, _) = anchors(&design);
+    assert!(
+        numeric.contains("2.12"),
+        "DESIGN.md is missing the §2.12 pool/arena/cache-generation header; found {numeric:?}"
+    );
+
+    let pool = root.join("rust").join("src").join("util").join("pool.rs");
+    let cites = fs::read_to_string(&pool)
+        .map(|text| citations(&normalize(&text)).iter().any(|t| t == "2.12"))
+        .unwrap_or(false);
+    assert!(cites, "rust/src/util/pool.rs never cites DESIGN.md §2.12");
+}
+
+#[test]
 fn every_design_citation_resolves() {
     let root = repo_root();
     let design = fs::read_to_string(root.join("DESIGN.md"))

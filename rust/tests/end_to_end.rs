@@ -164,7 +164,7 @@ fn sharded_bwkm_equals_serial() {
     let c1 = DistanceCounter::new();
     let serial = bwkm::bwkm::run(&ds, 3, &cfg, &mut Rng::new(11), &c1);
     let c2 = DistanceCounter::new();
-    let mut stepper = bwkm::coordinator::ShardedStepper { threads: 3 };
+    let mut stepper = bwkm::coordinator::ShardedStepper::new(3);
     let sharded = bwkm::bwkm::run_with(&mut stepper, &ds, 3, &cfg, &mut Rng::new(11), &c2);
     assert_eq!(c1.get(), c2.get());
     for (a, b) in serial.centroids.iter().zip(&sharded.centroids) {

@@ -94,7 +94,7 @@ fn prop_every_backend_bit_identical_to_serial() {
                 },
                 {
                     let c = counter();
-                    let out = NormPrunedAssigner.assign_top2(&reps, d, &cents, &c);
+                    let out = NormPrunedAssigner::new().assign_top2(&reps, d, &cents, &c);
                     ("normpruned", out, c.get())
                 },
                 {
@@ -164,7 +164,7 @@ fn exact_tie_centroids_lowest_index_wins_on_every_backend() {
     let mut shp: Sharded<NormPrunedAssigner> = Sharded::new(3);
     let mut shb: Sharded<BoundedAssigner> = Sharded::new(3);
     for _ in 0..2 {
-        assert_eq!(serial, NormPrunedAssigner.assign_top2(&reps, d, &cents, &counter()));
+        assert_eq!(serial, NormPrunedAssigner::new().assign_top2(&reps, d, &cents, &counter()));
         assert_eq!(serial, bounded.assign_top2(&reps, d, &cents, &counter()));
         assert_eq!(serial, auto.assign_top2(&reps, d, &cents, &counter()));
         assert_eq!(serial, shp.assign_top2(&reps, d, &cents, &counter()));
@@ -565,7 +565,7 @@ fn bounded_beats_normpruned_after_first_iteration_on_clustered_data() {
         assert!(stats.warm);
 
         let cn = counter();
-        let n_out = NormPrunedAssigner.assign_top2(&reps, ds.d, &cents, &cn);
+        let n_out = NormPrunedAssigner::new().assign_top2(&reps, ds.d, &cents, &cn);
         assert_eq!(b_out, n_out, "backends diverged at iteration {iter}");
 
         // NormPruned charges k + m norms + its evaluated pairs.

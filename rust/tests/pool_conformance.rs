@@ -1,0 +1,389 @@
+//! Pool / arena / generation-cache conformance (DESIGN.md §2.12).
+//!
+//! The zero-allocation steady state must be **unobservable** in every
+//! output: the shared persistent worker pool, the reusable `AssignOut` /
+//! `StepOut` arenas and the generation-keyed caches (centroid norms, f32
+//! centroid mirrors, closure tables) may change *where* bytes land and
+//! *when* derived state is rebuilt, but never a single output bit, a
+//! counter total, or a note. This suite pins:
+//!
+//! * bit-identity (`==`, no tolerances) of the arena entry points
+//!   (`assign_top2_into`, `step_into`) against the per-call entry points
+//!   (`assign_top2`, `step`) across backends {serial, normpruned,
+//!   bounded, closure, vector} × thread counts {1, 2, 8};
+//! * BWKM end-to-end: centroids, the full iteration trace, counter
+//!   totals and counter notes identical across thread counts;
+//! * the §2.12 allocation guarantee, via a counting global allocator:
+//!   a warm exact `weighted_step` performs **zero** heap allocations on
+//!   the leader thread, for the serial and the pooled sharded path; and
+//!   the `Sharded` fan-in regression — a cold `assign_top2` allocates
+//!   exactly its three output buffers (one allocation each), not the
+//!   retired partials-then-extend double copy.
+//!
+//! Allocation counts are kept **per thread** (`thread_local!`), so the
+//! pins measure the leader path deterministically even while the pool's
+//! background workers (or the test harness's other threads) run.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+use bwkm::bwkm::BwkmCfg;
+use bwkm::coordinator::ShardedStepper;
+use bwkm::data::simulate;
+use bwkm::kmeans::assign::{
+    weighted_step_into, Assigner, AssignOut, AutoAssigner, BoundedAssigner, ClosureAssigner,
+    KernelKind, NormPrunedAssigner, Precision, SerialAssigner, Sharded, ShardedAssigner,
+    StepScratch, VectorAssigner,
+};
+use bwkm::kmeans::{weighted_lloyd_with, NativeStepper, StepOut, WLloydCfg};
+use bwkm::metrics::DistanceCounter;
+use bwkm::util::Rng;
+
+// ---------------------------------------------------------------------------
+// Counting allocator (the §2.12 allocation-accounting harness)
+// ---------------------------------------------------------------------------
+
+/// Global allocator that tallies allocations per thread. `try_with`
+/// guards against TLS teardown; counting is best-effort there, exact on
+/// live test threads — which is where every pin below measures.
+struct CountingAlloc;
+
+thread_local! {
+    static TL_ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let _ = TL_ALLOCS.try_with(|c| c.set(c.get() + 1));
+        System.alloc(layout)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        let _ = TL_ALLOCS.try_with(|c| c.set(c.get() + 1));
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+/// Heap allocations `f` performed **on this thread**.
+fn thread_allocs(f: impl FnOnce()) -> u64 {
+    let before = TL_ALLOCS.with(|c| c.get());
+    f();
+    TL_ALLOCS.with(|c| c.get()) - before
+}
+
+fn counter() -> DistanceCounter {
+    DistanceCounter::new()
+}
+
+fn corpus(m: usize, d: usize, k: usize, seed: u64) -> (Vec<f64>, Vec<f64>, Vec<f64>) {
+    let mut rng = Rng::new(seed);
+    let reps: Vec<f64> = (0..m * d).map(|_| rng.normal() * 2.0).collect();
+    let weights: Vec<f64> = (0..m).map(|_| 1.0 + rng.usize(9) as f64).collect();
+    let cents: Vec<f64> = (0..k * d).map(|_| rng.normal() * 2.0).collect();
+    (reps, weights, cents)
+}
+
+#[test]
+fn counting_allocator_sees_allocations() {
+    let n = thread_allocs(|| {
+        std::hint::black_box(Vec::<u64>::with_capacity(32));
+    });
+    assert!(n >= 1, "allocator harness is blind");
+    let z = thread_allocs(|| {
+        std::hint::black_box(3u64 + 4);
+    });
+    assert_eq!(z, 0, "allocator harness over-counts");
+}
+
+// ---------------------------------------------------------------------------
+// Bit-identity: arena entry points == per-call entry points
+// ---------------------------------------------------------------------------
+
+/// Drive two instances of the same backend down the same 4-step centroid
+/// drift — one through the per-call `assign_top2`, one through the arena
+/// `assign_top2_into` with a reused buffer — and pin outputs and counter
+/// deltas `==` at every step. `expect_serial` additionally pins both
+/// against the exact serial ground truth.
+fn check_backend<B: Assigner>(
+    mut percall: B,
+    mut arena: B,
+    m: usize,
+    d: usize,
+    k: usize,
+    expect_serial: bool,
+    name: &str,
+) {
+    let (reps, _w, mut cents) = corpus(m, d, k, 0xC0DE + m as u64 + k as u64);
+    let mut drift = Rng::new(7);
+    let mut out = AssignOut::default();
+    for step in 0..4 {
+        let c1 = counter();
+        let a = percall.assign_top2(&reps, d, &cents, &c1);
+        let c2 = counter();
+        arena.assign_top2_into(&reps, d, &cents, &c2, &mut out);
+        assert_eq!(a, out, "{name}: arena diverged at step {step} (m={m} d={d} k={k})");
+        assert_eq!(c1.get(), c2.get(), "{name}: counter diverged at step {step}");
+        assert_eq!(c1.notes(), c2.notes(), "{name}: notes diverged at step {step}");
+        if expect_serial {
+            let cs = counter();
+            let s = SerialAssigner.assign_top2(&reps, d, &cents, &cs);
+            assert_eq!(s, out, "{name}: diverged from serial at step {step}");
+        }
+        for v in cents.iter_mut() {
+            *v += drift.normal() * 0.05;
+        }
+    }
+}
+
+#[test]
+fn arena_paths_bit_identical_across_backends_and_threads() {
+    for &(m, d, k) in &[(57, 3, 4), (220, 2, 7), (130, 17, 3), (9, 5, 6), (1, 2, 1)] {
+        check_backend(SerialAssigner, SerialAssigner, m, d, k, true, "serial");
+        check_backend(
+            NormPrunedAssigner::new(),
+            NormPrunedAssigner::new(),
+            m,
+            d,
+            k,
+            true,
+            "normpruned",
+        );
+        check_backend(BoundedAssigner::new(), BoundedAssigner::new(), m, d, k, true, "bounded");
+        check_backend(ClosureAssigner::new(2), ClosureAssigner::new(2), m, d, k, false, "closure");
+        check_backend(
+            VectorAssigner::new(KernelKind::Auto, Precision::F64),
+            VectorAssigner::new(KernelKind::Auto, Precision::F64),
+            m,
+            d,
+            k,
+            true,
+            "vector-f64",
+        );
+        check_backend(
+            VectorAssigner::new(KernelKind::Auto, Precision::F32),
+            VectorAssigner::new(KernelKind::Auto, Precision::F32),
+            m,
+            d,
+            k,
+            false,
+            "vector-f32",
+        );
+        check_backend(AutoAssigner::new(), AutoAssigner::new(), m, d, k, false, "auto");
+        for threads in [1usize, 2, 8] {
+            check_backend(
+                ShardedAssigner::new(threads),
+                ShardedAssigner::new(threads),
+                m,
+                d,
+                k,
+                true,
+                &format!("sharded-serial({threads})"),
+            );
+            check_backend(
+                Sharded::<BoundedAssigner>::new(threads),
+                Sharded::<BoundedAssigner>::new(threads),
+                m,
+                d,
+                k,
+                true,
+                &format!("sharded-bounded({threads})"),
+            );
+            check_backend(
+                Sharded::<NormPrunedAssigner>::new(threads),
+                Sharded::<NormPrunedAssigner>::new(threads),
+                m,
+                d,
+                k,
+                true,
+                &format!("sharded-normpruned({threads})"),
+            );
+        }
+    }
+}
+
+#[test]
+fn weighted_lloyd_on_pooled_steppers_matches_serial_across_thread_counts() {
+    let (reps, weights, cents) = corpus(180, 4, 5, 0x51ED);
+    let cfg = WLloydCfg { max_iters: 12, ..WLloydCfg::default() };
+    let c0 = counter();
+    let base = weighted_lloyd_with(&mut NativeStepper::new(), &reps, &weights, 4, &cents, &cfg, &c0);
+    for threads in [1usize, 2, 8] {
+        let c = counter();
+        let mut stepper = ShardedStepper::new(threads);
+        let got = weighted_lloyd_with(&mut stepper, &reps, &weights, 4, &cents, &cfg, &c);
+        assert_eq!(base.centroids, got.centroids, "threads={threads}");
+        assert_eq!(base.assign, got.assign, "threads={threads}");
+        assert_eq!(base.d1, got.d1, "threads={threads}");
+        assert_eq!(base.d2, got.d2, "threads={threads}");
+        assert_eq!(base.werr.to_bits(), got.werr.to_bits(), "threads={threads}");
+        assert_eq!(base.iters, got.iters, "threads={threads}");
+        assert_eq!(c0.get(), c.get(), "threads={threads}: bill diverged");
+    }
+}
+
+#[test]
+fn bwkm_trace_bill_and_notes_pinned_across_thread_counts() {
+    let ds = simulate("3RN", 0.004, 5).unwrap();
+    let mut cfg = BwkmCfg::for_dataset(ds.n, ds.d, 3);
+    cfg.max_outer = 5;
+    let c1 = counter();
+    let serial = bwkm::bwkm::run(&ds, 3, &cfg, &mut Rng::new(11), &c1);
+    for threads in [1usize, 2, 8] {
+        let c2 = counter();
+        let mut stepper = ShardedStepper::new(threads);
+        let pooled = bwkm::bwkm::run_with(&mut stepper, &ds, 3, &cfg, &mut Rng::new(11), &c2);
+        assert_eq!(serial.centroids, pooled.centroids, "threads={threads}");
+        assert_eq!(serial.d1, pooled.d1, "threads={threads}");
+        assert_eq!(serial.d2, pooled.d2, "threads={threads}");
+        assert_eq!(serial.stop, pooled.stop, "threads={threads}");
+        // TracePoint carries no PartialEq; Debug is exact for our purpose
+        // (bit-equal floats render identically).
+        assert_eq!(
+            format!("{:?}", serial.trace),
+            format!("{:?}", pooled.trace),
+            "threads={threads}: trace diverged"
+        );
+        assert_eq!(c1.get(), c2.get(), "threads={threads}: bill diverged");
+        assert_eq!(c1.notes(), c2.notes(), "threads={threads}: notes diverged");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Generation-cache accounting (DESIGN.md §2.12 invalidation-by-generation)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn norm_cache_rebuilds_and_charges_only_when_centroids_change() {
+    let (reps, _w, mut cents) = corpus(80, 4, 6, 0x9012);
+    let k = 6u64;
+    let mut np = NormPrunedAssigner::new();
+    let c = counter();
+    let a1 = np.assign_top2(&reps, 4, &cents, &c);
+    let bill_cold = c.get();
+    let a2 = np.assign_top2(&reps, 4, &cents, &c);
+    let bill_warm = c.get() - bill_cold;
+    assert_eq!(a1, a2, "cached norms changed an output");
+    assert_eq!(
+        bill_warm,
+        bill_cold - k,
+        "a repeat at unchanged centroids must shave exactly the k norm charges"
+    );
+    // A fresh instance replays the pre-cache per-call bill exactly.
+    let cf = counter();
+    let af = NormPrunedAssigner::new().assign_top2(&reps, 4, &cents, &cf);
+    assert_eq!(af, a2);
+    assert_eq!(cf.get(), bill_cold);
+    // Any centroid change invalidates the generation: full bill again.
+    cents[0] += 0.25;
+    let before = c.get();
+    let a3 = np.assign_top2(&reps, 4, &cents, &c);
+    let cf3 = counter();
+    let af3 = NormPrunedAssigner::new().assign_top2(&reps, 4, &cents, &cf3);
+    assert_eq!(a3, af3);
+    assert_eq!(c.get() - before, cf3.get(), "stale-generation rebuild must re-charge k");
+}
+
+#[test]
+fn closure_table_cache_hit_reports_zero_bookkeeping() {
+    let (reps, _w, cents) = corpus(150, 3, 5, 0xC105);
+    let k = 5usize;
+    let mut cl = ClosureAssigner::new(2);
+    let c = counter();
+    let _ = cl.assign_top2(&reps, 3, &cents, &c); // cold: exact fallback + prime
+    let before = c.get();
+    let w1 = cl.assign_top2(&reps, 3, &cents, &c); // warm: builds the table
+    let d1 = c.get() - before;
+    let s1 = cl.last_stats();
+    assert_eq!(s1.bookkeeping, (k * (k - 1) / 2) as u64, "first warm call builds the table");
+    assert_eq!(d1, s1.pairs + s1.bookkeeping, "§2.4: delta == own account");
+    let before = c.get();
+    let w2 = cl.assign_top2(&reps, 3, &cents, &c); // warm repeat: cache hit
+    let d2 = c.get() - before;
+    let s2 = cl.last_stats();
+    assert_eq!(w1, w2, "cached closure table changed an output");
+    assert_eq!(s2.bookkeeping, 0, "unchanged centroids must not re-bill the table");
+    assert_eq!(d2, s2.pairs, "§2.4 stays exact on the cache hit");
+}
+
+// ---------------------------------------------------------------------------
+// Allocation pins (the §2.12 steady-state guarantee)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn warm_weighted_step_is_allocation_free_serial_and_sharded() {
+    let d = 5;
+    let (reps, weights, cents) = corpus(120, d, 6, 0xA110);
+    // Serial exact path: the whole step runs on this thread, so zero here
+    // is the full steady-state guarantee.
+    {
+        let mut engine = SerialAssigner;
+        let mut scratch = StepScratch::default();
+        let mut out = StepOut::default();
+        let c = counter();
+        weighted_step_into(&mut engine, &mut scratch, &reps, &weights, d, &cents, &c, &mut out);
+        let mut cur = cents.clone();
+        for step in 0..3 {
+            cur.copy_from_slice(&out.centroids);
+            let n = thread_allocs(|| {
+                weighted_step_into(
+                    &mut engine, &mut scratch, &reps, &weights, d, &cur, &c, &mut out,
+                );
+            });
+            assert_eq!(n, 0, "serial warm step {step} allocated {n} times");
+        }
+    }
+    // Pooled sharded exact path: publish/claim/join and the shard windows
+    // are allocation-free on the leader (§2.12 "no allocation on the
+    // leader path"); the shard bodies run the same slice code pinned
+    // above. threads=1 exercises that code fully on this thread.
+    for threads in [1usize, 2, 8] {
+        let mut engine = ShardedAssigner::new(threads);
+        let mut scratch = StepScratch::default();
+        let mut out = StepOut::default();
+        let c = counter();
+        weighted_step_into(&mut engine, &mut scratch, &reps, &weights, d, &cents, &c, &mut out);
+        let mut cur = cents.clone();
+        for step in 0..3 {
+            cur.copy_from_slice(&out.centroids);
+            let n = thread_allocs(|| {
+                weighted_step_into(
+                    &mut engine, &mut scratch, &reps, &weights, d, &cur, &c, &mut out,
+                );
+            });
+            assert_eq!(n, 0, "sharded({threads}) warm step {step} allocated {n} times on the leader");
+        }
+    }
+}
+
+#[test]
+fn sharded_cold_call_allocates_exactly_its_three_output_buffers() {
+    // Regression for the retired partials-then-extend fan-in: shards now
+    // write through disjoint windows of the pre-sized output, so a cold
+    // `assign_top2` allocates the three output buffers once each — not a
+    // partials vector plus a second full-size copy — and a warm
+    // `assign_top2_into` allocates nothing at all (leader thread).
+    let (reps, _w, cents) = corpus(160, 3, 4, 0x3A11);
+    for threads in [1usize, 2, 8] {
+        let mut sh = ShardedAssigner::new(threads);
+        // Warm the pool (first use spawns its workers) outside the count.
+        let _ = sh.assign_top2(&reps, 3, &cents, &counter());
+        let c = counter();
+        let mut out = AssignOut::default();
+        let cold = thread_allocs(|| {
+            out = sh.assign_top2(&reps, 3, &cents, &c);
+        });
+        assert_eq!(
+            cold, 3,
+            "threads={threads}: cold call must allocate assign/d1/d2 once each, got {cold}"
+        );
+        let warm = thread_allocs(|| {
+            sh.assign_top2_into(&reps, 3, &cents, &c, &mut out);
+        });
+        assert_eq!(warm, 0, "threads={threads}: warm arena call allocated {warm} times");
+    }
+}

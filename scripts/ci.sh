@@ -19,6 +19,10 @@
 #                              # non-perturbation pins (off vs jsonl, `==`),
 #                              # JSONL schema stability, typed-vs-note
 #                              # cross-checks, NOTE_CAP flood completeness
+#   scripts/ci.sh --pool       # the §2.12 pool/arena/generation-cache suite:
+#                              # bit-identity across backends × thread counts,
+#                              # the counting-allocator zero-alloc pins, and
+#                              # the worker-pool unit tests
 #
 # The build is hermetic (vendored path deps, no crates.io), so the script
 # forces cargo offline and never touches the network.
@@ -33,6 +37,13 @@ export CARGO_NET_OFFLINE=true
 if ! command -v cargo >/dev/null 2>&1; then
     echo "ERROR: no cargo in PATH — tier-1 (cargo build --release && cargo test -q) cannot run." >&2
     echo "Install a Rust toolchain (rustup or a distro package) and re-run scripts/ci.sh." >&2
+    echo "With a toolchain available, the priority order is:" >&2
+    echo "    scripts/ci.sh                                 # full tier-1 gate" >&2
+    echo "    scripts/ci.sh --pool                          # §2.12 pool/arena/zero-alloc pins" >&2
+    echo "    (cd rust && cargo test -q --test pool_conformance)   # just the §2.12 suite" >&2
+    echo "    (cd rust && cargo test -q --lib util::pool)          # just the pool unit tests" >&2
+    echo "    (cd rust && cargo bench --bench perf_assignment)     # warm/cold + allocs/step rows" >&2
+    echo "                                                  # (emits rust/BENCH_assignment.json)" >&2
     exit 1
 fi
 
@@ -43,6 +54,8 @@ if [[ "${1:-}" == "--quick" ]]; then
     cargo test -q --test streaming_conformance degenerate
     echo "== quick: telemetry non-perturbation pins =="
     cargo test -q --test obs_conformance non_perturb
+    echo "== quick: pool/arena bit-identity + zero-alloc pins =="
+    cargo test -q --test pool_conformance
     exit 0
 fi
 
@@ -77,6 +90,14 @@ if [[ "${1:-}" == "--obs" ]]; then
     cargo test -q --test obs_conformance
     echo "== obs unit tests (recorder, sinks, scopes) =="
     cargo test -q --lib obs::
+    exit 0
+fi
+
+if [[ "${1:-}" == "--pool" ]]; then
+    echo "== pool/arena/generation-cache conformance suite (DESIGN.md 2.12) =="
+    cargo test -q --test pool_conformance
+    echo "== worker-pool unit tests =="
+    cargo test -q --lib util::pool
     exit 0
 fi
 
